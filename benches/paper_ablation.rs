@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig. 13 (ablation K / K+C / K+C+P) plus the other
+//! behavioural figures (Fig. 9 core sweep, Fig. 11 background load,
+//! Fig. 12 energy, Fig. 14 continuous inference).
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("paper_ablation");
+    b.case("fig13", || {
+        assert!(!nnv12::report::fig13().is_empty());
+    });
+    b.case("fig9", || {
+        assert!(!nnv12::report::fig9().is_empty());
+    });
+    b.case("fig11", || {
+        assert!(!nnv12::report::fig11().is_empty());
+    });
+    b.case("fig12", || {
+        assert!(!nnv12::report::fig12().is_empty());
+    });
+    b.case("fig14", || {
+        assert!(!nnv12::report::fig14().is_empty());
+    });
+    b.finish();
+}

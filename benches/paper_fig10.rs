@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 10 (GPU cold latency on the Jetson boards).
+use nnv12::device::profiles;
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("paper_fig10");
+    b.case("cell/resnet50@tx2", || {
+        let ms = nnv12::report::nnv12_cold_ms(&profiles::jetson_tx2(), "resnet50");
+        assert!(ms > 0.0);
+    });
+    let mut b = b.with_samples(3);
+    b.case("full-grid", || {
+        let t = nnv12::report::fig10();
+        assert!(!t.is_empty());
+    });
+    b.finish();
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 2 (cold vs warm gap across vanilla engines).
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("paper_fig2");
+    b.case("generate", || {
+        let t = nnv12::report::fig2();
+        assert!(!t.is_empty());
+    });
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 8 (CPU cold latency, 12 models x 4 phones x 4
+//! engines) — the headline end-to-end table. Also benches single cells.
+use nnv12::device::profiles;
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("paper_fig8");
+    b.case("cell/resnet50@meizu16t", || {
+        let ms = nnv12::report::nnv12_cold_ms(&profiles::meizu_16t(), "resnet50");
+        assert!(ms > 0.0);
+    });
+    b.case("cell/mobilenetv2@pixel5", || {
+        let ms = nnv12::report::nnv12_cold_ms(&profiles::pixel_5(), "mobilenetv2");
+        assert!(ms > 0.0);
+    });
+    let mut b = b.with_samples(3);
+    b.case("full-grid", || {
+        let t = nnv12::report::fig8();
+        assert!(!t.is_empty());
+    });
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! Bench: scheduler hot paths in isolation — inner list-schedule
+//! evaluation, candidate filtering, full Algorithm 1.
+use nnv12::device::profiles;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::heuristic::{schedule, SchedulerConfig};
+use nnv12::sched::makespan::evaluate;
+use nnv12::sched::op::OpSet;
+use nnv12::sched::plan::default_choices;
+use nnv12::sched::price::Pricer;
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("scheduler_hotpath");
+    let dev = profiles::meizu_16t();
+    let g = zoo::resnet50();
+    let reg = Registry::full();
+
+    let choices = default_choices(&g, &reg);
+    let set = OpSet::build(&g, &choices, false);
+    let pricer = Pricer::new(&dev, &g, &choices, true);
+    let plan = nnv12::sched::plan::Plan {
+        choices: choices.clone(),
+        gang: (0..set.len()).collect(),
+        little: vec![vec![]; dev.n_little],
+        estimated_ms: 0.0,
+    };
+    b.case("evaluate/resnet50-seq", || {
+        let s = evaluate(&set, &plan, &pricer).unwrap();
+        assert!(s.makespan > 0.0);
+    });
+    b.case("opset-build/resnet50", || {
+        let s = OpSet::build(&g, &choices, false);
+        assert!(s.len() > 100);
+    });
+    b.case("filter/resnet50", || {
+        for l in g.layers() {
+            if l.op.has_weights() {
+                let c = nnv12::sched::filter::candidates(&dev, l, &reg, true);
+                assert!(!c.is_empty());
+            }
+        }
+    });
+    b.case("schedule/resnet50", || {
+        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+        assert!(s.schedule.makespan > 0.0);
+    });
+    b.finish();
+}

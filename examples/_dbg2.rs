@@ -1,0 +1,34 @@
+fn main() {
+    use nnv12::runtime::Runtime;
+    use nnv12::util::json::Json;
+    use nnv12::weights::read_f32;
+    use std::path::Path;
+    let rt = Runtime::cpu().unwrap();
+    let meta = Json::parse(&std::fs::read_to_string("/tmp/hlodbg/meta.json").unwrap()).unwrap();
+    for (name, m) in meta.as_obj().unwrap() {
+        let exe = rt.load(Path::new(&format!("/tmp/hlodbg/{name}.hlo.txt"))).unwrap();
+        let in_dims: Vec<Vec<i64>> = m
+            .get("in_dims")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as i64).collect())
+            .collect();
+        let inputs: Vec<Vec<f32>> = (0..in_dims.len())
+            .map(|i| read_f32(Path::new(&format!("/tmp/hlodbg/{name}.in{i}.bin"))).unwrap())
+            .collect();
+        let args: Vec<(&[f32], &[i64])> = inputs
+            .iter()
+            .zip(&in_dims)
+            .map(|(v, d)| (v.as_slice(), d.as_slice()))
+            .collect();
+        let out = exe.run_f32(&args).unwrap();
+        let expect = read_f32(Path::new(&format!("/tmp/hlodbg/{name}.out.bin"))).unwrap();
+        let maxerr = out
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("{name}: len {}/{} maxerr {maxerr}", out.len(), expect.len());
+    }
+}

@@ -1,0 +1,111 @@
+//! Real-mode ablation of the paper's three knobs on actual PJRT execution
+//! with edge-class storage throttling (the real counterpart of Fig. 13):
+//!
+//!   baseline    — sequential, fastest-exec (winograd) kernels, no cache
+//!   K           — cold-aware kernel selection (im2col: cheap transform)
+//!   K+C         — + post-transformed-weights cache (transform bypassed)
+//!   K+C+P       — + pipelined preparation on worker threads
+//!
+//! Run: `make artifacts && cargo run --release --example cold_ablation`
+
+use std::path::Path;
+
+use nnv12::graph::manifest::Manifest;
+use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+use nnv12::runtime::Runtime;
+use nnv12::weights::read_f32;
+
+const DISK_MBPS: f64 = 60.0;
+const REPS: usize = 3;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts/tinynet");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let runtime = Runtime::cpu()?;
+    let input = read_f32(&manifest.resolve(manifest.fixture_input.as_ref().unwrap()))?;
+    let cache_dir = std::env::temp_dir().join("nnv12-ablation-cache");
+
+    let arms: Vec<(&str, RealRunOpts)> = vec![
+        (
+            "baseline (warm-best kernels, sequential)",
+            RealRunOpts {
+                disk_mbps: Some(DISK_MBPS),
+                variant: VariantPref::Winograd,
+                use_cache: false,
+                pipelined: false,
+                workers: 0,
+                cache_dir: cache_dir.clone(),
+            },
+        ),
+        (
+            "K   (cold-aware kernel selection)",
+            RealRunOpts {
+                disk_mbps: Some(DISK_MBPS),
+                variant: VariantPref::Im2col,
+                use_cache: false,
+                pipelined: false,
+                workers: 0,
+                cache_dir: cache_dir.clone(),
+            },
+        ),
+        (
+            "K+C (+ transformed-weights cache)",
+            RealRunOpts {
+                disk_mbps: Some(DISK_MBPS),
+                variant: VariantPref::Winograd,
+                use_cache: true,
+                pipelined: false,
+                workers: 0,
+                cache_dir: cache_dir.clone(),
+            },
+        ),
+        (
+            "K+C+P (+ pipelined preparation)",
+            RealRunOpts {
+                disk_mbps: Some(DISK_MBPS),
+                variant: VariantPref::Winograd,
+                use_cache: true,
+                pipelined: true,
+                workers: 3,
+                cache_dir: cache_dir.clone(),
+            },
+        ),
+    ];
+
+    println!("real-mode ablation on {} (disk throttled to {DISK_MBPS} MB/s):\n", manifest.model.name);
+    // Warm the executable cache so every arm measures steady-state
+    // compiles (the shader-cache analogue); also seed the transform cache.
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    for (_, opts) in &arms {
+        let _ = run_cold(&manifest, &runtime, &input, opts)?;
+    }
+    let mut prev = f64::INFINITY;
+    for (name, opts) in &arms {
+        let mut best = f64::INFINITY;
+        let mut detail = None;
+        for _ in 0..REPS {
+            let r = run_cold(&manifest, &runtime, &input, opts)?;
+            if r.wall_ms < best {
+                best = r.wall_ms;
+                detail = Some(r);
+            }
+        }
+        let r = detail.unwrap();
+        println!(
+            "  {name:<42} {:>8.1} ms   (read {:>6.1} | transform {:>5.1} | exec {:>5.1})",
+            best, r.read_ms, r.transform_ms, r.exec_ms
+        );
+        prev = prev.min(best);
+    }
+    println!(
+        "\nNote: at tinynet scale (0.3 MB of weights) transformation is cheap, so the\n\
+         'K' knob cannot pay off — its value appears at paper scale (see\n\
+         `repro report fig13` / `repro report table2`, where winograd transforms\n\
+         cost 30-60 ms per layer). The pipelining knob ('P') wins at every scale."
+    );
+    Ok(())
+}

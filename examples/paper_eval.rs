@@ -1,0 +1,13 @@
+//! Regenerate the full paper evaluation (every table and figure) in one
+//! run — the data behind EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example paper_eval`
+
+fn main() {
+    for name in nnv12::report::ALL_REPORTS {
+        let t = nnv12::metrics::Timer::start();
+        let table = nnv12::report::by_name(name).unwrap();
+        println!("{}", table.render());
+        eprintln!("[{name} generated in {:.0} ms]\n", t.elapsed_ms());
+    }
+}

@@ -1,0 +1,77 @@
+//! Quickstart: plan a cold inference for ResNet-50 on the paper's primary
+//! device, inspect the schedule, then (if `make artifacts` has run) do a
+//! real cold inference of the small AOT-compiled model through PJRT.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nnv12::baselines::{cold_ms, Engine};
+use nnv12::cost::CostModel;
+use nnv12::device::profiles;
+use nnv12::graph::manifest::Manifest;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+use nnv12::runtime::Runtime;
+use nnv12::sched::heuristic::{schedule, SchedulerConfig};
+use nnv12::sched::price::Pricer;
+use nnv12::sim::{simulate, trace, SimConfig};
+use nnv12::weights::read_f32;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Offline decision stage (Fig. 4): generate the plan. ---
+    let dev = profiles::meizu_16t();
+    let g = zoo::resnet50();
+    let reg = Registry::full();
+    let t = nnv12::metrics::Timer::start();
+    let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+    println!(
+        "planned {} ({} layers) for {} in {:.1} ms",
+        g.name,
+        g.len(),
+        dev.name,
+        t.elapsed_ms()
+    );
+
+    // --- 2. Simulate the cold inference with contention + stealing. ---
+    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+    let sim = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
+    let ncnn = cold_ms(Engine::Ncnn, &dev, &g);
+    let warm = CostModel::new(&dev).warm_ms(&g, &reg);
+    println!(
+        "cold inference: NNV12 {:.1} ms vs ncnn {:.1} ms ({:.1}x speedup); warm bound {:.1} ms",
+        sim.makespan,
+        ncnn,
+        ncnn / sim.makespan,
+        warm
+    );
+    println!("{}", trace::gantt(&s.set, &sim.timings, 96));
+
+    // --- 3. Real mode: cold inference of the AOT model over PJRT. ---
+    let art = std::path::Path::new("artifacts/tinynet");
+    if !art.join("manifest.json").exists() {
+        println!("(skipping real-mode demo: run `make artifacts` first)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(art)?;
+    let runtime = Runtime::cpu()?;
+    let input = read_f32(&manifest.resolve(manifest.fixture_input.as_ref().unwrap()))?;
+    let r = run_cold(
+        &manifest,
+        &runtime,
+        &input,
+        &RealRunOpts { variant: VariantPref::Auto, use_cache: true, ..Default::default() },
+    )?;
+    println!(
+        "real cold inference of {}: wall {:.1} ms (read {:.2} + transform {:.2} + compile {:.1} + exec {:.1} ms)",
+        manifest.model.name, r.wall_ms, r.read_ms, r.transform_ms, r.compile_ms, r.exec_ms
+    );
+    let expect = read_f32(&manifest.resolve(manifest.fixture_output.as_ref().unwrap()))?;
+    let maxerr = r
+        .output
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("output matches jax fixture to {maxerr:.2e}");
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT lowering: jax layers -> HLO *text* artifacts + weights + manifest.
+
+Run once at build time (`make artifacts`); the Rust coordinator is fully
+self-contained afterwards. Interchange is HLO text, NOT serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's XLA 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs, per model, under artifacts/<model>/:
+  manifest.json                      graph + artifact index (read by
+                                     rust/src/graph/manifest.rs)
+  layers/Lxx.<variant>.hlo.txt       per-layer, per-kernel-variant exec HLO
+  weights/Lxx.raw.bin                raw weight blobs (w ++ bias, f32 LE)
+  fixtures/input.bin, output.bin     end-to-end numeric fixture
+plus artifacts/goldens/ with transform goldens consumed by the Rust test
+tests/transform_golden.rs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+
+def to_hlo_text(fn, arg_specs):
+    """Lower a jax function to HLO text with return_tuple=True."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def export_model(make_model, out_root, seed=1234):
+    name, layers = make_model()
+    root = os.path.join(out_root, name)
+    os.makedirs(os.path.join(root, "layers"), exist_ok=True)
+    os.makedirs(os.path.join(root, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(root, "fixtures"), exist_ok=True)
+    rng = np.random.RandomState(seed)
+
+    weights = {}
+    manifest_layers = []
+    for i, l in enumerate(layers):
+        entry = {
+            "id": i,
+            "name": l.name,
+            "op": {"input": "input", "conv": "conv", "fc": "fc",
+                   "pool": "pool", "softmax": "softmax"}[l.op],
+            "in_ch": l.cin,
+            "out_ch": l.cout,
+            "in_hw": l.hin,
+            "out_hw": l.hout,
+            "deps": [] if l.dep is None else [l.dep],
+            "in_dims": l.in_dims(),
+            "out_dims": l.out_dims(),
+        }
+        if l.op == "conv":
+            entry.update(kernel=l.k, stride=l.s, groups=l.groups)
+        if l.op == "pool":
+            entry.update(kernel=l.hin, stride=l.hin)
+            entry["global"] = True
+
+        if l.has_weights:
+            w, b = l.init_weights(rng)
+            weights[i] = (w, b)
+            raw = np.concatenate([w.ravel(), b.ravel()]).astype(np.float32)
+            wpath = f"weights/L{i:02d}.raw.bin"
+            raw.tofile(os.path.join(root, wpath))
+            entry["weights"] = wpath
+            entry["raw_elems"] = int(raw.size)
+            entry["bias_elems"] = int(b.size)
+
+        variants = {}
+        for variant in l.variants():
+            if l.op == "input":
+                continue
+            f = l.exec_fn(variant)
+            if l.has_weights:
+                args = [spec(l.in_dims()), spec(l.w_dims(variant)),
+                        spec([l.cout])]
+            else:
+                args = [spec(l.in_dims())]
+            hlo = to_hlo_text(f, args)
+            hpath = f"layers/L{i:02d}.{variant}.hlo.txt"
+            with open(os.path.join(root, hpath), "w") as fh:
+                fh.write(hlo)
+            ventry = {"exec": hpath, "w_dims": l.w_dims(variant)}
+            if variant in ("im2col", "winograd"):
+                telems = int(np.prod(l.w_dims(variant))) + l.cout
+                ventry["transformed_elems"] = telems
+            variants[variant] = ventry
+        if variants:
+            entry["variants"] = variants
+        manifest_layers.append(entry)
+
+    # End-to-end fixture through the reference (direct) path.
+    x = rng.randn(*layers[1].in_dims()).astype(np.float32)
+    y = np.asarray(M.forward(layers, weights, x))
+    x.ravel().tofile(os.path.join(root, "fixtures/input.bin"))
+    y.astype(np.float32).ravel().tofile(os.path.join(root, "fixtures/output.bin"))
+
+    manifest = {
+        "model": name,
+        "layers": manifest_layers,
+        "fixture": {"input": "fixtures/input.bin", "output": "fixtures/output.bin"},
+    }
+    with open(os.path.join(root, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"exported {name}: {len(layers)} layers -> {root}")
+    return root
+
+
+def export_goldens(out_root, seed=77):
+    """Transform goldens: raw blob + expected winograd/im2col layouts, for
+    the Rust transform parity test."""
+    root = os.path.join(out_root, "goldens")
+    os.makedirs(root, exist_ok=True)
+    rng = np.random.RandomState(seed)
+    c_out, c_in, k = 8, 6, 3
+    w = rng.randn(c_out, c_in, k, k).astype(np.float32)
+    b = rng.randn(c_out).astype(np.float32)
+    raw = np.concatenate([w.ravel(), b.ravel()])
+    raw.tofile(os.path.join(root, "conv.raw.bin"))
+    wino = np.asarray(ref.winograd_weights(jnp.asarray(w))).astype(np.float32)
+    np.concatenate([wino.ravel(), b.ravel()]).tofile(
+        os.path.join(root, "conv.winograd.bin"))
+    im2col = np.asarray(ref.im2col_weights(jnp.asarray(w))).astype(np.float32)
+    np.concatenate([im2col.ravel(), b.ravel()]).tofile(
+        os.path.join(root, "conv.im2col.bin"))
+    meta = {"c_out": c_out, "c_in": c_in, "k": k, "bias": c_out}
+    with open(os.path.join(root, "meta.json"), "w") as fh:
+        json.dump(meta, fh)
+    print(f"exported transform goldens -> {root}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    for mk in M.ALL_MODELS:
+        export_model(mk, args.out)
+    export_goldens(args.out)
+    # Stamp for make's dependency tracking.
+    with open(os.path.join(args.out, ".stamp"), "w") as fh:
+        fh.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels (build-time only; interpret=True on CPU PJRT).
+
+Modules:
+  ref       — pure-jnp oracle for every kernel + the shared Winograd/
+              im2col weight-transform math (kept bit-identical with
+              rust/src/transform/mod.rs).
+  matmul    — the Pallas tiled-GEMM hot spot (VMEM-tiled via BlockSpec).
+  conv      — conv kernel variants built on the GEMM: direct / im2col /
+              winograd F(2,3).
+"""

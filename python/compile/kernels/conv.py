@@ -1,0 +1,110 @@
+"""Convolution kernel variants — the L1 counterparts of the engine's
+kernel families (direct / im2col+GEMM / winograd F(2,3)).
+
+Each variant consumes weights in *its own layout* (produced either by
+`ref.py`'s transform functions at build time or by the Rust transforms at
+runtime — rust/src/transform/mod.rs), which is exactly the property NNV12's
+kernel-selection + cache knobs exploit: same operator, different
+(transform cost, execute cost) points.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import ref
+from .matmul import matmul
+
+
+def conv_direct(x, w, b, stride=1, groups=1):
+    """Direct conv on raw (C_out, C_in/g, K, K) weights (the no-transform
+    family: G-kernels in Fig. 5)."""
+    return ref.conv2d(x, w, b, stride=stride, groups=groups)
+
+
+def _patches(x, k, stride):
+    """im2col: (1, C_in, H, W) -> (C_in*K*K, H'*W') with (c, kh, kw) feature
+    order matching `ref.im2col_weights`' (C_out, C_in*K*K) reshape."""
+    n, c, h, w = x.shape
+    assert n == 1
+    p = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(k, k),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    # p: (1, C_in*K*K, H', W') with features ordered (c, kh, kw).
+    return p.reshape(p.shape[1], -1), p.shape[2], p.shape[3]
+
+
+def conv_im2col(x, w_mat, b, k, stride=1):
+    """im2col + Pallas GEMM on (C_out, C_in*K*K) weights (the sgemm
+    family: S-kernels in Fig. 5)."""
+    cols, ho, wo = _patches(x, k, stride)
+    y = matmul(w_mat, cols)  # (C_out, H'*W')
+    y = y.reshape(1, w_mat.shape[0], ho, wo)
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def _take(x, i, axis):
+    idx = [slice(None)] * x.ndim
+    idx[axis] = i
+    return x[tuple(idx)]
+
+
+def _bt_pairs(x, axis):
+    """Apply B^T along `axis` (length 4 -> 4): rows of B^T are
+    [1,0,-1,0], [0,1,1,0], [0,-1,1,0], [0,1,0,-1]."""
+    x0, x1, x2, x3 = (_take(x, i, axis) for i in range(4))
+    return jnp.stack([x0 - x2, x1 + x2, x2 - x1, x1 - x3], axis=axis)
+
+
+def _at_pairs(x, axis):
+    """Apply A^T along `axis` (length 4 -> 2): rows [1,1,1,0], [0,1,-1,-1]."""
+    x0, x1, x2, x3 = (_take(x, i, axis) for i in range(4))
+    return jnp.stack([x0 + x1 + x2, x1 - x2 - x3], axis=axis)
+
+
+def conv_winograd(x, u, b):
+    """Winograd F(2x2, 3x3), stride 1, SAME padding, on pre-transformed
+    (C_out, C_in, 4, 4) weights (the W-kernels in Fig. 5).
+
+    The 16 tap-wise contractions are evaluated as one batched einsum — on
+    TPU each tap maps onto an MXU GEMM of shape (C_out, C_in)x(C_in, T).
+    """
+    n, c, h, w = x.shape
+    assert n == 1, "batch-1 serving path"
+    co = u.shape[0]
+    # Pad to SAME (1 px halo) and to a multiple of the m=2 output tile.
+    ho, wo = h, w
+    ph = (-h) % 2
+    pw = (-w) % 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1 + ph), (1, 1 + pw)))
+    th, tw = (h + ph) // 2, (w + pw) // 2
+
+    # Extract overlapping 4x4 input tiles with stride 2 via the patches
+    # primitive: (1, C_in*16, th, tw), features ordered (c, i, j).
+    # (A strided-slice formulation is equivalent but round-trips badly
+    # through the legacy XLA 0.5.1 text pipeline the Rust runtime uses.)
+    p = lax.conv_general_dilated_patches(
+        xp,
+        filter_shape=(4, 4),
+        window_strides=(2, 2),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    d = p.reshape(c, 4, 4, th * tw).transpose(0, 3, 1, 2)  # (c, T, 4, 4)
+
+    # V = B^T d B, computed as add/sub combinations (B's entries are
+    # {0,±1}; this is both how production winograd kernels do it and a
+    # workaround for a dot_general mis-round-trip in the legacy XLA 0.5.1
+    # text pipeline the Rust runtime runs on).
+    v = _bt_pairs(_bt_pairs(d, axis=-2), axis=-1)
+    # M = U ⊙ V contracted over C_in, per tap: (C_out, T, 4, 4)
+    m = jnp.einsum("ocij,ctij->otij", u, v)
+    # Y = A^T M A: (C_out, T, 2, 2), likewise elementwise.
+    y = _at_pairs(_at_pairs(m, axis=-2), axis=-1)
+    # Reassemble tiles into the output map.
+    y = y.reshape(co, th, tw, 2, 2).transpose(0, 1, 3, 2, 4).reshape(co, 2 * th, 2 * tw)
+    y = y[:, :ho, :wo][None]
+    return y + b.reshape(1, -1, 1, 1)

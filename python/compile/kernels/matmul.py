@@ -1,0 +1,90 @@
+"""The Pallas tiled-GEMM kernel — the compute hot spot of the engine.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): ncnn's `sgemm_pack4`
+packs 4 channels per NEON lane; the TPU analogue stages (bm x bk)·(bk x bn)
+blocks through VMEM via `BlockSpec` and accumulates in f32 on the MXU. On
+this image the kernel runs under `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls); the block structure is what a real TPU build would
+compile, and `roofline.py` reports the VMEM footprint / MXU-utilization
+estimate the BlockSpec implies.
+
+The VMEM footprint per grid step is (bm*bk + bk*bn + 2*bm*bn) * 4 bytes;
+with the default MXU-shaped 128-tiles that is 256 KiB — comfortably inside
+a ~16 MiB VMEM budget, leaving headroom for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax._src import core as jax_core
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-shaped (the 128x128 systolic array).
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk):
+    """Grid (M/bm, N/bn, K/bk): accumulate partial products in VMEM scratch."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _tile(extent, requested):
+    """Largest power-of-two tile <= requested that is >= 8 (or the extent)."""
+    t = min(requested, max(8, 1 << (max(extent, 1) - 1).bit_length()))
+    return max(8, min(t, requested))
+
+
+def matmul(x, y, *, bm=BM, bn=BN, bk=BK):
+    """f32 GEMM (M,K)@(K,N) via the Pallas kernel; any shapes (padded)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = _tile(m, bm)
+    bn = _tile(n, bn)
+    bk = _tile(k, bk)
+    xp = _pad_to(x, bm, bk)
+    yp = _pad_to(y, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+    acc = pl.MemoryRef(
+        jax_core.ShapedArray((bm, bn), jnp.float32), pl.MemorySpace.ANY
+    )
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[acc],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=BM, bn=BN, bk=BK):
+    """VMEM bytes resident per grid step (x + y + out + acc tiles)."""
+    return 4 * (bm * bk + bk * bn + 2 * bm * bn)

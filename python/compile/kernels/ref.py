@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracle for every kernel (L1 correctness ground truth).
+
+Layouts (matching the Rust side, rust/src/transform/mod.rs):
+  activations: NCHW, f32
+  conv weights (raw / "direct"):   (C_out, C_in, K, K)
+  conv weights ("im2col"):         (C_out, C_in*K*K)      -- pure reshape
+  conv weights ("winograd"):       (C_out, C_in, 4, 4)    -- F(2,3) G g G^T
+  fc weights:                      (C_out, C_in)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Winograd F(2x2, 3x3) matrices (Lavin & Gray). Shared with the Rust
+# transform (rust/src/transform/mod.rs) — keep bit-identical.
+G = np.array(
+    [
+        [1.0, 0.0, 0.0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0.0, 0.0, 1.0],
+    ],
+    dtype=np.float32,
+)
+BT = np.array(
+    [
+        [1.0, 0.0, -1.0, 0.0],
+        [0.0, 1.0, 1.0, 0.0],
+        [0.0, -1.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0, -1.0],
+    ],
+    dtype=np.float32,
+)
+AT = np.array(
+    [
+        [1.0, 1.0, 1.0, 0.0],
+        [0.0, 1.0, -1.0, -1.0],
+    ],
+    dtype=np.float32,
+)
+
+
+def conv2d(x, w, b, stride=1, groups=1):
+    """Reference NCHW conv with SAME padding + bias."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def fc(x, w, b):
+    """x: (1, C_in) or flattenable; w: (C_out, C_in)."""
+    x = x.reshape(x.shape[0], -1)
+    return x @ w.T + b
+
+
+def global_avg_pool(x):
+    """(1, C, H, W) -> (1, C)."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def winograd_weights(w):
+    """(C_out, C_in, 3, 3) -> (C_out, C_in, 4, 4): U = G g G^T."""
+    return jnp.einsum("ij,ocjk,lk->ocil", G, w, G)
+
+
+def im2col_weights(w):
+    """(C_out, C_in, K, K) -> (C_out, C_in*K*K)."""
+    return w.reshape(w.shape[0], -1)

@@ -1,0 +1,66 @@
+"""Structural performance analysis of the Pallas GEMM (L1 §Perf).
+
+interpret=True gives CPU-numpy timings, which say nothing about TPU
+performance — so the optimization target here is *structural*: VMEM
+footprint and MXU-utilization estimates derived from the BlockSpec, the
+quantities a real Mosaic compile would be constrained by.
+"""
+
+from . import matmul
+
+
+VMEM_BUDGET = 16 << 20  # ~16 MiB of VMEM per TensorCore
+MXU_DIM = 128           # systolic array edge
+
+
+def analyze(m, k, n, bm=matmul.BM, bn=matmul.BN, bk=matmul.BK):
+    """Report the kernel's structural efficiency for an (m,k)x(k,n) GEMM."""
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    vmem = matmul.vmem_bytes(bm_, bn_, bk_)
+    # MXU utilization: fraction of the 128x128 array the tile fills, times
+    # the fraction of lanes that are real (not padding) work.
+    fill = (min(bm_, MXU_DIM) / MXU_DIM) * (min(bn_, MXU_DIM) / MXU_DIM)
+    # flops actually useful / flops issued over the padded iteration space
+    padded = _ceil(m, bm_) * bm_ * _ceil(n, bn_) * bn_ * _ceil(k, bk_) * bk_
+    useful = m * n * k
+    eff = useful / padded
+    return {
+        "tile": (bm_, bn_, bk_),
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BUDGET,
+        "mxu_fill": fill,
+        "pad_efficiency": eff,
+        "double_buffer_ok": 2 * vmem <= VMEM_BUDGET,
+    }
+
+
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def report(cases=None):
+    """Print the structural report for the GEMM shapes the real-mode models
+    actually run (im2col matrices of tinynet/micro-mobilenet)."""
+    cases = cases or [
+        (16, 27, 1024),    # tinynet conv1 im2col: (cout, cin*9) x (.., H*W)
+        (16, 144, 1024),
+        (32, 144, 256),
+        (64, 288, 256),
+        (64, 576, 64),
+        (128, 64, 16),
+    ]
+    rows = []
+    for m, k, n in cases:
+        a = analyze(m, k, n)
+        rows.append((m, k, n, a))
+        print(
+            f"GEMM {m:>4}x{k:>4}x{n:>4}: tile={a['tile']} "
+            f"vmem={a['vmem_bytes']/1024:.0f}KiB ({a['vmem_frac']*100:.1f}% budget) "
+            f"mxu_fill={a['mxu_fill']*100:.0f}% pad_eff={a['pad_efficiency']*100:.0f}% "
+            f"double_buffer={'yes' if a['double_buffer_ok'] else 'NO'}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    report()

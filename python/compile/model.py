@@ -1,0 +1,195 @@
+"""L2 — the real-mode models, mirrored layer-for-layer by
+rust/src/graph/zoo.rs (`tiny_net`, `micro_mobilenet`).
+
+Each layer is described declaratively; `exec_fn` builds the per-variant
+jax function that `aot.py` lowers to one HLO artifact. All activations are
+NCHW f32 with batch 1 (the serving path). ReLU is folded into conv/fc
+execution (the Rust graph likewise has no explicit activation layers).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import ref
+
+
+class Layer:
+    def __init__(self, name, op, cin, cout, hin, hout, k=0, s=1, groups=1, dep=None):
+        self.name = name
+        self.op = op  # input|conv|fc|pool|softmax
+        self.cin = cin
+        self.cout = cout
+        self.hin = hin
+        self.hout = hout
+        self.k = k
+        self.s = s
+        self.groups = groups
+        self.dep = dep  # single predecessor index (chain models)
+
+    @property
+    def has_weights(self):
+        return self.op in ("conv", "fc")
+
+    def variants(self):
+        """Kernel variants available — must agree with what the Rust
+        registry offers (and with rust/src/transform/mod.rs layouts)."""
+        if self.op == "conv":
+            if self.groups > 1:
+                return ["direct"]  # depthwise: no im2col/winograd here
+            v = ["direct", "im2col"]
+            if self.k == 3 and self.s == 1:
+                v.append("winograd")
+            return v
+        if self.op == "fc":
+            return ["direct"]
+        return ["builtin"]
+
+    def w_dims(self, variant):
+        """Dims of the weight argument the exec fn takes, per variant."""
+        if self.op == "conv":
+            cin_g = self.cin // self.groups
+            if variant == "direct":
+                return [self.cout, cin_g, self.k, self.k]
+            if variant == "im2col":
+                return [self.cout, cin_g * self.k * self.k]
+            if variant == "winograd":
+                return [self.cout, cin_g, 4, 4]
+        if self.op == "fc":
+            return [self.cout, self.cin]
+        return []
+
+    def in_dims(self):
+        if self.op == "fc":
+            return [1, self.cin]
+        if self.op == "softmax":
+            return [1, self.cin]
+        return [1, self.cin, self.hin, self.hin]
+
+    def out_dims(self):
+        if self.op in ("fc", "softmax"):
+            return [1, self.cout]
+        if self.op == "pool":  # global average pool
+            return [1, self.cout]
+        return [1, self.cout, self.hout, self.hout]
+
+    def exec_fn(self, variant):
+        """Return a jax function (x[, w, b]) -> (y,) for this layer."""
+        if self.op == "conv":
+            k, s, g = self.k, self.s, self.groups
+
+            if variant == "direct":
+                def f(x, w, b):
+                    return (ref.relu(kconv.conv_direct(x, w, b, stride=s, groups=g)),)
+            elif variant == "im2col":
+                def f(x, w, b):
+                    return (ref.relu(kconv.conv_im2col(x, w, b, k, stride=s)),)
+            elif variant == "winograd":
+                def f(x, w, b):
+                    return (ref.relu(kconv.conv_winograd(x, w, b)),)
+            else:
+                raise ValueError(f"conv has no variant {variant}")
+            return f
+        if self.op == "fc":
+            def f(x, w, b):
+                return (ref.fc(x, w, b),)
+            return f
+        if self.op == "pool":
+            def f(x):
+                return (ref.global_avg_pool(x),)
+            return f
+        if self.op == "softmax":
+            def f(x):
+                return (ref.softmax(x),)
+            return f
+        raise ValueError(f"no exec fn for {self.op}")
+
+    def init_weights(self, rng):
+        """He-initialized weights + small bias, flattened raw blob
+        (weights ++ bias), plus the (w, b) arrays."""
+        if self.op == "conv":
+            cin_g = self.cin // self.groups
+            fan_in = cin_g * self.k * self.k
+            w = (rng.randn(self.cout, cin_g, self.k, self.k) / np.sqrt(fan_in)).astype(np.float32)
+            b = (0.01 * rng.randn(self.cout)).astype(np.float32)
+            return w, b
+        if self.op == "fc":
+            w = (rng.randn(self.cout, self.cin) / np.sqrt(self.cin)).astype(np.float32)
+            b = (0.01 * rng.randn(self.cout)).astype(np.float32)
+            return w, b
+        return None, None
+
+
+def _chain(layers):
+    for i, l in enumerate(layers):
+        l.dep = i - 1 if i > 0 else None
+    return layers
+
+
+def tiny_net():
+    """Six-conv CNN — must mirror rust zoo::tiny_net."""
+    return "tinynet", _chain([
+        Layer("input", "input", 3, 3, 32, 32),
+        Layer("conv1", "conv", 3, 16, 32, 32, k=3, s=1),
+        Layer("conv2", "conv", 16, 16, 32, 32, k=3, s=1),
+        Layer("conv3", "conv", 16, 32, 32, 16, k=3, s=2),
+        Layer("conv4", "conv", 32, 32, 16, 16, k=3, s=1),
+        Layer("conv5", "conv", 32, 64, 16, 8, k=3, s=2),
+        Layer("conv6", "conv", 64, 64, 8, 8, k=3, s=1),
+        Layer("gap", "pool", 64, 64, 8, 1),
+        Layer("fc", "fc", 64, 10, 1, 1),
+        Layer("prob", "softmax", 10, 10, 1, 1),
+    ])
+
+
+def micro_mobilenet():
+    """Depthwise-separable CNN — must mirror rust zoo::micro_mobilenet."""
+    return "micro-mobilenet", _chain([
+        Layer("input", "input", 3, 3, 32, 32),
+        Layer("conv1", "conv", 3, 16, 32, 16, k=3, s=2),
+        Layer("ds2/dw", "conv", 16, 16, 16, 16, k=3, s=1, groups=16),
+        Layer("ds2/pw", "conv", 16, 32, 16, 16, k=1, s=1),
+        Layer("ds3/dw", "conv", 32, 32, 16, 8, k=3, s=2, groups=32),
+        Layer("ds3/pw", "conv", 32, 64, 8, 8, k=1, s=1),
+        Layer("ds4/dw", "conv", 64, 64, 8, 8, k=3, s=1, groups=64),
+        Layer("ds4/pw", "conv", 64, 64, 8, 8, k=1, s=1),
+        Layer("ds5/dw", "conv", 64, 64, 8, 4, k=3, s=2, groups=64),
+        Layer("ds5/pw", "conv", 64, 128, 4, 4, k=1, s=1),
+        Layer("gap", "pool", 128, 128, 4, 1),
+        Layer("fc", "fc", 128, 10, 1, 1),
+        Layer("prob", "softmax", 10, 10, 1, 1),
+    ])
+
+
+ALL_MODELS = [tiny_net, micro_mobilenet]
+
+
+def forward(layers, weights, x, variant_of=None):
+    """Run the whole model in jax (reference path for fixtures/tests).
+    `variant_of`: optional {layer_index: variant} override (default:
+    direct/raw everywhere)."""
+    act = jnp.asarray(x)
+    for i, l in enumerate(layers):
+        if l.op == "input":
+            continue
+        variant = (variant_of or {}).get(i, l.variants()[0])
+        f = l.exec_fn(variant)
+        if l.has_weights:
+            w, b = weights[i]
+            w = transform_weights(l, variant, w)
+            (act,) = f(act, jnp.asarray(w), jnp.asarray(b))
+        else:
+            (act,) = f(act)
+    return act
+
+
+def transform_weights(layer, variant, w):
+    """Raw weights -> the layout `variant` executes on (build-time path;
+    the runtime path is rust/src/transform/mod.rs)."""
+    if variant in ("direct", "builtin") or layer.op == "fc":
+        return w
+    if variant == "im2col":
+        return np.asarray(ref.im2col_weights(jnp.asarray(w)))
+    if variant == "winograd":
+        return np.asarray(ref.winograd_weights(jnp.asarray(w)))
+    raise ValueError(variant)

@@ -1,0 +1,72 @@
+"""Artifact integrity: run after `make artifacts` (skipped when absent).
+
+Validates what the Rust side will consume: manifest schema, blob sizes,
+fixture reproducibility, and golden transform files.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def need_artifacts():
+    if not os.path.exists(os.path.join(ART, ".stamp")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+
+
+@pytest.mark.parametrize("model", ["tinynet", "micro-mobilenet"])
+class TestManifest:
+    def test_schema_and_blobs(self, model):
+        need_artifacts()
+        root = os.path.join(ART, model)
+        with open(os.path.join(root, "manifest.json")) as fh:
+            man = json.load(fh)
+        assert man["model"] == model
+        for layer in man["layers"]:
+            if "weights" in layer:
+                blob = np.fromfile(
+                    os.path.join(root, layer["weights"]), dtype=np.float32
+                )
+                assert blob.size == layer["raw_elems"], layer["name"]
+                assert layer["bias_elems"] == layer["out_ch"]
+                assert layer["variants"], layer["name"]
+            for v, ventry in layer.get("variants", {}).items():
+                path = os.path.join(root, ventry["exec"])
+                assert os.path.exists(path), path
+                text = open(path).read()
+                assert "HloModule" in text
+
+    def test_fixture_reproduces(self, model):
+        need_artifacts()
+        root = os.path.join(ART, model)
+        with open(os.path.join(root, "manifest.json")) as fh:
+            man = json.load(fh)
+        x = np.fromfile(os.path.join(root, man["fixture"]["input"]), np.float32)
+        y = np.fromfile(os.path.join(root, man["fixture"]["output"]), np.float32)
+        assert y.size == 10
+        np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-4)
+        in_dims = man["layers"][1]["in_dims"]
+        assert x.size == int(np.prod(in_dims))
+
+
+class TestGoldens:
+    def test_winograd_golden_matches_ref(self):
+        need_artifacts()
+        from compile.kernels import ref
+        import jax.numpy as jnp
+
+        root = os.path.join(ART, "goldens")
+        meta = json.load(open(os.path.join(root, "meta.json")))
+        co, ci, k = meta["c_out"], meta["c_in"], meta["k"]
+        raw = np.fromfile(os.path.join(root, "conv.raw.bin"), np.float32)
+        w = raw[: co * ci * k * k].reshape(co, ci, k, k)
+        bias = raw[co * ci * k * k :]
+        golden = np.fromfile(os.path.join(root, "conv.winograd.bin"), np.float32)
+        expect = np.concatenate(
+            [np.asarray(ref.winograd_weights(jnp.asarray(w))).ravel(), bias]
+        )
+        np.testing.assert_allclose(golden, expect, rtol=1e-6)

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas/variant kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides; every conv variant must agree with
+lax.conv to float32 tolerance. This is the core correctness signal for the
+kernels the Rust engine executes via PJRT.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv as kconv
+from compile.kernels import matmul, ref
+
+
+def rand(rs, *shape):
+    return rs.randn(*shape).astype(np.float32)
+
+
+class TestPallasMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_numpy(self, m, k, n, seed):
+        rs = np.random.RandomState(seed)
+        x = rand(rs, m, k)
+        y = rand(rs, k, n)
+        got = np.asarray(matmul.matmul(jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+    def test_large_multi_tile(self):
+        rs = np.random.RandomState(7)
+        x = rand(rs, 300, 257)
+        y = rand(rs, 257, 130)
+        got = np.asarray(matmul.matmul(jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_allclose(got, x @ y, rtol=1e-3, atol=1e-3)
+
+    def test_explicit_small_tiles(self):
+        rs = np.random.RandomState(8)
+        x = rand(rs, 64, 64)
+        y = rand(rs, 64, 64)
+        got = np.asarray(
+            matmul.matmul(jnp.asarray(x), jnp.asarray(y), bm=16, bn=16, bk=16)
+        )
+        np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+    def test_vmem_budget(self):
+        from compile.kernels import roofline
+
+        a = roofline.analyze(1024, 1024, 1024)
+        assert a["double_buffer_ok"], a
+        assert a["mxu_fill"] == 1.0
+
+
+class TestConvVariants:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        cin=st.integers(1, 12),
+        cout=st.integers(1, 12),
+        hw=st.integers(3, 17),
+        k=st.sampled_from([1, 3, 5]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_im2col_matches_ref(self, cin, cout, hw, k, stride, seed):
+        rs = np.random.RandomState(seed)
+        x = rand(rs, 1, cin, hw, hw)
+        w = rand(rs, cout, cin, k, k)
+        b = rand(rs, cout)
+        want = np.asarray(ref.conv2d(x, w, b, stride=stride))
+        wm = ref.im2col_weights(jnp.asarray(w))
+        got = np.asarray(kconv.conv_im2col(jnp.asarray(x), wm, jnp.asarray(b), k, stride))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        cin=st.integers(1, 10),
+        cout=st.integers(1, 10),
+        h=st.integers(2, 16),
+        w_=st.integers(2, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_winograd_matches_ref(self, cin, cout, h, w_, seed):
+        rs = np.random.RandomState(seed)
+        x = rand(rs, 1, cin, h, w_)
+        w = rand(rs, cout, cin, 3, 3)
+        b = rand(rs, cout)
+        want = np.asarray(ref.conv2d(x, w, b, stride=1))
+        u = ref.winograd_weights(jnp.asarray(w))
+        got = np.asarray(kconv.conv_winograd(jnp.asarray(x), u, jnp.asarray(b)))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_depthwise_direct(self):
+        rs = np.random.RandomState(3)
+        x = rand(rs, 1, 8, 10, 10)
+        w = rand(rs, 8, 1, 3, 3)
+        b = rand(rs, 8)
+        got = np.asarray(kconv.conv_direct(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), groups=8))
+        want = np.asarray(ref.conv2d(x, w, b, groups=8))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestWinogradTransform:
+    def test_expansion_16_over_9(self):
+        w = np.ones((4, 4, 3, 3), np.float32)
+        u = np.asarray(ref.winograd_weights(jnp.asarray(w)))
+        assert u.shape == (4, 4, 4, 4)
+
+    def test_identity_kernel(self):
+        g = np.zeros((1, 1, 3, 3), np.float32)
+        g[0, 0, 1, 1] = 1.0
+        u = np.asarray(ref.winograd_weights(jnp.asarray(g)))[0, 0]
+        col = np.array([0.0, 0.5, -0.5, 0.0], np.float32)
+        np.testing.assert_allclose(u, np.outer(col, col), atol=1e-6)
+
+
+class TestRefOps:
+    def test_softmax_sums_to_one(self):
+        rs = np.random.RandomState(0)
+        x = rand(rs, 1, 10)
+        p = np.asarray(ref.softmax(jnp.asarray(x)))
+        np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+        assert (p >= 0).all()
+
+    def test_gap(self):
+        x = np.arange(2 * 3 * 4 * 4, dtype=np.float32).reshape(2, 3, 4, 4)
+        got = np.asarray(ref.global_avg_pool(jnp.asarray(x)))
+        np.testing.assert_allclose(got, x.mean(axis=(2, 3)), rtol=1e-6)
+
+    def test_fc(self):
+        rs = np.random.RandomState(1)
+        x = rand(rs, 1, 8)
+        w = rand(rs, 5, 8)
+        b = rand(rs, 5)
+        got = np.asarray(ref.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+        np.testing.assert_allclose(got, x @ w.T + b, rtol=1e-5)

@@ -1,0 +1,86 @@
+"""L2 correctness: model definitions, variant equivalence, AOT lowering."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module", params=[M.tiny_net, M.micro_mobilenet])
+def built(request):
+    name, layers = request.param()
+    rs = np.random.RandomState(0)
+    weights = {}
+    for i, l in enumerate(layers):
+        if l.has_weights:
+            weights[i] = l.init_weights(rs)
+    return name, layers, weights
+
+
+class TestModelStructure:
+    def test_shapes_chain(self, built):
+        _, layers, _ = built
+        for prev, cur in zip(layers, layers[1:]):
+            if cur.op in ("fc", "softmax"):
+                continue
+            assert cur.cin == prev.cout, f"{cur.name} cin"
+            assert cur.hin == prev.hout, f"{cur.name} hin"
+
+    def test_forward_shapes(self, built):
+        _, layers, weights = built
+        rs = np.random.RandomState(1)
+        x = rs.randn(*layers[1].in_dims()).astype(np.float32)
+        y = np.asarray(M.forward(layers, weights, x))
+        assert y.shape == (1, 10)
+        np.testing.assert_allclose(np.asarray(y).sum(), 1.0, rtol=1e-4)
+
+    def test_variants_listed_consistently(self, built):
+        _, layers, _ = built
+        for l in layers:
+            if l.op == "conv" and l.groups == 1 and l.k == 3 and l.s == 1:
+                assert "winograd" in l.variants(), l.name
+            if l.op == "conv" and l.groups > 1:
+                assert l.variants() == ["direct"], l.name
+
+
+class TestVariantEquivalence:
+    def test_all_variant_paths_agree(self, built):
+        """Running the whole model with im2col/winograd everywhere they
+        apply must reproduce the direct path (zero accuracy loss — the
+        paper's first design principle)."""
+        _, layers, weights = built
+        rs = np.random.RandomState(2)
+        x = rs.randn(*layers[1].in_dims()).astype(np.float32)
+        base = np.asarray(M.forward(layers, weights, x))
+        for variant in ["im2col", "winograd"]:
+            pick = {
+                i: variant
+                for i, l in enumerate(layers)
+                if variant in l.variants()
+            }
+            got = np.asarray(M.forward(layers, weights, x, variant_of=pick))
+            np.testing.assert_allclose(got, base, rtol=1e-3, atol=1e-4)
+
+
+class TestAotLowering:
+    def test_layer_lowering_produces_hlo_text(self, built):
+        _, layers, _ = built
+        l = layers[1]  # first conv
+        f = l.exec_fn("direct")
+        hlo = aot.to_hlo_text(
+            f,
+            [aot.spec(l.in_dims()), aot.spec(l.w_dims("direct")), aot.spec([l.cout])],
+        )
+        assert "HloModule" in hlo
+        assert "ROOT" in hlo
+        # return_tuple: the entry computation returns a tuple type.
+        assert "(f32[" in hlo
+
+    def test_weightless_layer_lowers(self, built):
+        _, layers, _ = built
+        gap = next(l for l in layers if l.op == "pool")
+        hlo = aot.to_hlo_text(gap.exec_fn("builtin"), [aot.spec(gap.in_dims())])
+        assert "HloModule" in hlo

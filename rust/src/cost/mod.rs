@@ -1,0 +1,353 @@
+//! The per-operation latency model `T(op, core, threads)`.
+//!
+//! Cold inference decomposes into per-layer *operations* (§3.2): weights
+//! reading, weights transformation, kernel execution, and — on GPU —
+//! pipeline creation (§3.4). This module prices each operation on each core
+//! class, with the multithreading behaviour of Fig. 6 (execution scales
+//! almost linearly; read/transform barely scale because they are disk- and
+//! memory-bound).
+//!
+//! All rates come from the [`DeviceProfile`]; the kernel-family factors come
+//! from [`KernelFamily`]. Both are calibrated against the paper's Tables
+//! 1–2 and Fig. 6 (see `DESIGN.md §Calibration targets`).
+
+use crate::device::{CoreClass, DeviceProfile};
+use crate::graph::{Layer, ModelGraph, OpKind};
+use crate::kernels::{Kernel, Registry};
+use crate::{Bytes, Ms};
+
+/// Fixed dispatch overhead per executed kernel on CPU, ms.
+pub const CPU_OP_OVERHEAD_MS: f64 = 0.015;
+/// Fixed dispatch overhead per executed kernel on GPU, ms (driver queue
+/// submission + descriptor binding; dominant for tiny layers).
+pub const GPU_DISPATCH_MS: f64 = 2.0;
+/// Execution-unit utilization for depthwise conv (memory-bound: each weight
+/// is used O(HW) times but arithmetic intensity per byte is ~9 MACs).
+const DW_UTILIZATION: f64 = 0.25;
+/// Utilization for FC (GEMV, memory-bound).
+const FC_UTILIZATION: f64 = 0.55;
+
+/// Latency model bound to a device.
+#[derive(Debug, Clone)]
+pub struct CostModel<'d> {
+    pub dev: &'d DeviceProfile,
+}
+
+impl<'d> CostModel<'d> {
+    pub fn new(dev: &'d DeviceProfile) -> CostModel<'d> {
+        CostModel { dev }
+    }
+
+    /// Multithread speedup for a stage with scaling exponent `exp`.
+    fn mt(&self, threads: usize, exp: f64) -> f64 {
+        (threads.max(1) as f64).powf(exp)
+    }
+
+    /// Disk read of `bytes`, issued from `class` with `threads` reader
+    /// threads. Reads from little cores are slower (Fig. 6, ≈2×) because
+    /// the issuing core drives the I/O stack.
+    pub fn read_ms(&self, bytes: Bytes, class: CoreClass, threads: usize) -> Ms {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let base_rate = self.dev.disk_mbps * 1e6 / 1e3; // bytes per ms
+        let class_factor = match class {
+            CoreClass::Big | CoreClass::Gpu => 1.0,
+            CoreClass::Little => 1.0 / self.dev.read_little_slowdown,
+        };
+        let rate = base_rate * class_factor * self.mt(threads, self.dev.mt_read_exp);
+        // 4 KiB minimum granularity: tiny blobs still pay one I/O.
+        (bytes.max(4096) as f64) / rate
+    }
+
+    /// Weight transformation raw→kernel layout for `kernel` on `layer`.
+    /// Memory-bound: `transform_work` effective passes over the transformed
+    /// bytes at the class's streaming bandwidth.
+    pub fn transform_ms(&self, kernel: &Kernel, layer: &Layer, class: CoreClass, threads: usize) -> Ms {
+        let work = kernel.family.transform_work();
+        if work == 0.0 {
+            return 0.0;
+        }
+        let bytes_moved = kernel.transformed_bytes(layer) as f64 * work;
+        let base_rate = self.dev.mem_eff_gbps * 1e9 / 1e3; // bytes per ms
+        let class_factor = match class {
+            CoreClass::Big | CoreClass::Gpu => 1.0,
+            CoreClass::Little => 1.0 / self.dev.transform_little_slowdown,
+        };
+        let rate = base_rate * class_factor * self.mt(threads, self.dev.mt_transform_exp);
+        bytes_moved / rate
+    }
+
+    /// Kernel execution time on `class` with `threads` cores of that class.
+    pub fn exec_ms(&self, kernel: &Kernel, layer: &Layer, class: CoreClass, threads: usize) -> Ms {
+        let flops = layer.flops() as f64;
+        if flops == 0.0 {
+            return 0.0;
+        }
+        let gflops = self.dev.core_gflops(class);
+        if gflops <= 0.0 {
+            return f64::INFINITY;
+        }
+        let speed = kernel.family.exec_speed();
+        let util = self.utilization(layer);
+        let overhead = match class {
+            CoreClass::Gpu => GPU_DISPATCH_MS,
+            _ => CPU_OP_OVERHEAD_MS,
+        };
+        let mt = match class {
+            CoreClass::Gpu => 1.0, // the GPU is modelled as one wide unit
+            _ => self.mt(threads, self.dev.mt_exec_exp),
+        };
+        overhead + flops / (gflops * 1e9 / 1e3 * speed * util * mt)
+    }
+
+    /// Per-layer utilization factor of the execution units.
+    fn utilization(&self, layer: &Layer) -> f64 {
+        match layer.op {
+            OpKind::Conv { .. } if layer.op.is_depthwise(layer.in_ch) => DW_UTILIZATION,
+            OpKind::Fc => FC_UTILIZATION,
+            OpKind::Conv { .. } => {
+                // Small feature maps can't fill the SIMD/GPU lanes.
+                if layer.out_hw >= 14 {
+                    1.0
+                } else {
+                    0.6
+                }
+            }
+            _ => 0.35, // weightless data-movement ops
+        }
+    }
+
+    /// Host→GPU weight upload.
+    pub fn upload_ms(&self, bytes: Bytes) -> Ms {
+        match &self.dev.gpu {
+            Some(g) => bytes as f64 / (g.upload_gbps * 1e9 / 1e3),
+            None => 0.0,
+        }
+    }
+
+    /// Vulkan pipeline creation for one kernel (§3.4). The shader-compile
+    /// portion is bypassed when the shader cache holds this kernel.
+    pub fn pipeline_create_ms(&self, shader_cached: bool) -> Ms {
+        match &self.dev.gpu {
+            Some(g) => {
+                g.pipeline_create_ms + if shader_cached { 0.0 } else { g.shader_compile_ms }
+            }
+            None => 0.0,
+        }
+    }
+
+    /// One-shot GPU driver/context initialization.
+    pub fn gpu_driver_init_ms(&self) -> Ms {
+        self.dev.gpu.as_ref().map(|g| g.driver_init_ms).unwrap_or(0.0)
+    }
+
+    /// Memory allocation for weights + activations (Table 1 shows this is
+    /// small: ~1 ms). Modelled as one pass of page faults over the arena.
+    pub fn alloc_ms(&self, graph: &ModelGraph) -> Ms {
+        let bytes: u64 = graph.weight_bytes()
+            + graph.layers().iter().map(Layer::activation_bytes).sum::<u64>();
+        // First-touch page faulting ~ 25 GB/s equivalent.
+        bytes as f64 / (25.0 * 1e9 / 1e3)
+    }
+
+    /// Warm-inference latency: every layer executes its warm-fastest kernel
+    /// on all big cores (phones) or the GPU (Jetsons); weights are resident.
+    /// This is the paper's lower bound for cold inference (§3.3).
+    pub fn warm_ms(&self, graph: &ModelGraph, registry: &Registry) -> Ms {
+        let (class, threads) = self.exec_class();
+        graph
+            .layers()
+            .iter()
+            .map(|l| {
+                let k = self.warm_best_kernel(l, registry);
+                self.exec_ms(&k, l, class, threads)
+            })
+            .sum()
+    }
+
+    /// The class + thread count execution runs on for this device.
+    pub fn exec_class(&self) -> (CoreClass, usize) {
+        if self.dev.executes_on_gpu() {
+            (CoreClass::Gpu, 1)
+        } else {
+            (CoreClass::Big, self.dev.n_big.max(1))
+        }
+    }
+
+    /// The kernel with the fastest execution (warm-optimal choice, i.e.
+    /// what vanilla ncnn hard-codes).
+    pub fn warm_best_kernel(&self, layer: &Layer, registry: &Registry) -> Kernel {
+        let (class, threads) = self.exec_class();
+        registry
+            .candidates(layer)
+            .into_iter()
+            .min_by(|a, b| {
+                self.exec_ms(a, layer, class, threads)
+                    .partial_cmp(&self.exec_ms(b, layer, class, threads))
+                    .unwrap()
+            })
+            .expect("layer has no kernel candidates")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::kernels::KernelFamily;
+
+    fn table2_layer() -> Layer {
+        // Table 2's conv: kernel 3, stride 1, 64→192 channels.
+        Layer {
+            id: 0,
+            name: "conv".into(),
+            op: OpKind::Conv { kernel: 3, stride: 1, groups: 1 },
+            in_ch: 64,
+            out_ch: 192,
+            in_hw: 32,
+            out_hw: 32,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn table2_orderings_hold() {
+        // The qualitative structure of Table 2 must reproduce:
+        // transform: winograd > winograd-pack4 >> sgemm-pack4 > direct (=0)
+        // exec (big): winograd-pack4 < winograd < direct ≈ sgemm-pack4 < pack4 << general
+        // cache read: winograd variants ≫ raw read; sgemm cache read = raw read.
+        let dev = profiles::meizu_16t();
+        let cm = CostModel::new(&dev);
+        let l = table2_layer();
+        let k = |f: KernelFamily| Kernel::new(f.name(), f);
+
+        let tw = |f| cm.transform_ms(&k(f), &l, CoreClass::Little, 1);
+        assert!(tw(KernelFamily::Winograd) > tw(KernelFamily::WinogradPack4));
+        assert!(tw(KernelFamily::WinogradPack4) > 5.0 * tw(KernelFamily::SgemmPack4));
+        assert_eq!(tw(KernelFamily::Direct), 0.0);
+
+        let ex = |f| cm.exec_ms(&k(f), &l, CoreClass::Big, 4);
+        assert!(ex(KernelFamily::WinogradPack4) < ex(KernelFamily::Winograd));
+        assert!(ex(KernelFamily::Winograd) < ex(KernelFamily::SgemmPack4));
+        assert!(ex(KernelFamily::SgemmPack4) < ex(KernelFamily::Pack4));
+        assert!(ex(KernelFamily::General) > 8.0 * ex(KernelFamily::SgemmPack4));
+
+        let rd_raw = cm.read_ms(l.weight_bytes(), CoreClass::Little, 1);
+        let rd_cache = cm.read_ms(
+            k(KernelFamily::WinogradPack4).transformed_bytes(&l),
+            CoreClass::Little,
+            1,
+        );
+        let ratio = rd_cache / rd_raw;
+        assert!((6.5..8.5).contains(&ratio), "cache/raw read ratio {ratio}");
+        // And caching still beats transforming:
+        assert!(rd_cache < tw(KernelFamily::WinogradPack4));
+    }
+
+    #[test]
+    fn fig6_asymmetry_ratios() {
+        let dev = profiles::meizu_16t();
+        let cm = CostModel::new(&dev);
+        let l = table2_layer();
+        let k = Kernel::new("sgemm_pack4", KernelFamily::SgemmPack4);
+
+        let exec_ratio = cm.exec_ms(&k, &l, CoreClass::Little, 1)
+            / cm.exec_ms(&k, &l, CoreClass::Big, 1);
+        assert!((4.0..8.0).contains(&exec_ratio), "exec big/little {exec_ratio}");
+
+        let read_ratio = cm.read_ms(1 << 20, CoreClass::Little, 1)
+            / cm.read_ms(1 << 20, CoreClass::Big, 1);
+        assert!((1.8..2.2).contains(&read_ratio), "read {read_ratio}");
+
+        let tr_ratio = cm.transform_ms(&k, &l, CoreClass::Little, 1)
+            / cm.transform_ms(&k, &l, CoreClass::Big, 1);
+        assert!((3.4..4.2).contains(&tr_ratio), "transform {tr_ratio}");
+    }
+
+    #[test]
+    fn fig6_multithread_scaling() {
+        let dev = profiles::meizu_16t();
+        let cm = CostModel::new(&dev);
+        let l = table2_layer();
+        let k = Kernel::new("sgemm_pack4", KernelFamily::SgemmPack4);
+        // Execution: 4 threads ≳ 3.3×.
+        let e1 = cm.exec_ms(&k, &l, CoreClass::Big, 1) - CPU_OP_OVERHEAD_MS;
+        let e4 = cm.exec_ms(&k, &l, CoreClass::Big, 4) - CPU_OP_OVERHEAD_MS;
+        assert!(e1 / e4 > 3.2, "exec mt speedup {}", e1 / e4);
+        // Read: 4 threads ≲ 1.2×.
+        let r1 = cm.read_ms(1 << 24, CoreClass::Big, 1);
+        let r4 = cm.read_ms(1 << 24, CoreClass::Big, 4);
+        assert!(r1 / r4 < 1.3, "read mt speedup {}", r1 / r4);
+        // Transform: 4 threads ≲ 1.6×.
+        let t1 = cm.transform_ms(&k, &l, CoreClass::Big, 1);
+        let t4 = cm.transform_ms(&k, &l, CoreClass::Big, 4);
+        assert!(t1 / t4 < 1.7, "transform mt speedup {}", t1 / t4);
+    }
+
+    #[test]
+    fn table1_resnet50_shape() {
+        // Pixel 5 / ncnn-style defaults: transform must dominate cold
+        // inference (paper: 1,135 ms transform vs 36.5 ms read vs 190 ms
+        // exec), and warm ≈ exec.
+        let dev = profiles::pixel_5();
+        let cm = CostModel::new(&dev);
+        let g = crate::graph::zoo::resnet50();
+        let reg = Registry::full();
+
+        let read: f64 = g
+            .layers()
+            .iter()
+            .map(|l| cm.read_ms(l.weight_bytes(), CoreClass::Big, 1))
+            .sum();
+        let transform: f64 = g
+            .layers()
+            .iter()
+            .map(|l| {
+                let k = cm.warm_best_kernel(l, &reg);
+                cm.transform_ms(&k, l, CoreClass::Big, 1)
+            })
+            .sum();
+        let warm = cm.warm_ms(&g, &reg);
+        assert!(
+            (15.0..80.0).contains(&read),
+            "read {read} ms (paper 36.5)"
+        );
+        assert!(
+            (500.0..2500.0).contains(&transform),
+            "transform {transform} ms (paper 1135)"
+        );
+        assert!((80.0..400.0).contains(&warm), "warm {warm} ms (paper 186)");
+        assert!(transform > 5.0 * warm, "transform must dominate");
+    }
+
+    #[test]
+    fn gpu_prep_matches_table1_scale() {
+        // TX2 / ResNet-50: driver init + per-kernel pipeline creation
+        // should land in the thousands of ms (paper: 3,004 ms).
+        let dev = profiles::jetson_tx2();
+        let cm = CostModel::new(&dev);
+        let g = crate::graph::zoo::resnet50();
+        let kernels = g
+            .layers()
+            .iter()
+            .filter(|l| l.op.has_weights())
+            .count();
+        let prep = cm.gpu_driver_init_ms()
+            + (kernels as f64) * cm.pipeline_create_ms(false);
+        assert!((2000.0..4500.0).contains(&prep), "gpu prep {prep} ms");
+        // Shader cache removes most of it.
+        let cached = cm.gpu_driver_init_ms()
+            + (kernels as f64) * cm.pipeline_create_ms(true);
+        assert!(cached < prep * 0.5, "cached {cached} vs {prep}");
+    }
+
+    #[test]
+    fn alloc_is_negligible() {
+        let dev = profiles::pixel_5();
+        let cm = CostModel::new(&dev);
+        let g = crate::graph::zoo::resnet50();
+        let a = cm.alloc_ms(&g);
+        assert!(a < 20.0, "alloc {a} ms (paper: 1.34 ms)");
+    }
+}

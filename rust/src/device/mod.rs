@@ -1,0 +1,13 @@
+//! Edge-device models.
+//!
+//! The paper's testbed (two Android phones for CPU experiments, two more in
+//! Table 5, and two Jetson boards for GPU experiments) is represented as
+//! [`profile::DeviceProfile`]s: core topology, per-core-class effective
+//! compute/memory rates, disk bandwidth, GPU preparation costs, and power.
+//! The numbers are calibrated against the paper's own measurements
+//! (Table 1 breakdown, Table 2 per-kernel costs, Fig. 6 asymmetry ratios).
+
+pub mod profile;
+pub mod profiles;
+
+pub use profile::{CoreClass, CoreId, DeviceProfile, GpuProfile};

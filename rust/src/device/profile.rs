@@ -1,0 +1,146 @@
+//! Device profile: the hardware facts the scheduler and simulator consume.
+
+/// Class of an execution unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreClass {
+    /// LITTLE CPU core (e.g. Cortex-A55).
+    Little,
+    /// big CPU core (e.g. Cortex-A76/X1, or Jetson's CPU treated as
+    /// "little" relative to its GPU).
+    Big,
+    /// GPU treated as one wide execution unit (§3.4: "treating the GPU as
+    /// the big core and CPU as little cores").
+    Gpu,
+}
+
+impl CoreClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoreClass::Little => "little",
+            CoreClass::Big => "big",
+            CoreClass::Gpu => "gpu",
+        }
+    }
+}
+
+/// Identifier of a concrete core: class + index within the class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CoreId {
+    pub class_rank: u8,
+    pub index: u8,
+}
+
+/// GPU-specific cold-start parameters (§3.4, Table 1's "GPU preparation").
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    /// Effective GEMM throughput, GFLOP/s.
+    pub gflops: f64,
+    /// One-shot driver/context initialization, ms.
+    pub driver_init_ms: f64,
+    /// Per-kernel Vulkan pipeline creation (state objects), ms. Paid per
+    /// executed kernel even with cached shaders.
+    pub pipeline_create_ms: f64,
+    /// Per-kernel shader (SPIR-V) compilation, ms. Bypassed entirely by the
+    /// shader cache (§3.4 "Caching compute shaders").
+    pub shader_compile_ms: f64,
+    /// Host→device weight upload bandwidth, GB/s.
+    pub upload_gbps: f64,
+    /// Board power while the GPU is busy, W.
+    pub power_w: f64,
+}
+
+/// An edge device.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub n_big: usize,
+    pub n_little: usize,
+    /// Effective single-core SGEMM throughput, GFLOP/s.
+    pub big_gflops: f64,
+    pub little_gflops: f64,
+    /// Sequential-read disk bandwidth seen from a big core, MB/s.
+    /// (Fig. 6: reads issued from a little core run ~2× slower.)
+    pub disk_mbps: f64,
+    /// Effective streaming memory bandwidth from one big core, GB/s
+    /// (drives weight transformation; Fig. 6: little cores see ~1/3.8).
+    pub mem_eff_gbps: f64,
+    /// big:little slowdown factors per operation type (Fig. 6).
+    pub read_little_slowdown: f64,
+    pub transform_little_slowdown: f64,
+    /// Multithread efficiency exponents per stage: speedup(n) = n^e.
+    /// Fig. 6: execution ~linear (e≈0.93), read/transform ~flat.
+    pub mt_exec_exp: f64,
+    pub mt_read_exp: f64,
+    pub mt_transform_exp: f64,
+    /// Per-core active power, W.
+    pub big_power_w: f64,
+    pub little_power_w: f64,
+    pub idle_power_w: f64,
+    /// GPU, if this device runs inference on one.
+    pub gpu: Option<GpuProfile>,
+}
+
+impl DeviceProfile {
+    /// Total CPU cores.
+    pub fn n_cpu(&self) -> usize {
+        self.n_big + self.n_little
+    }
+
+    /// Enumerate all schedulable cores: big cores first (class_rank 0),
+    /// then little (1), then the GPU as a single unit (2).
+    pub fn cores(&self) -> Vec<(CoreId, CoreClass)> {
+        let mut out = Vec::new();
+        for i in 0..self.n_big {
+            out.push((CoreId { class_rank: 0, index: i as u8 }, CoreClass::Big));
+        }
+        for i in 0..self.n_little {
+            out.push((CoreId { class_rank: 1, index: i as u8 }, CoreClass::Little));
+        }
+        if self.gpu.is_some() {
+            out.push((CoreId { class_rank: 2, index: 0 }, CoreClass::Gpu));
+        }
+        out
+    }
+
+    /// Whether inference executes on the GPU for this device (the paper
+    /// uses GPU on the Jetsons, CPU on the phones).
+    pub fn executes_on_gpu(&self) -> bool {
+        self.gpu.is_some()
+    }
+
+    /// GFLOP/s of one core of the given class.
+    pub fn core_gflops(&self, class: CoreClass) -> f64 {
+        match class {
+            CoreClass::Big => self.big_gflops,
+            CoreClass::Little => self.little_gflops,
+            CoreClass::Gpu => self.gpu.as_ref().map(|g| g.gflops).unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn cores_enumeration() {
+        let d = profiles::meizu_16t();
+        let cores = d.cores();
+        assert_eq!(cores.len(), d.n_cpu());
+        assert_eq!(cores.iter().filter(|(_, c)| *c == CoreClass::Big).count(), d.n_big);
+
+        let tx2 = profiles::jetson_tx2();
+        assert!(tx2.executes_on_gpu());
+        assert!(tx2.cores().iter().any(|(_, c)| *c == CoreClass::Gpu));
+    }
+
+    #[test]
+    fn class_speed_ordering() {
+        let d = profiles::meizu_16t();
+        assert!(d.core_gflops(CoreClass::Big) > d.core_gflops(CoreClass::Little));
+        // Fig. 6: exec big/little ratio ≈ 6
+        let ratio = d.big_gflops / d.little_gflops;
+        assert!((4.0..8.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,209 @@
+//! The six paper devices (§4.1 "Hardware"), calibrated to the paper's own
+//! measurements. CPU inference on the four phones, GPU inference on the two
+//! Jetson boards (the paper found phone GPUs unprofitable for cold
+//! inference because of GPU preparation time — Table 1).
+
+use super::profile::{DeviceProfile, GpuProfile};
+
+/// Names accepted by [`by_name`].
+pub const ALL_DEVICES: [&str; 6] = [
+    "meizu16t",
+    "pixel5",
+    "redmi9",
+    "meizu18pro",
+    "jetson-tx2",
+    "jetson-nano",
+];
+
+/// Look up a device profile by CLI name.
+pub fn by_name(name: &str) -> Option<DeviceProfile> {
+    Some(match name {
+        "meizu16t" => meizu_16t(),
+        "pixel5" => pixel_5(),
+        "redmi9" => redmi_9(),
+        "meizu18pro" => meizu_18_pro(),
+        "jetson-tx2" => jetson_tx2(),
+        "jetson-nano" => jetson_nano(),
+        _ => return None,
+    })
+}
+
+/// The four CPU (phone) devices.
+pub fn cpu_devices() -> Vec<DeviceProfile> {
+    vec![meizu_16t(), pixel_5(), redmi_9(), meizu_18_pro()]
+}
+
+/// The two GPU (Jetson) devices.
+pub fn gpu_devices() -> Vec<DeviceProfile> {
+    vec![jetson_tx2(), jetson_nano()]
+}
+
+fn phone_defaults() -> DeviceProfile {
+    DeviceProfile {
+        name: "phone",
+        n_big: 4,
+        n_little: 4,
+        big_gflops: 20.0,
+        little_gflops: 3.3,
+        disk_mbps: 2400.0,
+        mem_eff_gbps: 2.4,
+        read_little_slowdown: 2.0,       // Fig. 6
+        transform_little_slowdown: 3.8,  // Fig. 6
+        mt_exec_exp: 0.93,               // near-linear execution scaling
+        mt_read_exp: 0.10,               // disk-bound: almost flat
+        mt_transform_exp: 0.25,          // memory-bound: poor scaling
+        big_power_w: 2.2,
+        little_power_w: 0.45,
+        idle_power_w: 0.35,
+        gpu: None,
+    }
+}
+
+/// Meizu 16T — Snapdragon 855 (1×A76@2.84 + 3×A76@2.42 + 4×A55).
+/// Primary CPU evaluation device of the paper.
+pub fn meizu_16t() -> DeviceProfile {
+    DeviceProfile {
+        name: "meizu16t",
+        big_gflops: 24.0,
+        little_gflops: 4.0,
+        disk_mbps: 2800.0,
+        mem_eff_gbps: 3.0,
+        ..phone_defaults()
+    }
+}
+
+/// Google Pixel 5 — Snapdragon 765G (2×A76 + 6×A55). Calibrated so the
+/// ncnn-default ResNet-50 cold breakdown lands near Table 1
+/// (read 36.5 ms, transform 1,135 ms, exec 190 ms, warm 186 ms).
+pub fn pixel_5() -> DeviceProfile {
+    DeviceProfile {
+        name: "pixel5",
+        n_big: 2,
+        n_little: 6,
+        big_gflops: 21.0,
+        little_gflops: 3.5,
+        disk_mbps: 2700.0,
+        mem_eff_gbps: 1.55,
+        ..phone_defaults()
+    }
+}
+
+/// Redmi 9 — MediaTek Helio G80 (2×A75 + 6×A55), the weakest phone.
+pub fn redmi_9() -> DeviceProfile {
+    DeviceProfile {
+        name: "redmi9",
+        n_big: 2,
+        n_little: 6,
+        big_gflops: 13.0,
+        little_gflops: 2.6,
+        disk_mbps: 950.0,
+        mem_eff_gbps: 1.1,
+        ..phone_defaults()
+    }
+}
+
+/// Meizu 18 Pro — Snapdragon 888 (1×X1 + 3×A78 + 4×A55), the strongest.
+pub fn meizu_18_pro() -> DeviceProfile {
+    DeviceProfile {
+        name: "meizu18pro",
+        big_gflops: 31.0,
+        little_gflops: 4.6,
+        disk_mbps: 3300.0,
+        mem_eff_gbps: 3.6,
+        ..phone_defaults()
+    }
+}
+
+/// Jetson TX2 — 256-core Pascal GPU + (2×Denver2 + 4×A57) CPU. Calibrated
+/// so the TensorFlow/ncnn-style GPU cold breakdown lands near Table 1
+/// (GPU prep 3,004 ms, transform 1,617 ms, exec 803 ms, warm 137 ms).
+pub fn jetson_tx2() -> DeviceProfile {
+    DeviceProfile {
+        name: "jetson-tx2",
+        n_big: 2,
+        n_little: 4,
+        big_gflops: 11.0,
+        little_gflops: 5.5,
+        disk_mbps: 2300.0,
+        mem_eff_gbps: 2.1,
+        read_little_slowdown: 1.6,
+        transform_little_slowdown: 2.0,
+        big_power_w: 3.0,
+        little_power_w: 1.2,
+        idle_power_w: 1.5,
+        gpu: Some(GpuProfile {
+            // Table 1's 3,004 ms "GPU preparation" is dominated by
+            // per-kernel shader compilation + pipeline-state creation
+            // (53 ms x ~54 kernels); context init itself is modest.
+            gflops: 420.0,
+            driver_init_ms: 120.0,
+            pipeline_create_ms: 5.0,
+            shader_compile_ms: 48.0,
+            upload_gbps: 4.0,
+            power_w: 9.0,
+        }),
+        ..phone_defaults()
+    }
+}
+
+/// Jetson Nano — 128-core Maxwell GPU + 4×A57 CPU, the weakest GPU board.
+pub fn jetson_nano() -> DeviceProfile {
+    DeviceProfile {
+        name: "jetson-nano",
+        n_big: 0,
+        n_little: 4,
+        big_gflops: 0.0,
+        little_gflops: 4.6,
+        disk_mbps: 180.0, // SD-card storage
+        mem_eff_gbps: 1.3,
+        read_little_slowdown: 1.3,
+        transform_little_slowdown: 1.5,
+        big_power_w: 2.0,
+        little_power_w: 0.9,
+        idle_power_w: 1.2,
+        gpu: Some(GpuProfile {
+            gflops: 190.0,
+            driver_init_ms: 200.0,
+            pipeline_create_ms: 8.0,
+            shader_compile_ms: 75.0,
+            upload_gbps: 2.5,
+            power_w: 6.0,
+        }),
+        ..phone_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_devices_resolve() {
+        for name in ALL_DEVICES {
+            let d = by_name(name).unwrap();
+            assert_eq!(d.name, name);
+            assert!(d.n_cpu() > 0);
+        }
+        assert!(by_name("iphone").is_none());
+    }
+
+    #[test]
+    fn jetsons_have_gpus_phones_dont() {
+        for d in cpu_devices() {
+            assert!(d.gpu.is_none(), "{}", d.name);
+        }
+        for d in gpu_devices() {
+            assert!(d.gpu.is_some(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn relative_device_strength() {
+        // Meizu 18 Pro is the fastest phone; Redmi 9 the slowest.
+        assert!(meizu_18_pro().big_gflops > meizu_16t().big_gflops);
+        assert!(redmi_9().big_gflops < pixel_5().big_gflops);
+        // TX2's GPU is stronger than Nano's; Nano's disk (SD card) is slow.
+        assert!(jetson_tx2().gpu.as_ref().unwrap().gflops > jetson_nano().gpu.as_ref().unwrap().gflops);
+        assert!(jetson_nano().disk_mbps < 300.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Fluent graph construction used by the model zoo.
+//!
+//! Tracks the "current" tensor (channels + spatial size) so chains of layers
+//! read like the architecture tables in the original papers. Branches are
+//! expressed by saving a [`Tap`] and resuming from it.
+
+use super::layer::{Layer, LayerId};
+use super::model::{GraphError, ModelGraph};
+use super::op::OpKind;
+
+/// A resumable point in the graph: a layer output with known shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Tap {
+    pub id: LayerId,
+    pub ch: u32,
+    pub hw: u32,
+}
+
+/// Builder accumulating layers in topological order.
+pub struct GraphBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    cur: Option<Tap>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder { name: name.to_string(), layers: Vec::new(), cur: None }
+    }
+
+    /// Current tap (panics if no layers yet).
+    pub fn tap(&self) -> Tap {
+        self.cur.expect("builder has no current tensor")
+    }
+
+    /// Resume building from a saved tap.
+    pub fn resume(&mut self, tap: Tap) -> &mut Self {
+        self.cur = Some(tap);
+        self
+    }
+
+    fn push(&mut self, name: String, op: OpKind, deps: Vec<LayerId>, in_ch: u32, out_ch: u32, in_hw: u32, out_hw: u32) -> Tap {
+        let id = self.layers.len();
+        self.layers.push(Layer { id, name, op, in_ch, out_ch, in_hw, out_hw, deps });
+        let tap = Tap { id, ch: out_ch, hw: out_hw };
+        self.cur = Some(tap);
+        tap
+    }
+
+    /// Declare the graph input.
+    pub fn input(&mut self, ch: u32, hw: u32) -> Tap {
+        assert!(self.layers.is_empty(), "input must be the first layer");
+        self.push("input".into(), OpKind::Input, vec![], ch, ch, hw, hw)
+    }
+
+    /// Standard convolution from the current tensor.
+    pub fn conv(&mut self, name: &str, out_ch: u32, kernel: u32, stride: u32) -> Tap {
+        self.grouped_conv(name, out_ch, kernel, stride, 1)
+    }
+
+    /// Grouped convolution.
+    pub fn grouped_conv(&mut self, name: &str, out_ch: u32, kernel: u32, stride: u32, groups: u32) -> Tap {
+        let t = self.tap();
+        let out_hw = conv_out(t.hw, kernel, stride);
+        self.push(
+            name.into(),
+            OpKind::Conv { kernel, stride, groups },
+            vec![t.id],
+            t.ch,
+            out_ch,
+            t.hw,
+            out_hw,
+        )
+    }
+
+    /// Depthwise convolution (groups == channels).
+    pub fn dwconv(&mut self, name: &str, kernel: u32, stride: u32) -> Tap {
+        let ch = self.tap().ch;
+        self.grouped_conv(name, ch, kernel, stride, ch)
+    }
+
+    /// Pointwise (1×1) convolution.
+    pub fn pwconv(&mut self, name: &str, out_ch: u32) -> Tap {
+        self.conv(name, out_ch, 1, 1)
+    }
+
+    /// Pooling.
+    pub fn pool(&mut self, name: &str, kernel: u32, stride: u32) -> Tap {
+        let t = self.tap();
+        let out_hw = conv_out(t.hw, kernel, stride);
+        self.push(
+            name.into(),
+            OpKind::Pool { kernel, stride, global: false },
+            vec![t.id],
+            t.ch,
+            t.ch,
+            t.hw,
+            out_hw,
+        )
+    }
+
+    /// Global average pool down to 1×1.
+    pub fn global_pool(&mut self, name: &str) -> Tap {
+        let t = self.tap();
+        self.push(
+            name.into(),
+            OpKind::Pool { kernel: t.hw, stride: t.hw, global: true },
+            vec![t.id],
+            t.ch,
+            t.ch,
+            t.hw,
+            1,
+        )
+    }
+
+    /// Fully connected layer (input flattened).
+    pub fn fc(&mut self, name: &str, out: u32) -> Tap {
+        let t = self.tap();
+        let in_features = t.ch * t.hw * t.hw;
+        self.push(name.into(), OpKind::Fc, vec![t.id], in_features, out, 1, 1)
+    }
+
+    /// Residual add of the current tensor with another tap.
+    pub fn add(&mut self, name: &str, other: Tap) -> Tap {
+        let t = self.tap();
+        assert_eq!(t.hw, other.hw, "eltwise shape mismatch in {name}");
+        assert_eq!(t.ch, other.ch, "eltwise channel mismatch in {name}");
+        self.push(
+            name.into(),
+            OpKind::Eltwise,
+            vec![t.id, other.id],
+            t.ch,
+            t.ch,
+            t.hw,
+            t.hw,
+        )
+    }
+
+    /// Channel concat of multiple taps (all same spatial size).
+    pub fn concat(&mut self, name: &str, taps: &[Tap]) -> Tap {
+        assert!(!taps.is_empty());
+        let hw = taps[0].hw;
+        assert!(taps.iter().all(|t| t.hw == hw), "concat spatial mismatch in {name}");
+        let ch: u32 = taps.iter().map(|t| t.ch).sum();
+        self.push(
+            name.into(),
+            OpKind::Concat,
+            taps.iter().map(|t| t.id).collect(),
+            ch,
+            ch,
+            hw,
+            hw,
+        )
+    }
+
+    /// Channel shuffle (ShuffleNet).
+    pub fn shuffle(&mut self, name: &str) -> Tap {
+        let t = self.tap();
+        self.push(name.into(), OpKind::ChannelShuffle, vec![t.id], t.ch, t.ch, t.hw, t.hw)
+    }
+
+    /// Channel split: returns the two halves as taps (modelled as one Split
+    /// layer; both halves resume from it with half the channels).
+    pub fn split(&mut self, name: &str) -> (Tap, Tap) {
+        let t = self.tap();
+        assert!(t.ch % 2 == 0, "split needs even channels in {name}");
+        let tap = self.push(name.into(), OpKind::Split, vec![t.id], t.ch, t.ch, t.hw, t.hw);
+        let half = Tap { id: tap.id, ch: t.ch / 2, hw: t.hw };
+        (half, half)
+    }
+
+    /// Nearest-neighbour upsample ×2 (YOLO neck).
+    pub fn upsample(&mut self, name: &str) -> Tap {
+        let t = self.tap();
+        self.push(name.into(), OpKind::Upsample, vec![t.id], t.ch, t.ch, t.hw, t.hw * 2)
+    }
+
+    /// Softmax head.
+    pub fn softmax(&mut self, name: &str) -> Tap {
+        let t = self.tap();
+        self.push(name.into(), OpKind::Softmax, vec![t.id], t.ch, t.ch, t.hw, t.hw)
+    }
+
+    /// Finalize into a validated graph.
+    pub fn build(self) -> Result<ModelGraph, GraphError> {
+        ModelGraph::new(&self.name, self.layers)
+    }
+}
+
+/// Output spatial size of a conv/pool with SAME-ish padding, floor division
+/// (matches how the paper's model zoo shapes march: 224→112→56→28→14→7).
+pub fn conv_out(hw: u32, _kernel: u32, stride: u32) -> u32 {
+    (hw + stride - 1) / stride
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains_track_shapes() {
+        let mut b = GraphBuilder::new("t");
+        b.input(3, 224);
+        let t = b.conv("c1", 32, 3, 2);
+        assert_eq!(t.hw, 112);
+        assert_eq!(t.ch, 32);
+        b.dwconv("dw", 3, 1);
+        let t = b.pwconv("pw", 64);
+        assert_eq!(t.ch, 64);
+        b.global_pool("gap");
+        let t = b.fc("fc", 1000);
+        assert_eq!(t.ch, 1000);
+        let g = b.build().unwrap();
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.bfs_order().len(), 6);
+    }
+
+    #[test]
+    fn branches_and_merge() {
+        let mut b = GraphBuilder::new("t");
+        b.input(3, 32);
+        let stem = b.conv("stem", 16, 3, 1);
+        let left = b.conv("left", 16, 3, 1);
+        b.resume(stem);
+        let right = b.conv("right", 16, 1, 1);
+        b.resume(left);
+        b.add("merge", right);
+        let g = b.build().unwrap();
+        assert_eq!(g.layer(4).deps, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "eltwise channel mismatch")]
+    fn add_rejects_mismatched_channels() {
+        let mut b = GraphBuilder::new("t");
+        b.input(3, 32);
+        let a = b.conv("a", 16, 3, 1);
+        b.conv("b", 32, 3, 1);
+        b.add("bad", a);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("t");
+        b.input(3, 32);
+        let s = b.conv("s", 8, 1, 1);
+        let x = b.conv("x", 16, 1, 1);
+        b.resume(s);
+        let y = b.conv("y", 24, 3, 1);
+        let t = b.concat("cat", &[x, y]);
+        assert_eq!(t.ch, 40);
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-layer record: shapes, parameters, FLOPs, dependencies.
+
+use super::op::OpKind;
+use crate::{Bytes, Flops};
+
+/// Index of a layer within its [`super::model::ModelGraph`].
+pub type LayerId = usize;
+
+/// One layer of a model graph.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub op: OpKind,
+    /// Input channels (for multi-input ops: channels after combination).
+    pub in_ch: u32,
+    pub out_ch: u32,
+    /// Input spatial size (square tensors; the paper's models are all
+    /// 224×224-input CNNs).
+    pub in_hw: u32,
+    pub out_hw: u32,
+    /// Direct predecessors in the dataflow graph.
+    pub deps: Vec<LayerId>,
+}
+
+impl Layer {
+    /// Number of weight parameters (bias folded in; BN folded).
+    pub fn params(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { kernel, groups, .. } => {
+                let k = kernel as u64;
+                let cin = self.in_ch as u64;
+                let cout = self.out_ch as u64;
+                let g = groups.max(1) as u64;
+                // weights + bias
+                cout * (cin / g) * k * k + cout
+            }
+            OpKind::Fc => (self.in_ch as u64) * (self.out_ch as u64) + self.out_ch as u64,
+            _ => 0,
+        }
+    }
+
+    /// Raw (pre-transformation) weight bytes on disk, f32 storage.
+    pub fn weight_bytes(&self) -> Bytes {
+        self.params() * 4
+    }
+
+    /// Multiply-accumulate count ×2 = FLOPs of the forward pass.
+    pub fn flops(&self) -> Flops {
+        let spatial = (self.out_hw as u64) * (self.out_hw as u64);
+        match self.op {
+            OpKind::Conv { kernel, groups, .. } => {
+                let k = kernel as u64;
+                let cin = self.in_ch as u64;
+                let cout = self.out_ch as u64;
+                let g = groups.max(1) as u64;
+                2 * spatial * cout * (cin / g) * k * k
+            }
+            OpKind::Fc => 2 * (self.in_ch as u64) * (self.out_ch as u64),
+            OpKind::Pool { kernel, .. } => {
+                spatial * (self.out_ch as u64) * (kernel as u64) * (kernel as u64)
+            }
+            OpKind::Eltwise | OpKind::Activation | OpKind::ChannelShuffle => {
+                spatial * self.out_ch as u64
+            }
+            OpKind::Softmax => 3 * self.out_ch as u64,
+            OpKind::Concat | OpKind::Reshape | OpKind::Split | OpKind::Upsample => {
+                spatial * self.out_ch as u64
+            }
+            OpKind::Input => 0,
+        }
+    }
+
+    /// Activation (output feature map) bytes, f32.
+    pub fn activation_bytes(&self) -> Bytes {
+        (self.out_hw as u64) * (self.out_hw as u64) * (self.out_ch as u64) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(in_ch: u32, out_ch: u32, hw: u32, k: u32, s: u32, groups: u32) -> Layer {
+        Layer {
+            id: 0,
+            name: "t".into(),
+            op: OpKind::Conv { kernel: k, stride: s, groups },
+            in_ch,
+            out_ch,
+            in_hw: hw,
+            out_hw: hw / s,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn conv_params_match_hand_count() {
+        // 3x3 conv 64->192: 64*192*9 + 192 bias = 110,784
+        let l = conv(64, 192, 56, 3, 1, 1);
+        assert_eq!(l.params(), 64 * 192 * 9 + 192);
+        assert_eq!(l.weight_bytes(), (64 * 192 * 9 + 192) * 4);
+    }
+
+    #[test]
+    fn depthwise_params() {
+        // dw 3x3 over 32 channels: 32*1*9 + 32
+        let l = conv(32, 32, 112, 3, 1, 32);
+        assert_eq!(l.params(), 32 * 9 + 32);
+    }
+
+    #[test]
+    fn conv_flops_match_hand_count() {
+        let l = conv(64, 192, 56, 3, 1, 1);
+        assert_eq!(l.flops(), 2 * 56 * 56 * 192 * 64 * 9);
+    }
+
+    #[test]
+    fn fc_params_and_flops() {
+        let l = Layer {
+            id: 0,
+            name: "fc".into(),
+            op: OpKind::Fc,
+            in_ch: 2048,
+            out_ch: 1000,
+            in_hw: 1,
+            out_hw: 1,
+            deps: vec![],
+        };
+        assert_eq!(l.params(), 2048 * 1000 + 1000);
+        assert_eq!(l.flops(), 2 * 2048 * 1000);
+    }
+
+    #[test]
+    fn weightless_ops_have_zero_params() {
+        let l = Layer {
+            id: 0,
+            name: "pool".into(),
+            op: OpKind::Pool { kernel: 2, stride: 2, global: false },
+            in_ch: 64,
+            out_ch: 64,
+            in_hw: 56,
+            out_hw: 28,
+            deps: vec![],
+        };
+        assert_eq!(l.params(), 0);
+        assert!(l.flops() > 0);
+    }
+}

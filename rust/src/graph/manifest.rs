@@ -1,0 +1,272 @@
+//! Loader for `artifacts/manifest.json` produced by `python/compile/aot.py`.
+//!
+//! The manifest describes each AOT-compiled model: layer graph (mirroring
+//! [`super::zoo`]), per-layer raw-weight blobs, and for every available
+//! kernel variant the HLO-text artifact paths for its *execute* computation
+//! and (if the variant needs one) its *weight-transform* computation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::layer::Layer;
+use super::model::ModelGraph;
+use super::op::OpKind;
+use crate::util::json::Json;
+
+/// Artifact paths for one kernel variant of one layer.
+#[derive(Debug, Clone)]
+pub struct VariantArtifacts {
+    /// Variant name ("direct", "im2col", "winograd", …).
+    pub variant: String,
+    /// HLO text implementing the layer forward with this variant's layout.
+    pub exec_hlo: PathBuf,
+    /// HLO text implementing raw→transformed weight conversion (None for
+    /// variants that execute on raw weights).
+    pub transform_hlo: Option<PathBuf>,
+    /// Expected transformed-weight element count (f32), for cache sizing.
+    pub transformed_elems: u64,
+    /// Dims of the weight argument the exec computation expects.
+    pub w_dims: Vec<i64>,
+}
+
+/// Per-layer artifact set.
+#[derive(Debug, Clone, Default)]
+pub struct LayerArtifacts {
+    /// Path to the raw weight blob (empty for weightless layers).
+    pub raw_weights: Option<PathBuf>,
+    /// Raw weight element count (f32).
+    pub raw_elems: u64,
+    /// Bias element count at the tail of the raw blob (0 = no bias).
+    pub bias_elems: u64,
+    /// Dims of the layer's input activation (empty for the graph input).
+    pub in_dims: Vec<i64>,
+    /// Dims of the layer's output activation.
+    pub out_dims: Vec<i64>,
+    pub variants: Vec<VariantArtifacts>,
+}
+
+/// A fully parsed manifest: the graph plus artifact locations.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelGraph,
+    /// Indexed by layer id.
+    pub artifacts: Vec<LayerArtifacts>,
+    /// Directory the manifest was loaded from (paths are relative to it).
+    pub root: PathBuf,
+    /// Reference input blob for end-to-end numeric verification.
+    pub fixture_input: Option<PathBuf>,
+    /// Expected model output for the fixture input (produced by jax).
+    pub fixture_output: Option<PathBuf>,
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, root)
+    }
+
+    /// Parse manifest text. `root` is recorded for path resolution.
+    pub fn parse(text: &str, root: &Path) -> Result<Manifest> {
+        let doc = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let name = doc
+            .get("model")
+            .as_str()
+            .context("manifest: missing 'model'")?
+            .to_string();
+        let layers_json = doc
+            .get("layers")
+            .as_arr()
+            .context("manifest: missing 'layers' array")?;
+
+        let mut layers = Vec::new();
+        let mut artifacts = Vec::new();
+        for (index, lj) in layers_json.iter().enumerate() {
+            let (layer, arts) = parse_layer(index, lj)?;
+            layers.push(layer);
+            artifacts.push(arts);
+        }
+        let model = ModelGraph::new(&name, layers)
+            .map_err(|e| anyhow::anyhow!("manifest graph invalid: {e}"))?;
+        // Cross-check: every weighted layer must have raw weights and at
+        // least one variant.
+        for id in model.weighted_layers() {
+            let a = &artifacts[id];
+            if a.raw_weights.is_none() {
+                bail!("manifest: layer {id} carries weights but has no raw blob");
+            }
+            if a.variants.is_empty() {
+                bail!("manifest: layer {id} has no kernel variants");
+            }
+        }
+        Ok(Manifest {
+            model,
+            artifacts,
+            root: root.to_path_buf(),
+            fixture_input: doc.get("fixture").get("input").as_str().map(PathBuf::from),
+            fixture_output: doc.get("fixture").get("output").as_str().map(PathBuf::from),
+        })
+    }
+
+    /// Resolve a manifest-relative path.
+    pub fn resolve(&self, p: &Path) -> PathBuf {
+        self.root.join(p)
+    }
+
+    /// All distinct variant names present.
+    pub fn variant_names(&self) -> Vec<String> {
+        let mut set = BTreeMap::new();
+        for a in &self.artifacts {
+            for v in &a.variants {
+                set.insert(v.variant.clone(), ());
+            }
+        }
+        set.into_keys().collect()
+    }
+}
+
+fn parse_layer(index: usize, lj: &Json) -> Result<(Layer, LayerArtifacts)> {
+    let ctx = || format!("manifest layer index {index}");
+    let id = lj.get("id").as_usize().with_context(ctx)?;
+    let name = lj.get("name").as_str().with_context(ctx)?.to_string();
+    let op_name = lj.get("op").as_str().with_context(ctx)?;
+    let get_u32 = |k: &str| -> Result<u32> {
+        lj.get(k)
+            .as_u64()
+            .map(|v| v as u32)
+            .with_context(|| format!("{} field {k}", ctx()))
+    };
+    let op = match op_name {
+        "input" => OpKind::Input,
+        "conv" => OpKind::Conv {
+            kernel: get_u32("kernel")?,
+            stride: get_u32("stride")?,
+            groups: get_u32("groups")?,
+        },
+        "fc" => OpKind::Fc,
+        "pool" => OpKind::Pool {
+            kernel: get_u32("kernel")?,
+            stride: get_u32("stride")?,
+            global: lj.get("global").as_bool().unwrap_or(false),
+        },
+        "eltwise" => OpKind::Eltwise,
+        "concat" => OpKind::Concat,
+        "shuffle" => OpKind::ChannelShuffle,
+        "act" => OpKind::Activation,
+        "softmax" => OpKind::Softmax,
+        "reshape" => OpKind::Reshape,
+        "split" => OpKind::Split,
+        "upsample" => OpKind::Upsample,
+        other => bail!("{}: unknown op '{other}'", ctx()),
+    };
+    let deps = lj
+        .get("deps")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|d| d.as_usize().with_context(|| format!("{} deps", ctx())))
+        .collect::<Result<Vec<_>>>()?;
+    let layer = Layer {
+        id,
+        name,
+        op,
+        in_ch: get_u32("in_ch")?,
+        out_ch: get_u32("out_ch")?,
+        in_hw: get_u32("in_hw")?,
+        out_hw: get_u32("out_hw")?,
+        deps,
+    };
+
+    let dims = |key: &str| -> Vec<i64> {
+        lj.get(key)
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_f64().map(|v| v as i64))
+            .collect()
+    };
+    let mut arts = LayerArtifacts {
+        in_dims: dims("in_dims"),
+        out_dims: dims("out_dims"),
+        bias_elems: lj.get("bias_elems").as_u64().unwrap_or(0),
+        ..LayerArtifacts::default()
+    };
+    if let Some(w) = lj.get("weights").as_str() {
+        arts.raw_weights = Some(PathBuf::from(w));
+        arts.raw_elems = lj.get("raw_elems").as_u64().unwrap_or(0);
+    }
+    if let Some(vmap) = lj.get("variants").as_obj() {
+        for (vname, vj) in vmap {
+            let exec = vj
+                .get("exec")
+                .as_str()
+                .with_context(|| format!("{} variant {vname}: missing exec", ctx()))?;
+            arts.variants.push(VariantArtifacts {
+                variant: vname.clone(),
+                exec_hlo: PathBuf::from(exec),
+                transform_hlo: vj.get("transform").as_str().map(PathBuf::from),
+                transformed_elems: vj.get("transformed_elems").as_u64().unwrap_or(0),
+                w_dims: vj
+                    .get("w_dims")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_f64().map(|v| v as i64))
+                    .collect(),
+            });
+        }
+    }
+    Ok((layer, arts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "unit",
+      "layers": [
+        {"id":0,"name":"input","op":"input","in_ch":3,"out_ch":3,"in_hw":8,"out_hw":8,"deps":[]},
+        {"id":1,"name":"conv1","op":"conv","kernel":3,"stride":1,"groups":1,
+         "in_ch":3,"out_ch":8,"in_hw":8,"out_hw":8,"deps":[0],
+         "weights":"weights/L01.raw.bin","raw_elems":224,
+         "variants":{
+           "direct":{"exec":"layers/L01.direct.hlo.txt"},
+           "im2col":{"exec":"layers/L01.im2col.hlo.txt",
+                     "transform":"layers/L01.im2col.trans.hlo.txt",
+                     "transformed_elems":216}}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.name, "unit");
+        assert_eq!(m.model.len(), 2);
+        assert_eq!(m.artifacts[1].variants.len(), 2);
+        assert_eq!(m.variant_names(), vec!["direct".to_string(), "im2col".to_string()]);
+        let im2col = &m.artifacts[1].variants[1];
+        assert!(im2col.transform_hlo.is_some());
+        assert_eq!(im2col.transformed_elems, 216);
+        assert_eq!(
+            m.resolve(&m.artifacts[1].raw_weights.clone().unwrap()),
+            PathBuf::from("/tmp/a/weights/L01.raw.bin")
+        );
+    }
+
+    #[test]
+    fn rejects_weighted_layer_without_blob() {
+        let bad = SAMPLE.replace(r#""weights":"weights/L01.raw.bin","#, "");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let bad = SAMPLE.replace(r#""op":"conv""#, r#""op":"lstm""#);
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Model-graph IR.
+//!
+//! A DNN is a DAG of [`Layer`]s, each carrying its operator type, tensor
+//! shapes, parameter count, and FLOPs. The scheduler (§3.2) needs exactly
+//! this level of detail: per-layer weight bytes (reading cost), the layout
+//! transformation implied by the selected kernel (transformation cost), the
+//! FLOPs (execution cost), and the dependency structure (pipelining
+//! constraints).
+//!
+//! * [`op`] — operator taxonomy.
+//! * [`layer`] — the per-layer record.
+//! * [`model`] — the graph container with validation + topological order.
+//! * [`builder`] — fluent construction helper used by the zoo.
+//! * [`zoo`] — the paper's 12 evaluation models (Table 4) plus the small
+//!   real-mode models matching the python artifacts.
+//! * [`manifest`] — loader for `artifacts/manifest.json` (real mode).
+
+pub mod op;
+pub mod layer;
+pub mod model;
+pub mod builder;
+pub mod zoo;
+pub mod manifest;
+
+pub use layer::{Layer, LayerId};
+pub use model::ModelGraph;
+pub use op::OpKind;

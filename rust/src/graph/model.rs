@@ -1,0 +1,220 @@
+//! The model graph container: validation, topological order, aggregates.
+
+use std::collections::VecDeque;
+
+use super::layer::{Layer, LayerId};
+use crate::{Bytes, Flops};
+
+/// A validated DAG of layers in topological id order.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    layers: Vec<Layer>,
+}
+
+/// Error produced by [`ModelGraph::new`] validation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphError {
+    /// Layer ids must equal their vector index.
+    BadId { index: usize, id: LayerId },
+    /// A dependency points at a not-yet-defined (or self) layer, so the
+    /// given order is not topological.
+    ForwardDep { layer: LayerId, dep: LayerId },
+    /// Duplicate dependency entry.
+    DupDep { layer: LayerId, dep: LayerId },
+    /// Graph has no layers.
+    Empty,
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::BadId { index, id } => write!(f, "layer at index {index} has id {id}"),
+            GraphError::ForwardDep { layer, dep } => {
+                write!(f, "layer {layer} depends on non-earlier layer {dep}")
+            }
+            GraphError::DupDep { layer, dep } => {
+                write!(f, "layer {layer} lists dependency {dep} twice")
+            }
+            GraphError::Empty => write!(f, "graph has no layers"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+impl ModelGraph {
+    /// Build and validate a graph. Layers must already be in topological
+    /// order with `layer.id == index` (the builder guarantees this).
+    pub fn new(name: &str, layers: Vec<Layer>) -> Result<ModelGraph, GraphError> {
+        if layers.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        for (index, l) in layers.iter().enumerate() {
+            if l.id != index {
+                return Err(GraphError::BadId { index, id: l.id });
+            }
+            let mut seen = Vec::new();
+            for &d in &l.deps {
+                if d >= l.id {
+                    return Err(GraphError::ForwardDep { layer: l.id, dep: d });
+                }
+                if seen.contains(&d) {
+                    return Err(GraphError::DupDep { layer: l.id, dep: d });
+                }
+                seen.push(d);
+            }
+        }
+        Ok(ModelGraph { name: name.to_string(), layers })
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(Layer::params).sum()
+    }
+
+    /// Total raw weight bytes on disk.
+    pub fn weight_bytes(&self) -> Bytes {
+        self.layers.iter().map(Layer::weight_bytes).sum()
+    }
+
+    /// Total forward FLOPs.
+    pub fn flops(&self) -> Flops {
+        self.layers.iter().map(Layer::flops).sum()
+    }
+
+    /// Ids of layers that carry weights (those with read/transform
+    /// operations in the cold-inference pipeline).
+    pub fn weighted_layers(&self) -> Vec<LayerId> {
+        self.layers
+            .iter()
+            .filter(|l| l.op.has_weights())
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Successor adjacency (inverse of `deps`).
+    pub fn successors(&self) -> Vec<Vec<LayerId>> {
+        let mut succ = vec![Vec::new(); self.layers.len()];
+        for l in &self.layers {
+            for &d in &l.deps {
+                succ[d].push(l.id);
+            }
+        }
+        succ
+    }
+
+    /// Length (in layers) of the longest dependency chain — the graph's
+    /// critical-path depth, used by the pipeline-efficiency analysis.
+    pub fn depth(&self) -> usize {
+        let mut depth = vec![1usize; self.layers.len()];
+        for l in &self.layers {
+            for &d in &l.deps {
+                depth[l.id] = depth[l.id].max(depth[d] + 1);
+            }
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+
+    /// BFS layer ordering from the inputs (equals id order for valid graphs;
+    /// used as a sanity check in tests).
+    pub fn bfs_order(&self) -> Vec<LayerId> {
+        let succ = self.successors();
+        let mut indeg: Vec<usize> = self.layers.iter().map(|l| l.deps.len()).collect();
+        let mut q: VecDeque<LayerId> = self
+            .layers
+            .iter()
+            .filter(|l| l.deps.is_empty())
+            .map(|l| l.id)
+            .collect();
+        let mut order = Vec::with_capacity(self.layers.len());
+        while let Some(id) = q.pop_front() {
+            order.push(id);
+            for &s in &succ[id] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push_back(s);
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+
+    fn mk(id: usize, deps: Vec<usize>) -> Layer {
+        Layer {
+            id,
+            name: format!("l{id}"),
+            op: OpKind::Activation,
+            in_ch: 8,
+            out_ch: 8,
+            in_hw: 8,
+            out_hw: 8,
+            deps,
+        }
+    }
+
+    #[test]
+    fn valid_graph_builds() {
+        let g = ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![0]), mk(2, vec![0, 1])])
+            .unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.depth(), 3);
+        assert_eq!(g.bfs_order().len(), 3);
+    }
+
+    #[test]
+    fn rejects_forward_and_self_deps() {
+        assert_eq!(
+            ModelGraph::new("t", vec![mk(0, vec![0])]).unwrap_err(),
+            GraphError::ForwardDep { layer: 0, dep: 0 }
+        );
+        assert_eq!(
+            ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![2]), mk(2, vec![])])
+                .unwrap_err(),
+            GraphError::ForwardDep { layer: 1, dep: 2 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_ids_and_dups() {
+        assert_eq!(
+            ModelGraph::new("t", vec![mk(1, vec![])]).unwrap_err(),
+            GraphError::BadId { index: 0, id: 1 }
+        );
+        assert_eq!(
+            ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![0, 0])]).unwrap_err(),
+            GraphError::DupDep { layer: 1, dep: 0 }
+        );
+        assert_eq!(ModelGraph::new("t", vec![]).unwrap_err(), GraphError::Empty);
+    }
+
+    #[test]
+    fn successors_inverse_of_deps() {
+        let g = ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![0]), mk(2, vec![0])])
+            .unwrap();
+        assert_eq!(g.successors()[0], vec![1, 2]);
+        assert!(g.successors()[1].is_empty());
+    }
+}

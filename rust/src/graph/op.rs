@@ -1,0 +1,93 @@
+//! Operator taxonomy.
+//!
+//! The kinds cover everything appearing in the paper's 12 models (Table 4).
+//! Batch norm and bias are treated as folded into the preceding conv/fc
+//! (standard inference-time folding, which is also what ncnn's optimizer
+//! does before the kernels the paper studies ever run).
+
+/// Operator kind with its static hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Graph input placeholder (no cost).
+    Input,
+    /// 2-D convolution. `groups == in_ch` is depthwise.
+    Conv { kernel: u32, stride: u32, groups: u32 },
+    /// Fully connected / inner product.
+    Fc,
+    /// Pooling (max or average; cost-equivalent here).
+    Pool { kernel: u32, stride: u32, global: bool },
+    /// Element-wise binary op (residual add, multiply).
+    Eltwise,
+    /// Channel concatenation.
+    Concat,
+    /// ShuffleNet channel shuffle.
+    ChannelShuffle,
+    /// Stand-alone activation (ReLU/HSwish/SiLU — cost-equivalent).
+    Activation,
+    /// Softmax head.
+    Softmax,
+    /// Tensor reshape / flatten (no math, negligible cost).
+    Reshape,
+    /// Channel split (ShuffleNetV2).
+    Split,
+    /// Upsample / interp (YOLO necks).
+    Upsample,
+}
+
+impl OpKind {
+    /// Whether this operator carries weights that must be read from disk.
+    pub fn has_weights(&self) -> bool {
+        matches!(self, OpKind::Conv { .. } | OpKind::Fc)
+    }
+
+    /// Whether this is a convolution (the operator family with the rich
+    /// kernel-variant space of Fig. 5).
+    pub fn is_conv(&self) -> bool {
+        matches!(self, OpKind::Conv { .. })
+    }
+
+    /// Whether this is a depthwise convolution given the input channels.
+    pub fn is_depthwise(&self, in_ch: u32) -> bool {
+        matches!(self, OpKind::Conv { groups, .. } if *groups == in_ch && in_ch > 1)
+    }
+
+    /// Short name used in manifests, plans, and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv { .. } => "conv",
+            OpKind::Fc => "fc",
+            OpKind::Pool { .. } => "pool",
+            OpKind::Eltwise => "eltwise",
+            OpKind::Concat => "concat",
+            OpKind::ChannelShuffle => "shuffle",
+            OpKind::Activation => "act",
+            OpKind::Softmax => "softmax",
+            OpKind::Reshape => "reshape",
+            OpKind::Split => "split",
+            OpKind::Upsample => "upsample",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_carrying_ops() {
+        assert!(OpKind::Conv { kernel: 3, stride: 1, groups: 1 }.has_weights());
+        assert!(OpKind::Fc.has_weights());
+        assert!(!OpKind::Pool { kernel: 2, stride: 2, global: false }.has_weights());
+        assert!(!OpKind::Eltwise.has_weights());
+    }
+
+    #[test]
+    fn depthwise_detection() {
+        let dw = OpKind::Conv { kernel: 3, stride: 1, groups: 32 };
+        assert!(dw.is_depthwise(32));
+        assert!(!dw.is_depthwise(64));
+        let std = OpKind::Conv { kernel: 3, stride: 1, groups: 1 };
+        assert!(!std.is_depthwise(1));
+    }
+}

@@ -1,0 +1,239 @@
+//! Kernel implementation families and their cost-relevant properties.
+//!
+//! The constants are calibrated against Table 2 of the paper (conv
+//! 3×3 s1, 64→192 channels on the Meizu 16T):
+//!
+//! | kernel               | read raw | transform | read cache | exec |
+//! |----------------------|---------:|----------:|-----------:|-----:|
+//! | 3x3s1-winograd-pack4 |     0.70 |     38.23 |       5.23 | 2.98 |
+//! | sgemm-pack4          |     0.70 |      2.21 |       0.70 | 8.14 |
+//! | pack4                |     0.70 |      2.22 |       0.70 | 18.63|
+//! | 3x3s1-winograd       |     0.70 |     65.67 |       4.12 | 3.37 |
+//! | 3x3s1 (direct)       |     0.70 |      0.00 |       0.70 | 8.01 |
+//! | general              |     0.70 |      0.00 |       0.70 | 87.12|
+//!
+//! Three family-level properties generate those columns for *any* layer:
+//! `expand` (transformed bytes ÷ raw bytes — drives "read cache"),
+//! `transform_work` (memory passes over the transformed weights — drives
+//! "transform"), and `exec_speed` (execution throughput relative to plain
+//! sgemm = 1.0 — drives "exec").
+
+use crate::graph::Layer;
+use crate::Bytes;
+
+/// Implementation family of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelFamily {
+    /// Winograd F(4,3) with pack-4 layout (`3x3s1_winograd_pack4`, W2/W3).
+    WinogradPack4,
+    /// Winograd F(4,3), planar layout (`3x3s1_winograd`, W1).
+    Winograd,
+    /// Im2col + SGEMM with pack-4 layout (S2/S4…S7 `sgemm_pack4` family).
+    SgemmPack4,
+    /// Im2col + SGEMM, planar (`sgemm`, S1/S3).
+    Sgemm,
+    /// Pack-4 direct convolution (`pack4`, P1…P9 re-layout kernels).
+    Pack4,
+    /// Shape-specialized direct kernel (G4…G9: `3x3s1`, `3x3s2`, `5x5s1`…).
+    Direct,
+    /// Generic fallback convolution (`G1: vanilla`). Always applicable.
+    General,
+    /// Depthwise direct (the dw counterparts of G/P kernels).
+    DwDirect,
+    /// Depthwise pack-4.
+    DwPack4,
+    /// Inner-product SGEMM (fc).
+    FcSgemm,
+    /// Inner-product SGEMM pack-4.
+    FcSgemmPack4,
+    /// Weightless builtin (pool/act/eltwise/…): single implementation.
+    Builtin,
+}
+
+impl KernelFamily {
+    /// Transformed-weight size ÷ raw-weight size.
+    ///
+    /// Winograd F(4,3) expands each 3×3 tap to an 8×8 tile (Fig. 3 of the
+    /// paper: (H,3,3,C) → (8·8·H·4, C/4, 1, 1)): ×64/9 ≈ 7.1, plus pack-4
+    /// padding ≈ 7.5. Planar winograd stores 6×6 tiles (×4 ≈ 36/9) with
+    /// alignment ≈ 5.9 (the ratio implied by Table 2's 4.12 ms cache read).
+    /// SGEMM/pack4 re-layouts are size-preserving (×1.0, modulo ≤4-lane
+    /// padding handled in [`transformed_bytes`]).
+    pub fn expand(&self) -> f64 {
+        match self {
+            KernelFamily::WinogradPack4 => 7.5,
+            KernelFamily::Winograd => 5.9,
+            KernelFamily::SgemmPack4
+            | KernelFamily::Sgemm
+            | KernelFamily::Pack4
+            | KernelFamily::DwPack4
+            | KernelFamily::FcSgemm
+            | KernelFamily::FcSgemmPack4 => 1.0,
+            KernelFamily::Direct | KernelFamily::General | KernelFamily::DwDirect => 1.0,
+            KernelFamily::Builtin => 0.0,
+        }
+    }
+
+    /// Whether the family needs a weight transformation at all. Families
+    /// that execute directly on raw weights (direct/general) have none, so
+    /// caching is pointless for them.
+    pub fn needs_transform(&self) -> bool {
+        match self {
+            KernelFamily::Direct
+            | KernelFamily::General
+            | KernelFamily::DwDirect
+            | KernelFamily::Builtin => false,
+            _ => true,
+        }
+    }
+
+    /// Transformation work factor: effective number of read+write passes
+    /// over the *transformed* bytes during weight transformation, on the
+    /// reference little core. Winograd's G·g·Gᵀ per-tile matmuls make it
+    /// far more expensive than a pure re-layout; the planar variant is
+    /// worse still (strided scatter, Table 2: 65.67 vs 38.23 ms).
+    pub fn transform_work(&self) -> f64 {
+        match self {
+            KernelFamily::WinogradPack4 => 5.3,
+            KernelFamily::Winograd => 11.6,
+            KernelFamily::SgemmPack4 | KernelFamily::Pack4 | KernelFamily::DwPack4 => 2.3,
+            KernelFamily::Sgemm => 1.6,
+            KernelFamily::FcSgemm => 1.0,
+            KernelFamily::FcSgemmPack4 => 2.3,
+            KernelFamily::Direct
+            | KernelFamily::General
+            | KernelFamily::DwDirect
+            | KernelFamily::Builtin => 0.0,
+        }
+    }
+
+    /// Execution throughput relative to planar SGEMM (= 1.0) for the
+    /// layer shapes the family targets. From Table 2 (big-core exec):
+    /// general 87.12 ms ⇒ 0.094× sgemm-ish direct 8.01; winograd-pack4
+    /// 2.98 ms ⇒ 2.73×.
+    pub fn exec_speed(&self) -> f64 {
+        match self {
+            KernelFamily::WinogradPack4 => 2.73,
+            KernelFamily::Winograd => 2.41,
+            KernelFamily::SgemmPack4 => 1.0,
+            KernelFamily::Sgemm => 0.72,
+            KernelFamily::Pack4 => 0.44,
+            KernelFamily::Direct => 0.98,
+            KernelFamily::General => 0.094,
+            KernelFamily::DwDirect => 0.85,
+            KernelFamily::DwPack4 => 1.25,
+            KernelFamily::FcSgemm => 0.9,
+            KernelFamily::FcSgemmPack4 => 1.15,
+            KernelFamily::Builtin => 0.6,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelFamily::WinogradPack4 => "winograd-pack4",
+            KernelFamily::Winograd => "winograd",
+            KernelFamily::SgemmPack4 => "sgemm-pack4",
+            KernelFamily::Sgemm => "sgemm",
+            KernelFamily::Pack4 => "pack4",
+            KernelFamily::Direct => "direct",
+            KernelFamily::General => "general",
+            KernelFamily::DwDirect => "dw-direct",
+            KernelFamily::DwPack4 => "dw-pack4",
+            KernelFamily::FcSgemm => "fc-sgemm",
+            KernelFamily::FcSgemmPack4 => "fc-sgemm-pack4",
+            KernelFamily::Builtin => "builtin",
+        }
+    }
+}
+
+/// Transformed-weight bytes for a layer under a family (pack-4 pads channel
+/// counts up to multiples of 4).
+pub fn transformed_bytes(family: KernelFamily, layer: &Layer) -> Bytes {
+    let raw = layer.weight_bytes();
+    if !family.needs_transform() {
+        return raw;
+    }
+    let pad = |c: u64| -> f64 {
+        let padded = (c + 3) / 4 * 4;
+        padded as f64 / c.max(1) as f64
+    };
+    let pad_factor = match family {
+        KernelFamily::WinogradPack4
+        | KernelFamily::SgemmPack4
+        | KernelFamily::Pack4
+        | KernelFamily::DwPack4
+        | KernelFamily::FcSgemmPack4 => pad(layer.in_ch as u64) * pad(layer.out_ch as u64),
+        _ => 1.0,
+    };
+    (raw as f64 * family.expand() * pad_factor).round() as Bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn conv_layer() -> Layer {
+        Layer {
+            id: 0,
+            name: "c".into(),
+            op: OpKind::Conv { kernel: 3, stride: 1, groups: 1 },
+            in_ch: 64,
+            out_ch: 192,
+            in_hw: 56,
+            out_hw: 56,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn table2_cache_read_ratio() {
+        // Table 2: winograd-pack4 cache read 5.23 ms vs raw read 0.70 ms
+        // ⇒ expansion ≈ 7.5×. Channels already divisible by 4 ⇒ no padding.
+        let l = conv_layer();
+        let raw = l.weight_bytes();
+        let t = transformed_bytes(KernelFamily::WinogradPack4, &l);
+        let ratio = t as f64 / raw as f64;
+        assert!((7.0..8.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn no_transform_families_keep_raw_size() {
+        let l = conv_layer();
+        assert_eq!(transformed_bytes(KernelFamily::Direct, &l), l.weight_bytes());
+        assert_eq!(transformed_bytes(KernelFamily::General, &l), l.weight_bytes());
+        assert!(!KernelFamily::Direct.needs_transform());
+        assert_eq!(KernelFamily::Direct.transform_work(), 0.0);
+    }
+
+    #[test]
+    fn pack4_pads_odd_channels() {
+        let mut l = conv_layer();
+        l.in_ch = 3; // pads to 4: factor 4/3
+        let t = transformed_bytes(KernelFamily::SgemmPack4, &l);
+        assert!(t > l.weight_bytes());
+    }
+
+    #[test]
+    fn exec_speed_ordering_matches_table2() {
+        // winograd fastest, general slowest.
+        let fams = [
+            KernelFamily::WinogradPack4,
+            KernelFamily::Winograd,
+            KernelFamily::SgemmPack4,
+            KernelFamily::Direct,
+            KernelFamily::Sgemm,
+            KernelFamily::Pack4,
+            KernelFamily::General,
+        ];
+        for w in fams.windows(2) {
+            assert!(
+                w[0].exec_speed() >= w[1].exec_speed(),
+                "{} < {}",
+                w[0].name(),
+                w[1].name()
+            );
+        }
+    }
+}

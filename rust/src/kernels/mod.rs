@@ -1,0 +1,20 @@
+//! Kernel registry: one operator, many kernels (§3.1.1).
+//!
+//! ncnn implements 28 distinct kernels for convolution alone (Fig. 5);
+//! which ones are *usable* depends on the conv configuration (kernel size,
+//! stride, channel divisibility), and which one is *best* depends on
+//! whether you optimize warm execution time or cold end-to-end time —
+//! winograd executes fastest but pays a heavy weight transformation, plain
+//! sgemm transforms cheaply but executes slower (Table 2).
+//!
+//! * [`family`] — the kernel implementation families and their cost-
+//!   relevant properties (layout expansion, transform cost, exec speed).
+//! * [`tree`] — the Fig. 5 applicability tree: conv config → usable kernels.
+//! * [`registry`] — per-layer candidate enumeration for every op kind.
+
+pub mod family;
+pub mod tree;
+pub mod registry;
+
+pub use family::KernelFamily;
+pub use registry::{Kernel, Registry};

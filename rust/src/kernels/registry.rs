@@ -1,0 +1,155 @@
+//! Per-layer kernel-candidate enumeration for every operator kind.
+
+use super::family::{transformed_bytes, KernelFamily};
+use super::tree::usable_conv_kernels;
+use crate::graph::{Layer, OpKind};
+use crate::Bytes;
+
+/// A kernel candidate for a specific layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    /// Human-readable name (ncnn-style for convs).
+    pub name: String,
+    pub family: KernelFamily,
+}
+
+impl Kernel {
+    pub fn new(name: &str, family: KernelFamily) -> Kernel {
+        Kernel { name: name.to_string(), family }
+    }
+
+    /// Transformed-weight bytes for this kernel on `layer`.
+    pub fn transformed_bytes(&self, layer: &Layer) -> Bytes {
+        transformed_bytes(self.family, layer)
+    }
+}
+
+/// The kernel registry. Stateless; kept as a struct so alternative builds
+/// (e.g. a trimmed registry for ablations) can be injected.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    /// If true, only the warm-fastest kernel is offered per layer — used by
+    /// the "no kernel selection" ablation arm (Fig. 13 baseline).
+    pub warm_only: bool,
+}
+
+impl Registry {
+    pub fn full() -> Registry {
+        Registry { warm_only: false }
+    }
+
+    /// Registry that mimics the hard-coded warm-optimal selection of
+    /// vanilla ncnn (ablation baseline).
+    pub fn warm_default() -> Registry {
+        Registry { warm_only: true }
+    }
+
+    /// Kernel candidates usable for `layer`. Weightless layers get the
+    /// single builtin implementation. Depthwise convs get the dw kernels
+    /// (Fig. 5 covers standard convs; ncnn has a parallel dw set).
+    pub fn candidates(&self, layer: &Layer) -> Vec<Kernel> {
+        let mut all = self.all_candidates(layer);
+        if self.warm_only && all.len() > 1 {
+            // ncnn's hard-coded choice: fastest warm execution.
+            let best = all
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
+                    a.family
+                        .exec_speed()
+                        .partial_cmp(&b.family.exec_speed())
+                        .unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            all = vec![all.swap_remove(best)];
+        }
+        all
+    }
+
+    fn all_candidates(&self, layer: &Layer) -> Vec<Kernel> {
+        match layer.op {
+            OpKind::Conv { .. } if layer.op.is_depthwise(layer.in_ch) => {
+                let mut v = vec![Kernel::new("dw-direct", KernelFamily::DwDirect)];
+                if layer.in_ch % 4 == 0 {
+                    v.insert(0, Kernel::new("dw-pack4", KernelFamily::DwPack4));
+                }
+                v
+            }
+            OpKind::Conv { .. } => usable_conv_kernels(layer)
+                .into_iter()
+                .map(|ck| Kernel::new(ck.name, ck.family))
+                .collect(),
+            OpKind::Fc => {
+                let mut v = vec![Kernel::new("fc-sgemm", KernelFamily::FcSgemm)];
+                if layer.in_ch % 4 == 0 && layer.out_ch % 4 == 0 {
+                    v.insert(0, Kernel::new("fc-sgemm-pack4", KernelFamily::FcSgemmPack4));
+                }
+                v
+            }
+            _ => vec![Kernel::new("builtin", KernelFamily::Builtin)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(op: OpKind, in_ch: u32, out_ch: u32) -> Layer {
+        Layer {
+            id: 0,
+            name: "l".into(),
+            op,
+            in_ch,
+            out_ch,
+            in_hw: 28,
+            out_hw: 28,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn conv_gets_multiple_candidates() {
+        let l = layer(OpKind::Conv { kernel: 3, stride: 1, groups: 1 }, 64, 128);
+        let ks = Registry::full().candidates(&l);
+        assert!(ks.len() >= 4, "{ks:?}");
+    }
+
+    #[test]
+    fn warm_only_registry_picks_fastest_exec() {
+        let l = layer(OpKind::Conv { kernel: 3, stride: 1, groups: 1 }, 64, 128);
+        let ks = Registry::warm_default().candidates(&l);
+        assert_eq!(ks.len(), 1);
+        // warm-fastest 3x3s1 I4O4 kernel is winograd-pack4 (Table 2)
+        assert_eq!(ks[0].family, KernelFamily::WinogradPack4);
+    }
+
+    #[test]
+    fn depthwise_gets_dw_kernels() {
+        let l = layer(OpKind::Conv { kernel: 3, stride: 1, groups: 64 }, 64, 64);
+        let ks = Registry::full().candidates(&l);
+        assert!(ks.iter().all(|k| matches!(
+            k.family,
+            KernelFamily::DwDirect | KernelFamily::DwPack4
+        )));
+    }
+
+    #[test]
+    fn weightless_gets_builtin() {
+        let l = layer(OpKind::Pool { kernel: 2, stride: 2, global: false }, 64, 64);
+        let ks = Registry::full().candidates(&l);
+        assert_eq!(ks.len(), 1);
+        assert_eq!(ks[0].family, KernelFamily::Builtin);
+    }
+
+    #[test]
+    fn fc_pack4_requires_divisibility() {
+        let l = layer(OpKind::Fc, 2048, 1000);
+        let ks = Registry::full().candidates(&l);
+        assert_eq!(ks.len(), 2); // 1000 % 4 == 0
+        let l = layer(OpKind::Fc, 2048, 10);
+        let ks = Registry::full().candidates(&l);
+        assert!(ks.len() >= 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! The Fig. 5 kernel-applicability tree for convolution.
+//!
+//! ncnn picks among 28 convolution kernels based on kernel size K, stride S,
+//! and whether the input/output channel counts are divisible by 4
+//! ("I4O4" / "I1O4" / "I4O1" / "I1O1" in the figure). This module encodes
+//! which kernels are *usable* for a configuration; which one is *chosen*
+//! is the scheduler's job (warm-optimal choice ≠ cold-optimal choice).
+
+use super::family::KernelFamily;
+use crate::graph::{Layer, OpKind};
+
+/// A concrete conv kernel: ncnn-style name + family it belongs to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvKernel {
+    pub name: &'static str,
+    pub family: KernelFamily,
+}
+
+/// All 28 convolution kernels of Fig. 5 (top box), by ncnn name.
+pub const ALL_CONV_KERNELS: [ConvKernel; 28] = [
+    // SGEMM family (S1..S7)
+    ConvKernel { name: "sgemm", family: KernelFamily::Sgemm },
+    ConvKernel { name: "sgemm_pack4", family: KernelFamily::SgemmPack4 },
+    ConvKernel { name: "1x1s1_sgemm", family: KernelFamily::Sgemm },
+    ConvKernel { name: "1x1s1_sgemm_pack4", family: KernelFamily::SgemmPack4 },
+    ConvKernel { name: "1x1s1_sgemm_pack4to1", family: KernelFamily::SgemmPack4 },
+    ConvKernel { name: "1x1s2_sgemm_pack4", family: KernelFamily::SgemmPack4 },
+    ConvKernel { name: "3x3s2_sgemm_pack4", family: KernelFamily::SgemmPack4 },
+    // Winograd family (W1..W3)
+    ConvKernel { name: "3x3s1_winograd", family: KernelFamily::Winograd },
+    ConvKernel { name: "3x3s1_winograd_pack4", family: KernelFamily::WinogradPack4 },
+    ConvKernel { name: "3x3s1_winograd_pack4to1", family: KernelFamily::WinogradPack4 },
+    // Pack re-layout family (P1..P9)
+    ConvKernel { name: "pack4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "pack4to1", family: KernelFamily::Pack4 },
+    ConvKernel { name: "pack1to4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "1x1s1_pack4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "3x3s1_pack4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "3x3s2_pack1to4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "5x5s1_pack4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "5x5s2_pack4", family: KernelFamily::Pack4 },
+    ConvKernel { name: "7x7s2_pack1to4", family: KernelFamily::Pack4 },
+    // Direct specialized family (G2..G9) + vanilla (G1)
+    ConvKernel { name: "vanilla", family: KernelFamily::General },
+    ConvKernel { name: "1x1s1", family: KernelFamily::Direct },
+    ConvKernel { name: "1x1s2", family: KernelFamily::Direct },
+    ConvKernel { name: "3x3s1", family: KernelFamily::Direct },
+    ConvKernel { name: "3x3s2", family: KernelFamily::Direct },
+    ConvKernel { name: "4x4s4", family: KernelFamily::Direct },
+    ConvKernel { name: "5x5s1", family: KernelFamily::Direct },
+    ConvKernel { name: "5x5s2", family: KernelFamily::Direct },
+    ConvKernel { name: "7x7s2", family: KernelFamily::Direct },
+];
+
+/// Channel-divisibility case of Fig. 5's column axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackCase {
+    I4O4,
+    I1O4,
+    I4O1,
+    I1O1,
+}
+
+/// Classify a layer's channel divisibility.
+pub fn pack_case(layer: &Layer) -> PackCase {
+    let i4 = layer.in_ch % 4 == 0;
+    let o4 = layer.out_ch % 4 == 0;
+    match (i4, o4) {
+        (true, true) => PackCase::I4O4,
+        (false, true) => PackCase::I1O4,
+        (true, false) => PackCase::I4O1,
+        (false, false) => PackCase::I1O1,
+    }
+}
+
+/// Usable conv kernels for a layer, walking Fig. 5's K/S/divisibility tree.
+/// The vanilla kernel is always usable (last resort in every tree node).
+pub fn usable_conv_kernels(layer: &Layer) -> Vec<ConvKernel> {
+    let (k, s) = match layer.op {
+        OpKind::Conv { kernel, stride, .. } => (kernel, stride),
+        _ => return Vec::new(),
+    };
+    let case = pack_case(layer);
+    let pick = |names: &[&str]| -> Vec<ConvKernel> {
+        let mut out: Vec<ConvKernel> = names
+            .iter()
+            .map(|n| {
+                ALL_CONV_KERNELS
+                    .iter()
+                    .find(|ck| ck.name == *n)
+                    .unwrap_or_else(|| panic!("unknown kernel name {n}"))
+                    .clone()
+            })
+            .collect();
+        // vanilla fallback always present exactly once
+        if !out.iter().any(|ck| ck.name == "vanilla") {
+            out.push(ConvKernel { name: "vanilla", family: KernelFamily::General });
+        }
+        out
+    };
+    use PackCase::*;
+    match (k, s) {
+        (1, 1) => match case {
+            I4O4 => pick(&["1x1s1_sgemm_pack4", "1x1s1_pack4", "1x1s1_sgemm", "sgemm", "1x1s1"]),
+            I1O4 => pick(&["pack1to4", "1x1s1_sgemm", "sgemm", "1x1s1"]),
+            I4O1 => pick(&["1x1s1_sgemm_pack4to1", "1x1s1_sgemm", "sgemm", "1x1s1"]),
+            I1O1 => pick(&["1x1s1_sgemm", "sgemm", "1x1s1"]),
+        },
+        (1, 2) => match case {
+            I4O4 => pick(&["1x1s2_sgemm_pack4", "sgemm", "1x1s2"]),
+            _ => pick(&["sgemm", "1x1s2"]),
+        },
+        (1, _) => pick(&["sgemm", "vanilla"]),
+        (3, 1) => match case {
+            I4O4 => pick(&[
+                "3x3s1_winograd_pack4",
+                "sgemm_pack4",
+                "3x3s1_pack4",
+                "3x3s1_winograd",
+                "sgemm",
+                "3x3s1",
+            ]),
+            I1O4 => pick(&["pack1to4", "3x3s1_winograd", "sgemm", "3x3s1"]),
+            I4O1 => pick(&["3x3s1_winograd_pack4to1", "3x3s1_winograd", "sgemm", "3x3s1"]),
+            I1O1 => pick(&["3x3s1_winograd", "sgemm", "3x3s1"]),
+        },
+        (3, 2) => match case {
+            I4O4 => pick(&["3x3s2_sgemm_pack4", "sgemm", "3x3s2"]),
+            I1O4 => pick(&["3x3s2_pack1to4", "sgemm", "3x3s2"]),
+            _ => pick(&["sgemm", "3x3s2"]),
+        },
+        (3, _) => pick(&["sgemm", "vanilla"]),
+        (4, 4) => pick(&["4x4s4", "sgemm"]),
+        (4, _) => pick(&["sgemm", "vanilla"]),
+        (5, 1) => match case {
+            I4O4 => pick(&["5x5s1_pack4", "sgemm_pack4", "sgemm", "5x5s1"]),
+            _ => pick(&["sgemm", "5x5s1"]),
+        },
+        (5, 2) => match case {
+            I4O4 => pick(&["5x5s2_pack4", "sgemm", "5x5s2"]),
+            _ => pick(&["sgemm", "5x5s2"]),
+        },
+        (7, 2) => match case {
+            I1O4 => pick(&["7x7s2_pack1to4", "sgemm", "7x7s2"]),
+            I4O4 => pick(&["sgemm_pack4", "sgemm", "7x7s2"]),
+            _ => pick(&["sgemm", "7x7s2"]),
+        },
+        _ => match case {
+            I4O4 => pick(&["sgemm_pack4", "sgemm"]),
+            _ => pick(&["sgemm"]),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(in_ch: u32, out_ch: u32, k: u32, s: u32) -> Layer {
+        Layer {
+            id: 0,
+            name: "c".into(),
+            op: OpKind::Conv { kernel: k, stride: s, groups: 1 },
+            in_ch,
+            out_ch,
+            in_hw: 56,
+            out_hw: 56 / s,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn twenty_eight_kernels_total() {
+        assert_eq!(ALL_CONV_KERNELS.len(), 28);
+        // names unique
+        let mut names: Vec<_> = ALL_CONV_KERNELS.iter().map(|k| k.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 28);
+    }
+
+    #[test]
+    fn k3s1_i4o4_includes_winograd_and_sgemm() {
+        let ks = usable_conv_kernels(&conv(64, 192, 3, 1));
+        let names: Vec<_> = ks.iter().map(|k| k.name).collect();
+        assert!(names.contains(&"3x3s1_winograd_pack4"));
+        assert!(names.contains(&"sgemm_pack4"));
+        assert!(names.contains(&"3x3s1"));
+        assert!(names.contains(&"vanilla"));
+    }
+
+    #[test]
+    fn odd_channels_disable_pack4() {
+        let ks = usable_conv_kernels(&conv(3, 32, 3, 1)); // I1O4
+        assert!(!ks.iter().any(|k| k.name == "3x3s1_winograd_pack4"));
+        assert!(ks.iter().any(|k| k.name == "pack1to4"));
+    }
+
+    #[test]
+    fn vanilla_always_available() {
+        for (k, s) in [(1, 1), (1, 2), (3, 1), (3, 2), (5, 1), (5, 2), (7, 2), (11, 4), (2, 1)] {
+            for (ic, oc) in [(64, 64), (3, 32), (64, 65), (3, 5)] {
+                let ks = usable_conv_kernels(&conv(ic, oc, k, s));
+                assert!(
+                    ks.iter().any(|x| x.name == "vanilla"),
+                    "no vanilla for k{k}s{s} {ic}->{oc}"
+                );
+                // no duplicates
+                let mut names: Vec<_> = ks.iter().map(|x| x.name).collect();
+                names.sort();
+                let n = names.len();
+                names.dedup();
+                assert_eq!(names.len(), n, "duplicate kernels for k{k}s{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_case_classification() {
+        assert_eq!(pack_case(&conv(64, 192, 3, 1)), PackCase::I4O4);
+        assert_eq!(pack_case(&conv(3, 192, 3, 1)), PackCase::I1O4);
+        assert_eq!(pack_case(&conv(64, 3, 3, 1)), PackCase::I4O1);
+        assert_eq!(pack_case(&conv(3, 5, 3, 1)), PackCase::I1O1);
+    }
+
+    #[test]
+    fn alexnet_k11_uses_sgemm() {
+        let ks = usable_conv_kernels(&conv(3, 96, 11, 4));
+        assert!(ks.iter().any(|k| k.name == "sgemm"));
+    }
+}

@@ -1,0 +1,72 @@
+//! # NNV12 — boosting DNN cold inference on edge devices
+//!
+//! Reproduction of the MobiSys'23 NNV12 system as a three-layer
+//! Rust + JAX + Pallas stack. Cold inference — reading weights from disk,
+//! transforming them into a kernel's execution-ready layout, and executing
+//! the model — is optimized through three knobs (§3.1 of the paper):
+//!
+//! 1. **Kernel selection** — every operator has many kernel implementations
+//!    (ncnn ships 28 for convolution alone, Fig. 5); the fastest kernel for
+//!    *warm* inference is often not the fastest end-to-end in *cold*
+//!    inference because of its weight-transformation cost
+//!    ([`kernels`]).
+//! 2. **Post-transformed-weights caching** — the transformation can be
+//!    bypassed by caching transformed weights on disk, trading disk I/O for
+//!    memory-bound transformation work ([`weights`]).
+//! 3. **Pipelined inference** — per-layer read/transform/execute operations
+//!    are pipelined across the asymmetric cores of an edge SoC
+//!    ([`sched`], [`sim`], [`pipeline`]).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — in-tree substrates for the offline build environment
+//!   (JSON, CLI, statistics, PRNG, property testing, bench harness).
+//! * [`graph`] — model-graph IR plus builders for the paper's 12 models.
+//! * [`kernels`] — kernel registry, the Fig. 5 selection tree, per-family
+//!   cost functions.
+//! * [`device`] — edge-device profiles (Meizu 16T, Pixel 5, Redmi 9,
+//!   Meizu 18 Pro, Jetson TX2, Jetson Nano).
+//! * [`cost`] — the per-operation latency model `T(op, core, threads)`.
+//! * [`sched`] — the §3.2 scheduling problem and the §3.3 heuristic
+//!   scheduler (Algorithm 1), plus an exact brute-force oracle.
+//! * [`baselines`] — ncnn / TFLite / AsyMo / TensorFlow-GPU engine models.
+//! * [`sim`] — discrete-event simulator of the device executing a plan,
+//!   with bandwidth contention, background load, and workload stealing.
+//! * [`transform`] — real weight-transformation math (im2col packing,
+//!   Winograd F(2,3), pack4) used on the real execution path.
+//! * [`weights`] — raw weight store and the post-transform disk cache.
+//! * [`runtime`] — PJRT client wrapper: loads AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them.
+//! * [`pipeline`] — real-thread pipelined executor over the runtime.
+//! * [`serving`] — multi-tenant serving front: request router and LRU model
+//!   residency manager (cold inferences are induced by eviction).
+//! * [`warm`] — §3.5 kernel switching for subsequent warm inference.
+//! * [`metrics`] — timing, summaries, and the energy model.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation.
+
+pub mod util;
+pub mod graph;
+pub mod kernels;
+pub mod device;
+pub mod cost;
+pub mod sched;
+pub mod baselines;
+pub mod sim;
+pub mod transform;
+pub mod weights;
+pub mod runtime;
+pub mod pipeline;
+pub mod serving;
+pub mod warm;
+pub mod metrics;
+pub mod report;
+
+/// Milliseconds, the time unit used throughout the cost model and simulator.
+pub type Ms = f64;
+
+/// Bytes.
+pub type Bytes = u64;
+
+/// Floating-point operations.
+pub type Flops = u64;

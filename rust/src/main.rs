@@ -1,0 +1,278 @@
+//! `repro` — the NNV12 coordinator CLI.
+//!
+//! Subcommands:
+//!   plan      — generate + print a kernel scheduling plan for a model
+//!   simulate  — run a plan through the device simulator (Gantt + stats)
+//!   report    — regenerate a paper table/figure (or `all`)
+//!   kernels   — list kernel candidates for a conv configuration
+//!   serve     — run the multi-tenant serving workload (simulated device)
+//!   cold      — real-mode cold inference over PJRT artifacts
+//!   devices   — list device profiles
+//!
+//! Examples:
+//!   repro plan --model resnet50 --device meizu16t
+//!   repro report fig8
+//!   repro cold --artifacts artifacts/tinynet --workers 2 --cache
+//!   repro serve --device meizu16t --requests 200 --budget-mb 48
+
+use anyhow::{anyhow, bail, Result};
+
+use nnv12::device::profiles;
+use nnv12::graph::manifest::Manifest;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+use nnv12::report;
+use nnv12::runtime::Runtime;
+use nnv12::sched::heuristic::{schedule, SchedulerConfig};
+use nnv12::sched::price::Pricer;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+use nnv12::sim::{simulate, trace, SimConfig};
+use nnv12::util::cli::Args;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, &["cache", "no-pipeline", "sequential", "verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "plan" => cmd_plan(args),
+        "simulate" => cmd_simulate(args),
+        "report" => cmd_report(args),
+        "kernels" => cmd_kernels(args),
+        "serve" => cmd_serve(args),
+        "cold" => cmd_cold(args),
+        "devices" => cmd_devices(),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'repro help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — NNV12 cold-inference engine (MobiSys'23 reproduction)\n\
+         \n\
+         subcommands:\n\
+           plan      --model M --device D [--no-pipeline]   print a scheduling plan\n\
+           simulate  --model M --device D [--bg-little U]   simulate with contention\n\
+           report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
+           kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
+           serve     --device D --requests N --budget-mb B  multi-tenant serving sim\n\
+           cold      --artifacts DIR [--cache] [--workers N] [--mbps X] [--sequential]\n\
+           devices                                          list device profiles"
+    );
+}
+
+fn device_of(args: &Args) -> Result<nnv12::device::DeviceProfile> {
+    let name = args.get_or("device", "meizu16t");
+    profiles::by_name(name).ok_or_else(|| anyhow!("unknown device '{name}'"))
+}
+
+fn model_of(args: &Args) -> Result<nnv12::graph::ModelGraph> {
+    let name = args.get_or("model", "resnet50");
+    zoo::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let dev = device_of(args)?;
+    let g = model_of(args)?;
+    let cfg = SchedulerConfig {
+        pipeline: !args.has("no-pipeline"),
+        ..SchedulerConfig::default()
+    };
+    let t = nnv12::metrics::Timer::start();
+    let s = schedule(&dev, &g, &Registry::full(), &cfg);
+    println!(
+        "model={} device={} layers={} plan generated in {:.1} ms",
+        g.name,
+        dev.name,
+        g.len(),
+        t.elapsed_ms()
+    );
+    println!(
+        "estimated cold latency: {:.2} ms (cache storage {})",
+        s.schedule.makespan,
+        nnv12::util::table::fmt_bytes(s.plan.cache_bytes(&g))
+    );
+    if args.has("verbose") {
+        println!("{}", s.plan.to_json(&g).to_pretty());
+    }
+    println!("{}", trace::gantt(&s.set, &s.schedule.timings, 100));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dev = device_of(args)?;
+    let g = model_of(args)?;
+    let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+    let bg_u = args.get_f64("bg-little", 0.0).map_err(|e| anyhow!(e))?;
+    let mut cfg = SimConfig::nnv12();
+    if bg_u > 0.0 {
+        cfg.background = vec![
+            nnv12::sim::BgLoad { unit: nnv12::sched::plan::UnitId::Little(0), utilization: bg_u },
+            nnv12::sim::BgLoad { unit: nnv12::sched::plan::UnitId::Little(1), utilization: bg_u },
+        ];
+    }
+    let r = simulate(&dev, &s.set, &s.plan, &pricer, &cfg);
+    println!(
+        "simulated cold latency: {:.2} ms (steals={}, energy={:.0} mJ)",
+        r.makespan, r.steals, r.energy_mj
+    );
+    println!("{}", trace::gantt(&s.set, &r.timings, 100));
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    if which == "all" {
+        for name in report::ALL_REPORTS {
+            println!("{}", report::by_name(name).unwrap().render());
+        }
+        return Ok(());
+    }
+    let t = report::by_name(which)
+        .ok_or_else(|| anyhow!("unknown report '{which}' (see 'repro help')"))?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 3).map_err(|e| anyhow!(e))? as u32;
+    let s = args.get_usize("s", 1).map_err(|e| anyhow!(e))? as u32;
+    let cin = args.get_usize("in", 64).map_err(|e| anyhow!(e))? as u32;
+    let cout = args.get_usize("out", 64).map_err(|e| anyhow!(e))? as u32;
+    let layer = nnv12::graph::Layer {
+        id: 0,
+        name: "query".into(),
+        op: nnv12::graph::OpKind::Conv { kernel: k, stride: s, groups: 1 },
+        in_ch: cin,
+        out_ch: cout,
+        in_hw: 56,
+        out_hw: 56 / s.max(1),
+        deps: vec![],
+    };
+    println!("usable kernels for conv k{k}s{s} {cin}->{cout}:");
+    for kern in Registry::full().candidates(&layer) {
+        println!(
+            "  {:<24} family={:<16} exec_speed={:.2} expand={:.1} needs_transform={}",
+            kern.name,
+            kern.family.name(),
+            kern.family.exec_speed(),
+            kern.family.expand(),
+            kern.family.needs_transform()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dev = device_of(args)?;
+    let n = args.get_usize("requests", 200).map_err(|e| anyhow!(e))?;
+    let budget_mb = args.get_usize("budget-mb", 48).map_err(|e| anyhow!(e))? as u64;
+    let models: Vec<nnv12::graph::ModelGraph> =
+        ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
+            .iter()
+            .map(|m| zoo::by_name(m).unwrap())
+            .collect();
+    let mut router = Router::new(
+        &dev,
+        models,
+        RouterConfig { memory_budget: budget_mb << 20, ..Default::default() },
+    );
+    let names = router.model_names();
+    let reqs = generate(&names, &WorkloadSpec { n_requests: n, ..Default::default() });
+    for r in &reqs {
+        router.handle(&r.model);
+    }
+    println!(
+        "served {} requests: {} cold, {} warm (budget {} MB on {})",
+        reqs.len(),
+        router.stats_cold,
+        router.stats_warm,
+        budget_mb,
+        dev.name
+    );
+    for label in ["cold", "warm"] {
+        let s = router.recorder.summary(label);
+        if s.n > 0 {
+            println!(
+                "  {label:<5} n={:<4} mean={:.1} ms p50={:.1} p90={:.1} p99={:.1}",
+                s.n, s.mean, s.p50, s.p90, s.p99
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cold(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts/tinynet"));
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::cpu()?;
+    let opts = RealRunOpts {
+        disk_mbps: args
+            .get("mbps")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|_| anyhow!("--mbps expects a number"))?,
+        workers: args.get_usize("workers", 2).map_err(|e| anyhow!(e))?,
+        use_cache: args.has("cache"),
+        pipelined: !args.has("sequential"),
+        variant: match args.get_or("variant", "auto") {
+            "auto" => VariantPref::Auto,
+            "direct" => VariantPref::Direct,
+            "im2col" => VariantPref::Im2col,
+            "winograd" => VariantPref::Winograd,
+            v => bail!("unknown variant '{v}'"),
+        },
+        ..Default::default()
+    };
+    let in_dims = &manifest.artifacts[1].in_dims;
+    let n_in: i64 = in_dims.iter().product();
+    let input = vec![0.5f32; n_in as usize];
+    let r = run_cold(&manifest, &runtime, &input, &opts)?;
+    println!(
+        "cold inference of {}: wall {:.1} ms (read {:.1} + transform {:.1} + compile {:.1} + exec {:.1}; cache hits {})",
+        manifest.model.name, r.wall_ms, r.read_ms, r.transform_ms, r.compile_ms, r.exec_ms, r.cache_hits
+    );
+    println!("output[0..4] = {:?}", &r.output[..r.output.len().min(4)]);
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    for name in profiles::ALL_DEVICES {
+        let d = profiles::by_name(name).unwrap();
+        println!(
+            "{:<12} {} big + {} little, big {:.0} GF/s, disk {:.0} MB/s, mem {:.1} GB/s, gpu: {}",
+            d.name,
+            d.n_big,
+            d.n_little,
+            d.big_gflops,
+            d.disk_mbps,
+            d.mem_eff_gbps,
+            d.gpu
+                .as_ref()
+                .map(|g| format!("{:.0} GF/s", g.gflops))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Metrics: wall-clock timers, latency recorders, and the energy model.
+
+use std::time::Instant;
+
+use crate::device::DeviceProfile;
+use crate::util::stats::Summary;
+use crate::Ms;
+
+/// A simple scope timer returning elapsed milliseconds.
+pub struct Timer {
+    t0: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { t0: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> Ms {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates latency observations per label (request classes, phases).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    series: Vec<(String, Vec<f64>)>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, label: &str, value_ms: f64) {
+        match self.series.iter_mut().find(|(l, _)| l == label) {
+            Some((_, v)) => v.push(value_ms),
+            None => self.series.push((label.to_string(), vec![value_ms])),
+        }
+    }
+
+    pub fn labels(&self) -> Vec<&str> {
+        self.series.iter().map(|(l, _)| l.as_str()).collect()
+    }
+
+    pub fn values(&self, label: &str) -> &[f64] {
+        self.series
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, v)| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn summary(&self, label: &str) -> Summary {
+        Summary::of(self.values(label))
+    }
+}
+
+/// Energy model used outside the simulator (e.g. baseline engines, Fig. 12):
+/// active core-seconds × class power + idle floor over the duration.
+pub fn energy_mj(
+    dev: &DeviceProfile,
+    big_busy_ms: Ms,
+    little_busy_ms: Ms,
+    gpu_busy_ms: Ms,
+    duration_ms: Ms,
+) -> f64 {
+    let gpu_w = dev.gpu.as_ref().map(|g| g.power_w).unwrap_or(0.0);
+    dev.big_power_w * big_busy_ms
+        + dev.little_power_w * little_busy_ms
+        + gpu_w * gpu_busy_ms
+        + dev.idle_power_w * duration_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn recorder_accumulates_and_summarizes() {
+        let mut r = Recorder::new();
+        r.record("cold", 10.0);
+        r.record("cold", 20.0);
+        r.record("warm", 5.0);
+        assert_eq!(r.labels(), vec!["cold", "warm"]);
+        assert_eq!(r.summary("cold").n, 2);
+        assert!((r.summary("cold").mean - 15.0).abs() < 1e-12);
+        assert_eq!(r.values("missing").len(), 0);
+    }
+
+    #[test]
+    fn energy_monotone_in_busy_time() {
+        let dev = profiles::meizu_16t();
+        let a = energy_mj(&dev, 100.0, 50.0, 0.0, 200.0);
+        let b = energy_mj(&dev, 200.0, 50.0, 0.0, 200.0);
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,412 @@
+//! Real-mode pipelined cold inference over the PJRT runtime.
+//!
+//! This is the paper's runtime stage (Fig. 4, right) executed for real on
+//! the host: worker threads ("little cores") read weight blobs from disk
+//! (optionally throttled to edge-storage bandwidth) and transform them into
+//! the chosen kernel's layout (or read the post-transformed cache), while
+//! the executor thread (the "gang") compiles + runs each layer's AOT HLO
+//! artifact via PJRT as soon as its weights and input activation are ready.
+//!
+//! Python never runs here: artifacts were AOT-compiled by `make artifacts`.
+//!
+//! The sequential mode (`pipelined = false`) emulates a vanilla engine —
+//! read everything, transform everything, then execute — and is the real-
+//! mode baseline the examples compare against.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::manifest::Manifest;
+use crate::metrics::Timer;
+use crate::runtime::Runtime;
+use crate::transform::transform_by_name;
+use crate::weights::{ThrottledReader, TransformCache};
+
+/// Kernel-variant preference for real-mode planning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantPref {
+    /// NNV12-style: fastest-exec variant, cached when caching is on.
+    Auto,
+    /// Force a specific family (ablations + tests).
+    Direct,
+    Im2col,
+    Winograd,
+}
+
+/// Options for a real cold run.
+#[derive(Debug, Clone)]
+pub struct RealRunOpts {
+    /// Throttle disk reads to this bandwidth (None = host speed).
+    pub disk_mbps: Option<f64>,
+    /// Number of preparation worker threads ("little cores").
+    pub workers: usize,
+    /// Read/write the post-transformed-weights cache.
+    pub use_cache: bool,
+    pub cache_dir: PathBuf,
+    /// Overlap preparation with execution (the "P" knob). Off = vanilla
+    /// sequential engine.
+    pub pipelined: bool,
+    pub variant: VariantPref,
+}
+
+impl Default for RealRunOpts {
+    fn default() -> RealRunOpts {
+        RealRunOpts {
+            disk_mbps: None,
+            workers: 2,
+            use_cache: false,
+            cache_dir: std::env::temp_dir().join("nnv12-cache"),
+            pipelined: true,
+            variant: VariantPref::Auto,
+        }
+    }
+}
+
+/// Phase timing breakdown of a real run (sums of op durations; phases
+/// overlap in pipelined mode, so they can exceed `wall_ms`).
+#[derive(Debug, Clone, Default)]
+pub struct ColdRun {
+    pub wall_ms: f64,
+    pub read_ms: f64,
+    pub transform_ms: f64,
+    pub compile_ms: f64,
+    pub exec_ms: f64,
+    /// Cache hits among prepared layers.
+    pub cache_hits: usize,
+    /// Final activation of the model.
+    pub output: Vec<f32>,
+}
+
+/// Pick the variant for a layer given the preference and what the manifest
+/// offers. Returns (variant name, needs transform).
+fn pick_variant(m: &Manifest, layer: usize, pref: VariantPref, cache_on: bool) -> Result<String> {
+    let avail: Vec<&str> = m.artifacts[layer]
+        .variants
+        .iter()
+        .map(|v| v.variant.as_str())
+        .collect();
+    if avail.is_empty() {
+        bail!("layer {layer} has no variants");
+    }
+    let want = match pref {
+        VariantPref::Direct => "direct",
+        VariantPref::Im2col => "im2col",
+        VariantPref::Winograd => "winograd",
+        VariantPref::Auto => {
+            // Cold-aware: winograd executes fastest but its transform is
+            // expensive — pick it only when the cache can absorb the cost;
+            // otherwise im2col (cheap transform, good exec); else direct.
+            if cache_on && avail.contains(&"winograd") {
+                "winograd"
+            } else if avail.contains(&"im2col") {
+                "im2col"
+            } else {
+                avail[0]
+            }
+        }
+    };
+    if avail.contains(&want) {
+        Ok(want.to_string())
+    } else {
+        Ok(avail[0].to_string())
+    }
+}
+
+struct PrepSlots {
+    /// layer -> (weights in exec layout, bias)
+    ready: Mutex<HashMap<usize, Arc<(Vec<f32>, Vec<f32>)>>>,
+    cv: Condvar,
+}
+
+/// Prepare one layer's weights: read (raw or cached), transform if needed.
+/// Returns (weights, bias, read_ms, transform_ms, cache_hit).
+fn prepare_layer(
+    m: &Manifest,
+    layer: usize,
+    variant: &str,
+    reader: &ThrottledReader,
+    cache: Option<&TransformCache>,
+) -> Result<(Vec<f32>, Vec<f32>, f64, f64, bool)> {
+    let arts = &m.artifacts[layer];
+    let raw_path = m.resolve(
+        arts.raw_weights
+            .as_ref()
+            .ok_or_else(|| anyhow!("layer {layer} has no weights"))?,
+    );
+    let t_read = Timer::start();
+    let raw = reader
+        .read_f32(&raw_path)
+        .with_context(|| format!("reading weights for layer {layer}"))?;
+    let mut read_ms = t_read.elapsed_ms();
+
+    let graph_layer = m.model.layer(layer);
+    let needs_transform = matches!(variant, "im2col" | "winograd");
+    let bias_elems = arts.bias_elems as usize;
+
+    if !needs_transform {
+        let (w, b) = raw.split_at(raw.len() - bias_elems);
+        return Ok((w.to_vec(), b.to_vec(), read_ms, 0.0, false));
+    }
+
+    // Cache fast path: read the post-transformed blob instead.
+    if let Some(cache) = cache {
+        let t = Timer::start();
+        if let Some(tr) = cache.get(layer, variant, &raw)? {
+            read_ms += t.elapsed_ms(); // cache verification + read
+            let (w, b) = tr.split_at(tr.len() - bias_elems);
+            return Ok((w.to_vec(), b.to_vec(), read_ms, 0.0, true));
+        }
+    }
+
+    let t_tr = Timer::start();
+    let transformed = transform_by_name(variant, &raw, graph_layer)
+        .ok_or_else(|| anyhow!("no rust transform for variant {variant}"))?;
+    let transform_ms = t_tr.elapsed_ms();
+    if let Some(cache) = cache {
+        cache.put(layer, variant, &raw, &transformed)?;
+    }
+    let (w, b) = transformed.split_at(transformed.len() - bias_elems);
+    Ok((w.to_vec(), b.to_vec(), read_ms, transform_ms, false))
+}
+
+/// A warm session: prepared weights resident in memory. Subsequent
+/// inferences skip reading and transformation entirely (warm inference).
+pub struct Session {
+    variant_of: HashMap<usize, String>,
+    weights: HashMap<usize, Arc<(Vec<f32>, Vec<f32>)>>,
+}
+
+impl Session {
+    /// Warm inference: execute only (weights already resident).
+    /// Returns (output, exec wall ms).
+    pub fn run_warm(
+        &self,
+        manifest: &Manifest,
+        runtime: &Runtime,
+        input: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let slots = PrepSlots {
+            ready: Mutex::new(self.weights.clone()),
+            cv: Condvar::new(),
+        };
+        let t = Timer::start();
+        let run = execute_layers(manifest, runtime, input, &self.variant_of, &slots, false)?;
+        Ok((run.output, t.elapsed_ms()))
+    }
+
+    /// Bytes of resident prepared weights.
+    pub fn resident_bytes(&self) -> u64 {
+        self.weights
+            .values()
+            .map(|wb| ((wb.0.len() + wb.1.len()) * 4) as u64)
+            .sum()
+    }
+}
+
+/// Run one real cold inference and keep the prepared weights as a warm
+/// [`Session`] (what a resident model looks like to the serving layer).
+pub fn run_cold_session(
+    manifest: &Manifest,
+    runtime: &Runtime,
+    input: &[f32],
+    opts: &RealRunOpts,
+) -> Result<(ColdRun, Session)> {
+    let run = run_cold(manifest, runtime, input, opts)?;
+    // Re-derive the variant decisions and re-load prepared weights from
+    // the (now hot) OS page cache + transform cache: cheap, and keeps
+    // `run_cold` allocation-free of session plumbing.
+    let weighted = manifest.model.weighted_layers();
+    let mut variant_of = HashMap::new();
+    let mut weights = HashMap::new();
+    let reader = ThrottledReader::default();
+    let cache = if opts.use_cache {
+        Some(TransformCache::new(&opts.cache_dir, &manifest.model.name))
+    } else {
+        None
+    };
+    for &l in &weighted {
+        let variant = pick_variant(manifest, l, opts.variant, opts.use_cache)?;
+        let (w, b, _, _, _) = prepare_layer(manifest, l, &variant, &reader, cache.as_ref())?;
+        variant_of.insert(l, variant);
+        weights.insert(l, Arc::new((w, b)));
+    }
+    Ok((run, Session { variant_of, weights }))
+}
+
+/// Run one real cold inference. `input` must match the manifest's input
+/// layer dims (flat f32, NCHW).
+pub fn run_cold(
+    manifest: &Manifest,
+    runtime: &Runtime,
+    input: &[f32],
+    opts: &RealRunOpts,
+) -> Result<ColdRun> {
+    let t_wall = Timer::start();
+    let reader = match opts.disk_mbps {
+        Some(mbps) => ThrottledReader::throttled(mbps),
+        None => ThrottledReader::default(),
+    };
+    let cache = if opts.use_cache {
+        Some(TransformCache::new(&opts.cache_dir, &manifest.model.name))
+    } else {
+        None
+    };
+
+    // Per-layer variant decision.
+    let weighted = manifest.model.weighted_layers();
+    let mut variant_of: HashMap<usize, String> = HashMap::new();
+    for &l in &weighted {
+        variant_of.insert(l, pick_variant(manifest, l, opts.variant, opts.use_cache)?);
+    }
+
+    let slots = Arc::new(PrepSlots { ready: Mutex::new(HashMap::new()), cv: Condvar::new() });
+    let read_ns = Arc::new(AtomicU64::new(0));
+    let transform_ns = Arc::new(AtomicU64::new(0));
+    let cache_hits = Arc::new(AtomicU64::new(0));
+
+    let prep_one = |layer: usize| -> Result<()> {
+        let variant = &variant_of[&layer];
+        let (w, b, r_ms, t_ms, hit) =
+            prepare_layer(manifest, layer, variant, &reader, cache.as_ref())?;
+        read_ns.fetch_add((r_ms * 1e6) as u64, Ordering::Relaxed);
+        transform_ns.fetch_add((t_ms * 1e6) as u64, Ordering::Relaxed);
+        if hit {
+            cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut g = slots.ready.lock().unwrap();
+        g.insert(layer, Arc::new((w, b)));
+        slots.cv.notify_all();
+        Ok(())
+    };
+
+    let mut run = ColdRun::default();
+
+    if opts.pipelined && opts.workers > 0 {
+        // Round-robin layers over workers; scoped threads so we can borrow.
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for w in 0..opts.workers {
+                let my_layers: Vec<usize> = weighted
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .filter(|(i, _)| i % opts.workers == w)
+                    .map(|(_, l)| l)
+                    .collect();
+                let prep = &prep_one;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for l in my_layers {
+                        prep(l)?;
+                    }
+                    Ok(())
+                }));
+            }
+            // Gang: execute layers in order as weights become ready.
+            run = execute_layers(manifest, runtime, input, &variant_of, &slots, true)?;
+            for h in handles {
+                h.join().map_err(|_| anyhow!("prep worker panicked"))??;
+            }
+            Ok(())
+        })?;
+    } else {
+        // Sequential baseline: prepare everything, then execute.
+        for &l in &weighted {
+            prep_one(l)?;
+        }
+        run = execute_layers(manifest, runtime, input, &variant_of, &slots, false)?;
+    }
+
+    run.read_ms = read_ns.load(Ordering::Relaxed) as f64 / 1e6;
+    run.transform_ms = transform_ns.load(Ordering::Relaxed) as f64 / 1e6;
+    run.cache_hits = cache_hits.load(Ordering::Relaxed) as usize;
+    run.wall_ms = t_wall.elapsed_ms();
+    Ok(run)
+}
+
+/// The gang loop: topological execution of every layer's HLO artifact.
+fn execute_layers(
+    manifest: &Manifest,
+    runtime: &Runtime,
+    input: &[f32],
+    variant_of: &HashMap<usize, String>,
+    slots: &PrepSlots,
+    pipelined: bool,
+) -> Result<ColdRun> {
+    let mut run = ColdRun::default();
+    let g = &manifest.model;
+    let mut acts: HashMap<usize, Arc<Vec<f32>>> = HashMap::new();
+    acts.insert(0, Arc::new(input.to_vec()));
+
+    for layer in g.layers().iter().skip(1) {
+        let arts = &manifest.artifacts[layer.id];
+        // Locate the exec artifact for the chosen variant (weightless
+        // layers have a single variant named "builtin").
+        let variant = variant_of
+            .get(&layer.id)
+            .map(String::as_str)
+            .unwrap_or("builtin");
+        let va = arts
+            .variants
+            .iter()
+            .find(|v| v.variant == variant)
+            .or_else(|| arts.variants.first())
+            .ok_or_else(|| anyhow!("layer {} has no exec artifact", layer.id))?;
+        // "Pipeline creation": compile (cached across runs in-process).
+        let pre = runtime.is_cached(&manifest.resolve(&va.exec_hlo));
+        let exe = runtime.load(&manifest.resolve(&va.exec_hlo))?;
+        if !pre {
+            run.compile_ms += exe.compile_ms;
+        }
+
+        // Wait for this layer's weights if it has any.
+        let weights = if g.layer(layer.id).op.has_weights() {
+            let mut guard = slots.ready.lock().unwrap();
+            while !guard.contains_key(&layer.id) {
+                if !pipelined {
+                    bail!("layer {} weights missing in sequential mode", layer.id);
+                }
+                guard = slots.cv.wait(guard).unwrap();
+            }
+            Some(guard[&layer.id].clone())
+        } else {
+            None
+        };
+
+        // Assemble inputs: activation(s) then weights then bias.
+        let dep = *layer.deps.first().unwrap_or(&0);
+        let x = acts
+            .get(&dep)
+            .ok_or_else(|| anyhow!("missing activation of layer {dep}"))?
+            .clone();
+        let in_dims = &arts.in_dims;
+        let t_exec = Timer::start();
+        let out = match &weights {
+            Some(wb) => {
+                let (w, b) = (&wb.0, &wb.1);
+                let b_dims = [b.len() as i64];
+                exe.run_f32(&[
+                    (x.as_slice(), in_dims.as_slice()),
+                    (w.as_slice(), va.w_dims.as_slice()),
+                    (b.as_slice(), b_dims.as_slice()),
+                ])?
+            }
+            None => exe.run_f32(&[(x.as_slice(), in_dims.as_slice())])?,
+        };
+        run.exec_ms += t_exec.elapsed_ms();
+        acts.insert(layer.id, Arc::new(out));
+    }
+
+    let last = g.len() - 1;
+    run.output = acts
+        .remove(&last)
+        .map(|a| a.as_ref().clone())
+        .unwrap_or_default();
+    Ok(run)
+}
+
+// Real-mode integration tests live in `tests/real_mode.rs` (they need the
+// artifacts produced by `make artifacts`).

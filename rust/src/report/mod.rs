@@ -1,0 +1,527 @@
+//! The evaluation harness: one generator per table and figure of the
+//! paper's evaluation section (§2 + §4). Each function returns a
+//! [`Table`] whose rows mirror what the paper plots, with paper reference
+//! values included where the paper states them, so EXPERIMENTS.md can
+//! record paper-vs-measured side by side.
+
+use crate::baselines::{cold_breakdown, cold_ms, cold_ms_with_cores, warm_ms, Engine};
+use crate::cost::CostModel;
+use crate::device::{profiles, CoreClass, DeviceProfile};
+use crate::graph::zoo;
+use crate::kernels::{Kernel, KernelFamily, Registry};
+use crate::metrics::{energy_mj, Timer};
+use crate::sched::heuristic::{schedule, SchedulerConfig};
+use crate::sched::plan::UnitId;
+use crate::sched::price::Pricer;
+use crate::sim::{simulate, BgLoad, SimConfig};
+use crate::util::stats::geomean;
+use crate::util::table::{fmt_bytes, fmt_ms, fmt_x, Table};
+
+/// NNV12's end-to-end cold latency on a device (calibrated scheduler plan
+/// executed by the contention-aware simulator with workload stealing on).
+pub fn nnv12_cold_ms(dev: &DeviceProfile, model: &str) -> f64 {
+    let g = zoo::by_name(model).expect("unknown model");
+    let (s, d) =
+        crate::sched::heuristic::schedule_calibrated(dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+    let pricer = Pricer::new(&d, &g, &s.plan.choices, true);
+    simulate(&d, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan
+}
+
+/// Fig. 2 — cold vs warm inference gap on vanilla engines.
+pub fn fig2() -> Table {
+    let mut t = Table::new(
+        "Fig. 2 — cold/warm gap on vanilla DL libraries (paper: 1.5-12.7x CPU, 85.5-443.5x GPU)",
+        &["model", "engine", "device", "cold ms", "warm ms", "gap"],
+    );
+    let pixel5 = profiles::pixel_5();
+    let tx2 = profiles::jetson_tx2();
+    for model in ["mobilenet", "mobilenetv2", "resnet50"] {
+        let g = zoo::by_name(model).unwrap();
+        for engine in [Engine::Tensorflow, Engine::Ncnn, Engine::Mnn] {
+            for dev in [&pixel5, &tx2] {
+                let cold = cold_ms(engine, dev, &g);
+                let warm = warm_ms(engine, dev, &g);
+                t.row(vec![
+                    model.into(),
+                    engine.name(dev.executes_on_gpu()).into(),
+                    dev.name.into(),
+                    fmt_ms(cold),
+                    fmt_ms(warm),
+                    fmt_x(cold / warm),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Table 1 — ResNet-50 cold-inference breakdown.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — ResNet-50 cold breakdown (paper: Pixel5 36.5/1.3/-/1135/190; TX2 43.0/0.7/3004/1617/803)",
+        &["stage", "Pixel 5 CPU (ms)", "Jetson TX2 GPU (ms)"],
+    );
+    let cpu = cold_breakdown(Engine::Ncnn, &profiles::pixel_5(), &zoo::resnet50());
+    let gpu = cold_breakdown(Engine::Tensorflow, &profiles::jetson_tx2(), &zoo::resnet50());
+    let rows: [(&str, f64, f64); 6] = [
+        ("Weights reading", cpu.read_ms, gpu.read_ms),
+        ("Memory allocation", cpu.alloc_ms, gpu.alloc_ms),
+        ("GPU preparation", cpu.gpu_prep_ms, gpu.gpu_prep_ms),
+        ("Weights transformation", cpu.transform_ms, gpu.transform_ms),
+        ("Model execution", cpu.exec_ms, gpu.exec_ms),
+        ("Total cold inference", cpu.total(), gpu.total()),
+    ];
+    for (name, a, b) in rows {
+        t.row(vec![name.into(), fmt_ms(a), fmt_ms(b)]);
+    }
+    let warm_cpu = warm_ms(Engine::Ncnn, &profiles::pixel_5(), &zoo::resnet50());
+    let warm_gpu = warm_ms(Engine::Tensorflow, &profiles::jetson_tx2(), &zoo::resnet50());
+    t.row(vec!["Warm inference".into(), fmt_ms(warm_cpu), fmt_ms(warm_gpu)]);
+    t
+}
+
+/// Table 2 — per-kernel conv costs (k3 s1, 64→192 channels, Meizu 16T).
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2 — kernel alternatives for conv k3 s1 64->192 (read/transform on little, exec on 4 big)",
+        &["kernel", "read raw", "transform", "read cache", "exec"],
+    );
+    let dev = profiles::meizu_16t();
+    let cm = CostModel::new(&dev);
+    let layer = crate::graph::Layer {
+        id: 0,
+        name: "conv".into(),
+        op: crate::graph::OpKind::Conv { kernel: 3, stride: 1, groups: 1 },
+        in_ch: 64,
+        out_ch: 192,
+        in_hw: 32,
+        out_hw: 32,
+        deps: vec![],
+    };
+    let kernels: [(&str, KernelFamily); 6] = [
+        ("3x3s1-winograd-pack4", KernelFamily::WinogradPack4),
+        ("sgemm-pack4", KernelFamily::SgemmPack4),
+        ("pack4", KernelFamily::Pack4),
+        ("3x3s1-winograd", KernelFamily::Winograd),
+        ("3x3s1", KernelFamily::Direct),
+        ("general", KernelFamily::General),
+    ];
+    for (name, fam) in kernels {
+        let k = Kernel::new(name, fam);
+        let read_raw = cm.read_ms(layer.weight_bytes(), CoreClass::Little, 1);
+        let transform = cm.transform_ms(&k, &layer, CoreClass::Little, 1);
+        let read_cache = cm.read_ms(k.transformed_bytes(&layer), CoreClass::Little, 1);
+        let exec = cm.exec_ms(&k, &layer, CoreClass::Big, 4);
+        t.row(vec![
+            name.into(),
+            fmt_ms(read_raw),
+            fmt_ms(transform),
+            fmt_ms(read_cache),
+            fmt_ms(exec),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6 — per-stage times on different core types/counts (ResNet-50
+/// totals on Meizu 16T).
+pub fn fig6() -> Table {
+    let mut t = Table::new(
+        "Fig. 6 — stage time by core config, ResNet-50 on Meizu 16T (paper ratios: exec 6x, read 2x, transform 3.8x)",
+        &["config", "read (ms)", "transform (ms)", "exec (ms)"],
+    );
+    let dev = profiles::meizu_16t();
+    let cm = CostModel::new(&dev);
+    let g = zoo::resnet50();
+    let reg = Registry::full();
+    let configs: [(&str, CoreClass, usize); 4] = [
+        ("1 little", CoreClass::Little, 1),
+        ("1 big", CoreClass::Big, 1),
+        ("2 big", CoreClass::Big, 2),
+        ("4 big", CoreClass::Big, 4),
+    ];
+    for (name, class, threads) in configs {
+        let read: f64 = g
+            .layers()
+            .iter()
+            .map(|l| cm.read_ms(l.weight_bytes(), class, threads))
+            .sum();
+        let transform: f64 = g
+            .layers()
+            .iter()
+            .map(|l| cm.transform_ms(&cm.warm_best_kernel(l, &reg), l, class, threads))
+            .sum();
+        let exec: f64 = g
+            .layers()
+            .iter()
+            .map(|l| cm.exec_ms(&cm.warm_best_kernel(l, &reg), l, class, threads))
+            .sum();
+        t.row(vec![name.into(), fmt_ms(read), fmt_ms(transform), fmt_ms(exec)]);
+    }
+    t
+}
+
+/// Figs. 8/10 shared body: cold latency of all engines for all models on
+/// the given devices.
+fn engine_grid(title: &str, devices: &[DeviceProfile], models: &[&str]) -> Table {
+    let mut header = vec!["model", "device"];
+    let gpu = devices[0].executes_on_gpu();
+    let engines: Vec<Engine> = if gpu {
+        vec![Engine::Tensorflow, Engine::Ncnn]
+    } else {
+        vec![Engine::Tensorflow, Engine::Ncnn, Engine::Asymo]
+    };
+    let mut names: Vec<String> = engines.iter().map(|e| e.name(gpu).to_string()).collect();
+    names.push("NNV12".into());
+    names.push("warm".into());
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    header.extend(name_refs);
+    let mut t = Table::new(title, &header);
+    for model in models {
+        let g = zoo::by_name(model).unwrap();
+        for dev in devices {
+            let mut row = vec![model.to_string(), dev.name.to_string()];
+            for e in &engines {
+                row.push(fmt_ms(cold_ms(*e, dev, &g)));
+            }
+            row.push(fmt_ms(nnv12_cold_ms(dev, model)));
+            row.push(fmt_ms(CostModel::new(dev).warm_ms(&g, &Registry::full())));
+            t.row(row);
+        }
+    }
+    t
+}
+
+/// Fig. 8 — CPU cold latency: 12 models × 4 phones × 4 engines.
+pub fn fig8() -> Table {
+    engine_grid(
+        "Fig. 8 — cold inference latency on edge CPUs (ms)",
+        &profiles::cpu_devices(),
+        &zoo::PAPER_MODELS,
+    )
+}
+
+/// Fig. 10 — GPU cold latency: 12 models × 2 Jetsons × 3 engines.
+pub fn fig10() -> Table {
+    engine_grid(
+        "Fig. 10 — cold inference latency on edge GPUs (ms)",
+        &profiles::gpu_devices(),
+        &zoo::PAPER_MODELS,
+    )
+}
+
+/// Fig. 9 — impact of CPU core count (Meizu 16T).
+pub fn fig9() -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — cold latency vs core config on Meizu 16T ('X+Y' = X big + Y little)",
+        &["model", "config", "TFLite", "ncnn", "AsyMo", "NNV12"],
+    );
+    let dev = profiles::meizu_16t();
+    let configs: [(&str, usize, usize); 5] =
+        [("1+0", 1, 0), ("2+0", 2, 0), ("4+0", 4, 0), ("4+2", 4, 2), ("4+4", 4, 4)];
+    for model in ["googlenet", "resnet50"] {
+        let g = zoo::by_name(model).unwrap();
+        for (name, nb, nl) in configs {
+            let mut sub = dev.clone();
+            sub.n_big = nb;
+            sub.n_little = nl;
+            let (s, subd) = crate::sched::heuristic::schedule_calibrated(
+                &sub,
+                &g,
+                &Registry::full(),
+                &SchedulerConfig::kcp(),
+            );
+            let pricer = Pricer::new(&subd, &g, &s.plan.choices, true);
+            let nnv12 = simulate(&subd, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan;
+            t.row(vec![
+                model.into(),
+                name.into(),
+                fmt_ms(cold_ms_with_cores(Engine::Tensorflow, &dev, &g, nb, nl)),
+                fmt_ms(cold_ms_with_cores(Engine::Ncnn, &dev, &g, nb, nl)),
+                fmt_ms(cold_ms_with_cores(Engine::Asymo, &dev, &g, nb, nl)),
+                fmt_ms(nnv12),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11 — adapting to background loads (GoogLeNet, Meizu 16T).
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Fig. 11 — dynamic background load, GoogLeNet on Meizu 16T ('WS' = workload stealing)",
+        &["background", "ncnn", "NNV12 w/o WS", "NNV12 + WS"],
+    );
+    let dev = profiles::meizu_16t();
+    let g = zoo::googlenet();
+    let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+    let cases: [(&str, Vec<BgLoad>); 4] = [
+        ("none", vec![]),
+        (
+            "2 little @25%",
+            vec![
+                BgLoad { unit: UnitId::Little(0), utilization: 0.25 },
+                BgLoad { unit: UnitId::Little(1), utilization: 0.25 },
+            ],
+        ),
+        (
+            "2 little @50%",
+            vec![
+                BgLoad { unit: UnitId::Little(0), utilization: 0.5 },
+                BgLoad { unit: UnitId::Little(1), utilization: 0.5 },
+            ],
+        ),
+        ("big gang @50%", vec![BgLoad { unit: UnitId::Gang, utilization: 0.5 }]),
+    ];
+    for (name, bg) in cases {
+        // ncnn runs on big cores only ⇒ unaffected by little-core load.
+        let ncnn_base = cold_ms(Engine::Ncnn, &dev, &g);
+        let ncnn = if bg.iter().any(|b| b.unit == UnitId::Gang) {
+            ncnn_base / (1.0 - 0.5 / dev.n_big as f64) // 1 of 4 big cores half-busy
+        } else {
+            ncnn_base
+        };
+        let no_ws = simulate(
+            &dev, &s.set, &s.plan, &pricer,
+            &SimConfig { stealing: false, contention: true, background: bg.clone() },
+        );
+        let ws = simulate(
+            &dev, &s.set, &s.plan, &pricer,
+            &SimConfig { stealing: true, contention: true, background: bg },
+        );
+        t.row(vec![
+            name.into(),
+            fmt_ms(ncnn),
+            fmt_ms(no_ws.makespan),
+            fmt_ms(ws.makespan),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12 — energy consumption of cold inference.
+pub fn fig12() -> Table {
+    let mut t = Table::new(
+        "Fig. 12 — cold-inference energy on Meizu 16T (paper: NNV12 is 0.2-0.6x of ncnn)",
+        &["model", "ncnn (mJ)", "NNV12 (mJ)", "ratio"],
+    );
+    let dev = profiles::meizu_16t();
+    for model in ["googlenet", "mobilenetv2", "resnet50", "squeezenet"] {
+        let g = zoo::by_name(model).unwrap();
+        // ncnn: sequential on big cores — busy the whole cold latency.
+        let b = cold_breakdown(Engine::Ncnn, &dev, &g);
+        let ncnn_mj = energy_mj(
+            &dev,
+            (b.read_ms + b.transform_ms) + b.exec_ms * dev.n_big as f64,
+            0.0,
+            0.0,
+            b.total(),
+        );
+        let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+        let sim = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
+        t.row(vec![
+            model.into(),
+            format!("{:.0}", ncnn_mj),
+            format!("{:.0}", sim.energy_mj),
+            format!("{:.2}", sim.energy_mj / ncnn_mj),
+        ]);
+    }
+    t
+}
+
+/// Fig. 13 — ablation: K / K+C / K+C+P.
+pub fn fig13() -> Table {
+    let mut t = Table::new(
+        "Fig. 13 — ablation (paper, ResNet-50 TX2: 8272 -> K 2300 -> +C 555 -> +P 240 ms)",
+        &["model", "device", "baseline", "K", "K+C", "K+C+P"],
+    );
+    let cases = [
+        ("resnet50", profiles::jetson_tx2()),
+        ("resnet50", profiles::meizu_16t()),
+        ("googlenet", profiles::meizu_16t()),
+        ("mobilenetv2", profiles::meizu_16t()),
+    ];
+    for (model, dev) in cases {
+        let g = zoo::by_name(model).unwrap();
+        let run = |cfg: &SchedulerConfig| {
+            let s = schedule(&dev, &g, &Registry::full(), cfg);
+            let pricer = Pricer::new(&dev, &g, &s.plan.choices, cfg.shader_cache);
+            // Workload stealing is part of the "P" knob: without pipelining
+            // the engine is single-queue sequential, so nothing steals.
+            let sim_cfg = SimConfig {
+                stealing: cfg.pipeline,
+                contention: true,
+                background: vec![],
+            };
+            simulate(&dev, &s.set, &s.plan, &pricer, &sim_cfg).makespan
+        };
+        let baseline = run(&SchedulerConfig {
+            kernel_selection: false,
+            weight_cache: false,
+            shader_cache: false,
+            pipeline: false,
+            ..SchedulerConfig::default()
+        });
+        t.row(vec![
+            model.into(),
+            dev.name.into(),
+            fmt_ms(baseline),
+            fmt_ms(run(&SchedulerConfig::k_only())),
+            fmt_ms(run(&SchedulerConfig::kc())),
+            fmt_ms(run(&SchedulerConfig::kcp())),
+        ]);
+    }
+    t
+}
+
+/// Fig. 14 — continuous inference: cold + subsequent warm latencies.
+pub fn fig14() -> Table {
+    let mut t = Table::new(
+        "Fig. 14 — continuous inference on Meizu 16T (paper: 2nd inference ~8% over ncnn warm, equal from 3rd)",
+        &["model", "engine", "1st (cold)", "2nd", "3rd", "4th"],
+    );
+    let dev = profiles::meizu_16t();
+    for model in ["googlenet", "resnet50"] {
+        let g = zoo::by_name(model).unwrap();
+        let r = crate::warm::continuous(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 4);
+        t.row(vec![
+            model.into(),
+            "NNV12".into(),
+            fmt_ms(r.latencies[0]),
+            fmt_ms(r.latencies[1]),
+            fmt_ms(r.latencies[2]),
+            fmt_ms(r.latencies[3]),
+        ]);
+        let ncnn_cold = cold_ms(Engine::Ncnn, &dev, &g);
+        let ncnn_warm = warm_ms(Engine::Ncnn, &dev, &g);
+        t.row(vec![
+            model.into(),
+            "ncnn".into(),
+            fmt_ms(ncnn_cold),
+            fmt_ms(ncnn_warm),
+            fmt_ms(ncnn_warm),
+            fmt_ms(ncnn_warm),
+        ]);
+    }
+    t
+}
+
+/// Table 4 — models, plan-generation time, storage overhead.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table 4 — models, offline plan generation time, cache storage overhead",
+        &["model", "params", "size", "FLOPs", "cache storage", "plangen meizu16t", "plangen tx2"],
+    );
+    let meizu = profiles::meizu_16t();
+    let tx2 = profiles::jetson_tx2();
+    let reg = Registry::full();
+    let mut models: Vec<&str> = zoo::PAPER_MODELS.to_vec();
+    models.push("crnn-lite");
+    for model in models {
+        let g = zoo::by_name(model).unwrap();
+        let t0 = Timer::start();
+        let s1 = schedule(&meizu, &g, &reg, &SchedulerConfig::kcp());
+        let meizu_ms = t0.elapsed_ms();
+        let t1 = Timer::start();
+        let _s2 = schedule(&tx2, &g, &reg, &SchedulerConfig::kcp());
+        let tx2_ms = t1.elapsed_ms();
+        t.row(vec![
+            model.into(),
+            format!("{:.1}M", g.params() as f64 / 1e6),
+            fmt_bytes(g.weight_bytes()),
+            format!("{:.1}G", g.flops() as f64 / 1e9),
+            fmt_bytes(s1.plan.cache_bytes(&g)),
+            fmt_ms(meizu_ms),
+            fmt_ms(tx2_ms),
+        ]);
+    }
+    t
+}
+
+/// Table 5 — speedup summary over baselines per device.
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table 5 — NNV12 speedup over baselines (min-max, geomean) — paper: Meizu16T 3.7x vs ncnn, TX2 29.6x, Nano 28.5x",
+        &["device", "vs ncnn", "vs TFLite/TF"],
+    );
+    let mut devices = profiles::cpu_devices();
+    devices.extend(profiles::gpu_devices());
+    for dev in devices {
+        let mut ncnn_speedups = Vec::new();
+        let mut tf_speedups = Vec::new();
+        for model in zoo::PAPER_MODELS {
+            let g = zoo::by_name(model).unwrap();
+            let ours = nnv12_cold_ms(&dev, model);
+            ncnn_speedups.push(cold_ms(Engine::Ncnn, &dev, &g) / ours);
+            tf_speedups.push(cold_ms(Engine::Tensorflow, &dev, &g) / ours);
+        }
+        let fmt_range = |v: &[f64]| {
+            let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = v.iter().cloned().fold(0.0f64, f64::max);
+            format!("{} - {} ({})", fmt_x(min), fmt_x(max), fmt_x(geomean(v)))
+        };
+        t.row(vec![
+            dev.name.into(),
+            fmt_range(&ncnn_speedups),
+            fmt_range(&tf_speedups),
+        ]);
+    }
+    t
+}
+
+/// All reports keyed by CLI name.
+pub fn by_name(name: &str) -> Option<Table> {
+    Some(match name {
+        "fig2" => fig2(),
+        "table1" => table1(),
+        "table2" => table2(),
+        "fig6" => fig6(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "fig10" => fig10(),
+        "fig11" => fig11(),
+        "fig12" => fig12(),
+        "fig13" => fig13(),
+        "fig14" => fig14(),
+        "table4" => table4(),
+        "table5" => table5(),
+        _ => return None,
+    })
+}
+
+/// Report ids in paper order.
+pub const ALL_REPORTS: [&str; 13] = [
+    "fig2", "table1", "table2", "fig6", "fig8", "fig9", "fig10", "fig11",
+    "fig12", "fig13", "fig14", "table4", "table5",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_reports_have_rows() {
+        for name in ["table1", "table2", "fig6"] {
+            let t = by_name(name).unwrap();
+            assert!(!t.is_empty(), "{name} empty");
+            let rendered = t.render();
+            assert!(rendered.contains("##"));
+        }
+        assert!(by_name("fig99").is_none());
+    }
+
+    #[test]
+    fn fig13_rows_monotone() {
+        let t = fig13();
+        for row in t.rows() {
+            let parse = |s: &str| s.replace(',', "").parse::<f64>().unwrap();
+            let base = parse(&row[2]);
+            let k = parse(&row[3]);
+            let kc = parse(&row[4]);
+            let kcp = parse(&row[5]);
+            assert!(base >= k && k >= kc && kc >= kcp, "{row:?}");
+        }
+    }
+}

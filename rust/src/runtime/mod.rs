@@ -1,0 +1,112 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Artifacts are the
+//! HLO *text* files produced by `python/compile/aot.py` (text, not
+//! serialized `HloModuleProto` — jax ≥ 0.5 emits 64-bit instruction ids the
+//! crate's XLA 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Compilation happens lazily per artifact and the compiled executable is
+//! cached — the in-process analogue of §3.4's shader cache: first load of a
+//! model pays "pipeline creation" (XLA compilation), subsequent loads hit
+//! the cache. Compile times are recorded so the real-mode experiments can
+//! report them as the GPU-preparation stage.
+//!
+//! PJRT types are not `Send`; the runtime is owned by the executor thread
+//! (the "gang"), which is also the only place kernels execute — matching
+//! the paper's design where execution owns the big cores.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Timer;
+
+/// A compiled, loaded computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Compile (pipeline-creation) time paid to produce this executable.
+    pub compile_ms: f64,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (data, dims) and return the flat f32 output.
+    /// Artifacts are lowered with `return_tuple=True`, so the single output
+    /// is unwrapped with `to_tuple1`.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    /// (artifact, compile ms) log in load order.
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Load + compile an HLO-text artifact, hitting the cache when warm.
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(path) {
+            return Ok(e.clone());
+        }
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let compile_ms = t.elapsed_ms();
+        self.compile_log
+            .borrow_mut()
+            .push((path.display().to_string(), compile_ms));
+        let e = Rc::new(Executable { exe, compile_ms });
+        self.cache.borrow_mut().insert(path.to_path_buf(), e.clone());
+        Ok(e)
+    }
+
+    /// Whether an artifact is already compiled (shader-cache hit).
+    pub fn is_cached(&self, path: &Path) -> bool {
+        self.cache.borrow().contains_key(path)
+    }
+
+    /// Number of compiled artifacts resident.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop compiled executables (simulates a cold process start).
+    pub fn evict_all(&self) {
+        self.cache.borrow_mut().clear();
+    }
+}
+
+// NOTE: runtime tests live in `tests/real_mode.rs` (integration), because
+// they need the artifacts built by `make artifacts`.

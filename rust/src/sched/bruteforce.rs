@@ -1,0 +1,201 @@
+//! Exact scheduling oracle for tiny instances.
+//!
+//! The §3.2 problem is NP-hard; for graphs with a handful of layers we can
+//! enumerate (kernel combination × op-to-unit assignment) exhaustively and
+//! verify the heuristic lands within a small factor of optimal. Test-only
+//! scale: it explodes beyond ~4 weighted layers.
+
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::filter::candidates;
+use crate::sched::makespan::evaluate;
+use crate::sched::op::{OpSet, OpStage};
+use crate::sched::plan::{KernelChoice, Plan};
+use crate::sched::price::Pricer;
+use crate::Ms;
+
+/// Exhaustively find the best makespan. `n_little` caps the little cores
+/// considered (keeps the search tractable).
+pub fn best_makespan(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    n_little: usize,
+) -> Ms {
+    let cand_sets: Vec<Vec<KernelChoice>> = graph
+        .layers()
+        .iter()
+        .map(|l| {
+            if !l.op.has_weights() {
+                return vec![];
+            }
+            candidates(dev, l, registry, true)
+                .into_iter()
+                .map(|c| c.choice)
+                .collect()
+        })
+        .collect();
+
+    let mut best = f64::INFINITY;
+    let mut combo_idx: Vec<usize> = vec![0; graph.len()];
+    loop {
+        let choices: Vec<Option<KernelChoice>> = cand_sets
+            .iter()
+            .zip(&combo_idx)
+            .map(|(cs, &i)| cs.get(i).cloned())
+            .collect();
+        best = best.min(best_assignment(dev, graph, &choices, n_little));
+
+        // Advance the mixed-radix counter over kernel combinations.
+        let mut carry = true;
+        for (i, cs) in cand_sets.iter().enumerate() {
+            if !carry || cs.len() <= 1 {
+                continue;
+            }
+            combo_idx[i] += 1;
+            if combo_idx[i] < cs.len() {
+                carry = false;
+            } else {
+                combo_idx[i] = 0;
+            }
+        }
+        if carry {
+            break;
+        }
+    }
+    best
+}
+
+/// Best makespan over all prep-bundle→unit assignments for fixed choices.
+/// Execs stay on the gang (assumption 1 of §3.3 — also holds for the
+/// optimum whenever the gang is the fastest unit, which our devices
+/// guarantee). Bundles may go on the gang (before execs) or any little
+/// core; within a unit they run in layer order.
+fn best_assignment(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    choices: &[Option<KernelChoice>],
+    n_little: usize,
+) -> Ms {
+    let gpu = dev.executes_on_gpu();
+    let set = OpSet::build(graph, choices, gpu);
+    let pricer = Pricer::new(dev, graph, choices, true);
+    let prep_layers = set.prep_layers();
+    let n_units = n_little + 1; // 0 = gang
+    let mut best = f64::INFINITY;
+
+    let execs: Vec<usize> = set
+        .ops
+        .iter()
+        .filter(|o| o.stage == OpStage::Exec)
+        .map(|o| o.id)
+        .collect();
+
+    let mut assign = vec![0usize; prep_layers.len()];
+    loop {
+        // Build queues from the assignment.
+        let mut gang: Vec<usize> = Vec::new();
+        if let Some(di) = set.driver_init {
+            gang.push(di);
+        }
+        let mut little: Vec<Vec<usize>> = vec![Vec::new(); n_little];
+        for (b, &layer) in prep_layers.iter().enumerate() {
+            let mut ops = set.prep_bundle(layer);
+            if let Some(p) = set.pipeline_of[layer] {
+                ops.push(p);
+            }
+            if assign[b] == 0 {
+                gang.extend(ops);
+            } else {
+                little[assign[b] - 1].extend(ops);
+            }
+        }
+        // Pipeline ops of weightless layers ride on the gang.
+        for (layer, p) in set.pipeline_of.iter().enumerate() {
+            if let Some(p) = p {
+                if set.read_of[layer].is_none() {
+                    gang.push(*p);
+                }
+            }
+        }
+        gang.extend(execs.iter().copied());
+        let plan = Plan {
+            choices: choices.to_vec(),
+            gang,
+            little,
+            estimated_ms: 0.0,
+        };
+        if let Ok(s) = evaluate(&set, &plan, &pricer) {
+            best = best.min(s.makespan);
+        }
+
+        // Advance assignment counter (base n_units).
+        let mut carry = true;
+        for a in assign.iter_mut() {
+            if !carry {
+                break;
+            }
+            *a += 1;
+            if *a < n_units {
+                carry = false;
+            } else {
+                *a = 0;
+            }
+        }
+        if carry || prep_layers.is_empty() {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::builder::GraphBuilder;
+    use crate::sched::heuristic::{schedule, SchedulerConfig};
+
+    fn tiny_chain(n_convs: u32) -> ModelGraph {
+        let mut b = GraphBuilder::new("chain");
+        b.input(4, 16);
+        for i in 0..n_convs {
+            b.conv(&format!("c{i}"), 8 + 4 * i, 3, 1);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn heuristic_within_factor_of_optimal() {
+        let mut dev = profiles::meizu_16t();
+        dev.n_little = 2; // keep the brute force tractable
+        let reg = Registry::full();
+        for n in [2u32, 3] {
+            let g = tiny_chain(n);
+            let opt = best_makespan(&dev, &g, &reg, 2);
+            let h = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+            let ratio = h.schedule.makespan / opt;
+            assert!(
+                ratio < 1.35,
+                "chain{n}: heuristic {:.3} vs optimal {:.3} (x{:.2})",
+                h.schedule.makespan,
+                opt,
+                ratio
+            );
+            assert!(ratio >= 1.0 - 1e-9, "heuristic beat 'optimal'?!");
+        }
+    }
+
+    #[test]
+    fn bruteforce_explores_kernel_combinations() {
+        // With kernel selection restricted to warm defaults, the optimum
+        // must be no better than with the full registry.
+        let mut dev = profiles::meizu_16t();
+        dev.n_little = 2;
+        let g = tiny_chain(2);
+        let full = best_makespan(&dev, &g, &Registry::full(), 2);
+        let warm = best_makespan(&dev, &g, &Registry::warm_default(), 2);
+        assert!(full <= warm + 1e-9, "full {full} vs warm-only {warm}");
+    }
+}

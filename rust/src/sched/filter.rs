@@ -1,0 +1,177 @@
+//! Kernel-candidate filtering (Algorithm 1, line 1).
+//!
+//! "Filter out the kernel candidates that exhibit no faster operation" —
+//! i.e. keep only the Pareto frontier over (preparation time, execution
+//! time). Each surviving kernel additionally spawns a cached variant
+//! (read post-transformed weights, skip transformation) when that is
+//! cheaper preparation, so a *candidate* here is a full [`KernelChoice`].
+//! The paper observes 1–2 candidates typically survive per operator.
+
+use crate::cost::CostModel;
+use crate::device::{CoreClass, DeviceProfile};
+use crate::graph::Layer;
+use crate::kernels::Registry;
+use crate::sched::plan::KernelChoice;
+use crate::Ms;
+
+/// A candidate with its two scheduling-relevant costs.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub choice: KernelChoice,
+    /// Preparation (read + transform) on a little core, ms.
+    pub prep_ms: Ms,
+    /// Execution on the gang, ms.
+    pub exec_ms: Ms,
+}
+
+/// Enumerate and Pareto-filter the candidates of one layer. With
+/// `allow_cache = false` (the "no C knob" ablation) only raw-read variants
+/// are generated.
+pub fn candidates(
+    dev: &DeviceProfile,
+    layer: &Layer,
+    registry: &Registry,
+    allow_cache: bool,
+) -> Vec<Candidate> {
+    let cm = CostModel::new(dev);
+    let (exec_class, exec_threads) = cm.exec_class();
+    let mut all: Vec<Candidate> = Vec::new();
+    for kernel in registry.candidates(layer) {
+        let exec_ms = cm.exec_ms(&kernel, layer, exec_class, exec_threads);
+        // Uncached variant.
+        let read = cm.read_ms(layer.weight_bytes(), CoreClass::Little, 1);
+        let transform = cm.transform_ms(&kernel, layer, CoreClass::Little, 1);
+        all.push(Candidate {
+            choice: KernelChoice { kernel: kernel.clone(), cache: false },
+            prep_ms: read + transform,
+            exec_ms,
+        });
+        // Cached variant (only meaningful if a transform exists to bypass).
+        if allow_cache && kernel.family.needs_transform() {
+            let cached_read =
+                cm.read_ms(kernel.transformed_bytes(layer), CoreClass::Little, 1);
+            all.push(Candidate {
+                choice: KernelChoice { kernel, cache: true },
+                prep_ms: cached_read,
+                exec_ms,
+            });
+        }
+    }
+    pareto(all)
+}
+
+/// Keep the Pareto frontier over (prep_ms, exec_ms), minimizing both.
+fn pareto(mut cands: Vec<Candidate>) -> Vec<Candidate> {
+    // Sort by prep, then exec: a candidate is dominated if an earlier one
+    // has ≤ prep and ≤ exec.
+    cands.sort_by(|a, b| {
+        a.prep_ms
+            .partial_cmp(&b.prep_ms)
+            .unwrap()
+            .then(a.exec_ms.partial_cmp(&b.exec_ms).unwrap())
+    });
+    let mut frontier: Vec<Candidate> = Vec::new();
+    let mut best_exec = f64::INFINITY;
+    for c in cands {
+        if c.exec_ms < best_exec - 1e-12 {
+            best_exec = c.exec_ms;
+            frontier.push(c);
+        }
+    }
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::OpKind;
+    use crate::kernels::KernelFamily;
+
+    fn conv(in_ch: u32, out_ch: u32, hw: u32, k: u32, s: u32) -> Layer {
+        Layer {
+            id: 0,
+            name: "c".into(),
+            op: OpKind::Conv { kernel: k, stride: s, groups: 1 },
+            in_ch,
+            out_ch,
+            in_hw: hw,
+            out_hw: hw / s,
+            deps: vec![],
+        }
+    }
+
+    #[test]
+    fn frontier_is_pareto() {
+        let dev = profiles::meizu_16t();
+        let l = conv(64, 192, 56, 3, 1);
+        let cs = candidates(&dev, &l, &Registry::full(), true);
+        assert!(!cs.is_empty());
+        for a in &cs {
+            for b in &cs {
+                if std::ptr::eq(a, b) {
+                    continue;
+                }
+                let dominates = a.prep_ms <= b.prep_ms + 1e-12
+                    && a.exec_ms <= b.exec_ms + 1e-12;
+                assert!(!dominates, "{:?} dominates {:?}", a.choice, b.choice);
+            }
+        }
+    }
+
+    #[test]
+    fn few_candidates_survive() {
+        // Paper: "there are only 1–2 candidate kernels left for each
+        // operator as observed". Allow up to 4 for safety.
+        let dev = profiles::meizu_16t();
+        for (ic, oc, hw, k, s) in
+            [(64, 192, 56, 3, 1), (64, 64, 56, 1, 1), (3, 32, 224, 3, 2), (256, 512, 14, 3, 2)]
+        {
+            let l = conv(ic, oc, hw, k, s);
+            let cs = candidates(&dev, &l, &Registry::full(), true);
+            assert!(
+                (1..=4).contains(&cs.len()),
+                "k{k}s{s} {ic}->{oc}: {} candidates",
+                cs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn winograd_survives_as_cached_for_3x3s1() {
+        // For the Table 2 conv, the fastest-exec candidate should be a
+        // cached winograd (fast exec, cheap prep via cache) — exactly the
+        // paper's "C" knob.
+        let dev = profiles::meizu_16t();
+        let l = conv(64, 192, 56, 3, 1);
+        let cs = candidates(&dev, &l, &Registry::full(), true);
+        let fastest = cs
+            .iter()
+            .min_by(|a, b| a.exec_ms.partial_cmp(&b.exec_ms).unwrap())
+            .unwrap();
+        assert_eq!(fastest.choice.kernel.family, KernelFamily::WinogradPack4);
+        assert!(fastest.choice.cache, "fastest-exec candidate should be cached");
+    }
+
+    #[test]
+    fn direct_kernel_survives_as_cheapest_prep() {
+        let dev = profiles::meizu_16t();
+        let l = conv(64, 192, 56, 3, 1);
+        let cs = candidates(&dev, &l, &Registry::full(), true);
+        let cheapest = cs
+            .iter()
+            .min_by(|a, b| a.prep_ms.partial_cmp(&b.prep_ms).unwrap())
+            .unwrap();
+        // Cheapest prep pays no transformation on the critical path: either
+        // a no-transform family on raw weights, or a size-preserving cached
+        // layout (sgemm-pack4's cache file is the same size as raw).
+        assert!(
+            !cheapest.choice.kernel.family.needs_transform() || cheapest.choice.cache,
+            "{:?}",
+            cheapest.choice
+        );
+        let cm = CostModel::new(&dev);
+        let raw_read = cm.read_ms(l.weight_bytes(), CoreClass::Little, 1);
+        assert!(cheapest.prep_ms <= raw_read * 1.05, "{} vs {}", cheapest.prep_ms, raw_read);
+    }
+}

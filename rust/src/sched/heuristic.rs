@@ -1,0 +1,545 @@
+//! The NNV12 kernel scheduler (§3.3, Algorithm 1) plus the outer
+//! kernel-combination search.
+//!
+//! Heuristics encoded here, from the paper:
+//! 1. execution operations always occupy all big cores (the gang) and run
+//!    sequentially in model order — cold inference's lower bound is warm
+//!    inference;
+//! 2. each layer's read+transform(+GPU pipeline creation) form a
+//!    *preparation bundle* placed on one little core, without
+//!    multithreading (I/O- and memory-bound stages don't scale — Fig. 6);
+//! 3. the big-core loop migrates leading preparation bundles onto the gang
+//!    while the gang would otherwise start later than the most-loaded
+//!    little core;
+//! 4. the little-core loop rebalances bundles between the most- and
+//!    least-loaded little cores.
+//!
+//! The outer layer searches kernel combinations over the Pareto-filtered
+//! candidates (see [`super::filter`]); with 1–2 survivors per layer,
+//! greedy seeding + coordinate descent converges in a few passes.
+
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::filter::{candidates, Candidate};
+use crate::sched::makespan::{evaluate, Schedule};
+use crate::sched::op::{OpSet, OpStage};
+use crate::sched::plan::{KernelChoice, Plan};
+use crate::sched::price::Pricer;
+use crate::Ms;
+
+/// Scheduler configuration; the three ablation knobs of Fig. 13 ("K":
+/// kernel selection, "C": post-transformed-weight + shader caching, "P":
+/// pipelined execution) can be toggled independently.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Balance tolerance ε of Algorithm 1, ms.
+    pub epsilon_ms: f64,
+    /// Max coordinate-descent passes of the outer combination search.
+    pub max_outer_passes: usize,
+    /// Knob "K": cold-aware kernel selection (off ⇒ warm-default kernels).
+    pub kernel_selection: bool,
+    /// Knob "C": allow reading cached post-transformed weights.
+    pub weight_cache: bool,
+    /// Knob "C" (GPU): shader cache.
+    pub shader_cache: bool,
+    /// Knob "P": pipeline preparations across little cores (off ⇒ strictly
+    /// sequential single-queue cold inference, like vanilla engines).
+    pub pipeline: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            epsilon_ms: 0.5,
+            max_outer_passes: 3,
+            kernel_selection: true,
+            weight_cache: true,
+            shader_cache: true,
+            pipeline: true,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Fig. 13 arm "K": selection only.
+    pub fn k_only() -> SchedulerConfig {
+        SchedulerConfig {
+            weight_cache: false,
+            shader_cache: false,
+            pipeline: false,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    /// Fig. 13 arm "K+C": selection + caching.
+    pub fn kc() -> SchedulerConfig {
+        SchedulerConfig { pipeline: false, ..SchedulerConfig::default() }
+    }
+
+    /// Fig. 13 arm "K+C+P": the full system.
+    pub fn kcp() -> SchedulerConfig {
+        SchedulerConfig::default()
+    }
+}
+
+/// Scheduler output.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    pub plan: Plan,
+    pub schedule: Schedule,
+    /// The op set the plan refers to (needed to interpret queue entries).
+    pub set: OpSet,
+}
+
+/// Run the NNV12 scheduler for a model on a device.
+pub fn schedule(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+) -> Scheduled {
+    // --- Per-layer candidate sets (Algorithm 1, line 1: Pareto filter) ---
+    let cands: Vec<Vec<Candidate>> = graph
+        .layers()
+        .iter()
+        .map(|l| {
+            if !l.op.has_weights() {
+                return Vec::new();
+            }
+            let cs = if cfg.kernel_selection {
+                candidates(dev, l, registry, cfg.weight_cache)
+            } else {
+                candidates(dev, l, &Registry::warm_default(), cfg.weight_cache)
+            };
+            // The filter can return an empty set only if every candidate
+            // was cache-only, which cannot happen (uncached always exists).
+            assert!(!cs.is_empty(), "layer {} lost all candidates", l.id);
+            cs
+        })
+        .collect();
+
+    // --- Seed: per-layer greedy pick ---
+    // Preparation runs on ~n_little cores in parallel with execution, so a
+    // bundle "costs" roughly prep/n_little against the gang's exec time.
+    let n_little = if dev.executes_on_gpu() { dev.n_cpu() } else { dev.n_little }.max(1);
+    let mut pick: Vec<usize> = cands
+        .iter()
+        .map(|cs| {
+            if cs.is_empty() {
+                return 0;
+            }
+            let score = |c: &Candidate| {
+                if cfg.pipeline {
+                    c.exec_ms + c.prep_ms / n_little as f64
+                } else {
+                    c.exec_ms + c.prep_ms
+                }
+            };
+            (0..cs.len())
+                .min_by(|&a, &b| score(&cs[a]).partial_cmp(&score(&cs[b])).unwrap())
+                .unwrap()
+        })
+        .collect();
+
+    let build_choices = |pick: &[usize]| -> Vec<Option<KernelChoice>> {
+        cands
+            .iter()
+            .zip(pick)
+            .map(|(cs, &p)| cs.get(p).map(|c| c.choice.clone()))
+            .collect()
+    };
+
+    // --- Outer loop: coordinate descent over kernel combinations ---
+    let mut best_choices = build_choices(&pick);
+    let mut best = inner_schedule(dev, graph, &best_choices, cfg);
+    if cfg.kernel_selection {
+        for _pass in 0..cfg.max_outer_passes {
+            let mut improved = false;
+            for (layer, cs) in cands.iter().enumerate() {
+                if cs.len() < 2 {
+                    continue;
+                }
+                let mut current = pick[layer];
+                for alt in 0..cs.len() {
+                    if alt == current {
+                        continue;
+                    }
+                    // Perf: swapping one layer's kernel changes the
+                    // makespan by at most the total |Δcost| of its ops;
+                    // skip trials that cannot move the needle (§Perf).
+                    let delta = (cs[alt].prep_ms - cs[current].prep_ms).abs()
+                        + (cs[alt].exec_ms - cs[current].exec_ms).abs();
+                    if delta < 0.02 {
+                        continue;
+                    }
+                    pick[layer] = alt;
+                    let choices = build_choices(&pick);
+                    let trial = inner_schedule(dev, graph, &choices, cfg);
+                    if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
+                        best = trial;
+                        best_choices = choices;
+                        improved = true;
+                        current = alt;
+                    } else {
+                        pick[layer] = current;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+    let _ = best_choices;
+    best
+}
+
+/// §3.3 "NNV12 keeps calibrating the per-operation performance through
+/// re-profiling for better scheduling planning": the static planner prices
+/// operations without I/O interference, but concurrent little-core reads
+/// share the device's disk bandwidth, so using *every* little core for
+/// preparations can be slower than using a few. This wrapper evaluates a
+/// small family of prep-parallelism degrees under the contention-aware
+/// simulator and keeps the best plan. Returns the plan plus the (possibly
+/// reduced) device view it was planned against.
+pub fn schedule_calibrated(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+) -> (Scheduled, DeviceProfile) {
+    let full = if dev.executes_on_gpu() { dev.n_cpu() } else { dev.n_little };
+    if full == 0 {
+        // No preparation cores to tune: sequential-ish plan on the gang.
+        let s = schedule(dev, graph, registry, cfg);
+        return (s, dev.clone());
+    }
+    let mut degrees: Vec<usize> = vec![full, (full + 1) / 2, 2, 1];
+    degrees.retain(|&n| n >= 1 && n <= full);
+    degrees.dedup();
+    let mut best: Option<(Scheduled, DeviceProfile, f64)> = None;
+    for n in degrees {
+        let mut d = dev.clone();
+        if dev.executes_on_gpu() {
+            // Prep cores on GPU devices are all CPU cores; shrink both
+            // pools proportionally via n_little (price module uses n_cpu).
+            let cut = full - n;
+            let cut_little = cut.min(d.n_little);
+            d.n_little -= cut_little;
+            d.n_big -= (cut - cut_little).min(d.n_big);
+        } else {
+            d.n_little = n;
+        }
+        let s = schedule(&d, graph, registry, cfg);
+        let pricer = Pricer::new(&d, graph, &s.plan.choices, cfg.shader_cache);
+        let sim = crate::sim::simulate(
+            &d,
+            &s.set,
+            &s.plan,
+            &pricer,
+            &crate::sim::SimConfig { stealing: cfg.pipeline, contention: true, background: vec![] },
+        );
+        match &best {
+            Some((_, _, m)) if *m <= sim.makespan => {}
+            _ => best = Some((s, d, sim.makespan)),
+        }
+    }
+    let (s, d, _) = best.unwrap();
+    (s, d)
+}
+
+/// Inner layer of Algorithm 1: schedule one kernel combination.
+fn inner_schedule(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    choices: &[Option<KernelChoice>],
+    cfg: &SchedulerConfig,
+) -> Scheduled {
+    let gpu = dev.executes_on_gpu();
+    let set = OpSet::build(graph, choices, gpu);
+    let pricer = Pricer::new(dev, graph, choices, cfg.shader_cache);
+    let n_little = pricer.n_little_units();
+
+    if !cfg.pipeline || n_little == 0 {
+        // Sequential cold inference: every op on the gang in id order
+        // (reads, transforms, pipelines, execs interleaved per layer).
+        let plan = Plan {
+            choices: choices.to_vec(),
+            gang: (0..set.len()).collect(),
+            little: vec![Vec::new(); n_little],
+            estimated_ms: 0.0,
+        };
+        let schedule = evaluate(&set, &plan, &pricer).expect("sequential plan valid");
+        let estimated = schedule.makespan;
+        return Scheduled {
+            plan: Plan { estimated_ms: estimated, ..plan },
+            schedule,
+            set,
+        };
+    }
+
+    // Preparation bundles: per weighted layer, [read, transform?] and on
+    // GPU also the pipeline-creation op.
+    let bundle_ops = |layer: usize| -> Vec<usize> {
+        let mut v = set.prep_bundle(layer);
+        if let Some(p) = set.pipeline_of[layer] {
+            v.push(p);
+        }
+        v
+    };
+    // Perf: bundle costs are reused O(N^2) times by the balancing loops
+    // below (see EXPERIMENTS.md §Perf) — price each bundle exactly once.
+    let n_layers = graph.len();
+    let mut b_gang_v = vec![0.0f64; n_layers];
+    let mut b_little_v = vec![0.0f64; n_layers];
+    for layer in 0..n_layers {
+        for op in bundle_ops(layer) {
+            b_gang_v[layer] +=
+                pricer.price(&set.ops[op], crate::sched::plan::UnitId::Gang);
+            b_little_v[layer] +=
+                pricer.price(&set.ops[op], crate::sched::plan::UnitId::Little(0));
+        }
+    }
+    let bundle_ms =
+        |layer: usize, on_gang: bool| -> Ms { if on_gang { b_gang_v[layer] } else { b_little_v[layer] } };
+
+    let prep_layers = set.prep_layers();
+    // Weightless GPU layers still need their pipeline op scheduled; bundle
+    // them with preparations on little cores.
+    let mut extra_pipeline_layers: Vec<usize> = Vec::new();
+    if gpu {
+        for (layer, p) in set.pipeline_of.iter().enumerate() {
+            if p.is_some() && set.read_of[layer].is_none() {
+                extra_pipeline_layers.push(layer);
+            }
+        }
+    }
+
+    // Gang queue: driver init, first bundle (fast boot), then all execs.
+    let mut gang: Vec<usize> = Vec::new();
+    if let Some(di) = set.driver_init {
+        gang.push(di);
+    }
+    // `s` = number of leading prep bundles promoted to the gang (Alg. 1
+    // starts with the first layer's r_1, w_1 on the big cores).
+    let mut s = 1.min(prep_layers.len());
+    // Exec ops in id order.
+    let execs: Vec<usize> = set
+        .ops
+        .iter()
+        .filter(|o| o.stage == OpStage::Exec)
+        .map(|o| o.id)
+        .collect();
+
+    // Gang exec time (fixed part) + promoted bundles (variable part).
+    let exec_total: Ms = execs
+        .iter()
+        .map(|&e| pricer.price(&set.ops[e], crate::sched::plan::UnitId::Gang))
+        .sum::<f64>()
+        + set
+            .driver_init
+            .map(|di| pricer.price(&set.ops[di], crate::sched::plan::UnitId::Gang))
+            .unwrap_or(0.0);
+
+    // --- Big-core loop (Alg. 1 lines 6–11) ---
+    // Balance T_Q0 against the round-robin little-core load; promote the
+    // next bundle while the littles remain the bottleneck.
+    loop {
+        let t_q0: Ms = exec_total
+            + prep_layers[..s]
+                .iter()
+                .map(|&l| bundle_ms(l, true))
+                .sum::<f64>();
+        // Estimated little-core max load with bundles s.. round-robined.
+        let mut loads = vec![0.0f64; n_little];
+        for (idx, &l) in prep_layers[s..].iter().enumerate() {
+            loads[idx % n_little] += bundle_ms(l, false);
+        }
+        for (idx, &l) in extra_pipeline_layers.iter().enumerate() {
+            loads[idx % n_little] += bundle_ms(l, false);
+        }
+        let t_max = loads.iter().cloned().fold(0.0, f64::max);
+        if t_max <= t_q0 + cfg.epsilon_ms || s >= prep_layers.len() {
+            break;
+        }
+        // Alg. 1 line 9: promote only if the move still leaves the gang
+        // ahead (big time added + little time removed < gap).
+        let next = prep_layers[s];
+        if bundle_ms(next, true) + bundle_ms(next, false) < t_max - t_q0 {
+            s += 1;
+        } else {
+            break;
+        }
+    }
+
+    for &l in &prep_layers[..s] {
+        gang.extend(bundle_ops(l));
+    }
+    gang.extend(execs.iter().copied());
+
+    // --- Little-core init (Alg. 1 line 12): round-robin remaining bundles.
+    let mut little_layers: Vec<Vec<usize>> = vec![Vec::new(); n_little];
+    for (idx, &l) in prep_layers[s..].iter().enumerate() {
+        little_layers[idx % n_little].push(l);
+    }
+    for (idx, &l) in extra_pipeline_layers.iter().enumerate() {
+        little_layers[idx % n_little].push(l);
+    }
+
+    // --- Little-core balancing loop (Alg. 1 lines 13–20) ---
+    let load_of = |layers: &[usize]| -> Ms {
+        layers.iter().map(|&l| bundle_ms(l, false)).sum()
+    };
+    for _ in 0..4 * n_little.max(1) {
+        let loads: Vec<Ms> = little_layers.iter().map(|q| load_of(q)).collect();
+        let (j_max, &t_max) = loads
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .unwrap();
+        let (j_min, &t_min) = loads
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .unwrap();
+        if t_max - t_min <= cfg.epsilon_ms || j_max == j_min {
+            break;
+        }
+        // Largest bundle that fits in half the gap (Alg. 1 line 18).
+        let mut moved = false;
+        let mut order: Vec<usize> = little_layers[j_max].clone();
+        order.sort_by(|&a, &b| {
+            bundle_ms(b, false).partial_cmp(&bundle_ms(a, false)).unwrap()
+        });
+        for l in order {
+            if bundle_ms(l, false) < (t_max - t_min) / 2.0 {
+                little_layers[j_max].retain(|&x| x != l);
+                little_layers[j_min].push(l);
+                moved = true;
+                break;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+
+    // Within each little core, run bundles in layer order so early layers'
+    // preparations finish before the gang needs them.
+    let little: Vec<Vec<usize>> = little_layers
+        .into_iter()
+        .map(|mut layers| {
+            layers.sort_unstable();
+            layers.into_iter().flat_map(|l| bundle_ops(l)).collect()
+        })
+        .collect();
+
+    let plan = Plan {
+        choices: choices.to_vec(),
+        gang,
+        little,
+        estimated_ms: 0.0,
+    };
+    let schedule = evaluate(&set, &plan, &pricer).expect("heuristic plan valid");
+    let estimated = schedule.makespan;
+    Scheduled {
+        plan: Plan { estimated_ms: estimated, ..plan },
+        schedule,
+        set,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+
+    fn run(dev: &DeviceProfile, model: &str, cfg: &SchedulerConfig) -> f64 {
+        let g = zoo::by_name(model).unwrap();
+        let s = schedule(dev, &g, &Registry::full(), cfg);
+        s.plan.validate(&s.set).unwrap();
+        s.schedule.makespan
+    }
+
+    #[test]
+    fn ablation_order_k_kc_kcp() {
+        // Fig. 13: each knob must improve cold latency:
+        // sequential-warm-default ≥ K ≥ K+C ≥ K+C+P.
+        let dev = profiles::meizu_16t();
+        for model in ["googlenet", "resnet50", "mobilenetv2"] {
+            let none = run(
+                &dev,
+                model,
+                &SchedulerConfig {
+                    kernel_selection: false,
+                    weight_cache: false,
+                    shader_cache: false,
+                    pipeline: false,
+                    ..SchedulerConfig::default()
+                },
+            );
+            let k = run(&dev, model, &SchedulerConfig::k_only());
+            let kc = run(&dev, model, &SchedulerConfig::kc());
+            let kcp = run(&dev, model, &SchedulerConfig::kcp());
+            assert!(k <= none * 1.001, "{model}: K {k} > none {none}");
+            assert!(kc <= k * 1.001, "{model}: KC {kc} > K {k}");
+            assert!(kcp <= kc * 1.001, "{model}: KCP {kcp} > KC {kc}");
+            // And the full system is a substantial win.
+            assert!(kcp < none * 0.7, "{model}: KCP {kcp} vs none {none}");
+        }
+    }
+
+    #[test]
+    fn cold_close_to_warm_bound() {
+        // Paper: NNV12 is only 1.72× slower than warm at average; assert
+        // cold/warm < 4 on the primary device across models.
+        let dev = profiles::meizu_16t();
+        let cm = crate::cost::CostModel::new(&dev);
+        for model in ["mobilenet", "shufflenetv2", "resnet50", "googlenet"] {
+            let g = zoo::by_name(model).unwrap();
+            let warm = cm.warm_ms(&g, &Registry::full());
+            let cold = run(&dev, model, &SchedulerConfig::kcp());
+            let ratio = cold / warm;
+            assert!(
+                (1.0..4.0).contains(&ratio),
+                "{model}: cold {cold:.1} / warm {warm:.1} = {ratio:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_scheduling_works() {
+        let dev = profiles::jetson_tx2();
+        let g = zoo::resnet50();
+        let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        s.plan.validate(&s.set).unwrap();
+        assert!(s.schedule.makespan.is_finite());
+        // Without the shader cache it must be slower.
+        let no_cache = schedule(
+            &dev,
+            &g,
+            &Registry::full(),
+            &SchedulerConfig { shader_cache: false, ..SchedulerConfig::kcp() },
+        );
+        assert!(no_cache.schedule.makespan > s.schedule.makespan);
+    }
+
+    #[test]
+    fn plans_valid_across_zoo_and_devices() {
+        for dev in [profiles::meizu_16t(), profiles::pixel_5(), profiles::jetson_nano()] {
+            for model in ["tinynet", "squeezenet", "mobilenetv2", "crnn-lite"] {
+                let g = zoo::by_name(model).unwrap();
+                let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+                s.plan.validate(&s.set).unwrap();
+                assert!(
+                    s.schedule.makespan.is_finite() && s.schedule.makespan > 0.0,
+                    "{} on {}",
+                    model,
+                    dev.name
+                );
+            }
+        }
+    }
+}

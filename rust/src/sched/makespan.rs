@@ -1,0 +1,244 @@
+//! List-schedule evaluator: compute start/finish times of every operation
+//! given per-unit queues, respecting dependencies and queue order.
+//!
+//! This is the scheduler's *internal* objective evaluator (fast, no
+//! contention modelling). The discrete-event simulator ([`crate::sim`])
+//! re-executes plans with disk/memory-bandwidth interference, background
+//! load, and workload stealing; the two agree exactly when contention is
+//! absent (asserted by `tests/sim_vs_makespan.rs`).
+
+use crate::sched::op::OpSet;
+use crate::sched::plan::{Plan, UnitId};
+use crate::sched::price::Pricer;
+use crate::Ms;
+
+/// Timing of one scheduled operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpTiming {
+    pub start: Ms,
+    pub finish: Ms,
+    pub unit: UnitId,
+}
+
+/// Full evaluation result.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Per-op timings (indexed by OpId).
+    pub timings: Vec<OpTiming>,
+    /// Finish time of the final exec op — the paper's objective `E_{e_N}`.
+    pub makespan: Ms,
+    /// Per-unit busy time (for utilization / energy accounting).
+    pub busy: Vec<(UnitId, Ms)>,
+}
+
+/// Evaluate a plan. Returns `Err` if the plan deadlocks (queue order
+/// inconsistent with dependencies) or is invalid.
+pub fn evaluate(set: &OpSet, plan: &Plan, pricer: &Pricer) -> Result<Schedule, String> {
+    plan.validate(set)?;
+    let queues: Vec<(UnitId, &Vec<usize>)> = plan.queues();
+    let n_units = queues.len();
+    let mut cursor = vec![0usize; n_units]; // next index in each queue
+    let mut unit_free: Vec<Ms> = vec![0.0; n_units];
+    let mut finish: Vec<Option<Ms>> = vec![None; set.len()];
+    let mut timings = vec![
+        OpTiming { start: 0.0, finish: 0.0, unit: UnitId::Gang };
+        set.len()
+    ];
+    let mut busy: Vec<Ms> = vec![0.0; n_units];
+    let mut remaining: usize = queues.iter().map(|(_, q)| q.len()).sum();
+
+    while remaining > 0 {
+        // Among units whose next op is ready, start the one that can start
+        // earliest (deterministic tie-break by unit order).
+        let mut best: Option<(usize, Ms)> = None;
+        for (u, (_, q)) in queues.iter().enumerate() {
+            if cursor[u] >= q.len() {
+                continue;
+            }
+            let op = &set.ops[q[cursor[u]]];
+            let deps_done: Option<Ms> = {
+                let mut t: Ms = 0.0;
+                let mut all = true;
+                for &d in &op.deps {
+                    match finish[d] {
+                        Some(f) => t = t.max(f),
+                        None => {
+                            all = false;
+                            break;
+                        }
+                    }
+                }
+                if all {
+                    Some(t)
+                } else {
+                    None
+                }
+            };
+            if let Some(ready_at) = deps_done {
+                let start = ready_at.max(unit_free[u]);
+                match best {
+                    Some((_, s)) if s <= start => {}
+                    _ => best = Some((u, start)),
+                }
+            }
+        }
+        let Some((u, start)) = best else {
+            return Err(format!(
+                "plan deadlocks with {remaining} ops unscheduled (queue order \
+                 contradicts dependencies)"
+            ));
+        };
+        let (unit, q) = &queues[u];
+        let op_id = q[cursor[u]];
+        let dur = pricer.price(&set.ops[op_id], *unit);
+        let end = start + dur;
+        finish[op_id] = Some(end);
+        timings[op_id] = OpTiming { start, finish: end, unit: *unit };
+        unit_free[u] = end;
+        busy[u] += dur;
+        cursor[u] += 1;
+        remaining -= 1;
+    }
+
+    let final_exec = set.final_exec();
+    let makespan = finish[final_exec].unwrap_or(0.0);
+    Ok(Schedule {
+        timings,
+        makespan,
+        busy: queues
+            .iter()
+            .enumerate()
+            .map(|(u, (id, _))| (*id, busy[u]))
+            .collect(),
+    })
+}
+
+/// Lower bound on the makespan: the dependency-graph critical path with
+/// every op priced at its fastest unit. Used by tests and the §Perf
+/// pipeline-efficiency metric.
+pub fn critical_path_ms(set: &OpSet, pricer: &Pricer) -> Ms {
+    let mut dist = vec![0.0f64; set.len()];
+    for op in &set.ops {
+        let dur_gang = pricer.price(op, UnitId::Gang);
+        let dur_little = pricer.price(op, UnitId::Little(0));
+        let dur = dur_gang.min(dur_little);
+        let pred: Ms = op
+            .deps
+            .iter()
+            .map(|&d| dist[d])
+            .fold(0.0, f64::max);
+        dist[op.id] = pred + dur;
+    }
+    dist[set.final_exec()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+    use crate::kernels::Registry;
+    use crate::sched::op::OpSet;
+    use crate::sched::plan::default_choices;
+
+    fn sequential_plan(set: &OpSet, choices: Vec<Option<crate::sched::plan::KernelChoice>>, n_little: usize) -> Plan {
+        Plan {
+            choices,
+            gang: (0..set.len()).collect(),
+            little: vec![vec![]; n_little],
+            estimated_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn sequential_makespan_equals_sum() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let pricer = Pricer::new(&dev, &g, &choices, false);
+        let plan = sequential_plan(&set, choices.clone(), dev.n_little);
+        let s = evaluate(&set, &plan, &pricer).unwrap();
+        let sum: f64 = set
+            .ops
+            .iter()
+            .map(|o| pricer.price(o, UnitId::Gang))
+            .sum();
+        assert!((s.makespan - sum).abs() < 1e-9, "{} vs {}", s.makespan, sum);
+        // Gang busy the whole time; littles idle.
+        assert!((s.busy[0].1 - sum).abs() < 1e-9);
+        for (_, b) in &s.busy[1..] {
+            assert_eq!(*b, 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_sequential() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::mobilenet_v1();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let pricer = Pricer::new(&dev, &g, &choices, false);
+        let seq = evaluate(&set, &sequential_plan(&set, choices.clone(), dev.n_little), &pricer)
+            .unwrap();
+        // Round-robin prep bundles across little cores, execs on gang.
+        let mut gang = Vec::new();
+        let mut little: Vec<Vec<usize>> = vec![vec![]; dev.n_little];
+        let mut rr = 0usize;
+        for l in g.layers() {
+            let bundle = set.prep_bundle(l.id);
+            if !bundle.is_empty() {
+                little[rr % dev.n_little].extend(bundle);
+                rr += 1;
+            }
+            if let Some(e) = set.exec_of[l.id] {
+                gang.push(e);
+            }
+        }
+        let plan = Plan { choices: choices.clone(), gang, little, estimated_ms: 0.0 };
+        let pipe = evaluate(&set, &plan, &pricer).unwrap();
+        assert!(
+            pipe.makespan < seq.makespan,
+            "pipe {} vs seq {}",
+            pipe.makespan,
+            seq.makespan
+        );
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let pricer = Pricer::new(&dev, &g, &choices, false);
+        // Reverse the gang queue: exec ops before their reads on the same
+        // unit ⇒ the first queued op depends on a later one ⇒ deadlock.
+        let plan = Plan {
+            choices: choices.clone(),
+            gang: (0..set.len()).rev().collect(),
+            little: vec![vec![]; dev.n_little],
+            estimated_ms: 0.0,
+        };
+        assert!(evaluate(&set, &plan, &pricer).is_err());
+    }
+
+    #[test]
+    fn makespan_never_below_critical_path() {
+        let dev = profiles::meizu_16t();
+        for name in ["tinynet", "mobilenet", "resnet18"] {
+            let g = zoo::by_name(name).unwrap();
+            let choices = default_choices(&g, &Registry::full());
+            let set = OpSet::build(&g, &choices, false);
+            let pricer = Pricer::new(&dev, &g, &choices, false);
+            let plan = sequential_plan(&set, choices.clone(), dev.n_little);
+            let s = evaluate(&set, &plan, &pricer).unwrap();
+            let cp = critical_path_ms(&set, &pricer);
+            assert!(
+                s.makespan >= cp - 1e-9,
+                "{name}: makespan {} < critical path {cp}",
+                s.makespan
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The kernel scheduling problem (§3.2) and the heuristic scheduler (§3.3).
+//!
+//! A cold inference of an N-layer model decomposes into up to 4N
+//! *operations*: per-layer weights **read**, weights **transform**, kernel
+//! **execution**, and (GPU) **pipeline creation**. The scheduler jointly
+//! decides (i) which kernel each layer uses, (ii) whether to bypass its
+//! transformation by reading cached post-transformed weights, and (iii)
+//! where/when each operation runs. The exact problem is nonlinear integer
+//! programming (NP-hard); NNV12 uses the heuristics of §3.3:
+//!
+//! * execution operations always occupy **all big cores** (or the GPU) as
+//!   one gang, in model order;
+//! * each layer's read+transform are **bundled** into a preparation
+//!   operation placed on a single little core;
+//! * Algorithm 1 balances preparations across little cores and migrates
+//!   early-layer preparations onto the big gang when the gang would
+//!   otherwise idle.
+//!
+//! Modules: [`op`] (operation set + dependencies), [`plan`] (the output),
+//! [`price`] (operation costing on units), [`makespan`] (list-schedule
+//! evaluator), [`filter`] (kernel candidate Pareto filtering),
+//! [`heuristic`] (Algorithm 1 + outer kernel-combination search),
+//! [`bruteforce`] (exact oracle for tiny instances, test-only scale).
+
+pub mod op;
+pub mod plan;
+pub mod price;
+pub mod makespan;
+pub mod filter;
+pub mod heuristic;
+pub mod bruteforce;
+
+pub use heuristic::{schedule, SchedulerConfig};
+pub use op::{OpId, OpSet, OpStage, Operation};
+pub use plan::{KernelChoice, Plan, UnitId};
+pub use price::Pricer;

@@ -1,0 +1,281 @@
+//! The operation set: per-layer read/transform/exec (+ GPU pipeline
+//! creation) with the dependency graph of §3.2.
+
+use crate::graph::{LayerId, ModelGraph};
+use crate::sched::plan::KernelChoice;
+
+/// Index into [`OpSet::ops`].
+pub type OpId = usize;
+
+/// Stage of a kernel (§3.2 uses r_i, w_i, e_i; §3.4 adds pipeline creation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpStage {
+    /// One-shot GPU driver/context initialization (GPU devices only).
+    DriverInit,
+    /// Read (raw or cached post-transformed) weights from disk.
+    Read,
+    /// Transform raw weights into the kernel's layout.
+    Transform,
+    /// Create the GPU pipeline (compile shader unless cached) for a kernel.
+    Pipeline,
+    /// Execute the kernel.
+    Exec,
+}
+
+impl OpStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpStage::DriverInit => "driver-init",
+            OpStage::Read => "read",
+            OpStage::Transform => "transform",
+            OpStage::Pipeline => "pipeline",
+            OpStage::Exec => "exec",
+        }
+    }
+}
+
+/// One schedulable operation.
+#[derive(Debug, Clone)]
+pub struct Operation {
+    pub id: OpId,
+    /// Owning layer (DriverInit uses layer 0 by convention).
+    pub layer: LayerId,
+    pub stage: OpStage,
+    /// Precursor operations (Θ_i in the paper's formulation).
+    pub deps: Vec<OpId>,
+}
+
+/// The full operation set for one model + kernel-choice combination.
+#[derive(Debug, Clone)]
+pub struct OpSet {
+    pub ops: Vec<Operation>,
+    /// Per-layer handle: read op (if any).
+    pub read_of: Vec<Option<OpId>>,
+    /// Per-layer handle: transform op (if any).
+    pub transform_of: Vec<Option<OpId>>,
+    /// Per-layer handle: pipeline-creation op (if any).
+    pub pipeline_of: Vec<Option<OpId>>,
+    /// Per-layer handle: exec op (if any; Input layers have none).
+    pub exec_of: Vec<Option<OpId>>,
+    /// The driver-init op (GPU devices).
+    pub driver_init: Option<OpId>,
+}
+
+impl OpSet {
+    /// Build the operation set for `graph` under `choices` (one optional
+    /// [`KernelChoice`] per layer; `None` for weightless layers). With
+    /// `gpu`, pipeline-creation ops and a driver-init op are added and
+    /// every exec op depends on its pipeline op (§3.4).
+    pub fn build(graph: &ModelGraph, choices: &[Option<KernelChoice>], gpu: bool) -> OpSet {
+        assert_eq!(choices.len(), graph.len());
+        let n = graph.len();
+        let mut set = OpSet {
+            ops: Vec::with_capacity(3 * n + 1),
+            read_of: vec![None; n],
+            transform_of: vec![None; n],
+            pipeline_of: vec![None; n],
+            exec_of: vec![None; n],
+            driver_init: None,
+        };
+        let push = |layer: LayerId, stage: OpStage, deps: Vec<OpId>, ops: &mut Vec<Operation>| -> OpId {
+            let id = ops.len();
+            ops.push(Operation { id, layer, stage, deps });
+            id
+        };
+
+        if gpu {
+            let id = push(0, OpStage::DriverInit, vec![], &mut set.ops);
+            set.driver_init = Some(id);
+        }
+
+        for layer in graph.layers() {
+            let i = layer.id;
+            let choice = &choices[i];
+            // Read raw or cached weights.
+            if layer.op.has_weights() {
+                let r = push(i, OpStage::Read, vec![], &mut set.ops);
+                set.read_of[i] = Some(r);
+                // Transform unless bypassed by the cache or not needed.
+                if let Some(c) = choice {
+                    if c.kernel.family.needs_transform() && !c.cache {
+                        let w = push(i, OpStage::Transform, vec![r], &mut set.ops);
+                        set.transform_of[i] = Some(w);
+                    }
+                }
+            }
+            // Pipeline creation per executed kernel (GPU only).
+            if gpu && !matches!(layer.op, crate::graph::OpKind::Input) {
+                let p = push(
+                    i,
+                    OpStage::Pipeline,
+                    vec![set.driver_init.unwrap()],
+                    &mut set.ops,
+                );
+                set.pipeline_of[i] = Some(p);
+            }
+            // Execution.
+            if !matches!(layer.op, crate::graph::OpKind::Input) {
+                let mut deps = Vec::new();
+                if let Some(w) = set.transform_of[i] {
+                    deps.push(w);
+                } else if let Some(r) = set.read_of[i] {
+                    deps.push(r);
+                }
+                if let Some(p) = set.pipeline_of[i] {
+                    deps.push(p);
+                }
+                for &d in &layer.deps {
+                    if let Some(e) = set.exec_of[d] {
+                        deps.push(e);
+                    }
+                }
+                let e = push(i, OpStage::Exec, deps, &mut set.ops);
+                set.exec_of[i] = Some(e);
+            }
+        }
+        set
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The last exec op (`e_N` — the objective minimizes its finish time).
+    pub fn final_exec(&self) -> OpId {
+        self.exec_of
+            .iter()
+            .rev()
+            .flatten()
+            .copied()
+            .next()
+            .expect("opset has no exec ops")
+    }
+
+    /// Preparation bundle for a layer: its read (+ transform) ops in order.
+    pub fn prep_bundle(&self, layer: LayerId) -> Vec<OpId> {
+        let mut v = Vec::new();
+        if let Some(r) = self.read_of[layer] {
+            v.push(r);
+        }
+        if let Some(w) = self.transform_of[layer] {
+            v.push(w);
+        }
+        v
+    }
+
+    /// Layers that have a preparation bundle.
+    pub fn prep_layers(&self) -> Vec<LayerId> {
+        self.read_of
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|_| i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::kernels::Registry;
+    use crate::sched::plan::default_choices;
+
+    #[test]
+    fn cpu_opset_structure() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        // Each weighted layer: read + (transform?) + exec; weightless: exec.
+        for l in g.layers() {
+            if l.op.has_weights() {
+                assert!(set.read_of[l.id].is_some(), "layer {} read", l.id);
+            } else {
+                assert!(set.read_of[l.id].is_none());
+            }
+        }
+        assert!(set.driver_init.is_none());
+        assert!(set.pipeline_of.iter().all(Option::is_none));
+        // Exec deps include the predecessor exec.
+        let e3 = set.exec_of[3].unwrap();
+        let e2 = set.exec_of[2].unwrap();
+        assert!(set.ops[e3].deps.contains(&e2));
+    }
+
+    #[test]
+    fn transform_depends_on_read_exec_on_transform() {
+        let g = zoo::tiny_net();
+        let mut choices = default_choices(&g, &Registry::full());
+        // Force a transforming kernel without cache on layer 1.
+        if let Some(c) = &mut choices[1] {
+            c.cache = false;
+        }
+        let set = OpSet::build(&g, &choices, false);
+        if let Some(w) = set.transform_of[1] {
+            let r = set.read_of[1].unwrap();
+            assert_eq!(set.ops[w].deps, vec![r]);
+            let e = set.exec_of[1].unwrap();
+            assert!(set.ops[e].deps.contains(&w));
+            assert!(!set.ops[e].deps.contains(&r));
+        } else {
+            panic!("expected a transform op for layer 1");
+        }
+    }
+
+    #[test]
+    fn cache_bypasses_transform() {
+        let g = zoo::tiny_net();
+        let mut choices = default_choices(&g, &Registry::full());
+        for c in choices.iter_mut().flatten() {
+            if c.kernel.family.needs_transform() {
+                c.cache = true;
+            }
+        }
+        let set = OpSet::build(&g, &choices, false);
+        assert!(set.transform_of.iter().all(Option::is_none));
+        // Exec then depends directly on read.
+        for l in g.layers() {
+            if let (Some(r), Some(e)) = (set.read_of[l.id], set.exec_of[l.id]) {
+                assert!(set.ops[e].deps.contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_opset_adds_pipelines() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, true);
+        let di = set.driver_init.unwrap();
+        for l in g.layers().iter().skip(1) {
+            let p = set.pipeline_of[l.id].expect("pipeline op");
+            assert!(set.ops[p].deps.contains(&di));
+            let e = set.exec_of[l.id].unwrap();
+            assert!(set.ops[e].deps.contains(&p));
+        }
+    }
+
+    #[test]
+    fn final_exec_is_last_layer() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let f = set.final_exec();
+        assert_eq!(set.ops[f].layer, g.len() - 1);
+    }
+
+    #[test]
+    fn deps_are_acyclic_and_backward() {
+        let g = zoo::resnet50();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        for op in &set.ops {
+            for &d in &op.deps {
+                assert!(d < op.id, "op {} depends on later op {}", op.id, d);
+            }
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! The scheduler's output: per-layer kernel choices + per-unit op queues.
+
+use crate::graph::ModelGraph;
+use crate::kernels::{Kernel, Registry};
+use crate::sched::op::{OpId, OpSet};
+use crate::util::json::Json;
+
+/// Per-layer decision: which kernel, and whether to bypass its weight
+/// transformation by reading cached post-transformed weights (§3.1.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelChoice {
+    pub kernel: Kernel,
+    pub cache: bool,
+}
+
+/// Scheduling unit: the execution gang (all big cores, or the GPU) or one
+/// little core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum UnitId {
+    /// Q0 — the big-core gang / GPU (§3.3: execution occupies all big
+    /// cores; §3.4: the GPU plays the big-core role).
+    Gang,
+    /// Q_j — little core j (0-based).
+    Little(usize),
+}
+
+impl UnitId {
+    pub fn name(&self) -> String {
+        match self {
+            UnitId::Gang => "gang".to_string(),
+            UnitId::Little(j) => format!("little{j}"),
+        }
+    }
+}
+
+/// A kernel scheduling plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Per layer: the kernel choice (`None` for weightless layers, which
+    /// use the builtin implementation).
+    pub choices: Vec<Option<KernelChoice>>,
+    /// Q0: op queue of the gang, in order.
+    pub gang: Vec<OpId>,
+    /// Q1..Q_Ml: op queues of the little cores, in order.
+    pub little: Vec<Vec<OpId>>,
+    /// Estimated cold-inference makespan (ms) under the pricer used at
+    /// planning time.
+    pub estimated_ms: f64,
+}
+
+impl Plan {
+    /// All (unit, queue) pairs.
+    pub fn queues(&self) -> Vec<(UnitId, &Vec<OpId>)> {
+        let mut v = vec![(UnitId::Gang, &self.gang)];
+        for (j, q) in self.little.iter().enumerate() {
+            v.push((UnitId::Little(j), q));
+        }
+        v
+    }
+
+    /// Check that every op appears exactly once across all queues.
+    pub fn validate(&self, set: &OpSet) -> Result<(), String> {
+        let mut seen = vec![0usize; set.len()];
+        for (_, q) in self.queues() {
+            for &op in q {
+                if op >= set.len() {
+                    return Err(format!("queue references op {op} out of range"));
+                }
+                seen[op] += 1;
+            }
+        }
+        for (op, &count) in seen.iter().enumerate() {
+            if count == 0 {
+                return Err(format!(
+                    "op {op} ({}, layer {}) unscheduled",
+                    set.ops[op].stage.name(),
+                    set.ops[op].layer
+                ));
+            }
+            if count > 1 {
+                return Err(format!("op {op} scheduled {count} times"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Storage overhead (extra bytes on disk) of the cache decisions.
+    pub fn cache_bytes(&self, graph: &ModelGraph) -> u64 {
+        self.choices
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.as_ref().map(|c| (i, c)))
+            .filter(|(_, c)| c.cache)
+            .map(|(i, c)| c.kernel.transformed_bytes(graph.layer(i)))
+            .sum()
+    }
+
+    /// Serialize to JSON (the on-device representation NNV12 stores next to
+    /// the model after offline plan generation — Fig. 4's decision stage).
+    pub fn to_json(&self, graph: &ModelGraph) -> Json {
+        let choices: Vec<Json> = self
+            .choices
+            .iter()
+            .enumerate()
+            .map(|(i, c)| match c {
+                None => Json::Null,
+                Some(c) => Json::obj(vec![
+                    ("layer", Json::from(i)),
+                    ("kernel", Json::from(c.kernel.name.as_str())),
+                    ("family", Json::from(c.kernel.family.name())),
+                    ("cache", Json::from(c.cache)),
+                ]),
+            })
+            .collect();
+        let q = |ops: &Vec<OpId>| Json::Arr(ops.iter().map(|&o| Json::from(o)).collect());
+        Json::obj(vec![
+            ("model", Json::from(graph.name.as_str())),
+            ("estimated_ms", Json::from(self.estimated_ms)),
+            ("choices", Json::Arr(choices)),
+            ("gang", q(&self.gang)),
+            (
+                "little",
+                Json::Arr(self.little.iter().map(q).collect()),
+            ),
+        ])
+    }
+}
+
+/// Default (warm-optimal, no-cache) kernel choices — what vanilla ncnn
+/// hard-codes. Baselines and tests start from here.
+pub fn default_choices(graph: &ModelGraph, registry: &Registry) -> Vec<Option<KernelChoice>> {
+    graph
+        .layers()
+        .iter()
+        .map(|l| {
+            if !l.op.has_weights() {
+                return None;
+            }
+            // Warm-optimal = fastest exec_speed among candidates.
+            let kernel = registry
+                .candidates(l)
+                .into_iter()
+                .max_by(|a, b| {
+                    a.family
+                        .exec_speed()
+                        .partial_cmp(&b.family.exec_speed())
+                        .unwrap()
+                })
+                .unwrap();
+            Some(KernelChoice { kernel, cache: false })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::sched::op::OpSet;
+
+    #[test]
+    fn default_choices_cover_weighted_layers() {
+        let g = zoo::tiny_net();
+        let c = default_choices(&g, &Registry::full());
+        for l in g.layers() {
+            assert_eq!(c[l.id].is_some(), l.op.has_weights(), "layer {}", l.id);
+        }
+    }
+
+    #[test]
+    fn validate_catches_missing_and_duplicate_ops() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let all: Vec<OpId> = (0..set.len()).collect();
+        let ok = Plan {
+            choices: choices.clone(),
+            gang: all.clone(),
+            little: vec![vec![]],
+            estimated_ms: 0.0,
+        };
+        assert!(ok.validate(&set).is_ok());
+
+        let missing = Plan {
+            choices: choices.clone(),
+            gang: all[1..].to_vec(),
+            little: vec![vec![]],
+            estimated_ms: 0.0,
+        };
+        assert!(missing.validate(&set).unwrap_err().contains("unscheduled"));
+
+        let mut dup = all.clone();
+        dup.push(0);
+        let dupped = Plan {
+            choices,
+            gang: dup,
+            little: vec![vec![]],
+            estimated_ms: 0.0,
+        };
+        assert!(dupped.validate(&set).unwrap_err().contains("scheduled 2 times"));
+    }
+
+    #[test]
+    fn cache_bytes_counts_only_cached_layers() {
+        let g = zoo::tiny_net();
+        let mut choices = default_choices(&g, &Registry::full());
+        let plan_no_cache = Plan {
+            choices: choices.clone(),
+            gang: vec![],
+            little: vec![],
+            estimated_ms: 0.0,
+        };
+        assert_eq!(plan_no_cache.cache_bytes(&g), 0);
+        let mut expected = 0u64;
+        for (i, c) in choices.iter_mut().enumerate() {
+            if let Some(c) = c {
+                if c.kernel.family.needs_transform() {
+                    c.cache = true;
+                    expected += c.kernel.transformed_bytes(g.layer(i));
+                }
+            }
+        }
+        let plan = Plan { choices, gang: vec![], little: vec![], estimated_ms: 0.0 };
+        assert_eq!(plan.cache_bytes(&g), expected);
+        assert!(expected > 0);
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let plan = Plan {
+            choices,
+            gang: (0..set.len()).collect(),
+            little: vec![vec![]],
+            estimated_ms: 12.5,
+        };
+        let j = plan.to_json(&g);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("model").as_str(), Some("tinynet"));
+        assert_eq!(parsed.get("gang").as_arr().unwrap().len(), set.len());
+    }
+}

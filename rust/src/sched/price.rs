@@ -1,0 +1,216 @@
+//! Operation costing on scheduling units.
+//!
+//! Bridges the [`CostModel`] (per-stage, per-core-class rates) to the
+//! scheduler's view (gang vs little-core units, kernel choices, cache
+//! decisions). On CPU devices the gang is all big cores: exec ops use every
+//! big core (multithreaded), while read/transform ops placed on the gang
+//! use a single big core (the others are not useful for I/O — Fig. 6). On
+//! GPU devices the gang is the GPU; read/transform land on the board's CPU
+//! cores, which all play the "little" role (§3.4).
+
+use crate::cost::CostModel;
+use crate::device::{CoreClass, DeviceProfile};
+use crate::graph::ModelGraph;
+use crate::sched::op::{OpStage, Operation};
+use crate::sched::plan::{KernelChoice, UnitId};
+use crate::Ms;
+
+/// Prices operations for one (device, model, choices) triple.
+pub struct Pricer<'a> {
+    pub cm: CostModel<'a>,
+    pub graph: &'a ModelGraph,
+    pub choices: &'a [Option<KernelChoice>],
+    /// Whether the shader cache covers this model (GPU; §3.4).
+    pub shader_cache: bool,
+}
+
+impl<'a> Pricer<'a> {
+    pub fn new(
+        dev: &'a DeviceProfile,
+        graph: &'a ModelGraph,
+        choices: &'a [Option<KernelChoice>],
+        shader_cache: bool,
+    ) -> Pricer<'a> {
+        Pricer { cm: CostModel::new(dev), graph, choices, shader_cache }
+    }
+
+    fn dev(&self) -> &DeviceProfile {
+        self.cm.dev
+    }
+
+    /// Number of little-core units available for preparations. On GPU
+    /// devices every CPU core is a preparation core.
+    pub fn n_little_units(&self) -> usize {
+        if self.dev().executes_on_gpu() {
+            self.dev().n_cpu()
+        } else {
+            self.dev().n_little
+        }
+    }
+
+    /// Bytes the read op must fetch: raw weights, or the (larger)
+    /// post-transformed cache when the choice bypasses transformation.
+    pub fn read_bytes(&self, layer: usize) -> u64 {
+        let l = self.graph.layer(layer);
+        match &self.choices[layer] {
+            Some(c) if c.cache => c.kernel.transformed_bytes(l),
+            _ => l.weight_bytes(),
+        }
+    }
+
+    /// Price `op` on `unit`.
+    pub fn price(&self, op: &Operation, unit: UnitId) -> Ms {
+        let l = self.graph.layer(op.layer);
+        let choice = self.choices[op.layer].as_ref();
+        match op.stage {
+            OpStage::DriverInit => self.cm.gpu_driver_init_ms(),
+            OpStage::Read => {
+                let class = self.unit_class_io(unit);
+                self.cm.read_ms(self.read_bytes(op.layer), class, 1)
+            }
+            OpStage::Transform => {
+                let class = self.unit_class_io(unit);
+                let k = &choice.expect("transform op needs a kernel choice").kernel;
+                self.cm.transform_ms(k, l, class, 1)
+            }
+            OpStage::Pipeline => self.cm.pipeline_create_ms(self.shader_cache),
+            OpStage::Exec => {
+                let (class, threads) = match unit {
+                    UnitId::Gang => self.cm.exec_class(),
+                    // Execution on a little core: single-threaded (the
+                    // heuristic never does this, but workload stealing and
+                    // the brute-force oracle may).
+                    UnitId::Little(_) => (CoreClass::Little, 1),
+                };
+                match choice {
+                    Some(c) => self.cm.exec_ms(&c.kernel, l, class, threads),
+                    None => {
+                        // Weightless builtin.
+                        let k = crate::kernels::Kernel::new(
+                            "builtin",
+                            crate::kernels::KernelFamily::Builtin,
+                        );
+                        self.cm.exec_ms(&k, l, class, threads)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Core class used by I/O-ish ops (read/transform) on a unit.
+    fn unit_class_io(&self, unit: UnitId) -> CoreClass {
+        match unit {
+            // On GPU devices, preparations on the gang actually run on the
+            // strongest CPU core (the GPU does not read/transform — §3.4).
+            UnitId::Gang if self.dev().executes_on_gpu() => CoreClass::Big,
+            UnitId::Gang => CoreClass::Big,
+            UnitId::Little(_) => CoreClass::Little,
+        }
+    }
+
+    /// Preparation cost (read + transform) of a layer on a little core —
+    /// the `t^l` values of Algorithm 1.
+    pub fn prep_ms_little(&self, layer: usize) -> Ms {
+        self.prep_ms(layer, UnitId::Little(0))
+    }
+
+    /// Preparation cost on the gang (big core) — the `t^b` values.
+    pub fn prep_ms_gang(&self, layer: usize) -> Ms {
+        self.prep_ms(layer, UnitId::Gang)
+    }
+
+    fn prep_ms(&self, layer: usize, unit: UnitId) -> Ms {
+        let l = self.graph.layer(layer);
+        if !l.op.has_weights() {
+            return 0.0;
+        }
+        let class = self.unit_class_io(unit);
+        let read = self.cm.read_ms(self.read_bytes(layer), class, 1);
+        let transform = match &self.choices[layer] {
+            Some(c) if c.kernel.family.needs_transform() && !c.cache => {
+                self.cm.transform_ms(&c.kernel, l, class, 1)
+            }
+            _ => 0.0,
+        };
+        read + transform
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+    use crate::kernels::{KernelFamily, Registry};
+    use crate::sched::op::OpSet;
+    use crate::sched::plan::default_choices;
+
+    #[test]
+    fn cached_choice_reads_more_but_skips_transform() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::resnet50();
+        let reg = Registry::full();
+        let mut choices = default_choices(&g, &reg);
+        // find a winograd layer
+        let wl = choices
+            .iter()
+            .position(|c| {
+                matches!(c, Some(c) if c.kernel.family == KernelFamily::WinogradPack4)
+            })
+            .expect("resnet50 has a winograd default layer");
+        let p_raw = Pricer::new(&dev, &g, &choices, false);
+        let raw_prep = p_raw.prep_ms_little(wl);
+        let raw_read = p_raw.read_bytes(wl);
+
+        choices[wl].as_mut().unwrap().cache = true;
+        let p_cached = Pricer::new(&dev, &g, &choices, false);
+        let cached_prep = p_cached.prep_ms_little(wl);
+        assert!(p_cached.read_bytes(wl) > raw_read);
+        // Table 2: cache read (5.23) ≪ raw read + transform (0.70+38.23).
+        assert!(cached_prep < raw_prep, "{cached_prep} vs {raw_prep}");
+    }
+
+    #[test]
+    fn gang_prep_faster_than_little() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::resnet50();
+        let choices = default_choices(&g, &Registry::full());
+        let p = Pricer::new(&dev, &g, &choices, false);
+        for layer in g.weighted_layers().into_iter().take(5) {
+            assert!(p.prep_ms_gang(layer) < p.prep_ms_little(layer));
+        }
+    }
+
+    #[test]
+    fn prices_every_op_kind() {
+        let dev = profiles::jetson_tx2();
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, true);
+        let p = Pricer::new(&dev, &g, &choices, false);
+        for op in &set.ops {
+            let ms = p.price(op, UnitId::Gang);
+            assert!(ms.is_finite() && ms >= 0.0, "{op:?} => {ms}");
+        }
+        // Shader cache shrinks pipeline ops.
+        let pc = Pricer::new(&dev, &g, &choices, true);
+        let pipe = set
+            .ops
+            .iter()
+            .find(|o| o.stage == OpStage::Pipeline)
+            .unwrap();
+        assert!(pc.price(pipe, UnitId::Gang) < p.price(pipe, UnitId::Gang));
+    }
+
+    #[test]
+    fn gpu_little_units_are_all_cpu_cores() {
+        let dev = profiles::jetson_tx2();
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let p = Pricer::new(&dev, &g, &choices, false);
+        assert_eq!(p.n_little_units(), dev.n_cpu());
+        let phone = profiles::meizu_16t();
+        let p2 = Pricer::new(&phone, &g, &choices, false);
+        assert_eq!(p2.n_little_units(), phone.n_little);
+    }
+}

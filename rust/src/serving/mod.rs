@@ -1,0 +1,17 @@
+//! Multi-tenant serving front: request router + model residency manager.
+//!
+//! The paper's motivation (§1–2): edge devices host many DNNs; memory
+//! pressure means models cannot all stay resident, so inferences are cold
+//! whenever the OS or the app evicted the model. This module builds that
+//! environment: a router dispatches per-model requests; an LRU residency
+//! manager holds models within a memory budget; a request against a
+//! non-resident model pays the cold-inference latency of whichever engine
+//! is configured (NNV12's scheduled plan or a baseline), while resident
+//! models serve at warm latency — including NNV12's §3.5 kernel-switching
+//! warm-up sequence for the first post-cold inferences.
+
+pub mod router;
+pub mod workload;
+
+pub use router::{Router, RouterConfig, ServedModel};
+pub use workload::{generate, Request, WorkloadSpec};

@@ -1,0 +1,232 @@
+//! The request router and LRU model-residency manager.
+
+use std::collections::HashMap;
+
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::metrics::Recorder;
+use crate::sched::heuristic::SchedulerConfig;
+use crate::warm::continuous;
+use crate::Ms;
+
+/// Serving engine the router charges latencies from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeEngine {
+    Nnv12,
+    Ncnn,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Device memory available for resident models, bytes.
+    pub memory_budget: u64,
+    pub engine: ServeEngine,
+    /// Length of the warm-up latency ladder computed per model.
+    pub warmup_depth: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            memory_budget: 64 << 20,
+            engine: ServeEngine::Nnv12,
+            warmup_depth: 4,
+        }
+    }
+}
+
+/// A model registered with the router.
+pub struct ServedModel {
+    pub graph: ModelGraph,
+    /// Latency ladder: [cold, 2nd, 3rd, …, steady warm].
+    pub ladder: Vec<Ms>,
+    pub warm_ms: Ms,
+    /// Resident-set size (weights + transformed layouts), bytes.
+    pub resident_bytes: u64,
+}
+
+/// Outcome of one routed request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    pub latency_ms: Ms,
+    pub cold: bool,
+    pub evictions: usize,
+}
+
+/// The router.
+pub struct Router {
+    cfg: RouterConfig,
+    models: HashMap<String, ServedModel>,
+    /// Resident models, most-recently-used last, with per-model inference
+    /// count since last cold start (drives the warm-up ladder).
+    resident: Vec<(String, usize)>,
+    mem_used: u64,
+    pub recorder: Recorder,
+    pub stats_cold: usize,
+    pub stats_warm: usize,
+}
+
+impl Router {
+    /// Build a router: plans every model on `dev` up front (the paper's
+    /// offline decision stage) and computes its latency ladder.
+    pub fn new(dev: &DeviceProfile, models: Vec<ModelGraph>, cfg: RouterConfig) -> Router {
+        let registry = Registry::full();
+        let mut map = HashMap::new();
+        for g in models {
+            let (ladder, warm_ms) = match cfg.engine {
+                ServeEngine::Nnv12 => {
+                    let r = continuous(dev, &g, &registry, &SchedulerConfig::kcp(), cfg.warmup_depth);
+                    (r.latencies, r.warm_ms)
+                }
+                ServeEngine::Ncnn => {
+                    let cold = crate::baselines::cold_ms(crate::baselines::Engine::Ncnn, dev, &g);
+                    let warm = crate::baselines::warm_ms(crate::baselines::Engine::Ncnn, dev, &g);
+                    (vec![cold, warm], warm)
+                }
+            };
+            let resident_bytes = g.weight_bytes() + g.weight_bytes() / 4; // + workspace
+            map.insert(
+                g.name.clone(),
+                ServedModel { graph: g, ladder, warm_ms, resident_bytes },
+            );
+        }
+        Router {
+            cfg,
+            models: map,
+            resident: Vec::new(),
+            mem_used: 0,
+            recorder: Recorder::new(),
+            stats_cold: 0,
+            stats_warm: 0,
+        }
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.resident.iter().any(|(n, _)| n == name)
+    }
+
+    /// Handle a request for `model`. Evicts LRU models as needed to make
+    /// the target resident; charges cold or warm-ladder latency.
+    pub fn handle(&mut self, model: &str) -> Option<Outcome> {
+        let m = self.models.get(model)?;
+        let bytes = m.resident_bytes;
+        let mut evictions = 0;
+
+        if let Some(pos) = self.resident.iter().position(|(n, _)| n == model) {
+            // Warm path: bump LRU position, advance the ladder.
+            let (name, count) = self.resident.remove(pos);
+            let ladder = &self.models[&name].ladder;
+            let latency = *ladder
+                .get((count + 1).min(ladder.len() - 1))
+                .unwrap_or(&self.models[&name].warm_ms);
+            self.resident.push((name, count + 1));
+            self.stats_warm += 1;
+            self.recorder.record("warm", latency);
+            self.recorder.record(&format!("{model}:warm"), latency);
+            return Some(Outcome { latency_ms: latency, cold: false, evictions: 0 });
+        }
+
+        // Cold path: evict until it fits (a model larger than the budget
+        // still runs, transiently overcommitting like a real OS would).
+        while self.mem_used + bytes > self.cfg.memory_budget && !self.resident.is_empty() {
+            let (victim, _) = self.resident.remove(0);
+            self.mem_used -= self.models[&victim].resident_bytes;
+            evictions += 1;
+        }
+        let latency = self.models[model].ladder[0];
+        self.mem_used += bytes;
+        self.resident.push((model.to_string(), 0));
+        self.stats_cold += 1;
+        self.recorder.record("cold", latency);
+        self.recorder.record(&format!("{model}:cold"), latency);
+        Some(Outcome { latency_ms: latency, cold: true, evictions })
+    }
+
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+
+    fn router(budget: u64) -> Router {
+        let dev = profiles::meizu_16t();
+        let models = vec![zoo::tiny_net(), zoo::micro_mobilenet(), zoo::squeezenet()];
+        Router::new(&dev, models, RouterConfig { memory_budget: budget, ..Default::default() })
+    }
+
+    #[test]
+    fn first_request_cold_second_warm() {
+        let mut r = router(1 << 30);
+        let a = r.handle("tinynet").unwrap();
+        assert!(a.cold);
+        let b = r.handle("tinynet").unwrap();
+        assert!(!b.cold);
+        assert!(b.latency_ms <= a.latency_ms);
+        assert_eq!(r.stats_cold, 1);
+        assert_eq!(r.stats_warm, 1);
+    }
+
+    #[test]
+    fn warm_ladder_descends_to_steady_state() {
+        let mut r = router(1 << 30);
+        let l1 = r.handle("squeezenet").unwrap().latency_ms;
+        let l2 = r.handle("squeezenet").unwrap().latency_ms;
+        let l3 = r.handle("squeezenet").unwrap().latency_ms;
+        let l4 = r.handle("squeezenet").unwrap().latency_ms;
+        assert!(l1 > l2, "cold {l1} > 2nd {l2}");
+        assert!(l2 >= l3, "2nd {l2} >= 3rd {l3}");
+        assert_eq!(l3, l4, "steady state from 3rd inference");
+    }
+
+    #[test]
+    fn tight_budget_causes_evictions_and_recold() {
+        // Budget fits roughly one model: alternating requests thrash.
+        let mut r = router(6 << 20);
+        r.handle("squeezenet").unwrap();
+        let out = r.handle("micro-mobilenet");
+        // squeezenet (~5MB resident +25%) + micro must exceed 6MB ⇒ evict.
+        let out = out.unwrap();
+        assert!(out.cold);
+        assert!(out.evictions > 0 || r.mem_used() <= 6 << 20);
+        let back = r.handle("squeezenet").unwrap();
+        assert!(back.cold, "evicted model must cold-start again");
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        let mut r = router(1 << 30);
+        assert!(r.handle("nope").is_none());
+    }
+
+    #[test]
+    fn nnv12_colder_starts_beat_ncnn() {
+        let dev = profiles::meizu_16t();
+        let models = vec![zoo::squeezenet()];
+        let mut nnv12 = Router::new(
+            &dev,
+            models.clone(),
+            RouterConfig { engine: ServeEngine::Nnv12, ..Default::default() },
+        );
+        let mut ncnn = Router::new(
+            &dev,
+            models,
+            RouterConfig { engine: ServeEngine::Ncnn, ..Default::default() },
+        );
+        let a = nnv12.handle("squeezenet").unwrap().latency_ms;
+        let b = ncnn.handle("squeezenet").unwrap().latency_ms;
+        assert!(a < b, "nnv12 cold {a} vs ncnn cold {b}");
+    }
+}

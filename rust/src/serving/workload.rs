@@ -1,0 +1,104 @@
+//! Multi-tenant workload generation: Poisson arrivals, Zipf popularity.
+//!
+//! Models the paper's motivating environment — many DNN-backed app features
+//! invoked at different rates (voice assistant, OCR, camera filters…) on
+//! one device. Popularity skew is what makes cold inference frequent: the
+//! long tail gets evicted between invocations.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Arrival time, ms since session start.
+    pub at_ms: f64,
+    pub model: String,
+}
+
+/// Workload parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Mean inter-arrival time across all models, ms.
+    pub mean_interarrival_ms: f64,
+    /// Zipf skew (0 = uniform; ~1 = strong skew).
+    pub zipf_s: f64,
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> WorkloadSpec {
+        WorkloadSpec {
+            mean_interarrival_ms: 500.0,
+            zipf_s: 0.9,
+            n_requests: 200,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate a request trace over `models` (popularity follows their order:
+/// first = most popular).
+pub fn generate(models: &[String], spec: &WorkloadSpec) -> Vec<Request> {
+    assert!(!models.is_empty());
+    let mut rng = Rng::new(spec.seed);
+    // Zipf CDF.
+    let weights: Vec<f64> = (1..=models.len())
+        .map(|r| 1.0 / (r as f64).powf(spec.zipf_s))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(weights.len());
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for _ in 0..spec.n_requests {
+        t += rng.exponential(spec.mean_interarrival_ms);
+        let u = rng.f64();
+        let idx = cdf.iter().position(|&c| u <= c).unwrap_or(models.len() - 1);
+        out.push(Request { at_ms: t, model: models[idx].clone() });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names() -> Vec<String> {
+        vec!["a".into(), "b".into(), "c".into(), "d".into()]
+    }
+
+    #[test]
+    fn deterministic_and_sized() {
+        let spec = WorkloadSpec::default();
+        let w1 = generate(&names(), &spec);
+        let w2 = generate(&names(), &spec);
+        assert_eq!(w1, w2);
+        assert_eq!(w1.len(), spec.n_requests);
+        // Arrival times strictly increasing.
+        for pair in w1.windows(2) {
+            assert!(pair[1].at_ms > pair[0].at_ms);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_head() {
+        let spec = WorkloadSpec { n_requests: 2000, zipf_s: 1.0, ..Default::default() };
+        let w = generate(&names(), &spec);
+        let count = |m: &str| w.iter().filter(|r| r.model == m).count();
+        assert!(count("a") > count("d") * 2, "a={} d={}", count("a"), count("d"));
+    }
+
+    #[test]
+    fn uniform_when_s_zero() {
+        let spec = WorkloadSpec { n_requests: 4000, zipf_s: 0.0, ..Default::default() };
+        let w = generate(&names(), &spec);
+        let count = |m: &str| w.iter().filter(|r| r.model == m).count() as f64;
+        let ratio = count("a") / count("d");
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+}

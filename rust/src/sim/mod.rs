@@ -1,0 +1,20 @@
+//! Discrete-event simulator of an edge device executing a kernel
+//! scheduling plan.
+//!
+//! Where the scheduler's internal evaluator ([`crate::sched::makespan`])
+//! assumes operations never interfere, the simulator models what the paper
+//! identifies as the second challenge of §3.2: *"the execution time can be
+//! interfered with … because the co-running operations reach the limit of
+//! disk and/or memory I/O speed"*. Concurrent reads share disk bandwidth
+//! (processor sharing); concurrent transformations share memory bandwidth;
+//! background workloads steal cycles from individual cores (Fig. 11); and
+//! the workload-stealing technique of §3.3 reassigns queued preparations
+//! from busy cores to idle ones at runtime.
+//!
+//! The simulator also integrates the energy model (Fig. 12): per-core-class
+//! active power × busy time + device idle power × makespan.
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, BgLoad, SimConfig, SimResult};

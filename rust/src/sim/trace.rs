@@ -1,0 +1,90 @@
+//! Gantt-style trace rendering of a schedule (the paper's Fig. 7 view).
+
+use std::collections::BTreeMap;
+
+use crate::sched::makespan::OpTiming;
+use crate::sched::op::OpSet;
+use crate::sched::plan::UnitId;
+
+/// Render an ASCII Gantt chart: one row per unit, `width` columns across
+/// the makespan. Cells show the op stage initial (r/w/e/p/d).
+pub fn gantt(set: &OpSet, timings: &[OpTiming], width: usize) -> String {
+    let makespan = timings
+        .iter()
+        .map(|t| t.finish)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut rows: BTreeMap<String, Vec<char>> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    for (op, t) in set.ops.iter().zip(timings) {
+        let key = match t.unit {
+            UnitId::Gang => "gang   ".to_string(),
+            UnitId::Little(j) => format!("little{j}"),
+        };
+        if !rows.contains_key(&key) {
+            order.push(key.clone());
+        }
+        let row = rows.entry(key).or_insert_with(|| vec!['.'; width]);
+        let c = match op.stage {
+            crate::sched::op::OpStage::Read => 'r',
+            crate::sched::op::OpStage::Transform => 'w',
+            crate::sched::op::OpStage::Exec => 'e',
+            crate::sched::op::OpStage::Pipeline => 'p',
+            crate::sched::op::OpStage::DriverInit => 'd',
+        };
+        let lo = ((t.start / makespan) * width as f64).floor() as usize;
+        let hi = ((t.finish / makespan) * width as f64).ceil() as usize;
+        for cell in row.iter_mut().take(hi.min(width)).skip(lo.min(width.saturating_sub(1))) {
+            *cell = c;
+        }
+    }
+    order.sort();
+    let mut out = String::new();
+    out.push_str(&format!("makespan: {makespan:.2} ms\n"));
+    for key in order {
+        let row: String = rows[&key].iter().collect();
+        out.push_str(&format!("{key} |{row}|\n"));
+    }
+    out
+}
+
+/// Per-stage time totals (for breakdown reporting).
+pub fn stage_totals(set: &OpSet, timings: &[OpTiming]) -> BTreeMap<&'static str, f64> {
+    let mut m = BTreeMap::new();
+    for (op, t) in set.ops.iter().zip(timings) {
+        *m.entry(op.stage.name()).or_insert(0.0) += t.finish - t.start;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+    use crate::kernels::Registry;
+    use crate::sched::heuristic::{schedule, SchedulerConfig};
+
+    #[test]
+    fn renders_all_units() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        let txt = gantt(&s.set, &s.schedule.timings, 60);
+        assert!(txt.contains("gang"));
+        assert!(txt.contains("makespan"));
+        // Execution must appear on the gang row.
+        let gang_row = txt.lines().find(|l| l.starts_with("gang")).unwrap();
+        assert!(gang_row.contains('e'));
+    }
+
+    #[test]
+    fn stage_totals_sum_positive() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        let totals = stage_totals(&s.set, &s.schedule.timings);
+        assert!(totals["exec"] > 0.0);
+        assert!(totals.get("read").copied().unwrap_or(0.0) > 0.0);
+    }
+}

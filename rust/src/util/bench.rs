@@ -1,0 +1,124 @@
+//! Micro-benchmark harness driving the `cargo bench` targets
+//! (criterion is unavailable offline).
+//!
+//! Each bench target is a plain binary (`harness = false`) that builds a
+//! [`Bench`], registers cases, and calls [`Bench::run`]. The harness does a
+//! warmup phase, then measures wall time over enough iterations to exceed a
+//! minimum measurement window, and prints mean ± stddev plus throughput.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter_ms: Summary,
+}
+
+/// Bench harness configuration + registered results.
+pub struct Bench {
+    suite: String,
+    warmup_iters: usize,
+    samples: usize,
+    min_sample_ms: f64,
+    results: Vec<CaseResult>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    /// Create a suite. Honors a `NNV12_BENCH_FAST=1` env var (used by CI and
+    /// the final capture run) to cut warmup/sample counts.
+    pub fn new(suite: &str) -> Bench {
+        let fast = std::env::var("NNV12_BENCH_FAST").ok().as_deref() == Some("1");
+        // `cargo bench -- <filter>` passes the filter as an arg.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench {
+            suite: suite.to_string(),
+            warmup_iters: if fast { 1 } else { 3 },
+            samples: if fast { 3 } else { 10 },
+            min_sample_ms: if fast { 1.0 } else { 20.0 },
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Override sampling (for long end-to-end cases).
+    pub fn with_samples(mut self, samples: usize) -> Bench {
+        self.samples = samples;
+        self
+    }
+
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) && !self.suite.contains(filter.as_str()) {
+                return;
+            }
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // Determine how many iterations fill the minimum sample window.
+        let t0 = Instant::now();
+        f();
+        let probe_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let iters_per_sample = if probe_ms >= self.min_sample_ms {
+            1
+        } else {
+            ((self.min_sample_ms / probe_ms.max(1e-6)).ceil() as usize).min(100_000)
+        };
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            per_iter.push(t.elapsed().as_secs_f64() * 1e3 / iters_per_sample as f64);
+        }
+        let summary = Summary::of(&per_iter);
+        println!(
+            "{:<48} {:>12} {:>12} {:>8}",
+            format!("{}/{}", self.suite, name),
+            format!("{:.4} ms", summary.mean),
+            format!("± {:.4}", summary.std),
+            format!("x{}", iters_per_sample * self.samples),
+        );
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: iters_per_sample * self.samples,
+            per_iter_ms: summary,
+        });
+    }
+
+    /// Print the suite footer; returns results for further reporting.
+    pub fn finish(self) -> Vec<CaseResult> {
+        println!(
+            "suite {}: {} case(s) measured",
+            self.suite,
+            self.results.len()
+        );
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_trivial_case() {
+        std::env::set_var("NNV12_BENCH_FAST", "1");
+        let mut b = Bench::new("unit");
+        let mut acc = 0u64;
+        b.case("noop", || {
+            acc = acc.wrapping_add(1);
+        });
+        let rs = b.finish();
+        assert_eq!(rs.len(), 1);
+        assert!(rs[0].per_iter_ms.mean >= 0.0);
+        assert!(acc > 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI parser (clap is unavailable offline).
+//!
+//! Supports `repro <subcommand> [--flag value] [--switch] [positional…]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, named flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `bool_flags` lists switches that
+    /// take no value; everything else starting with `--` consumes the next
+    /// token as its value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.cmd = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), val.clone());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Get a string flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Get a string flag with a default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse a numeric flag.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    /// Parse an integer flag.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    /// Whether a boolean switch was given.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(
+            &v(&["report", "--device", "meizu16t", "--verbose", "fig8", "--reps=3"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.cmd, "report");
+        assert_eq!(a.get("device"), Some("meizu16t"));
+        assert_eq!(a.get("reps"), Some("3"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, v(&["fig8"]));
+    }
+
+    #[test]
+    fn numeric_flags() {
+        let a = Args::parse(&v(&["x", "--rate", "2.5"]), &[]).unwrap();
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing", 7.0).unwrap(), 7.0);
+        assert!(Args::parse(&v(&["x", "--n", "abc"]), &[])
+            .unwrap()
+            .get_usize("n", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["x", "--flag"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! In-tree substrates for the offline build environment.
+//!
+//! The build image has no network access and the vendored crate set does not
+//! include `serde`/`serde_json`, `clap`, `criterion`, `proptest`, or a PRNG,
+//! so this module provides small, tested replacements:
+//!
+//! * [`json`] — a JSON value model, parser, and pretty-printer (used for the
+//!   artifact manifest, plan serialization, and report output).
+//! * [`cli`] — a flag/subcommand parser for the `repro` binary.
+//! * [`rng`] — a SplitMix64/xoshiro256** PRNG for workload generation and
+//!   property tests.
+//! * [`prop`] — a tiny property-based testing harness (shrinking included).
+//! * [`stats`] — summary statistics (mean/percentiles/stddev) for metrics.
+//! * [`bench`] — a warmup+measure micro-bench harness driving the
+//!   `cargo bench` targets (criterion replacement).
+//! * [`table`] — fixed-width text tables for paper-style reports.
+
+pub mod json;
+pub mod cli;
+pub mod rng;
+pub mod prop;
+pub mod stats;
+pub mod bench;
+pub mod table;

@@ -1,0 +1,94 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(1234, 200, |rng| {
+//!     let n = rng.range(1, 20) as usize;
+//!     // ... build a random case, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness reports the seed of the failing case so it can be
+//! replayed deterministically with [`replay`]. Shrinking is delegated to the
+//! caller (cases are generated from sizes drawn small-to-large, so the first
+//! failure is usually near-minimal).
+
+use super::rng::Rng;
+
+/// Run `cases` random checks. `f` receives a fresh deterministic RNG per
+/// case. Panics with the failing case's seed + message on violation.
+pub fn check<F>(seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failure (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert two floats are within relative tolerance.
+pub fn close(a: f64, b: f64, rel: f64) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    if (a - b).abs() / denom <= rel {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel tol {rel})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(1, 50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 50, |rng| {
+            if rng.f64() < 0.9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0005, 1e-3).is_ok());
+        assert!(close(1.0, 1.1, 1e-3).is_err());
+        assert!(close(0.0, 0.0, 1e-9).is_ok());
+    }
+}

@@ -1,0 +1,180 @@
+//! Fixed-width text tables for paper-style console reports.
+
+/// A simple text table: header row + data rows, columns auto-sized.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; short rows are padded with empty cells.
+    pub fn row(&mut self, cells: Vec<String>) {
+        let mut cells = cells;
+        while cells.len() < self.header.len() {
+            cells.push(String::new());
+        }
+        self.rows.push(cells);
+    }
+
+    /// Convenience for rows of string slices.
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(cells.iter().map(|s| s.to_string()).collect());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Render with box-drawing separators; first column left-aligned, the
+    /// rest right-aligned (numeric convention).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = w - cell.chars().count();
+                if i == 0 {
+                    line.push_str(&format!(" {}{} ", cell, " ".repeat(pad)));
+                } else {
+                    line.push_str(&format!(" {}{} ", " ".repeat(pad), cell));
+                }
+                if i + 1 < widths.len() {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format milliseconds compactly: "0.70", "38.2", "1,135", "22,963".
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 10.0 {
+        format!("{ms:.2}")
+    } else if ms < 100.0 {
+        format!("{ms:.1}")
+    } else {
+        group_thousands(ms.round() as i64)
+    }
+}
+
+/// Format a speedup factor: "3.7x".
+pub fn fmt_x(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else {
+        format!("{x:.1}x")
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.1}GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1}MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1}KB", b / KB)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+fn group_thousands(mut n: i64) -> String {
+    let neg = n < 0;
+    n = n.abs();
+    let digits = n.to_string();
+    let mut out = String::new();
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    if neg {
+        format!("-{out}")
+    } else {
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["model", "ms"]);
+        t.row_strs(&["resnet50", "1363.2"]);
+        t.row_strs(&["mobilenet", "85.0"]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("resnet50"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // all body lines same width
+        assert_eq!(lines[1].len(), lines[2].len() + lines[2].len() - lines[3].len());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(0.7), "0.70");
+        assert_eq!(fmt_ms(38.23), "38.2");
+        assert_eq!(fmt_ms(1135.28), "1,135");
+        assert_eq!(fmt_ms(22962.6), "22,963");
+        assert_eq!(fmt_x(3.71), "3.7x");
+        assert_eq!(fmt_x(401.5), "402x");
+        assert_eq!(fmt_bytes(12), "12B");
+        assert_eq!(fmt_bytes(9408), "9.2KB");
+        assert_eq!(fmt_bytes(172 * 1024 * 1024), "172.0MB");
+    }
+
+    #[test]
+    fn pads_short_rows() {
+        let mut t = Table::new("", &["a", "b", "c"]);
+        t.row(vec!["x".into()]);
+        assert_eq!(t.rows()[0].len(), 3);
+    }
+}

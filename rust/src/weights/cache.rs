@@ -1,0 +1,161 @@
+//! The post-transformed-weights disk cache (§3.1.2).
+//!
+//! Entries live under `<dir>/<model>/L<layer>.<variant>.cache.bin` with a
+//! 16-byte header: magic, header version, source length (f32 count), and an
+//! FNV-1a checksum of the source blob — so a re-downloaded or updated model
+//! invalidates stale entries instead of silently executing on wrong
+//! weights (zero-accuracy-loss principle, §3).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::store::{read_f32, write_f32};
+
+const MAGIC: u32 = 0x4E4E_5631; // "NNV1"
+const VERSION: u32 = 1;
+
+/// FNV-1a over the bit pattern of an f32 slice.
+pub fn checksum(data: &[f32]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for x in data {
+        for b in x.to_le_bytes() {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x0100_0193);
+        }
+    }
+    h
+}
+
+/// Disk cache rooted at a directory.
+#[derive(Debug, Clone)]
+pub struct TransformCache {
+    dir: PathBuf,
+    model: String,
+}
+
+impl TransformCache {
+    pub fn new(dir: &Path, model: &str) -> TransformCache {
+        TransformCache { dir: dir.to_path_buf(), model: model.to_string() }
+    }
+
+    fn path(&self, layer: usize, variant: &str) -> PathBuf {
+        self.dir
+            .join(&self.model)
+            .join(format!("L{layer:03}.{variant}.cache.bin"))
+    }
+
+    /// Store transformed weights, stamped against the raw source blob.
+    pub fn put(&self, layer: usize, variant: &str, raw: &[f32], transformed: &[f32]) -> Result<()> {
+        let p = self.path(layer, variant);
+        let mut blob = Vec::with_capacity(transformed.len() + 4);
+        blob.push(f32::from_bits(MAGIC));
+        blob.push(f32::from_bits(VERSION));
+        blob.push(f32::from_bits(raw.len() as u32));
+        blob.push(f32::from_bits(checksum(raw)));
+        blob.extend_from_slice(transformed);
+        write_f32(&p, &blob).with_context(|| format!("writing cache {}", p.display()))
+    }
+
+    /// Fetch transformed weights if present *and* still valid for `raw`.
+    pub fn get(&self, layer: usize, variant: &str, raw: &[f32]) -> Result<Option<Vec<f32>>> {
+        let p = self.path(layer, variant);
+        if !p.exists() {
+            return Ok(None);
+        }
+        let blob = read_f32(&p)?;
+        if blob.len() < 4 {
+            bail!("cache {} truncated", p.display());
+        }
+        let magic = blob[0].to_bits();
+        let version = blob[1].to_bits();
+        let src_len = blob[2].to_bits() as usize;
+        let src_sum = blob[3].to_bits();
+        if magic != MAGIC || version != VERSION {
+            return Ok(None); // foreign or old-format file: ignore
+        }
+        if src_len != raw.len() || src_sum != checksum(raw) {
+            return Ok(None); // stale: model changed underneath
+        }
+        Ok(Some(blob[4..].to_vec()))
+    }
+
+    /// Whether a valid-looking entry exists (without verifying the source).
+    pub fn contains(&self, layer: usize, variant: &str) -> bool {
+        self.path(layer, variant).exists()
+    }
+
+    /// Total bytes used by this model's cache entries (Table 4's "Storage
+    /// Overhead" column).
+    pub fn bytes_used(&self) -> u64 {
+        let dir = self.dir.join(&self.model);
+        std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter_map(|e| e.metadata().ok())
+                    .map(|m| m.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Drop all entries for this model.
+    pub fn clear(&self) -> Result<()> {
+        let dir = self.dir.join(&self.model);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> TransformCache {
+        let d = std::env::temp_dir().join(format!(
+            "nnv12-cache-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        TransformCache::new(&d, "unit")
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = cache();
+        c.clear().unwrap();
+        let raw: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let transformed: Vec<f32> = raw.iter().map(|x| x * 2.0).collect();
+        c.put(3, "winograd", &raw, &transformed).unwrap();
+        assert!(c.contains(3, "winograd"));
+        assert_eq!(c.get(3, "winograd", &raw).unwrap().unwrap(), transformed);
+        assert!(c.get(3, "sgemm", &raw).unwrap().is_none());
+        assert!(c.bytes_used() > transformed.len() as u64 * 4);
+    }
+
+    #[test]
+    fn stale_entry_rejected_after_model_update() {
+        let c = cache();
+        c.clear().unwrap();
+        let raw: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        c.put(0, "pack4", &raw, &raw).unwrap();
+        // "Update the model": same length, different values.
+        let raw2: Vec<f32> = raw.iter().map(|x| x + 1.0).collect();
+        assert!(c.get(0, "pack4", &raw2).unwrap().is_none());
+        // Different length too.
+        assert!(c.get(0, "pack4", &raw[..10]).unwrap().is_none());
+        // Original still valid.
+        assert!(c.get(0, "pack4", &raw).unwrap().is_some());
+    }
+
+    #[test]
+    fn checksum_sensitive_to_changes() {
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0];
+        let mut b = a.clone();
+        b[1] = 2.0000002;
+        assert_ne!(checksum(&a), checksum(&b));
+        assert_eq!(checksum(&a), checksum(&a.clone()));
+    }
+}

@@ -1,0 +1,13 @@
+//! Weight storage: raw blobs + the post-transformed-weights disk cache.
+//!
+//! The decision stage (Fig. 4) writes transformed weights next to the raw
+//! model; the runtime then reads whichever the plan asks for. Cache entries
+//! are keyed by (layer, kernel variant) and carry a header with the source
+//! blob's length + checksum, so stale caches are detected after a model
+//! update (versioned invalidation).
+
+pub mod store;
+pub mod cache;
+
+pub use cache::TransformCache;
+pub use store::{read_f32, write_f32, ThrottledReader};

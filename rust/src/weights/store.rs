@@ -1,0 +1,145 @@
+//! Raw f32 blob I/O + an optionally throttled reader.
+//!
+//! The throttle emulates edge-device storage bandwidth on the development
+//! host (our NVMe is far faster than a phone's flash), preserving the
+//! read-raw vs read-cached trade-off of Table 2 on the *real* execution
+//! path. Throttling sleeps to pace actual reads; it never fakes data.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Write an f32 slice as little-endian bytes.
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    // Safety: f32 -> bytes reinterpretation for plain-old-data.
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+/// Read a whole file of little-endian f32s.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    anyhow::ensure!(buf.len() % 4 == 0, "{}: length not a multiple of 4", path.display());
+    let mut out = Vec::with_capacity(buf.len() / 4);
+    for chunk in buf.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}
+
+/// Reader pacing reads to a target bandwidth (MB/s). `None` = unthrottled.
+#[derive(Debug, Clone, Copy)]
+pub struct ThrottledReader {
+    pub mbps: Option<f64>,
+    /// Read chunk size; pacing granularity.
+    pub chunk: usize,
+}
+
+impl Default for ThrottledReader {
+    fn default() -> ThrottledReader {
+        ThrottledReader { mbps: None, chunk: 1 << 20 }
+    }
+}
+
+impl ThrottledReader {
+    pub fn throttled(mbps: f64) -> ThrottledReader {
+        ThrottledReader { mbps: Some(mbps), chunk: 256 << 10 }
+    }
+
+    /// Read a file fully, pacing to the configured bandwidth.
+    pub fn read(&self, path: &Path) -> Result<Vec<u8>> {
+        let mut f =
+            File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        let mut buf = vec![0u8; len];
+        let t0 = Instant::now();
+        let mut off = 0usize;
+        while off < len {
+            let end = (off + self.chunk).min(len);
+            f.read_exact(&mut buf[off..end])?;
+            off = end;
+            if let Some(mbps) = self.mbps {
+                // Sleep until the pace front catches up.
+                let target_s = off as f64 / (mbps * 1e6);
+                let elapsed = t0.elapsed().as_secs_f64();
+                if target_s > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(target_s - elapsed));
+                }
+            }
+        }
+        Ok(buf)
+    }
+
+    /// Read little-endian f32s with pacing.
+    pub fn read_f32(&self, path: &Path) -> Result<Vec<f32>> {
+        let buf = self.read(path)?;
+        anyhow::ensure!(buf.len() % 4 == 0, "{}: bad length", path.display());
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "nnv12-store-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let p = tmpdir().join("w.bin");
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 7.0).collect();
+        write_f32(&p, &data).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn throttled_read_paces() {
+        let p = tmpdir().join("big.bin");
+        let data = vec![1.0f32; 1 << 18]; // 1 MiB
+        write_f32(&p, &data).unwrap();
+        let r = ThrottledReader::throttled(50.0); // 50 MB/s ⇒ ≥ 20 ms
+        let t0 = Instant::now();
+        let out = r.read_f32(&p).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert_eq!(out.len(), data.len());
+        assert!(elapsed >= 0.015, "read too fast: {elapsed}s");
+        // Unthrottled should be much faster (min of 3 tries to absorb
+        // scheduler noise when the test host is loaded).
+        let fast = ThrottledReader::default();
+        let best = (0..3)
+            .map(|_| {
+                let t0 = Instant::now();
+                fast.read_f32(&p).unwrap();
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < elapsed, "unthrottled {best}s vs throttled {elapsed}s");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_f32(Path::new("/nonexistent/nope.bin")).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! End-to-end real-mode integration: AOT HLO artifacts loaded and executed
+//! through PJRT by the pipelined executor, with every kernel variant and
+//! the post-transformed-weights cache — numerics checked against the jax
+//! fixture emitted at build time.
+//!
+//! Skips when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use nnv12::graph::manifest::Manifest;
+use nnv12::graph::zoo;
+use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+use nnv12::runtime::Runtime;
+use nnv12::weights::read_f32;
+
+fn artifacts(model: &str) -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model);
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn fixture(m: &Manifest) -> (Vec<f32>, Vec<f32>) {
+    let x = read_f32(&m.resolve(m.fixture_input.as_ref().unwrap())).unwrap();
+    let y = read_f32(&m.resolve(m.fixture_output.as_ref().unwrap())).unwrap();
+    (x, y)
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}: output[{i}] = {g} vs expected {w}"
+        );
+    }
+}
+
+fn opts(variant: VariantPref, cache: bool, pipelined: bool) -> RealRunOpts {
+    RealRunOpts {
+        variant,
+        use_cache: cache,
+        pipelined,
+        workers: 2,
+        cache_dir: std::env::temp_dir().join(format!(
+            "nnv12-it-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        )),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn manifest_matches_rust_zoo() {
+    for (name, builder) in [("tinynet", zoo::tiny_net as fn() -> _), ("micro-mobilenet", zoo::micro_mobilenet)] {
+        let Some(dir) = artifacts(name) else {
+            eprintln!("skipping: artifacts for {name} not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let g = builder();
+        assert_eq!(m.model.len(), g.len(), "{name}: layer count");
+        for (a, b) in m.model.layers().iter().zip(g.layers()) {
+            assert_eq!(a.op.name(), b.op.name(), "{name}/{}", b.name);
+            assert_eq!(a.out_ch, b.out_ch, "{name}/{}", b.name);
+            assert_eq!(a.out_hw, b.out_hw, "{name}/{}", b.name);
+            assert_eq!(a.params(), b.params(), "{name}/{}", b.name);
+        }
+    }
+}
+
+#[test]
+fn tinynet_all_variants_reproduce_fixture() {
+    let Some(dir) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let (x, want) = fixture(&m);
+    for variant in [VariantPref::Direct, VariantPref::Im2col, VariantPref::Winograd] {
+        let r = run_cold(&m, &runtime, &x, &opts(variant, false, true)).unwrap();
+        // Winograd F(2,3) loses ~2 mantissa bits per layer; across six
+        // stacked convs + softmax the drift lands near 5e-3 absolute.
+        let tol = if variant == VariantPref::Winograd { 1.5e-2 } else { 2e-3 };
+        assert_close(&r.output, &want, tol, &format!("{variant:?}"));
+        assert!(r.wall_ms > 0.0 && r.exec_ms > 0.0);
+    }
+}
+
+#[test]
+fn micro_mobilenet_pipelined_and_sequential_agree() {
+    let Some(dir) = artifacts("micro-mobilenet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let (x, want) = fixture(&m);
+    let pipe = run_cold(&m, &runtime, &x, &opts(VariantPref::Auto, false, true)).unwrap();
+    let seq = run_cold(&m, &runtime, &x, &opts(VariantPref::Auto, false, false)).unwrap();
+    assert_close(&pipe.output, &want, 2e-3, "pipelined");
+    assert_close(&seq.output, &want, 2e-3, "sequential");
+}
+
+#[test]
+fn transform_cache_hits_on_second_cold_start() {
+    let Some(dir) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let (x, want) = fixture(&m);
+    let o = opts(VariantPref::Winograd, true, true);
+    let _ = std::fs::remove_dir_all(&o.cache_dir);
+    // First run: cold cache — transforms happen and are written out.
+    let first = run_cold(&m, &runtime, &x, &o).unwrap();
+    assert_eq!(first.cache_hits, 0);
+    assert!(first.transform_ms > 0.0);
+    assert_close(&first.output, &want, 1.5e-2, "first");
+    // Second run: transformation fully bypassed (the paper's "C" knob).
+    let second = run_cold(&m, &runtime, &x, &o).unwrap();
+    assert!(second.cache_hits > 0, "expected cache hits");
+    assert_eq!(second.transform_ms, 0.0);
+    assert_close(&second.output, &want, 1.5e-2, "second");
+}
+
+#[test]
+fn executable_cache_acts_as_shader_cache() {
+    let Some(dir) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let (x, _) = fixture(&m);
+    let o = opts(VariantPref::Direct, false, true);
+    let first = run_cold(&m, &runtime, &x, &o).unwrap();
+    assert!(first.compile_ms > 0.0, "first run must compile ('pipeline creation')");
+    let second = run_cold(&m, &runtime, &x, &o).unwrap();
+    assert_eq!(second.compile_ms, 0.0, "second run must hit the executable cache");
+    assert!(runtime.cached_count() > 0);
+    runtime.evict_all();
+    assert_eq!(runtime.cached_count(), 0);
+}
+
+#[test]
+fn throttled_reads_dominate_like_edge_storage() {
+    let Some(dir) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let (x, _) = fixture(&m);
+    let mut slow = opts(VariantPref::Direct, false, true);
+    slow.disk_mbps = Some(10.0); // SD-card-class storage
+    // Warm the page cache + executable cache first, then compare.
+    let _ = run_cold(&m, &runtime, &x, &opts(VariantPref::Direct, false, true)).unwrap();
+    let fast = run_cold(&m, &runtime, &x, &opts(VariantPref::Direct, false, true)).unwrap();
+    let throttled = run_cold(&m, &runtime, &x, &slow).unwrap();
+    assert!(
+        throttled.read_ms > fast.read_ms * 2.0,
+        "throttled read {:.2} ms vs host {:.2} ms",
+        throttled.read_ms,
+        fast.read_ms
+    );
+}

@@ -1,0 +1,294 @@
+//! Cross-module integration: scheduler ⇄ simulator agreement, the Fig. 7
+//! walk-through, paper-headline invariants over the full model zoo, and
+//! property tests on random graphs (plan validity, dependency safety,
+//! makespan bounds).
+
+use nnv12::baselines::{cold_ms, Engine};
+use nnv12::cost::CostModel;
+use nnv12::device::profiles;
+use nnv12::graph::builder::GraphBuilder;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::heuristic::{schedule, SchedulerConfig};
+use nnv12::sched::makespan::{critical_path_ms, evaluate};
+use nnv12::sched::op::OpStage;
+use nnv12::sched::plan::UnitId;
+use nnv12::sched::price::Pricer;
+use nnv12::sim::{simulate, SimConfig};
+use nnv12::util::prop;
+use nnv12::util::rng::Rng;
+
+/// The Fig. 7 illustrative example: a 4-layer model on a 4+4 device. The
+/// first layer's preparation lands on the gang, the remaining
+/// preparations spread over little cores, and all executions run on the
+/// gang in model order.
+#[test]
+fn sched_example_fig7() {
+    let dev = profiles::meizu_16t();
+    let mut b = GraphBuilder::new("fig7");
+    b.input(4, 32);
+    b.conv("l1", 16, 3, 1);
+    b.conv("l2", 16, 3, 1);
+    b.conv("l3", 32, 3, 1);
+    b.conv("l4", 32, 3, 1);
+    let g = b.build().unwrap();
+    let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+    s.plan.validate(&s.set).unwrap();
+    // All execs on the gang, in layer order.
+    let exec_layers: Vec<usize> = s
+        .plan
+        .gang
+        .iter()
+        .filter(|&&op| s.set.ops[op].stage == OpStage::Exec)
+        .map(|&op| s.set.ops[op].layer)
+        .collect();
+    let mut sorted = exec_layers.clone();
+    sorted.sort_unstable();
+    assert_eq!(exec_layers, sorted, "execs must stay in model order");
+    assert_eq!(exec_layers.len(), 4);
+    // Layer 1's preparation was promoted to the gang (fast boot).
+    let gang_reads: Vec<usize> = s
+        .plan
+        .gang
+        .iter()
+        .filter(|&&op| s.set.ops[op].stage == OpStage::Read)
+        .map(|&op| s.set.ops[op].layer)
+        .collect();
+    assert!(gang_reads.contains(&1), "first prep should boot on the gang");
+    // Remaining preparations live on little cores.
+    let little_ops: usize = s.plan.little.iter().map(Vec::len).sum();
+    assert!(little_ops > 0, "pipelining must use the little cores");
+}
+
+/// Paper headline: NNV12 beats ncnn on every model/device, with meaningful
+/// average speedup (paper: 2.8–3.9× on phones).
+#[test]
+fn nnv12_beats_ncnn_across_zoo() {
+    let reg = Registry::full();
+    for dev in [profiles::meizu_16t(), profiles::pixel_5()] {
+        let mut speedups = Vec::new();
+        for model in zoo::PAPER_MODELS {
+            let g = zoo::by_name(model).unwrap();
+            let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+            let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+            let ours = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan;
+            let ncnn = cold_ms(Engine::Ncnn, &dev, &g);
+            assert!(
+                ours < ncnn,
+                "{model} on {}: nnv12 {ours:.1} >= ncnn {ncnn:.1}",
+                dev.name
+            );
+            speedups.push(ncnn / ours);
+        }
+        let avg = nnv12::util::stats::geomean(&speedups);
+        assert!(
+            avg > 1.8,
+            "{}: average speedup {avg:.2} too small (paper ~2.8-3.9x)",
+            dev.name
+        );
+    }
+}
+
+/// GPU headline: larger speedups on Jetsons (paper: 28-30x average vs
+/// ncnn-Vulkan) thanks to pipeline-creation overlap + shader cache.
+#[test]
+fn gpu_speedups_exceed_cpu_speedups() {
+    let reg = Registry::full();
+    let cpu = profiles::meizu_16t();
+    let gpu = profiles::jetson_tx2();
+    let mut cpu_sp = Vec::new();
+    let mut gpu_sp = Vec::new();
+    for model in ["googlenet", "resnet50", "mobilenetv2", "squeezenet"] {
+        let g = zoo::by_name(model).unwrap();
+        for (dev, out) in [(&cpu, &mut cpu_sp), (&gpu, &mut gpu_sp)] {
+            let s = schedule(dev, &g, &reg, &SchedulerConfig::kcp());
+            let pricer = Pricer::new(dev, &g, &s.plan.choices, true);
+            let ours = simulate(dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan;
+            out.push(cold_ms(Engine::Ncnn, dev, &g) / ours);
+        }
+    }
+    let cpu_avg = nnv12::util::stats::geomean(&cpu_sp);
+    let gpu_avg = nnv12::util::stats::geomean(&gpu_sp);
+    assert!(
+        gpu_avg > 2.0 * cpu_avg,
+        "gpu avg {gpu_avg:.1}x should far exceed cpu avg {cpu_avg:.1}x"
+    );
+}
+
+/// Simulator == evaluator when contention and stealing are off, across the
+/// whole zoo and several devices.
+#[test]
+fn sim_matches_evaluator_without_contention() {
+    let reg = Registry::full();
+    for dev in [profiles::meizu_16t(), profiles::redmi_9(), profiles::jetson_tx2()] {
+        for model in ["mobilenet", "squeezenet", "resnet18"] {
+            let g = zoo::by_name(model).unwrap();
+            let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+            let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+            let eval = evaluate(&s.set, &s.plan, &pricer).unwrap();
+            let sim = simulate(
+                &dev,
+                &s.set,
+                &s.plan,
+                &pricer,
+                &SimConfig { stealing: false, contention: false, background: vec![] },
+            );
+            assert!(
+                (sim.makespan - eval.makespan).abs() < 1e-6,
+                "{model}@{}: sim {} vs eval {}",
+                dev.name,
+                sim.makespan,
+                eval.makespan
+            );
+        }
+    }
+}
+
+/// Property: on random layer graphs, the scheduler always produces a valid
+/// plan whose makespan is ≥ the critical path and ≤ the fully sequential
+/// cold time (+ small numerical slack).
+#[test]
+fn prop_random_graphs_schedule_validly() {
+    let dev = profiles::meizu_16t();
+    let reg = Registry::full();
+    prop::check(0xC01D, 40, |rng: &mut Rng| {
+        let g = random_graph(rng);
+        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+        s.plan.validate(&s.set).map_err(|e| format!("{}: {e}", g.name))?;
+        let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+        let cp = critical_path_ms(&s.set, &pricer);
+        if s.schedule.makespan < cp - 1e-6 {
+            return Err(format!(
+                "makespan {} below critical path {cp}",
+                s.schedule.makespan
+            ));
+        }
+        // Sequential upper bound with the same kernel choices.
+        let seq_cfg = SchedulerConfig { pipeline: false, ..SchedulerConfig::kcp() };
+        let seq = schedule(&dev, &g, &reg, &seq_cfg);
+        if s.schedule.makespan > seq.schedule.makespan * 1.05 {
+            return Err(format!(
+                "pipelined {} far above sequential {}",
+                s.schedule.makespan, seq.schedule.makespan
+            ));
+        }
+        // Dependencies hold in the simulated execution too.
+        let sim = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
+        for op in &s.set.ops {
+            for &d in &op.deps {
+                if sim.timings[op.id].start < sim.timings[d].finish - 1e-9 {
+                    return Err(format!("op {} started before dep {d}", op.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: the heuristic's kernel choices never pick a kernel that is
+/// inapplicable to its layer (every choice came from the registry).
+#[test]
+fn prop_choices_are_applicable() {
+    let dev = profiles::pixel_5();
+    let reg = Registry::full();
+    prop::check(0xBEEF, 25, |rng: &mut Rng| {
+        let g = random_graph(rng);
+        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+        for (i, c) in s.plan.choices.iter().enumerate() {
+            let layer = g.layer(i);
+            match c {
+                Some(c) => {
+                    let names: Vec<String> = reg
+                        .candidates(layer)
+                        .into_iter()
+                        .map(|k| k.name)
+                        .collect();
+                    if !names.contains(&c.kernel.name) {
+                        return Err(format!(
+                            "layer {i} chose inapplicable kernel {}",
+                            c.kernel.name
+                        ));
+                    }
+                    if c.cache && !c.kernel.family.needs_transform() {
+                        return Err(format!("layer {i} caches a no-transform kernel"));
+                    }
+                }
+                None => {
+                    if layer.op.has_weights() {
+                        return Err(format!("weighted layer {i} has no choice"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: warm inference is a lower bound for cold inference.
+#[test]
+fn prop_cold_at_least_warm() {
+    let dev = profiles::meizu_16t();
+    let reg = Registry::full();
+    let cm = CostModel::new(&dev);
+    prop::check(0x3A3A, 25, |rng: &mut Rng| {
+        let g = random_graph(rng);
+        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+        let warm = cm.warm_ms(&g, &reg);
+        // The heuristic's exec kernels may differ from warm-optimal, so
+        // allow a hair of slack for fp noise only.
+        if s.schedule.makespan < warm * 0.999 {
+            return Err(format!(
+                "cold {} below warm bound {warm}",
+                s.schedule.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Random chain-with-branches CNN generator for property tests.
+fn random_graph(rng: &mut Rng) -> nnv12::graph::ModelGraph {
+    let mut b = GraphBuilder::new("prop");
+    let mut hw = *rng.choose(&[16u32, 28, 32, 56]);
+    b.input(*rng.choose(&[3u32, 4, 8]), hw);
+    let n_layers = rng.range(2, 12) as usize;
+    let mut branch: Option<nnv12::graph::builder::Tap> = None;
+    for i in 0..n_layers {
+        let roll = rng.f64();
+        if roll < 0.55 {
+            let k = *rng.choose(&[1u32, 3, 3, 5]);
+            let s = if hw >= 8 && rng.chance(0.3) { 2 } else { 1 };
+            let out = *rng.choose(&[8u32, 16, 24, 32, 64]);
+            let t = b.conv(&format!("c{i}"), out, k, s);
+            hw = t.hw;
+            if branch.is_none() && rng.chance(0.3) {
+                branch = Some(t);
+            }
+        } else if roll < 0.7 {
+            if b.tap().ch % 4 == 0 && rng.chance(0.5) {
+                b.dwconv(&format!("dw{i}"), 3, 1);
+            } else {
+                b.pwconv(&format!("pw{i}"), *rng.choose(&[16u32, 32, 48]));
+            }
+        } else if roll < 0.85 && hw >= 4 {
+            b.pool(&format!("p{i}"), 2, 2);
+            hw = b.tap().hw;
+            branch = None; // shapes diverge: drop pending branch
+        } else {
+            // Branch merge when shapes still line up.
+            if let Some(t) = branch.take() {
+                if t.hw == b.tap().hw {
+                    let cur = b.tap();
+                    if cur.ch == t.ch && cur.id != t.id {
+                        b.add(&format!("add{i}"), t);
+                        continue;
+                    }
+                }
+            }
+            b.pwconv(&format!("x{i}"), 16);
+        }
+    }
+    b.global_pool("gap");
+    b.fc("fc", 10);
+    b.build().unwrap()
+}

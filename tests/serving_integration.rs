@@ -1,0 +1,150 @@
+//! Serving-layer integration: the multi-tenant environment that motivates
+//! cold inference (§1–2). Invariants over the router + LRU manager +
+//! workload generator, and the end-to-end benefit of NNV12 cold starts in
+//! a thrashing serving loop.
+
+use nnv12::device::profiles;
+use nnv12::graph::zoo;
+use nnv12::serving::router::{Outcome, RouterConfig, ServeEngine};
+use nnv12::serving::{generate, Router, WorkloadSpec};
+use nnv12::util::prop;
+use nnv12::util::rng::Rng;
+
+fn models() -> Vec<nnv12::graph::ModelGraph> {
+    ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
+        .iter()
+        .map(|m| zoo::by_name(m).unwrap())
+        .collect()
+}
+
+#[test]
+fn infinite_memory_means_one_cold_start_per_model() {
+    let dev = profiles::meizu_16t();
+    let mut r = Router::new(&dev, models(), RouterConfig {
+        memory_budget: u64::MAX,
+        ..Default::default()
+    });
+    let names = r.model_names();
+    let reqs = generate(&names, &WorkloadSpec { n_requests: 300, ..Default::default() });
+    for q in &reqs {
+        r.handle(&q.model).unwrap();
+    }
+    // Each model goes cold exactly once, ever.
+    assert_eq!(r.stats_cold, names.len().min(300));
+    assert_eq!(r.stats_warm, reqs.len() - r.stats_cold);
+}
+
+#[test]
+fn tighter_budgets_mean_more_cold_starts() {
+    let dev = profiles::meizu_16t();
+    let names: Vec<String> = models().iter().map(|g| g.name.clone()).collect();
+    let reqs = generate(&names, &WorkloadSpec { n_requests: 400, zipf_s: 0.7, ..Default::default() });
+    let mut colds = Vec::new();
+    for budget_mb in [8u64, 32, 512] {
+        let mut r = Router::new(&dev, models(), RouterConfig {
+            memory_budget: budget_mb << 20,
+            ..Default::default()
+        });
+        for q in &reqs {
+            r.handle(&q.model).unwrap();
+        }
+        colds.push(r.stats_cold);
+    }
+    assert!(colds[0] >= colds[1], "{colds:?}");
+    assert!(colds[1] >= colds[2], "{colds:?}");
+    assert!(colds[0] > colds[2], "budget must matter: {colds:?}");
+}
+
+#[test]
+fn nnv12_total_latency_beats_ncnn_under_thrash() {
+    // The paper's end-to-end value proposition: in a memory-pressured
+    // multi-DNN environment, the aggregate time spent waiting on
+    // inference drops by several x with NNV12 cold starts.
+    let dev = profiles::meizu_16t();
+    let names: Vec<String> = models().iter().map(|g| g.name.clone()).collect();
+    let reqs = generate(&names, &WorkloadSpec { n_requests: 300, zipf_s: 0.5, ..Default::default() });
+    let total = |engine| -> f64 {
+        let mut r = Router::new(&dev, models(), RouterConfig {
+            memory_budget: 24 << 20, // thrashes
+            engine,
+            ..Default::default()
+        });
+        let mut sum = 0.0;
+        for q in &reqs {
+            sum += r.handle(&q.model).unwrap().latency_ms;
+        }
+        assert!(r.stats_cold > 30, "workload must thrash ({} colds)", r.stats_cold);
+        sum
+    };
+    let nnv12 = total(ServeEngine::Nnv12);
+    let ncnn = total(ServeEngine::Ncnn);
+    let speedup = ncnn / nnv12;
+    assert!(
+        speedup > 2.0,
+        "aggregate speedup {speedup:.2} (nnv12 {nnv12:.0} ms vs ncnn {ncnn:.0} ms)"
+    );
+}
+
+#[test]
+fn prop_lru_never_exceeds_budget_after_settling() {
+    // After any request sequence, memory use is within budget unless a
+    // single model alone exceeds it (transient overcommit by design).
+    let dev = profiles::meizu_16t();
+    prop::check(0x5E12, 20, |rng: &mut Rng| {
+        let budget = rng.range(4, 200) << 20;
+        let mut r = Router::new(&dev, models(), RouterConfig {
+            memory_budget: budget,
+            ..Default::default()
+        });
+        let names = r.model_names();
+        for _ in 0..rng.range(10, 120) {
+            let m = rng.choose(&names).clone();
+            let Outcome { latency_ms, .. } = r.handle(&m).unwrap();
+            if latency_ms <= 0.0 {
+                return Err(format!("non-positive latency for {m}"));
+            }
+            let single_oversized = !r.is_resident(&m);
+            if r.mem_used() > budget && !single_oversized {
+                // Only the most recent model may overcommit.
+                let resident: Vec<_> =
+                    names.iter().filter(|n| r.is_resident(n)).collect();
+                if resident.len() > 1 {
+                    return Err(format!(
+                        "mem {} over budget {budget} with {} residents",
+                        r.mem_used(),
+                        resident.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_requests_never_slower_than_cold() {
+    let dev = profiles::pixel_5();
+    prop::check(0xAB1E, 10, |rng: &mut Rng| {
+        let mut r = Router::new(&dev, models(), RouterConfig {
+            memory_budget: u64::MAX,
+            ..Default::default()
+        });
+        let names = r.model_names();
+        let mut cold_of: std::collections::HashMap<String, f64> = Default::default();
+        for _ in 0..80 {
+            let m = rng.choose(&names).clone();
+            let o = r.handle(&m).unwrap();
+            if o.cold {
+                cold_of.insert(m.clone(), o.latency_ms);
+            } else if let Some(&c) = cold_of.get(&m) {
+                if o.latency_ms > c + 1e-9 {
+                    return Err(format!(
+                        "{m}: warm {} slower than cold {c}",
+                        o.latency_ms
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

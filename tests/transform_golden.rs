@@ -1,0 +1,93 @@
+//! Rust-vs-Python transform parity: the Rust weight transforms
+//! (rust/src/transform) must produce bit-compatible layouts with the
+//! Python build-time transforms (python/compile/kernels/ref.py), because
+//! the AOT'd exec HLO consumes whichever one ran.
+//!
+//! Goldens are emitted by `make artifacts` (aot.py::export_goldens);
+//! the tests skip when artifacts are absent.
+
+use std::path::{Path, PathBuf};
+
+use nnv12::graph::{Layer, OpKind};
+use nnv12::transform::{transform_by_name, winograd23_weights};
+use nnv12::util::json::Json;
+use nnv12::weights::read_f32;
+
+fn goldens_dir() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/goldens");
+    d.join("meta.json").exists().then_some(d)
+}
+
+struct Golden {
+    c_out: usize,
+    c_in: usize,
+    k: usize,
+    raw: Vec<f32>,
+    winograd: Vec<f32>,
+    im2col: Vec<f32>,
+}
+
+fn load() -> Option<Golden> {
+    let dir = goldens_dir()?;
+    let meta = Json::parse(&std::fs::read_to_string(dir.join("meta.json")).ok()?).ok()?;
+    Some(Golden {
+        c_out: meta.get("c_out").as_usize()?,
+        c_in: meta.get("c_in").as_usize()?,
+        k: meta.get("k").as_usize()?,
+        raw: read_f32(&dir.join("conv.raw.bin")).ok()?,
+        winograd: read_f32(&dir.join("conv.winograd.bin")).ok()?,
+        im2col: read_f32(&dir.join("conv.im2col.bin")).ok()?,
+    })
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+}
+
+#[test]
+fn winograd_transform_matches_python() {
+    let Some(g) = load() else {
+        eprintln!("skipping: artifacts/goldens not built");
+        return;
+    };
+    let wlen = g.c_out * g.c_in * g.k * g.k;
+    let (w, bias) = g.raw.split_at(wlen);
+    let mut ours = winograd23_weights(w, g.c_out, g.c_in);
+    ours.extend_from_slice(bias);
+    assert!(
+        close(&ours, &g.winograd, 1e-5),
+        "rust winograd transform diverges from python golden"
+    );
+}
+
+#[test]
+fn im2col_transform_matches_python() {
+    let Some(g) = load() else {
+        eprintln!("skipping: artifacts/goldens not built");
+        return;
+    };
+    // im2col is a reshape: identical numbers.
+    assert!(close(&g.raw, &g.im2col, 0.0));
+}
+
+#[test]
+fn dispatch_matches_python_golden() {
+    let Some(g) = load() else {
+        eprintln!("skipping: artifacts/goldens not built");
+        return;
+    };
+    let layer = Layer {
+        id: 0,
+        name: "golden".into(),
+        op: OpKind::Conv { kernel: g.k as u32, stride: 1, groups: 1 },
+        in_ch: g.c_in as u32,
+        out_ch: g.c_out as u32,
+        in_hw: 8,
+        out_hw: 8,
+        deps: vec![],
+    };
+    let wino = transform_by_name("winograd", &g.raw, &layer).unwrap();
+    assert!(close(&wino, &g.winograd, 1e-5));
+    let im2col = transform_by_name("im2col", &g.raw, &layer).unwrap();
+    assert!(close(&im2col, &g.im2col, 0.0));
+}
