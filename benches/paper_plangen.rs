@@ -23,5 +23,5 @@ fn main() {
         let s = schedule(&tx2, &g, &reg, &SchedulerConfig::kcp());
         assert!(s.schedule.makespan > 0.0);
     });
-    b.finish();
+    b.finish_to("BENCH_plangen.json");
 }

@@ -1,13 +1,18 @@
-//! Bench: scheduler hot paths in isolation — inner list-schedule
-//! evaluation, candidate filtering, full Algorithm 1.
+//! Bench: scheduler hot paths in isolation — list-schedule evaluation
+//! (heap vs reference), price-table build, delta re-evaluation, candidate
+//! filtering, full Algorithm 1, and the plan cache.
+//!
+//! Emits `BENCH_sched.json` (machine-readable) next to the suite's stdout
+//! table so the perf trajectory is tracked across PRs.
 use nnv12::device::profiles;
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
-use nnv12::sched::heuristic::{schedule, SchedulerConfig};
-use nnv12::sched::makespan::evaluate;
+use nnv12::sched::cache::PlanCache;
+use nnv12::sched::heuristic::{schedule, swap_prices, SchedulerConfig};
+use nnv12::sched::makespan::{evaluate, evaluate_reference, evaluate_with, IncrementalEval};
 use nnv12::sched::op::OpSet;
 use nnv12::sched::plan::default_choices;
-use nnv12::sched::price::Pricer;
+use nnv12::sched::price::{PriceTable, Pricer};
 use nnv12::util::bench::Bench;
 
 fn main() {
@@ -19,6 +24,7 @@ fn main() {
     let choices = default_choices(&g, &reg);
     let set = OpSet::build(&g, &choices, false);
     let pricer = Pricer::new(&dev, &g, &choices, true);
+    let table = PriceTable::build(&set, &pricer);
     let plan = nnv12::sched::plan::Plan {
         choices: choices.clone(),
         gang: (0..set.len()).collect(),
@@ -28,6 +34,18 @@ fn main() {
     b.case("evaluate/resnet50-seq", || {
         let s = evaluate(&set, &plan, &pricer).unwrap();
         assert!(s.makespan > 0.0);
+    });
+    b.case("evaluate-table/resnet50-seq", || {
+        let s = evaluate_with(&set, &plan, &table).unwrap();
+        assert!(s.makespan > 0.0);
+    });
+    b.case("evaluate-reference/resnet50-seq", || {
+        let s = evaluate_reference(&set, &plan, &pricer).unwrap();
+        assert!(s.makespan > 0.0);
+    });
+    b.case("price-table/resnet50", || {
+        let t = PriceTable::build(&set, &pricer);
+        assert!(t.gang.len() == set.len());
     });
     b.case("opset-build/resnet50", || {
         let s = OpSet::build(&g, &choices, false);
@@ -41,9 +59,43 @@ fn main() {
             }
         }
     });
+
+    // Delta re-evaluation on a real (pipelined) incumbent plan: the unit
+    // of work the outer search performs per kernel-swap trial.
+    let sched = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+    let spricer = Pricer::new(&dev, &g, &sched.plan.choices, true);
+    let stable = PriceTable::build(&sched.set, &spricer);
+    let inc = IncrementalEval::new(&sched.set, &sched.plan, stable).unwrap();
+    let weighted = g.weighted_layers();
+    let swaps: Vec<Vec<(usize, f64, f64)>> = weighted
+        .iter()
+        .filter_map(|&l| {
+            let cs = nnv12::sched::filter::candidates(&dev, g.layer(l), &reg, true);
+            (cs.len() > 1).then(|| swap_prices(&sched.set, l, &cs[1]))
+        })
+        .collect();
+    assert!(!swaps.is_empty());
+    b.case("evaluate-incremental/resnet50-swap", || {
+        for dirty in &swaps {
+            let ms = inc.retime(&sched.set, dirty).unwrap();
+            assert!(ms > 0.0);
+        }
+    });
+
     b.case("schedule/resnet50", || {
         let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
         assert!(s.schedule.makespan > 0.0);
     });
-    b.finish();
+    // Steady-state serving path: the miss is paid once, outside the
+    // measured closure; the case times fingerprint + hit only.
+    let cache = PlanCache::new();
+    let cfg = SchedulerConfig::kcp();
+    let first = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+    b.case("schedule-cached/resnet50", || {
+        for _ in 0..32 {
+            let s = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+            assert_eq!(s.schedule.makespan.to_bits(), first.schedule.makespan.to_bits());
+        }
+    });
+    b.finish_to("BENCH_sched.json");
 }

@@ -9,10 +9,10 @@ use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::filter::candidates;
-use crate::sched::makespan::evaluate;
+use crate::sched::makespan::evaluate_with;
 use crate::sched::op::{OpSet, OpStage};
 use crate::sched::plan::{KernelChoice, Plan};
-use crate::sched::price::Pricer;
+use crate::sched::price::{PriceTable, Pricer};
 use crate::Ms;
 
 /// Exhaustively find the best makespan. `n_little` caps the little cores
@@ -81,6 +81,9 @@ fn best_assignment(
     let gpu = dev.executes_on_gpu();
     let set = OpSet::build(graph, choices, gpu);
     let pricer = Pricer::new(dev, graph, choices, true);
+    // (set, choices) are fixed across the n_units^bundles enumerated
+    // plans: price once, evaluate by table lookup.
+    let table = PriceTable::build(&set, &pricer);
     let prep_layers = set.prep_layers();
     let n_units = n_little + 1; // 0 = gang
     let mut best = f64::INFINITY;
@@ -126,7 +129,7 @@ fn best_assignment(
             little,
             estimated_ms: 0.0,
         };
-        if let Ok(s) = evaluate(&set, &plan, &pricer) {
+        if let Ok(s) = evaluate_with(&set, &plan, &table) {
             best = best.min(s.makespan);
         }
 

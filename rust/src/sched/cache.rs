@@ -1,0 +1,195 @@
+//! Fingerprint-keyed plan cache.
+//!
+//! Plan generation is deterministic in (device, model, scheduler config,
+//! registry), so a serving front that cold-starts the same model on the
+//! same device repeatedly — the [`crate::serving`] router re-planning per
+//! registered model, ablation sweeps re-planning per arm — can skip the
+//! search entirely after the first request. The key is a structural
+//! fingerprint, not an object identity: two independently built
+//! `ModelGraph`s of the same architecture hash alike.
+//!
+//! Thread-safe (`Mutex` around the map; planning happens outside the
+//! lock, so concurrent misses on *different* keys plan in parallel, and a
+//! racing duplicate insert is resolved first-wins).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::heuristic::{schedule, Scheduled, SchedulerConfig};
+
+/// Structural fingerprint of one planning problem. `registry_tag`
+/// distinguishes kernel registries (e.g. `"full"` vs `"warm-default"`),
+/// which are not otherwise hashable.
+pub fn fingerprint(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    cfg: &SchedulerConfig,
+    registry_tag: &str,
+) -> u64 {
+    let mut h = DefaultHasher::new();
+    // Device: every field the cost model reads.
+    dev.name.hash(&mut h);
+    dev.n_big.hash(&mut h);
+    dev.n_little.hash(&mut h);
+    dev.big_gflops.to_bits().hash(&mut h);
+    dev.little_gflops.to_bits().hash(&mut h);
+    dev.disk_mbps.to_bits().hash(&mut h);
+    dev.mem_eff_gbps.to_bits().hash(&mut h);
+    dev.read_little_slowdown.to_bits().hash(&mut h);
+    dev.transform_little_slowdown.to_bits().hash(&mut h);
+    dev.gpu.is_some().hash(&mut h);
+    if let Some(g) = &dev.gpu {
+        g.gflops.to_bits().hash(&mut h);
+        g.driver_init_ms.to_bits().hash(&mut h);
+        g.pipeline_create_ms.to_bits().hash(&mut h);
+        g.shader_compile_ms.to_bits().hash(&mut h);
+    }
+    // Model: name + full layer structure.
+    graph.name.hash(&mut h);
+    graph.len().hash(&mut h);
+    for l in graph.layers() {
+        format!("{:?}", l.op).hash(&mut h);
+        l.in_ch.hash(&mut h);
+        l.out_ch.hash(&mut h);
+        l.in_hw.hash(&mut h);
+        l.out_hw.hash(&mut h);
+        l.deps.hash(&mut h);
+    }
+    // Config knobs.
+    cfg.epsilon_ms.to_bits().hash(&mut h);
+    cfg.max_outer_passes.hash(&mut h);
+    cfg.kernel_selection.hash(&mut h);
+    cfg.weight_cache.hash(&mut h);
+    cfg.shader_cache.hash(&mut h);
+    cfg.pipeline.hash(&mut h);
+    registry_tag.hash(&mut h);
+    h.finish()
+}
+
+/// The cache. Cheap to share (`Arc<PlanCache>`) across routers/threads.
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<u64, Arc<Scheduled>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Return the cached plan for this problem, or run the scheduler and
+    /// cache the result. `registry_tag` must uniquely name `registry`'s
+    /// contents (callers with `Registry::full()` pass `"full"`).
+    pub fn get_or_plan(
+        &self,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+    ) -> Arc<Scheduled> {
+        let key = fingerprint(dev, graph, cfg, registry_tag);
+        if let Some(s) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return s.clone();
+        }
+        // Plan outside the lock: misses on different keys run concurrently.
+        let planned = Arc::new(schedule(dev, graph, registry, cfg));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(planned)
+            .clone()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached plans (e.g. after a device-profile recalibration).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+
+    #[test]
+    fn hit_returns_identical_plan() {
+        let cache = PlanCache::new();
+        let dev = profiles::meizu_16t();
+        let g = zoo::squeezenet();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let a = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        let b = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert!(Arc::ptr_eq(&a, &b), "second request must be a cache hit");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        // An independently built graph of the same architecture also hits.
+        let g2 = zoo::squeezenet();
+        let c = cache.get_or_plan(&dev, &g2, &reg, &cfg, "full");
+        assert!(Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn distinct_problems_get_distinct_entries() {
+        let cache = PlanCache::new();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let g = zoo::tiny_net();
+        cache.get_or_plan(&profiles::meizu_16t(), &g, &reg, &cfg, "full");
+        cache.get_or_plan(&profiles::pixel_5(), &g, &reg, &cfg, "full");
+        cache.get_or_plan(
+            &profiles::meizu_16t(),
+            &g,
+            &reg,
+            &SchedulerConfig::k_only(),
+            "full",
+        );
+        cache.get_or_plan(&profiles::meizu_16t(), &zoo::micro_mobilenet(), &reg, &cfg, "full");
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn cached_plan_equals_direct_schedule() {
+        let cache = PlanCache::new();
+        let dev = profiles::meizu_16t();
+        let g = zoo::mobilenet_v1();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let cached = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        let direct = schedule(&dev, &g, &reg, &cfg);
+        assert_eq!(
+            cached.schedule.makespan.to_bits(),
+            direct.schedule.makespan.to_bits()
+        );
+    }
+}

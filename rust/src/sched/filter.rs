@@ -14,7 +14,12 @@ use crate::kernels::Registry;
 use crate::sched::plan::KernelChoice;
 use crate::Ms;
 
-/// A candidate with its two scheduling-relevant costs.
+/// A candidate with its scheduling-relevant costs, priced once at filter
+/// time on both unit classes — the per-candidate slice of the flat price
+/// table the outer search consumes. The stage prices mirror
+/// [`crate::sched::price::Pricer::price`] exactly (same [`CostModel`]
+/// calls), so swapping a layer to this candidate is a pure table update
+/// with no cost-model work.
 #[derive(Debug, Clone)]
 pub struct Candidate {
     pub choice: KernelChoice,
@@ -22,6 +27,16 @@ pub struct Candidate {
     pub prep_ms: Ms,
     /// Execution on the gang, ms.
     pub exec_ms: Ms,
+    /// Read op price on the gang / a little core.
+    pub read_g: Ms,
+    pub read_l: Ms,
+    /// Transform op price on the gang / a little core (0 when the choice
+    /// bypasses transformation — cached weights or a transform-free family).
+    pub tf_g: Ms,
+    pub tf_l: Ms,
+    /// Exec op price on the gang / a little core (single-threaded).
+    pub exec_g: Ms,
+    pub exec_l: Ms,
 }
 
 /// Enumerate and Pareto-filter the candidates of one layer. With
@@ -37,23 +52,41 @@ pub fn candidates(
     let (exec_class, exec_threads) = cm.exec_class();
     let mut all: Vec<Candidate> = Vec::new();
     for kernel in registry.candidates(layer) {
-        let exec_ms = cm.exec_ms(&kernel, layer, exec_class, exec_threads);
-        // Uncached variant.
-        let read = cm.read_ms(layer.weight_bytes(), CoreClass::Little, 1);
-        let transform = cm.transform_ms(&kernel, layer, CoreClass::Little, 1);
+        let exec_g = cm.exec_ms(&kernel, layer, exec_class, exec_threads);
+        let exec_l = cm.exec_ms(&kernel, layer, CoreClass::Little, 1);
+        // Uncached variant: read raw weights, pay the transform (if the
+        // family has one — `transform_ms` is 0 otherwise).
+        let read_g = cm.read_ms(layer.weight_bytes(), CoreClass::Big, 1);
+        let read_l = cm.read_ms(layer.weight_bytes(), CoreClass::Little, 1);
+        let tf_g = cm.transform_ms(&kernel, layer, CoreClass::Big, 1);
+        let tf_l = cm.transform_ms(&kernel, layer, CoreClass::Little, 1);
         all.push(Candidate {
             choice: KernelChoice { kernel: kernel.clone(), cache: false },
-            prep_ms: read + transform,
-            exec_ms,
+            prep_ms: read_l + tf_l,
+            exec_ms: exec_g,
+            read_g,
+            read_l,
+            tf_g,
+            tf_l,
+            exec_g,
+            exec_l,
         });
-        // Cached variant (only meaningful if a transform exists to bypass).
+        // Cached variant (only meaningful if a transform exists to bypass):
+        // read the (larger) post-transformed blob, skip the transform.
         if allow_cache && kernel.family.needs_transform() {
-            let cached_read =
-                cm.read_ms(kernel.transformed_bytes(layer), CoreClass::Little, 1);
+            let bytes = kernel.transformed_bytes(layer);
+            let cread_g = cm.read_ms(bytes, CoreClass::Big, 1);
+            let cread_l = cm.read_ms(bytes, CoreClass::Little, 1);
             all.push(Candidate {
                 choice: KernelChoice { kernel, cache: true },
-                prep_ms: cached_read,
-                exec_ms,
+                prep_ms: cread_l,
+                exec_ms: exec_g,
+                read_g: cread_g,
+                read_l: cread_l,
+                tf_g: 0.0,
+                tf_l: 0.0,
+                exec_g,
+                exec_l,
             });
         }
     }
@@ -151,6 +184,40 @@ mod tests {
             .unwrap();
         assert_eq!(fastest.choice.kernel.family, KernelFamily::WinogradPack4);
         assert!(fastest.choice.cache, "fastest-exec candidate should be cached");
+    }
+
+    #[test]
+    fn candidate_prices_match_pricer_exactly() {
+        use crate::graph::zoo;
+        use crate::sched::op::OpSet;
+        use crate::sched::plan::{default_choices, UnitId};
+        use crate::sched::price::Pricer;
+        for (dev, gpu) in [(profiles::meizu_16t(), false), (profiles::jetson_tx2(), true)] {
+            let g = zoo::resnet50();
+            let reg = Registry::full();
+            for &layer in g.weighted_layers().iter().take(8) {
+                let l = g.layer(layer);
+                for c in candidates(&dev, l, &reg, true) {
+                    let mut choices = default_choices(&g, &reg);
+                    choices[layer] = Some(c.choice.clone());
+                    let set = OpSet::build(&g, &choices, gpu);
+                    let p = Pricer::new(&dev, &g, &choices, true);
+                    let r = set.read_of[layer].unwrap();
+                    assert_eq!(p.price(&set.ops[r], UnitId::Gang).to_bits(), c.read_g.to_bits());
+                    assert_eq!(p.price(&set.ops[r], UnitId::Little(0)).to_bits(), c.read_l.to_bits());
+                    if let Some(w) = set.transform_of[layer] {
+                        assert_eq!(p.price(&set.ops[w], UnitId::Gang).to_bits(), c.tf_g.to_bits());
+                        assert_eq!(p.price(&set.ops[w], UnitId::Little(0)).to_bits(), c.tf_l.to_bits());
+                    } else {
+                        assert_eq!(c.tf_g, 0.0);
+                        assert_eq!(c.tf_l, 0.0);
+                    }
+                    let e = set.exec_of[layer].unwrap();
+                    assert_eq!(p.price(&set.ops[e], UnitId::Gang).to_bits(), c.exec_g.to_bits());
+                    assert_eq!(p.price(&set.ops[e], UnitId::Little(0)).to_bits(), c.exec_l.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

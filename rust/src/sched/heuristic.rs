@@ -17,15 +17,27 @@
 //! The outer layer searches kernel combinations over the Pareto-filtered
 //! candidates (see [`super::filter`]); with 1–2 survivors per layer,
 //! greedy seeding + coordinate descent converges in a few passes.
+//!
+//! §Perf — the search runs incrementally. Each pass freezes the incumbent
+//! plan and screens every per-layer kernel swap with
+//! [`IncrementalEval::retime`] (prefix replay + suffix re-schedule) against
+//! the flat candidate price table built once by the Pareto filter — no
+//! per-trial `OpSet` rebuild, cost-model call, or choice-vector clone.
+//! Independent layer trials are evaluated in parallel
+//! ([`crate::util::parallel::par_map`]); accepted swaps mutate `pick` in
+//! place and are confirmed at pass end by one full Algorithm-1 rebuild,
+//! which is the only accept gate — the returned plan's makespan is always
+//! a full evaluation of a fully rebuilt plan, never a delta estimate.
 
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::filter::{candidates, Candidate};
-use crate::sched::makespan::{evaluate, Schedule};
+use crate::sched::makespan::{evaluate_with, IncrementalEval, PriceDelta, Schedule};
 use crate::sched::op::{OpSet, OpStage};
 use crate::sched::plan::{KernelChoice, Plan};
-use crate::sched::price::Pricer;
+use crate::sched::price::{PriceTable, Pricer};
+use crate::util::parallel::par_map;
 use crate::Ms;
 
 /// Scheduler configuration; the three ablation knobs of Fig. 13 ("K":
@@ -142,7 +154,10 @@ pub fn schedule(
         })
         .collect();
 
-    let build_choices = |pick: &[usize]| -> Vec<Option<KernelChoice>> {
+    // The only place choice vectors are materialized: when (re)building a
+    // plan. Trials never clone kernel choices — they operate on `pick` and
+    // the candidates' flat price table.
+    let choices_of = |pick: &[usize]| -> Vec<Option<KernelChoice>> {
         cands
             .iter()
             .zip(pick)
@@ -150,49 +165,109 @@ pub fn schedule(
             .collect()
     };
 
-    // --- Outer loop: coordinate descent over kernel combinations ---
-    let mut best_choices = build_choices(&pick);
-    let mut best = inner_schedule(dev, graph, &best_choices, cfg);
+    // --- Outer loop: incremental coordinate descent over combinations ---
+    let mut best = inner_schedule(dev, graph, &choices_of(&pick), cfg);
     if cfg.kernel_selection {
         for _pass in 0..cfg.max_outer_passes {
-            let mut improved = false;
-            for (layer, cs) in cands.iter().enumerate() {
-                if cs.len() < 2 {
-                    continue;
-                }
-                let mut current = pick[layer];
-                for alt in 0..cs.len() {
-                    if alt == current {
-                        continue;
+            // Freeze the incumbent plan; build the delta evaluator over it.
+            let pricer = Pricer::new(dev, graph, &best.plan.choices, cfg.shader_cache);
+            let table = PriceTable::build(&best.set, &pricer);
+            let Ok(mut inc) = IncrementalEval::new(&best.set, &best.plan, table) else {
+                break;
+            };
+
+            // Proposal phase (parallel, read-only): per layer, the best
+            // alternative candidate under delta re-evaluation of the
+            // frozen incumbent. Layers are independent here, so trials
+            // fan out across cores.
+            let searchable: Vec<usize> =
+                (0..cands.len()).filter(|&l| cands[l].len() >= 2).collect();
+            let base_ms = inc.makespan();
+            let proposals: Vec<Option<(usize, usize, f64)>> = {
+                let (inc, set, pick, cands) = (&inc, &best.set, &pick, &cands);
+                par_map(&searchable, move |_, &layer| {
+                    let cs = &cands[layer];
+                    let cur = pick[layer];
+                    let mut best_alt: Option<(usize, f64)> = None;
+                    for alt in 0..cs.len() {
+                        if alt == cur {
+                            continue;
+                        }
+                        // Swapping one layer's kernel changes the makespan
+                        // by at most the total |Δcost| of its ops; skip
+                        // trials that cannot move the needle (§Perf).
+                        let delta = (cs[alt].prep_ms - cs[cur].prep_ms).abs()
+                            + (cs[alt].exec_ms - cs[cur].exec_ms).abs();
+                        if delta < 0.02 {
+                            continue;
+                        }
+                        let dirty = swap_prices(set, layer, &cs[alt]);
+                        let Ok(ms) = inc.retime(set, &dirty) else { continue };
+                        if ms + 1e-9 < base_ms && best_alt.map_or(true, |(_, b)| ms < b) {
+                            best_alt = Some((alt, ms));
+                        }
                     }
-                    // Perf: swapping one layer's kernel changes the
-                    // makespan by at most the total |Δcost| of its ops;
-                    // skip trials that cannot move the needle (§Perf).
-                    let delta = (cs[alt].prep_ms - cs[current].prep_ms).abs()
-                        + (cs[alt].exec_ms - cs[current].exec_ms).abs();
-                    if delta < 0.02 {
-                        continue;
-                    }
+                    best_alt.map(|(alt, ms)| (layer, alt, ms))
+                })
+            };
+
+            // Apply phase (sequential, most promising first): re-screen
+            // each proposal against the working baseline, which shifts as
+            // earlier swaps land; accepted swaps mutate `pick` in place
+            // and rebase the evaluator's price table.
+            let mut props: Vec<(usize, usize, f64)> =
+                proposals.into_iter().flatten().collect();
+            props.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+            let before_pick = pick.clone();
+            let mut applied = false;
+            for (layer, alt, _) in props {
+                let dirty = swap_prices(&best.set, layer, &cands[layer][alt]);
+                let Ok(ms) = inc.retime(&best.set, &dirty) else { continue };
+                if ms + 1e-9 < inc.makespan() && inc.rebase(&best.set, &dirty).is_ok() {
                     pick[layer] = alt;
-                    let choices = build_choices(&pick);
-                    let trial = inner_schedule(dev, graph, &choices, cfg);
-                    if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
-                        best = trial;
-                        best_choices = choices;
-                        improved = true;
-                        current = alt;
-                    } else {
-                        pick[layer] = current;
-                    }
+                    applied = true;
                 }
             }
-            if !improved {
+            if !applied {
+                break;
+            }
+
+            // Confirm: one full Algorithm-1 rebuild under the new kernel
+            // mix (bundle balancing may shift). Accept only a real
+            // improvement of the fully evaluated makespan; otherwise the
+            // frozen-plan gains didn't survive the rebuild — converged.
+            let trial = inner_schedule(dev, graph, &choices_of(&pick), cfg);
+            if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
+                best = trial;
+            } else {
+                pick = before_pick;
                 break;
             }
         }
     }
-    let _ = best_choices;
     best
+}
+
+/// Price deltas for re-evaluating `layer` as if it used `cand` — the dirty
+/// set handed to [`IncrementalEval::retime`]. When the current op set has
+/// no transform op for the layer (its incumbent choice bypasses
+/// transformation) while the candidate needs one, the candidate's
+/// transform cost is folded into its read price: read and transform are
+/// queue-adjacent on the same unit, so the fold is timing-equivalent for
+/// screening, and the confirming rebuild re-materializes the real op.
+pub fn swap_prices(set: &OpSet, layer: usize, cand: &Candidate) -> Vec<PriceDelta> {
+    let mut dirty = Vec::with_capacity(3);
+    let r = set.read_of[layer].expect("swap_prices: layer has no read op");
+    if let Some(w) = set.transform_of[layer] {
+        dirty.push((r, cand.read_g, cand.read_l));
+        dirty.push((w, cand.tf_g, cand.tf_l));
+    } else {
+        dirty.push((r, cand.read_g + cand.tf_g, cand.read_l + cand.tf_l));
+    }
+    if let Some(e) = set.exec_of[layer] {
+        dirty.push((e, cand.exec_g, cand.exec_l));
+    }
+    dirty
 }
 
 /// §3.3 "NNV12 keeps calibrating the per-operation performance through
@@ -259,6 +334,9 @@ fn inner_schedule(
     let gpu = dev.executes_on_gpu();
     let set = OpSet::build(graph, choices, gpu);
     let pricer = Pricer::new(dev, graph, choices, cfg.shader_cache);
+    // Flat price table: the cost model runs once per op here; everything
+    // below (bundle sizing, balancing, evaluation) is array lookups.
+    let table = PriceTable::build(&set, &pricer);
     let n_little = pricer.n_little_units();
 
     if !cfg.pipeline || n_little == 0 {
@@ -270,7 +348,7 @@ fn inner_schedule(
             little: vec![Vec::new(); n_little],
             estimated_ms: 0.0,
         };
-        let schedule = evaluate(&set, &plan, &pricer).expect("sequential plan valid");
+        let schedule = evaluate_with(&set, &plan, &table).expect("sequential plan valid");
         let estimated = schedule.makespan;
         return Scheduled {
             plan: Plan { estimated_ms: estimated, ..plan },
@@ -295,10 +373,8 @@ fn inner_schedule(
     let mut b_little_v = vec![0.0f64; n_layers];
     for layer in 0..n_layers {
         for op in bundle_ops(layer) {
-            b_gang_v[layer] +=
-                pricer.price(&set.ops[op], crate::sched::plan::UnitId::Gang);
-            b_little_v[layer] +=
-                pricer.price(&set.ops[op], crate::sched::plan::UnitId::Little(0));
+            b_gang_v[layer] += table.gang[op];
+            b_little_v[layer] += table.little[op];
         }
     }
     let bundle_ms =
@@ -333,14 +409,8 @@ fn inner_schedule(
         .collect();
 
     // Gang exec time (fixed part) + promoted bundles (variable part).
-    let exec_total: Ms = execs
-        .iter()
-        .map(|&e| pricer.price(&set.ops[e], crate::sched::plan::UnitId::Gang))
-        .sum::<f64>()
-        + set
-            .driver_init
-            .map(|di| pricer.price(&set.ops[di], crate::sched::plan::UnitId::Gang))
-            .unwrap_or(0.0);
+    let exec_total: Ms = execs.iter().map(|&e| table.gang[e]).sum::<f64>()
+        + set.driver_init.map(|di| table.gang[di]).unwrap_or(0.0);
 
     // --- Big-core loop (Alg. 1 lines 6–11) ---
     // Balance T_Q0 against the round-robin little-core load; promote the
@@ -441,7 +511,7 @@ fn inner_schedule(
         little,
         estimated_ms: 0.0,
     };
-    let schedule = evaluate(&set, &plan, &pricer).expect("heuristic plan valid");
+    let schedule = evaluate_with(&set, &plan, &table).expect("heuristic plan valid");
     let estimated = schedule.makespan;
     Scheduled {
         plan: Plan { estimated_ms: estimated, ..plan },
@@ -524,6 +594,51 @@ mod tests {
             &SchedulerConfig { shader_cache: false, ..SchedulerConfig::kcp() },
         );
         assert!(no_cache.schedule.makespan > s.schedule.makespan);
+    }
+
+    #[test]
+    fn winning_choices_carried_into_plan() {
+        // Regression: the outer search must return the plan built from the
+        // winning kernel combination, not just its makespan. Re-evaluating
+        // the returned (set, plan, choices) triple from scratch must
+        // reproduce the reported makespan exactly.
+        let dev = profiles::meizu_16t();
+        for model in ["resnet50", "googlenet"] {
+            let g = zoo::by_name(model).unwrap();
+            let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+            let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+            let again = crate::sched::makespan::evaluate(&s.set, &s.plan, &pricer).unwrap();
+            assert_eq!(
+                again.makespan.to_bits(),
+                s.schedule.makespan.to_bits(),
+                "{model}: plan choices disagree with reported makespan"
+            );
+            assert_eq!(s.plan.estimated_ms.to_bits(), s.schedule.makespan.to_bits());
+        }
+    }
+
+    #[test]
+    fn search_never_worse_than_greedy_seed() {
+        // The incremental descent only accepts confirmed full-rebuild
+        // improvements, so it can never return a worse plan than a search
+        // with zero passes (= the greedy seed).
+        let dev = profiles::meizu_16t();
+        for model in ["resnet50", "mobilenetv2", "squeezenet"] {
+            let g = zoo::by_name(model).unwrap();
+            let seed_only = schedule(
+                &dev,
+                &g,
+                &Registry::full(),
+                &SchedulerConfig { max_outer_passes: 0, ..SchedulerConfig::kcp() },
+            );
+            let searched = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+            assert!(
+                searched.schedule.makespan <= seed_only.schedule.makespan + 1e-9,
+                "{model}: search {} worse than seed {}",
+                searched.schedule.makespan,
+                seed_only.schedule.makespan
+            );
+        }
     }
 
     #[test]

@@ -6,10 +6,33 @@
 //! re-executes plans with disk/memory-bandwidth interference, background
 //! load, and workload stealing; the two agree exactly when contention is
 //! absent (asserted by `tests/sim_vs_makespan.rs`).
+//!
+//! Three entry points, fastest first:
+//!
+//! * [`IncrementalEval`] — the plan-search hot path. Records the dispatch
+//!   order of a baseline evaluation; [`IncrementalEval::retime`] then
+//!   re-evaluates a kernel swap by replaying the unchanged schedule prefix
+//!   (every dispatch before the first re-priced op) from the recording and
+//!   list-scheduling only the affected suffix.
+//! * [`evaluate_with`] — one evaluation against a prebuilt
+//!   [`PriceTable`]; a binary-heap ready-queue dispatches ops in
+//!   O(ops·log units + deps) instead of the reference evaluator's
+//!   O(ops·units·deps) rescan.
+//! * [`evaluate`] — convenience wrapper that builds the price table from a
+//!   [`Pricer`] first.
+//!
+//! All three produce bit-identical timings: the heap changes how the next
+//! dispatch is *found*, never how its start time is computed, and
+//! `tests/incremental_eval.rs` asserts exact agreement against
+//! [`evaluate_reference`] (the original O(units) linear-scan evaluator,
+//! kept as the executable specification).
 
-use crate::sched::op::OpSet;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::sched::op::{OpId, OpSet};
 use crate::sched::plan::{Plan, UnitId};
-use crate::sched::price::Pricer;
+use crate::sched::price::{PriceTable, Pricer};
 use crate::Ms;
 
 /// Timing of one scheduled operation.
@@ -31,9 +54,297 @@ pub struct Schedule {
     pub busy: Vec<(UnitId, Ms)>,
 }
 
-/// Evaluate a plan. Returns `Err` if the plan deadlocks (queue order
-/// inconsistent with dependencies) or is invalid.
+/// Evaluate a plan, deriving op prices from `pricer`. Returns `Err` if the
+/// plan deadlocks (queue order inconsistent with dependencies) or is
+/// invalid.
 pub fn evaluate(set: &OpSet, plan: &Plan, pricer: &Pricer) -> Result<Schedule, String> {
+    let table = PriceTable::build(set, pricer);
+    evaluate_with(set, plan, &table)
+}
+
+/// Evaluate a plan against a prebuilt price table (the hot-path form: no
+/// cost-model work at all).
+pub fn evaluate_with(set: &OpSet, plan: &Plan, table: &PriceTable) -> Result<Schedule, String> {
+    plan.validate(set)?;
+    let flat = Flat::of(set, plan);
+    let (schedule, _order) = run(set, &flat, |op, u| table.by_unit_idx(op, u), None)?;
+    Ok(schedule)
+}
+
+// ---------------------------------------------------------------------------
+// Flattened plan view + the heap-based list-schedule core.
+// ---------------------------------------------------------------------------
+
+/// Flattened, reusable view of a plan's queues (unit 0 = gang).
+#[derive(Debug, Clone)]
+struct Flat {
+    units: Vec<UnitId>,
+    queues: Vec<Vec<OpId>>,
+    /// Per op: index into `units`/`queues` of the unit that runs it.
+    unit_of: Vec<usize>,
+}
+
+impl Flat {
+    /// Build from a validated plan (every op appears exactly once).
+    fn of(set: &OpSet, plan: &Plan) -> Flat {
+        let mut units = Vec::with_capacity(1 + plan.little.len());
+        let mut queues = Vec::with_capacity(1 + plan.little.len());
+        let mut unit_of = vec![usize::MAX; set.len()];
+        for (u, (id, q)) in plan.queues().into_iter().enumerate() {
+            for &op in q {
+                unit_of[op] = u;
+            }
+            units.push(id);
+            queues.push(q.clone());
+        }
+        Flat { units, queues, unit_of }
+    }
+}
+
+/// Heap entry: the head of one unit's queue, ready to start. Ordered so the
+/// max-heap pops the smallest start time, ties broken by unit order — the
+/// same deterministic rule as [`evaluate_reference`]'s linear scan.
+#[derive(PartialEq)]
+struct Ready {
+    start: Ms,
+    unit: usize,
+}
+
+impl Eq for Ready {}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Ready) -> Ordering {
+        other
+            .start
+            .total_cmp(&self.start)
+            .then_with(|| other.unit.cmp(&self.unit))
+    }
+}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Ready) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The list-schedule core. Dispatches every queued op; with `prefix`, the
+/// given ops are replayed from recorded timings (they must form a prefix of
+/// a previous run's dispatch order under identical prices) and only the
+/// remainder is scheduled. Returns the schedule plus the dispatch order.
+///
+/// Invariant the heap relies on: a unit holds at most one `Ready` entry —
+/// its current queue head — pushed exactly once, when the head op's last
+/// dependency finishes or when it becomes head with dependencies already
+/// met. `unit_free` of an idle unit and the dependency finish-max of a
+/// ready op cannot change afterwards, so entries are never stale.
+fn run<F: Fn(OpId, usize) -> Ms>(
+    set: &OpSet,
+    flat: &Flat,
+    price: F,
+    prefix: Option<(&[OpId], &[OpTiming])>,
+) -> Result<(Schedule, Vec<OpId>), String> {
+    let n_units = flat.queues.len();
+    let n_ops = set.len();
+    let mut cursor = vec![0usize; n_units];
+    let mut unit_free: Vec<Ms> = vec![0.0; n_units];
+    let mut busy: Vec<Ms> = vec![0.0; n_units];
+    let mut timings = vec![OpTiming { start: 0.0, finish: 0.0, unit: UnitId::Gang }; n_ops];
+    let mut finished = vec![false; n_ops];
+    let mut ready_at: Vec<Ms> = vec![0.0; n_ops];
+    let mut pending: Vec<u32> = set.ops.iter().map(|o| o.deps.len() as u32).collect();
+    let mut order: Vec<OpId> = Vec::with_capacity(n_ops);
+    let mut remaining: usize = flat.queues.iter().map(Vec::len).sum();
+
+    // --- Replay the unchanged prefix from the recording. ---
+    if let Some((pre, base)) = prefix {
+        for &op in pre {
+            let t = base[op];
+            let u = flat.unit_of[op];
+            finished[op] = true;
+            timings[op] = t;
+            unit_free[u] = t.finish;
+            busy[u] += t.finish - t.start;
+            cursor[u] += 1;
+            remaining -= 1;
+            order.push(op);
+            for &d in &set.dependents[op] {
+                pending[d] -= 1;
+                if ready_at[d] < t.finish {
+                    ready_at[d] = t.finish;
+                }
+            }
+        }
+    }
+
+    // --- Seed: every unit whose head op is ready. ---
+    let mut heap: BinaryHeap<Ready> = BinaryHeap::with_capacity(n_units);
+    for u in 0..n_units {
+        if let Some(&h) = flat.queues[u].get(cursor[u]) {
+            if pending[h] == 0 {
+                heap.push(Ready { start: ready_at[h].max(unit_free[u]), unit: u });
+            }
+        }
+    }
+
+    // --- Dispatch loop. ---
+    while remaining > 0 {
+        let Some(Ready { start, unit: u }) = heap.pop() else {
+            return Err(format!(
+                "plan deadlocks with {remaining} ops unscheduled (queue order \
+                 contradicts dependencies)"
+            ));
+        };
+        let op = flat.queues[u][cursor[u]];
+        let dur = price(op, u);
+        let end = start + dur;
+        finished[op] = true;
+        timings[op] = OpTiming { start, finish: end, unit: flat.units[u] };
+        unit_free[u] = end;
+        busy[u] += dur;
+        cursor[u] += 1;
+        remaining -= 1;
+        order.push(op);
+
+        // Notify dependents; a dependent that is now ready *and* at its
+        // queue's head becomes dispatchable.
+        for &d in &set.dependents[op] {
+            pending[d] -= 1;
+            if ready_at[d] < end {
+                ready_at[d] = end;
+            }
+            if pending[d] == 0 {
+                let v = flat.unit_of[d];
+                if v != usize::MAX && v != u && flat.queues[v].get(cursor[v]) == Some(&d) {
+                    heap.push(Ready { start: ready_at[d].max(unit_free[v]), unit: v });
+                }
+            }
+        }
+        // This unit's new head (covers zero-dep ops and dependents on the
+        // same unit, whose cursor just advanced).
+        if let Some(&h) = flat.queues[u].get(cursor[u]) {
+            if pending[h] == 0 {
+                heap.push(Ready { start: ready_at[h].max(unit_free[u]), unit: u });
+            }
+        }
+    }
+
+    let final_exec = set.final_exec();
+    let makespan = if finished[final_exec] { timings[final_exec].finish } else { 0.0 };
+    let schedule = Schedule {
+        timings,
+        makespan,
+        busy: flat.units.iter().zip(&busy).map(|(&id, &b)| (id, b)).collect(),
+    };
+    Ok((schedule, order))
+}
+
+// ---------------------------------------------------------------------------
+// Incremental (delta) evaluation.
+// ---------------------------------------------------------------------------
+
+/// Price overrides for a trial kernel swap: `(op, gang_ms, little_ms)`.
+pub type PriceDelta = (OpId, Ms, Ms);
+
+/// Delta re-evaluator for the outer kernel-combination search.
+///
+/// Construction evaluates the plan once and records the dispatch order.
+/// [`IncrementalEval::retime`] answers "what would the makespan be if these
+/// ops had these prices?" by replaying the recorded prefix up to the first
+/// re-priced op (O(1) amortized per replayed op — no ready-set decisions
+/// are re-made) and list-scheduling only the suffix. Agreement with a
+/// from-scratch [`evaluate_with`] under the mutated table is bit-exact
+/// (property-tested in `tests/incremental_eval.rs`): the replayed state
+/// (unit cursors, unit free times, dependency finish maxima) is exactly
+/// the state a full run reaches at the same point.
+pub struct IncrementalEval {
+    flat: Flat,
+    table: PriceTable,
+    baseline: Schedule,
+    /// Dispatch order of the baseline run.
+    order: Vec<OpId>,
+    /// Per op: its position in `order`.
+    pos: Vec<usize>,
+}
+
+impl IncrementalEval {
+    /// Validate + evaluate the plan under `table`, recording the baseline.
+    pub fn new(set: &OpSet, plan: &Plan, table: PriceTable) -> Result<IncrementalEval, String> {
+        plan.validate(set)?;
+        let flat = Flat::of(set, plan);
+        let (baseline, order) = run(set, &flat, |op, u| table.by_unit_idx(op, u), None)?;
+        let mut pos = vec![0usize; set.len()];
+        for (i, &op) in order.iter().enumerate() {
+            pos[op] = i;
+        }
+        Ok(IncrementalEval { flat, table, baseline, order, pos })
+    }
+
+    /// Baseline makespan.
+    pub fn makespan(&self) -> Ms {
+        self.baseline.makespan
+    }
+
+    /// Baseline schedule.
+    pub fn schedule(&self) -> &Schedule {
+        &self.baseline
+    }
+
+    /// Baseline price table.
+    pub fn table(&self) -> &PriceTable {
+        &self.table
+    }
+
+    /// Makespan with the prices of the `dirty` ops replaced, every other op
+    /// priced as in the baseline table. The baseline is not modified.
+    pub fn retime(&self, set: &OpSet, dirty: &[PriceDelta]) -> Result<Ms, String> {
+        if dirty.is_empty() {
+            return Ok(self.baseline.makespan);
+        }
+        let cut = dirty.iter().map(|&(op, _, _)| self.pos[op]).min().unwrap();
+        let price = |op: OpId, u: usize| -> Ms {
+            for &(d, g, l) in dirty {
+                if d == op {
+                    return if u == 0 { g } else { l };
+                }
+            }
+            self.table.by_unit_idx(op, u)
+        };
+        let (schedule, _) = run(
+            set,
+            &self.flat,
+            price,
+            Some((&self.order[..cut], &self.baseline.timings[..])),
+        )?;
+        Ok(schedule.makespan)
+    }
+
+    /// Accept a swap: apply `dirty` to the owned table and re-record the
+    /// baseline (full run — keeps `busy` exact and the recording replayable
+    /// for the next [`IncrementalEval::retime`]).
+    pub fn rebase(&mut self, set: &OpSet, dirty: &[PriceDelta]) -> Result<(), String> {
+        for &(op, g, l) in dirty {
+            self.table.set_op(op, g, l);
+        }
+        let (baseline, order) =
+            run(set, &self.flat, |op, u| self.table.by_unit_idx(op, u), None)?;
+        self.baseline = baseline;
+        for (i, &op) in order.iter().enumerate() {
+            self.pos[op] = i;
+        }
+        self.order = order;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference evaluator + critical path.
+// ---------------------------------------------------------------------------
+
+/// The original O(units·deps)-per-dispatch linear-scan evaluator, kept as
+/// the executable specification of list-schedule semantics. Production code
+/// uses [`evaluate_with`]; `tests/incremental_eval.rs` asserts the two are
+/// bit-identical.
+pub fn evaluate_reference(set: &OpSet, plan: &Plan, pricer: &Pricer) -> Result<Schedule, String> {
     plan.validate(set)?;
     let queues: Vec<(UnitId, &Vec<usize>)> = plan.queues();
     let n_units = queues.len();
@@ -221,6 +532,86 @@ mod tests {
             estimated_ms: 0.0,
         };
         assert!(evaluate(&set, &plan, &pricer).is_err());
+        assert!(evaluate_reference(&set, &plan, &pricer).is_err());
+        let table = PriceTable::build(&set, &pricer);
+        assert!(IncrementalEval::new(&set, &plan, table).is_err());
+    }
+
+    #[test]
+    fn heap_evaluator_matches_reference_exactly() {
+        let dev = profiles::meizu_16t();
+        for name in ["tinynet", "mobilenet", "resnet18", "googlenet"] {
+            let g = zoo::by_name(name).unwrap();
+            let choices = default_choices(&g, &Registry::full());
+            let set = OpSet::build(&g, &choices, false);
+            let pricer = Pricer::new(&dev, &g, &choices, false);
+            // Pipelined plan (round-robin bundles) exercises cross-unit deps.
+            let mut gang = Vec::new();
+            let mut little: Vec<Vec<usize>> = vec![vec![]; dev.n_little];
+            let mut rr = 0usize;
+            for l in g.layers() {
+                let bundle = set.prep_bundle(l.id);
+                if !bundle.is_empty() {
+                    little[rr % dev.n_little].extend(bundle);
+                    rr += 1;
+                }
+                if let Some(e) = set.exec_of[l.id] {
+                    gang.push(e);
+                }
+            }
+            let plan = Plan { choices: choices.clone(), gang, little, estimated_ms: 0.0 };
+            let fast = evaluate(&set, &plan, &pricer).unwrap();
+            let slow = evaluate_reference(&set, &plan, &pricer).unwrap();
+            assert_eq!(fast.makespan.to_bits(), slow.makespan.to_bits(), "{name}");
+            for (a, b) in fast.timings.iter().zip(&slow.timings) {
+                assert_eq!(a.start.to_bits(), b.start.to_bits(), "{name}");
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "{name}");
+                assert_eq!(a.unit, b.unit, "{name}");
+            }
+            for ((ua, ba), (ub, bb)) in fast.busy.iter().zip(&slow.busy) {
+                assert_eq!(ua, ub);
+                assert_eq!(ba.to_bits(), bb.to_bits(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn retime_identity_returns_baseline() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::mobilenet_v1();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let pricer = Pricer::new(&dev, &g, &choices, false);
+        let plan = sequential_plan(&set, choices.clone(), dev.n_little);
+        let table = PriceTable::build(&set, &pricer);
+        let inc = IncrementalEval::new(&set, &plan, table.clone()).unwrap();
+        assert_eq!(inc.retime(&set, &[]).unwrap().to_bits(), inc.makespan().to_bits());
+        // Re-pricing an op with its existing prices is also an identity.
+        let op = set.final_exec();
+        let same = inc
+            .retime(&set, &[(op, table.gang[op], table.little[op])])
+            .unwrap();
+        assert_eq!(same.to_bits(), inc.makespan().to_bits());
+    }
+
+    #[test]
+    fn rebase_tracks_mutated_table() {
+        let dev = profiles::meizu_16t();
+        let g = zoo::mobilenet_v1();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, false);
+        let pricer = Pricer::new(&dev, &g, &choices, false);
+        let plan = sequential_plan(&set, choices.clone(), dev.n_little);
+        let mut table = PriceTable::build(&set, &pricer);
+        let mut inc = IncrementalEval::new(&set, &plan, table.clone()).unwrap();
+        let op = set.final_exec();
+        let dirty = [(op, table.gang[op] * 2.0, table.little[op] * 2.0)];
+        let predicted = inc.retime(&set, &dirty).unwrap();
+        inc.rebase(&set, &dirty).unwrap();
+        assert_eq!(inc.makespan().to_bits(), predicted.to_bits());
+        table.set_op(op, dirty[0].1, dirty[0].2);
+        let full = evaluate_with(&set, &plan, &table).unwrap();
+        assert_eq!(full.makespan.to_bits(), inc.makespan().to_bits());
     }
 
     #[test]

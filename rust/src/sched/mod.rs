@@ -16,11 +16,54 @@
 //!   early-layer preparations onto the big gang when the gang would
 //!   otherwise idle.
 //!
+//! # The incremental plan-search engine
+//!
+//! The outer kernel-combination search is the planner's hot path: it
+//! evaluates hundreds of single-layer kernel swaps per model. Three layers
+//! make each trial cheap:
+//!
+//! 1. **Flat price tables** ([`price::PriceTable`], plus the per-stage
+//!    prices on [`filter::Candidate`]). Unit cost depends only on the unit
+//!    *class* (gang vs little — all little cores are identical), so a
+//!    table of two `Vec<f64>` lanes indexed by `OpId` replaces every
+//!    cost-model call after setup. Candidates are priced once at
+//!    Pareto-filter time; swapping a layer's kernel is a ≤3-entry table
+//!    update, never a `CostModel` re-derivation.
+//! 2. **Delta re-evaluation** ([`makespan::IncrementalEval`]). The
+//!    baseline evaluation records its dispatch order; a trial replays the
+//!    unchanged schedule prefix (every dispatch before the first re-priced
+//!    op) from the recording and list-schedules only the affected suffix,
+//!    with a binary-heap ready-queue in place of the per-dispatch
+//!    O(units·deps) rescan. Delta results are **bit-exact** against a
+//!    from-scratch [`makespan::evaluate_with`] under the same prices
+//!    (property-tested in `tests/incremental_eval.rs` against
+//!    [`makespan::evaluate_reference`], the original evaluator kept as the
+//!    executable specification).
+//! 3. **Parallel coordinate descent** ([`heuristic::schedule`]). Each pass
+//!    freezes the incumbent plan, screens every layer's best alternative
+//!    kernel concurrently (`util::parallel::par_map`) against the frozen
+//!    baseline, applies surviving swaps to `pick` in place, and confirms
+//!    with one full Algorithm-1 rebuild — the only accept gate, so the
+//!    returned plan is always fully evaluated, never a delta estimate.
+//!
+//! Price-table invariants relied on throughout: `table.gang[op]` /
+//! `table.little[op]` equal `Pricer::price(op, Gang)` / `price(op,
+//! Little(_))` for the choices the table was built from; bypassed
+//! transforms price as 0 (so a kernel swap never restructures the op
+//! set); and a candidate's flat prices equal what a `Pricer` over that
+//! candidate's choice would produce (asserted by
+//! `candidate_prices_match_pricer_exactly`).
+//!
+//! Repeat planning of an identical problem skips all of the above via the
+//! fingerprint-keyed [`cache::PlanCache`] (used by the serving router).
+//!
 //! Modules: [`op`] (operation set + dependencies), [`plan`] (the output),
-//! [`price`] (operation costing on units), [`makespan`] (list-schedule
-//! evaluator), [`filter`] (kernel candidate Pareto filtering),
-//! [`heuristic`] (Algorithm 1 + outer kernel-combination search),
-//! [`bruteforce`] (exact oracle for tiny instances, test-only scale).
+//! [`price`] (operation costing on units + the flat price table),
+//! [`makespan`] (list-schedule evaluator: heap-based, incremental, and
+//! reference), [`filter`] (kernel candidate Pareto filtering + candidate
+//! pricing), [`heuristic`] (Algorithm 1 + the incremental outer search),
+//! [`cache`] (fingerprint-keyed plan cache), [`bruteforce`] (exact oracle
+//! for tiny instances, test-only scale).
 
 pub mod op;
 pub mod plan;
@@ -28,9 +71,12 @@ pub mod price;
 pub mod makespan;
 pub mod filter;
 pub mod heuristic;
+pub mod cache;
 pub mod bruteforce;
 
+pub use cache::PlanCache;
 pub use heuristic::{schedule, SchedulerConfig};
+pub use makespan::IncrementalEval;
 pub use op::{OpId, OpSet, OpStage, Operation};
 pub use plan::{KernelChoice, Plan, UnitId};
-pub use price::Pricer;
+pub use price::{PriceTable, Pricer};

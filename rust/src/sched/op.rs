@@ -59,6 +59,11 @@ pub struct OpSet {
     pub exec_of: Vec<Option<OpId>>,
     /// The driver-init op (GPU devices).
     pub driver_init: Option<OpId>,
+    /// Reverse dependency adjacency: `dependents[i]` = ops with `i` in
+    /// their `deps`. Precomputed once so the evaluator's finish-event
+    /// notification is O(edges) per evaluation instead of re-scanning
+    /// `deps` of every queue head per dispatched op.
+    pub dependents: Vec<Vec<OpId>>,
 }
 
 impl OpSet {
@@ -76,6 +81,7 @@ impl OpSet {
             pipeline_of: vec![None; n],
             exec_of: vec![None; n],
             driver_init: None,
+            dependents: Vec::new(),
         };
         let push = |layer: LayerId, stage: OpStage, deps: Vec<OpId>, ops: &mut Vec<Operation>| -> OpId {
             let id = ops.len();
@@ -133,6 +139,12 @@ impl OpSet {
                 set.exec_of[i] = Some(e);
             }
         }
+        set.dependents = vec![Vec::new(); set.ops.len()];
+        for op in &set.ops {
+            for &d in &op.deps {
+                set.dependents[d].push(op.id);
+            }
+        }
         set
     }
 
@@ -163,6 +175,26 @@ impl OpSet {
         }
         if let Some(w) = self.transform_of[layer] {
             v.push(w);
+        }
+        v
+    }
+
+    /// All ops owned by `layer`, in pipeline order (read, transform,
+    /// pipeline, exec). These are exactly the ops whose price changes when
+    /// the layer's kernel choice swaps — the delta evaluator's dirty set.
+    pub fn ops_of_layer(&self, layer: LayerId) -> Vec<OpId> {
+        let mut v = Vec::with_capacity(4);
+        if let Some(r) = self.read_of[layer] {
+            v.push(r);
+        }
+        if let Some(w) = self.transform_of[layer] {
+            v.push(w);
+        }
+        if let Some(p) = self.pipeline_of[layer] {
+            v.push(p);
+        }
+        if let Some(e) = self.exec_of[layer] {
+            v.push(e);
         }
         v
     }
@@ -265,6 +297,38 @@ mod tests {
         let set = OpSet::build(&g, &choices, false);
         let f = set.final_exec();
         assert_eq!(set.ops[f].layer, g.len() - 1);
+    }
+
+    #[test]
+    fn dependents_mirror_deps() {
+        let g = zoo::resnet50();
+        let choices = default_choices(&g, &Registry::full());
+        for gpu in [false, true] {
+            let set = OpSet::build(&g, &choices, gpu);
+            assert_eq!(set.dependents.len(), set.len());
+            let mut edges = 0;
+            for op in &set.ops {
+                for &d in &op.deps {
+                    assert!(set.dependents[d].contains(&op.id));
+                    edges += 1;
+                }
+            }
+            let rev: usize = set.dependents.iter().map(Vec::len).sum();
+            assert_eq!(edges, rev);
+        }
+    }
+
+    #[test]
+    fn ops_of_layer_covers_all_ops() {
+        let g = zoo::tiny_net();
+        let choices = default_choices(&g, &Registry::full());
+        let set = OpSet::build(&g, &choices, true);
+        let mut seen: Vec<OpId> = set.driver_init.into_iter().collect();
+        for l in g.layers() {
+            seen.extend(set.ops_of_layer(l.id));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..set.len()).collect::<Vec<_>>());
     }
 
     #[test]

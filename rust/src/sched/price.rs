@@ -11,9 +11,71 @@
 use crate::cost::CostModel;
 use crate::device::{CoreClass, DeviceProfile};
 use crate::graph::ModelGraph;
-use crate::sched::op::{OpStage, Operation};
+use crate::sched::op::{OpId, OpSet, OpStage, Operation};
 use crate::sched::plan::{KernelChoice, UnitId};
 use crate::Ms;
+
+/// Flat per-op × per-unit-class price table.
+///
+/// Every scheduling unit is either the gang or a little core, and op cost
+/// depends only on that *class* (all little cores are identical — see
+/// [`Pricer::price`], which matches `Little(_)` without inspecting the
+/// index). The table therefore needs exactly two lanes. Building it runs
+/// the full [`CostModel`] once per op; afterwards the evaluator, the
+/// heuristic's bundle sizing, and the simulator are pure array lookups and
+/// never re-derive a cost.
+///
+/// Invariants:
+/// * `gang[i]`/`little[i]` equal `pricer.price(&set.ops[i], Gang)` /
+///   `price(.., Little(0))` for the `(set, pricer)` the table was built
+///   from (asserted by `table_matches_pricer` below);
+/// * entries are finite and ≥ 0;
+/// * [`PriceTable::set_op`] is the only mutation, used by the outer search
+///   to swap one layer's kernel prices in place.
+#[derive(Debug, Clone)]
+pub struct PriceTable {
+    pub gang: Vec<Ms>,
+    pub little: Vec<Ms>,
+}
+
+impl PriceTable {
+    /// Price every op of `set` on both unit classes.
+    pub fn build(set: &OpSet, pricer: &Pricer) -> PriceTable {
+        let mut gang = Vec::with_capacity(set.len());
+        let mut little = Vec::with_capacity(set.len());
+        for op in &set.ops {
+            gang.push(pricer.price(op, UnitId::Gang));
+            little.push(pricer.price(op, UnitId::Little(0)));
+        }
+        PriceTable { gang, little }
+    }
+
+    #[inline]
+    pub fn get(&self, op: OpId, unit: UnitId) -> Ms {
+        match unit {
+            UnitId::Gang => self.gang[op],
+            UnitId::Little(_) => self.little[op],
+        }
+    }
+
+    /// Lookup by flat unit index (0 = gang, 1.. = little cores), the
+    /// layout [`crate::sched::plan::Plan::queues`] flattens to.
+    #[inline]
+    pub fn by_unit_idx(&self, op: OpId, unit_idx: usize) -> Ms {
+        if unit_idx == 0 {
+            self.gang[op]
+        } else {
+            self.little[op]
+        }
+    }
+
+    /// Swap one op's prices (both classes) in place.
+    #[inline]
+    pub fn set_op(&mut self, op: OpId, gang: Ms, little: Ms) {
+        self.gang[op] = gang;
+        self.little[op] = little;
+    }
+}
 
 /// Prices operations for one (device, model, choices) triple.
 pub struct Pricer<'a> {
@@ -69,9 +131,17 @@ impl<'a> Pricer<'a> {
                 self.cm.read_ms(self.read_bytes(op.layer), class, 1)
             }
             OpStage::Transform => {
+                // A transform op exists only when the choice needs one, but
+                // the delta evaluator also prices bypassed transforms (a
+                // cached or transform-free choice) as 0 so a kernel swap
+                // never has to restructure the op set.
                 let class = self.unit_class_io(unit);
-                let k = &choice.expect("transform op needs a kernel choice").kernel;
-                self.cm.transform_ms(k, l, class, 1)
+                match choice {
+                    Some(c) if c.kernel.family.needs_transform() && !c.cache => {
+                        self.cm.transform_ms(&c.kernel, l, class, 1)
+                    }
+                    _ => 0.0,
+                }
             }
             OpStage::Pipeline => self.cm.pipeline_create_ms(self.shader_cache),
             OpStage::Exec => {
@@ -200,6 +270,25 @@ mod tests {
             .find(|o| o.stage == OpStage::Pipeline)
             .unwrap();
         assert!(pc.price(pipe, UnitId::Gang) < p.price(pipe, UnitId::Gang));
+    }
+
+    #[test]
+    fn table_matches_pricer() {
+        for (dev, gpu) in [(profiles::meizu_16t(), false), (profiles::jetson_tx2(), true)] {
+            let g = zoo::resnet50();
+            let choices = default_choices(&g, &Registry::full());
+            let set = OpSet::build(&g, &choices, gpu);
+            let p = Pricer::new(&dev, &g, &choices, true);
+            let t = PriceTable::build(&set, &p);
+            for op in &set.ops {
+                assert_eq!(t.get(op.id, UnitId::Gang), p.price(op, UnitId::Gang));
+                assert_eq!(t.get(op.id, UnitId::Little(2)), p.price(op, UnitId::Little(2)));
+                assert_eq!(t.by_unit_idx(op.id, 0), t.get(op.id, UnitId::Gang));
+                assert_eq!(t.by_unit_idx(op.id, 3), t.get(op.id, UnitId::Little(2)));
+                assert!(t.gang[op.id].is_finite() && t.gang[op.id] >= 0.0);
+                assert!(t.little[op.id].is_finite() && t.little[op.id] >= 0.0);
+            }
+        }
     }
 
     #[test]

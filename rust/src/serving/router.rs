@@ -1,13 +1,15 @@
 //! The request router and LRU model-residency manager.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::metrics::Recorder;
+use crate::sched::cache::PlanCache;
 use crate::sched::heuristic::SchedulerConfig;
-use crate::warm::continuous;
+use crate::warm::continuous_from;
 use crate::Ms;
 
 /// Serving engine the router charges latencies from.
@@ -63,6 +65,10 @@ pub struct Router {
     /// count since last cold start (drives the warm-up ladder).
     resident: Vec<(String, usize)>,
     mem_used: u64,
+    /// Shared fingerprint-keyed plan cache (hits when the same
+    /// model × device × config was already planned, by this router or a
+    /// sibling sharing the cache).
+    pub plan_cache: Arc<PlanCache>,
     pub recorder: Recorder,
     pub stats_cold: usize,
     pub stats_warm: usize,
@@ -70,14 +76,30 @@ pub struct Router {
 
 impl Router {
     /// Build a router: plans every model on `dev` up front (the paper's
-    /// offline decision stage) and computes its latency ladder.
+    /// offline decision stage) and computes its latency ladder. Plans come
+    /// from a fresh private [`PlanCache`]; use [`Router::with_plan_cache`]
+    /// to share one across routers (ablation arms, engine comparisons,
+    /// router restarts) so repeated cold-planning of the same
+    /// model × device × config is free.
     pub fn new(dev: &DeviceProfile, models: Vec<ModelGraph>, cfg: RouterConfig) -> Router {
+        Router::with_plan_cache(dev, models, cfg, Arc::new(PlanCache::new()))
+    }
+
+    /// [`Router::new`] planning through a shared plan cache.
+    pub fn with_plan_cache(
+        dev: &DeviceProfile,
+        models: Vec<ModelGraph>,
+        cfg: RouterConfig,
+        plan_cache: Arc<PlanCache>,
+    ) -> Router {
         let registry = Registry::full();
         let mut map = HashMap::new();
         for g in models {
             let (ladder, warm_ms) = match cfg.engine {
                 ServeEngine::Nnv12 => {
-                    let r = continuous(dev, &g, &registry, &SchedulerConfig::kcp(), cfg.warmup_depth);
+                    let sched_cfg = SchedulerConfig::kcp();
+                    let s = plan_cache.get_or_plan(dev, &g, &registry, &sched_cfg, "full");
+                    let r = continuous_from(dev, &g, &registry, cfg.warmup_depth, &s);
                     (r.latencies, r.warm_ms)
                 }
                 ServeEngine::Ncnn => {
@@ -97,6 +119,7 @@ impl Router {
             models: map,
             resident: Vec::new(),
             mem_used: 0,
+            plan_cache,
             recorder: Recorder::new(),
             stats_cold: 0,
             stats_warm: 0,
@@ -203,6 +226,27 @@ mod tests {
         assert!(out.evictions > 0 || r.mem_used() <= 6 << 20);
         let back = r.handle("squeezenet").unwrap();
         assert!(back.cold, "evicted model must cold-start again");
+    }
+
+    #[test]
+    fn shared_plan_cache_skips_replanning() {
+        let dev = profiles::meizu_16t();
+        let models = || vec![zoo::tiny_net(), zoo::squeezenet()];
+        let cache = Arc::new(PlanCache::new());
+        let a = Router::with_plan_cache(&dev, models(), RouterConfig::default(), cache.clone());
+        assert_eq!(cache.misses(), 2, "first router plans each model once");
+        assert_eq!(cache.hits(), 0);
+        // A restarted / sibling router re-uses every plan.
+        let b = Router::with_plan_cache(&dev, models(), RouterConfig::default(), cache.clone());
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 2);
+        // And identical plans ⇒ identical cold latencies.
+        let mut a = a;
+        let mut b = b;
+        assert_eq!(
+            a.handle("squeezenet").unwrap().latency_ms.to_bits(),
+            b.handle("squeezenet").unwrap().latency_ms.to_bits()
+        );
     }
 
     #[test]

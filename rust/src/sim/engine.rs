@@ -4,7 +4,7 @@ use crate::device::DeviceProfile;
 use crate::sched::makespan::OpTiming;
 use crate::sched::op::{OpSet, OpStage};
 use crate::sched::plan::{Plan, UnitId};
-use crate::sched::price::Pricer;
+use crate::sched::price::{PriceTable, Pricer};
 use crate::Ms;
 
 /// Background load on one unit (Fig. 11's 0%/25%/50% occupancy): ops on the
@@ -94,6 +94,9 @@ pub fn simulate(
         .into_iter()
         .map(|(u, q)| (u, q.clone()))
         .collect();
+    // Flat price table shared with the scheduler's evaluator: the cost
+    // model runs once per op up front; the event loop is pure lookups.
+    let table = PriceTable::build(set, pricer);
     let n_units = queues.len();
     let mut bg = vec![0.0f64; n_units];
     for load in &cfg.background {
@@ -138,17 +141,18 @@ pub fn simulate(
     for (v, (unit, q)) in queues.iter().enumerate() {
         for &op in q {
             queue_of[op] = v;
-            q_remaining[v] += pricer.price(&set.ops[op], *unit);
+            q_remaining[v] += table.get(op, *unit);
         }
     }
-    let claim = |op: usize,
-                 claimed: &mut [bool],
-                 q_remaining: &mut [f64],
-                 queue_of: &[usize],
-                 queues: &[(UnitId, Vec<usize>)]| {
+    let table_ref = &table;
+    let claim = move |op: usize,
+                      claimed: &mut [bool],
+                      q_remaining: &mut [f64],
+                      queue_of: &[usize],
+                      queues: &[(UnitId, Vec<usize>)]| {
         claimed[op] = true;
         let v = queue_of[op];
-        q_remaining[v] -= pricer.price(&set.ops[op], queues[v].0);
+        q_remaining[v] -= table_ref.get(op, queues[v].0);
     };
 
     while completed < total_ops {
@@ -168,7 +172,7 @@ pub fn simulate(
             if let Some(op) = next_in_queue(u, &mut cursor, &claimed, &queues) {
                 if deps_done(op, &done) {
                     claim(op, &mut claimed, &mut q_remaining, &queue_of, &queues);
-                    let dur = pricer.price(&set.ops[op], queues[u].0);
+                    let dur = table.get(op, queues[u].0);
                     running.push(Running { op, unit_idx: u, remaining: dur, started: now });
                     continue;
                 }
@@ -215,7 +219,7 @@ pub fn simulate(
                 if let Some((_, op, _)) = best {
                     claim(op, &mut claimed, &mut q_remaining, &queue_of, &queues);
                     steals += 1;
-                    let dur = pricer.price(&set.ops[op], queues[u].0);
+                    let dur = table.get(op, queues[u].0);
                     running.push(Running { op, unit_idx: u, remaining: dur, started: now });
                 }
             }

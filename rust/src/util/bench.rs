@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One benchmark result.
@@ -102,6 +103,48 @@ impl Bench {
         );
         self.results
     }
+
+    /// [`Bench::finish`] plus a machine-readable dump (e.g.
+    /// `BENCH_sched.json`) so the perf trajectory is trackable across PRs
+    /// by CI and by the EXPERIMENTS notes. Writing is best-effort: an
+    /// unwritable path warns instead of failing the bench run.
+    pub fn finish_to(self, path: &str) -> Vec<CaseResult> {
+        let suite = self.suite.clone();
+        let results = self.finish();
+        let json = results_json(&suite, &results);
+        match std::fs::write(path, json.to_pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+        results
+    }
+}
+
+/// JSON shape: `{"suite": .., "cases": [{"name", "iters", "mean_ms",
+/// "std_ms", "min_ms", "p50_ms", "max_ms"}, ..]}`.
+pub fn results_json(suite: &str, results: &[CaseResult]) -> Json {
+    Json::obj(vec![
+        ("suite", Json::from(suite)),
+        (
+            "cases",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::from(r.name.as_str())),
+                            ("iters", Json::from(r.iters)),
+                            ("mean_ms", Json::from(r.per_iter_ms.mean)),
+                            ("std_ms", Json::from(r.per_iter_ms.std)),
+                            ("min_ms", Json::from(r.per_iter_ms.min)),
+                            ("p50_ms", Json::from(r.per_iter_ms.p50)),
+                            ("max_ms", Json::from(r.per_iter_ms.max)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 #[cfg(test)]
@@ -120,5 +163,21 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert!(rs[0].per_iter_ms.mean >= 0.0);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        std::env::set_var("NNV12_BENCH_FAST", "1");
+        let mut b = Bench::new("unit-json");
+        b.case("noop", || {});
+        let path = std::env::temp_dir().join("nnv12_bench_unit.json");
+        let rs = b.finish_to(path.to_str().unwrap());
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("suite").as_str(), Some("unit-json"));
+        let cases = parsed.get("cases").as_arr().unwrap();
+        assert_eq!(cases.len(), rs.len());
+        assert_eq!(cases[0].get("name").as_str(), Some("noop"));
+        assert!(cases[0].get("mean_ms").as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

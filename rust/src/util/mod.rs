@@ -14,6 +14,8 @@
 //! * [`bench`] — a warmup+measure micro-bench harness driving the
 //!   `cargo bench` targets (criterion replacement).
 //! * [`table`] — fixed-width text tables for paper-style reports.
+//! * [`parallel`] — scoped data-parallel map over `std::thread` (rayon
+//!   replacement; used by the scheduler's outer combination search).
 
 pub mod json;
 pub mod cli;
@@ -22,3 +24,4 @@ pub mod prop;
 pub mod stats;
 pub mod bench;
 pub mod table;
+pub mod parallel;

@@ -1,0 +1,106 @@
+//! Scoped data-parallel map (rayon is not in the offline vendored crate
+//! set — see `Cargo.toml`), built on `std::thread::scope`.
+//!
+//! Work is distributed by an atomic cursor (self-balancing: threads pull
+//! the next index when free, so uneven per-item cost — e.g. per-layer
+//! kernel-trial batches of different candidate counts — doesn't stall the
+//! pool). Results arrive over a channel tagged with their index, so the
+//! output order always matches the input order. A panic in the closure
+//! propagates out of the scope, preserving ordinary test behaviour.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Maximum worker threads; override with `NNV12_THREADS` (0 or 1 forces
+/// sequential execution — useful for profiling and determinism triage,
+/// though `par_map` output is deterministic either way).
+fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("NNV12_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` in parallel, preserving order. `f` receives
+/// `(index, &item)`. Falls back to a plain sequential map for short inputs
+/// or single-core environments.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = max_threads().min(n);
+    if threads <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(i, &items[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|o| o.expect("par_map worker dropped a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn matches_sequential_reference() {
+        let items: Vec<u64> = (0..100).map(|i| i * 37 % 91).collect();
+        let seq: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x + i as u64).collect();
+        let par = par_map(&items, |i, &x| x + i as u64);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let items: Vec<usize> = (0..64).collect();
+        let _ = par_map(&items, |_, &x| {
+            assert!(x < 10, "boom");
+            x
+        });
+    }
+}

@@ -29,7 +29,7 @@ pub struct ContinuousReport {
 }
 
 /// Simulate `n_inferences` consecutive inferences under NNV12's
-/// continuous-inference mode.
+/// continuous-inference mode, planning the cold inference from scratch.
 pub fn continuous(
     dev: &DeviceProfile,
     graph: &ModelGraph,
@@ -37,9 +37,23 @@ pub fn continuous(
     cfg: &SchedulerConfig,
     n_inferences: usize,
 ) -> ContinuousReport {
+    let s = schedule(dev, graph, registry, cfg);
+    continuous_from(dev, graph, registry, n_inferences, &s)
+}
+
+/// [`continuous`] with an already-scheduled cold plan — the serving
+/// router's path, which draws `s` from its fingerprint-keyed
+/// [`crate::sched::cache::PlanCache`] instead of re-planning per model.
+/// The scheduler config is already baked into `s`.
+pub fn continuous_from(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    n_inferences: usize,
+    s: &crate::sched::heuristic::Scheduled,
+) -> ContinuousReport {
     let cm = CostModel::new(dev);
     let (exec_class, exec_threads) = cm.exec_class();
-    let s = schedule(dev, graph, registry, cfg);
     let cold_ms = s.schedule.makespan;
 
     // Which layers need switching, and what the switch costs to prepare.

@@ -1,0 +1,179 @@
+//! Exact-agreement tests for the incremental plan-search engine.
+//!
+//! Two bit-exactness contracts back the scheduler hot path:
+//!
+//! 1. the binary-heap evaluator (`evaluate_with`) computes the *same*
+//!    schedule as the original linear-scan evaluator
+//!    (`evaluate_reference`), op for op;
+//! 2. delta re-evaluation (`IncrementalEval::retime` — prefix replay +
+//!    suffix re-schedule) agrees with a from-scratch `evaluate_with` under
+//!    the same mutated price table, for randomized kernel swaps and for
+//!    arbitrary random re-pricings.
+//!
+//! "Bit-exact" is literal: assertions compare `f64::to_bits`.
+
+use nnv12::device::profiles;
+use nnv12::device::DeviceProfile;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::filter::candidates;
+use nnv12::sched::heuristic::{schedule, swap_prices, SchedulerConfig};
+use nnv12::sched::makespan::{evaluate_reference, evaluate_with, IncrementalEval, PriceDelta};
+use nnv12::sched::price::{PriceTable, Pricer};
+use nnv12::util::prop;
+use nnv12::util::rng::Rng;
+
+struct Fixture {
+    dev: DeviceProfile,
+    model: &'static str,
+}
+
+fn fixtures() -> Vec<Fixture> {
+    vec![
+        Fixture { dev: profiles::meizu_16t(), model: "resnet50" },
+        Fixture { dev: profiles::meizu_16t(), model: "googlenet" },
+        Fixture { dev: profiles::meizu_16t(), model: "mobilenetv2" },
+        Fixture { dev: profiles::pixel_5(), model: "squeezenet" },
+        // GPU path: pipeline-creation + driver-init ops in the set.
+        Fixture { dev: profiles::jetson_tx2(), model: "resnet50" },
+    ]
+}
+
+#[test]
+fn heap_evaluator_bit_exact_vs_reference_across_zoo() {
+    for f in fixtures() {
+        let g = zoo::by_name(f.model).unwrap();
+        let s = schedule(&f.dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        let pricer = Pricer::new(&f.dev, &g, &s.plan.choices, true);
+        let table = PriceTable::build(&s.set, &pricer);
+        let fast = evaluate_with(&s.set, &s.plan, &table).unwrap();
+        let slow = evaluate_reference(&s.set, &s.plan, &pricer).unwrap();
+        assert_eq!(
+            fast.makespan.to_bits(),
+            slow.makespan.to_bits(),
+            "{} on {}",
+            f.model,
+            f.dev.name
+        );
+        for (op, (a, b)) in fast.timings.iter().zip(&slow.timings).enumerate() {
+            assert_eq!(a.start.to_bits(), b.start.to_bits(), "op {op} start");
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "op {op} finish");
+            assert_eq!(a.unit, b.unit, "op {op} unit");
+        }
+    }
+}
+
+#[test]
+fn delta_retime_bit_exact_under_randomized_kernel_swaps() {
+    for f in fixtures() {
+        let g = zoo::by_name(f.model).unwrap();
+        let reg = Registry::full();
+        let s = schedule(&f.dev, &g, &reg, &SchedulerConfig::kcp());
+        let pricer = Pricer::new(&f.dev, &g, &s.plan.choices, true);
+        let table = PriceTable::build(&s.set, &pricer);
+        let inc = IncrementalEval::new(&s.set, &s.plan, table.clone()).unwrap();
+        let weighted = g.weighted_layers();
+
+        prop::check(0x5EED ^ f.model.len() as u64, 30, |rng: &mut Rng| {
+            // Swap 1–3 random layers to random Pareto candidates.
+            let n_swaps = 1 + rng.index(3);
+            let mut dirty: Vec<PriceDelta> = Vec::new();
+            let mut swapped: Vec<usize> = Vec::new();
+            for _ in 0..n_swaps {
+                let layer = *rng.choose(&weighted);
+                if swapped.contains(&layer) {
+                    continue; // one swap per layer; ops must stay unique
+                }
+                let cs = candidates(&f.dev, g.layer(layer), &reg, true);
+                let cand = rng.choose(&cs);
+                dirty.extend(swap_prices(&s.set, layer, cand));
+                swapped.push(layer);
+            }
+            check_retime_agreement(&s.set, &s.plan, &table, &inc, &dirty)
+        });
+    }
+}
+
+#[test]
+fn delta_retime_bit_exact_under_arbitrary_repricings() {
+    // Beyond real kernel swaps: arbitrary per-op price perturbations (the
+    // contract is purely about evaluation, not about where prices come
+    // from).
+    for f in fixtures().into_iter().take(2) {
+        let g = zoo::by_name(f.model).unwrap();
+        let s = schedule(&f.dev, &g, &Registry::full(), &SchedulerConfig::kcp());
+        let pricer = Pricer::new(&f.dev, &g, &s.plan.choices, true);
+        let table = PriceTable::build(&s.set, &pricer);
+        let inc = IncrementalEval::new(&s.set, &s.plan, table.clone()).unwrap();
+
+        prop::check(0xA11CE, 30, |rng: &mut Rng| {
+            let n = 1 + rng.index(5);
+            let mut dirty: Vec<PriceDelta> = Vec::new();
+            for _ in 0..n {
+                let op = rng.index(s.set.len());
+                if dirty.iter().any(|&(o, _, _)| o == op) {
+                    continue;
+                }
+                let fg = rng.uniform(0.1, 10.0);
+                let fl = rng.uniform(0.1, 10.0);
+                dirty.push((op, table.gang[op] * fg, table.little[op] * fl));
+            }
+            check_retime_agreement(&s.set, &s.plan, &table, &inc, &dirty)
+        });
+    }
+}
+
+fn check_retime_agreement(
+    set: &nnv12::sched::op::OpSet,
+    plan: &nnv12::sched::plan::Plan,
+    table: &PriceTable,
+    inc: &IncrementalEval,
+    dirty: &[PriceDelta],
+) -> Result<(), String> {
+    let delta = inc
+        .retime(set, dirty)
+        .map_err(|e| format!("retime failed: {e}"))?;
+    let mut mutated = table.clone();
+    for &(op, gms, lms) in dirty {
+        mutated.set_op(op, gms, lms);
+    }
+    let full = evaluate_with(set, plan, &mutated)
+        .map_err(|e| format!("full evaluate failed: {e}"))?
+        .makespan;
+    if delta.to_bits() != full.to_bits() {
+        return Err(format!(
+            "delta {delta:.17} != full {full:.17} for dirty set {dirty:?}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn rebase_chain_stays_consistent() {
+    // A long chain of accepted swaps (the apply phase's usage pattern)
+    // must keep the evaluator's baseline equal to a from-scratch
+    // evaluation of its accumulated table.
+    let dev = profiles::meizu_16t();
+    let g = zoo::resnet50();
+    let reg = Registry::full();
+    let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+    let mut table = PriceTable::build(&s.set, &pricer);
+    let mut inc = IncrementalEval::new(&s.set, &s.plan, table.clone()).unwrap();
+    let weighted = g.weighted_layers();
+    let mut rng = Rng::new(99);
+    for _ in 0..12 {
+        let layer = *rng.choose(&weighted);
+        let cs = candidates(&dev, g.layer(layer), &reg, true);
+        let cand = rng.choose(&cs);
+        let dirty = swap_prices(&s.set, layer, cand);
+        let predicted = inc.retime(&s.set, &dirty).unwrap();
+        inc.rebase(&s.set, &dirty).unwrap();
+        for &(op, gms, lms) in &dirty {
+            table.set_op(op, gms, lms);
+        }
+        assert_eq!(inc.makespan().to_bits(), predicted.to_bits());
+        let full = evaluate_with(&s.set, &s.plan, &table).unwrap().makespan;
+        assert_eq!(inc.makespan().to_bits(), full.to_bits());
+    }
+}
