@@ -1,26 +1,25 @@
 //! Bench: Table 4's offline plan-generation time (the paper reports
 //! 0.5-23 s on-device; our target is <100 ms per model at paper scale).
+//! `Engine::plan_fresh` is the facade's uncached planning entry point.
 use nnv12::device::profiles;
+use nnv12::engine::Engine;
 use nnv12::graph::zoo;
-use nnv12::kernels::Registry;
-use nnv12::sched::heuristic::{schedule, SchedulerConfig};
 use nnv12::util::bench::Bench;
 
 fn main() {
     let mut b = Bench::new("paper_plangen");
-    let reg = Registry::full();
+    let meizu = Engine::builder().device(profiles::meizu_16t()).build();
     for model in ["resnet50", "googlenet", "mobilenetv2", "efficientnetb0"] {
         let g = zoo::by_name(model).unwrap();
-        let meizu = profiles::meizu_16t();
         b.case(&format!("{model}@meizu16t"), || {
-            let s = schedule(&meizu, &g, &reg, &SchedulerConfig::kcp());
+            let s = meizu.plan_fresh(&g);
             assert!(s.schedule.makespan > 0.0);
         });
     }
     let g = zoo::resnet50();
-    let tx2 = profiles::jetson_tx2();
+    let tx2 = Engine::builder().device(profiles::jetson_tx2()).build();
     b.case("resnet50@tx2(gpu)", || {
-        let s = schedule(&tx2, &g, &reg, &SchedulerConfig::kcp());
+        let s = tx2.plan_fresh(&g);
         assert!(s.schedule.makespan > 0.0);
     });
     b.finish_to("BENCH_plangen.json");

@@ -1,14 +1,17 @@
 //! Bench: scheduler hot paths in isolation — list-schedule evaluation
 //! (heap vs reference), price-table build, delta re-evaluation, candidate
-//! filtering, full Algorithm 1, and the plan cache.
+//! filtering, full plan generation, and the plan cache/store. End-to-end
+//! entry points go through the [`nnv12::engine`] facade; the micro cases
+//! bench the `sched` internals the facade drives.
 //!
 //! Emits `BENCH_sched.json` (machine-readable) next to the suite's stdout
-//! table so the perf trajectory is tracked across PRs.
+//! table so the perf trajectory is tracked across PRs; CI ratchets
+//! `schedule/resnet50` against the checked-in `BENCH_baseline.json`.
 use nnv12::device::profiles;
+use nnv12::engine::Engine;
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
-use nnv12::sched::cache::PlanCache;
-use nnv12::sched::heuristic::{schedule, swap_prices, SchedulerConfig};
+use nnv12::sched::heuristic::swap_prices;
 use nnv12::sched::makespan::{evaluate, evaluate_reference, evaluate_with, IncrementalEval};
 use nnv12::sched::op::OpSet;
 use nnv12::sched::plan::default_choices;
@@ -20,6 +23,7 @@ fn main() {
     let dev = profiles::meizu_16t();
     let g = zoo::resnet50();
     let reg = Registry::full();
+    let engine = Engine::builder().device(dev.clone()).build();
 
     let choices = default_choices(&g, &reg);
     let set = OpSet::build(&g, &choices, false);
@@ -61,8 +65,9 @@ fn main() {
     });
 
     // Delta re-evaluation on a real (pipelined) incumbent plan: the unit
-    // of work the outer search performs per kernel-swap trial.
-    let sched = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+    // of work the outer search performs per kernel-swap trial. The
+    // incumbent comes through the facade.
+    let sched = engine.plan(&g);
     let spricer = Pricer::new(&dev, &g, &sched.plan.choices, true);
     let stable = PriceTable::build(&sched.set, &spricer);
     let inc = IncrementalEval::new(&sched.set, &sched.plan, stable).unwrap();
@@ -83,19 +88,35 @@ fn main() {
     });
 
     b.case("schedule/resnet50", || {
-        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+        let s = engine.plan_fresh(&g);
         assert!(s.schedule.makespan > 0.0);
     });
-    // Steady-state serving path: the miss is paid once, outside the
-    // measured closure; the case times fingerprint + hit only.
-    let cache = PlanCache::new();
-    let cfg = SchedulerConfig::kcp();
-    let first = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
+    // Steady-state serving path: the miss was paid by `engine.plan` above;
+    // the case times fingerprint + memory hit only.
     b.case("schedule-cached/resnet50", || {
         for _ in 0..32 {
-            let s = cache.get_or_plan(&dev, &g, &reg, &cfg, "full");
-            assert_eq!(s.schedule.makespan.to_bits(), first.schedule.makespan.to_bits());
+            let s = engine.plan(&g);
+            assert_eq!(s.schedule.makespan.to_bits(), sched.schedule.makespan.to_bits());
         }
     });
+    // Process-cold path: a fresh engine on a warm plan-store directory
+    // reloads + revalidates the plan from disk instead of planning.
+    let store_dir = std::env::temp_dir().join(format!("nnv12-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Engine::builder()
+        .device(dev.clone())
+        .plan_store(&store_dir)
+        .build()
+        .plan(&g);
+    b.case("plan-store-reload/resnet50", || {
+        let fresh = Engine::builder()
+            .device(dev.clone())
+            .plan_store(&store_dir)
+            .build();
+        let s = fresh.plan(&g);
+        assert_eq!(s.schedule.makespan.to_bits(), sched.schedule.makespan.to_bits());
+        assert_eq!(fresh.plan_cache().disk_hits(), 1);
+    });
+    let _ = std::fs::remove_dir_all(&store_dir);
     b.finish_to("BENCH_sched.json");
 }

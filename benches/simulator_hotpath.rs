@@ -1,42 +1,43 @@
 //! Bench: discrete-event simulator throughput (target: >=1e6 scheduled
-//! operations/s so the full Fig. 8 grid regenerates in seconds).
+//! operations/s so the full Fig. 8 grid regenerates in seconds). Sessions
+//! come from the engine facade; `Session::run_cold` is the simulator's
+//! production entry point.
 use nnv12::device::profiles;
+use nnv12::engine::{Engine, SimBackend};
 use nnv12::graph::zoo;
-use nnv12::kernels::Registry;
-use nnv12::sched::heuristic::{schedule, SchedulerConfig};
-use nnv12::sched::price::Pricer;
-use nnv12::sim::{simulate, BgLoad, SimConfig};
+use nnv12::sim::{BgLoad, SimConfig};
 use nnv12::util::bench::Bench;
 
 fn main() {
     let mut b = Bench::new("simulator_hotpath");
     let dev = profiles::meizu_16t();
-    let reg = Registry::full();
+    let engine = Engine::builder().device(dev.clone()).build();
     for model in ["resnet50", "googlenet", "efficientnetb0"] {
-        let g = zoo::by_name(model).unwrap();
-        let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
-        let n_ops = s.set.len();
-        let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+        let session = engine.load(zoo::by_name(model).unwrap());
+        let n_ops = session.scheduled().set.len();
         b.case(&format!("simulate/{model}({n_ops}ops)"), || {
-            let r = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
-            assert!(r.makespan > 0.0);
+            let r = session.run_cold().unwrap();
+            assert!(r.latency_ms > 0.0);
         });
     }
-    // Stealing + background-load variant (the Fig. 11 configuration).
-    let g = zoo::googlenet();
-    let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
-    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
-    let cfg = SimConfig {
-        stealing: true,
-        contention: true,
-        background: vec![
-            BgLoad { unit: nnv12::sched::plan::UnitId::Little(0), utilization: 0.5 },
-            BgLoad { unit: nnv12::sched::plan::UnitId::Little(1), utilization: 0.5 },
-        ],
-    };
+    // Stealing + background-load variant (the Fig. 11 configuration),
+    // sharing the plan cache with the engine above.
+    let loaded = Engine::builder()
+        .device(dev)
+        .plan_cache(engine.plan_cache().clone())
+        .backend(SimBackend::with(SimConfig {
+            stealing: true,
+            contention: true,
+            background: vec![
+                BgLoad { unit: nnv12::sched::plan::UnitId::Little(0), utilization: 0.5 },
+                BgLoad { unit: nnv12::sched::plan::UnitId::Little(1), utilization: 0.5 },
+            ],
+        }))
+        .build();
+    let session = loaded.load(zoo::googlenet());
     b.case("simulate/googlenet+bg+steal", || {
-        let r = simulate(&dev, &s.set, &s.plan, &pricer, &cfg);
-        assert!(r.makespan > 0.0);
+        let r = session.run_cold().unwrap();
+        assert!(r.latency_ms > 0.0);
     });
     b.finish();
 }

@@ -1,52 +1,68 @@
-//! Quickstart: plan a cold inference for ResNet-50 on the paper's primary
-//! device, inspect the schedule, then (if `make artifacts` has run) do a
-//! real cold inference of the small AOT-compiled model through PJRT.
+//! Quickstart: the engine facade end to end — plan a cold inference for
+//! ResNet-50 on the paper's primary device, simulate it with contention +
+//! stealing, walk the warm-up ladder, then (with the `real-runtime`
+//! feature and `make artifacts`) do a real cold inference of the small
+//! AOT-compiled model through PJRT.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! (works under `--no-default-features` too; the real-mode coda is
+//! feature-gated)
 
-use nnv12::baselines::{cold_ms, Engine};
+use nnv12::baselines::{cold_ms, Engine as BaselineEngine};
 use nnv12::cost::CostModel;
 use nnv12::device::profiles;
-use nnv12::graph::manifest::Manifest;
+use nnv12::engine::{Engine, Phase};
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
-use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
-use nnv12::runtime::Runtime;
-use nnv12::sched::heuristic::{schedule, SchedulerConfig};
-use nnv12::sched::price::Pricer;
-use nnv12::sim::{simulate, trace, SimConfig};
-use nnv12::weights::read_f32;
+use nnv12::sim::trace;
 
 fn main() -> anyhow::Result<()> {
-    // --- 1. Offline decision stage (Fig. 4): generate the plan. ---
+    // --- 1. Offline decision stage (Fig. 4): one engine, one session. ---
     let dev = profiles::meizu_16t();
-    let g = zoo::resnet50();
-    let reg = Registry::full();
+    let engine = Engine::builder().device(dev.clone()).build();
     let t = nnv12::metrics::Timer::start();
-    let s = schedule(&dev, &g, &reg, &SchedulerConfig::kcp());
+    let session = engine.load(zoo::resnet50());
     println!(
         "planned {} ({} layers) for {} in {:.1} ms",
-        g.name,
-        g.len(),
+        session.name(),
+        session.graph().len(),
         dev.name,
         t.elapsed_ms()
     );
 
     // --- 2. Simulate the cold inference with contention + stealing. ---
-    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
-    let sim = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
-    let ncnn = cold_ms(Engine::Ncnn, &dev, &g);
-    let warm = CostModel::new(&dev).warm_ms(&g, &reg);
+    let sim = session.run_cold().expect("sim backend");
+    let ncnn = cold_ms(BaselineEngine::Ncnn, &dev, session.graph());
+    let warm = CostModel::new(&dev).warm_ms(session.graph(), &Registry::full());
     println!(
         "cold inference: NNV12 {:.1} ms vs ncnn {:.1} ms ({:.1}x speedup); warm bound {:.1} ms",
-        sim.makespan,
+        sim.latency_ms,
         ncnn,
-        ncnn / sim.makespan,
+        ncnn / sim.latency_ms,
         warm
     );
-    println!("{}", trace::gantt(&s.set, &sim.timings, 96));
+    println!("{}", trace::gantt(&session.scheduled().set, &sim.timings, 96));
 
-    // --- 3. Real mode: cold inference of the AOT model over PJRT. ---
+    // --- 3. The §3.5 lifecycle: cold → warming → warm. ---
+    loop {
+        let r = session.infer();
+        println!("  infer: {:>8.1} ms  {:?}", r.latency_ms, r.phase);
+        if r.phase == Phase::Warm {
+            break;
+        }
+    }
+
+    real_mode_demo()
+}
+
+/// Real mode: cold inference of the AOT model over PJRT.
+#[cfg(feature = "real-runtime")]
+fn real_mode_demo() -> anyhow::Result<()> {
+    use nnv12::graph::manifest::Manifest;
+    use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+    use nnv12::runtime::Runtime;
+    use nnv12::weights::read_f32;
+
     let art = std::path::Path::new("artifacts/tinynet");
     if !art.join("manifest.json").exists() {
         println!("(skipping real-mode demo: run `make artifacts` first)");
@@ -73,5 +89,11 @@ fn main() -> anyhow::Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     println!("output matches jax fixture to {maxerr:.2e}");
+    Ok(())
+}
+
+#[cfg(not(feature = "real-runtime"))]
+fn real_mode_demo() -> anyhow::Result<()> {
+    println!("(real-mode demo needs the `real-runtime` feature)");
     Ok(())
 }

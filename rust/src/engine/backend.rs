@@ -1,0 +1,254 @@
+//! Pluggable execution backends for the [`crate::engine::Engine`].
+//!
+//! The engine drives one lifecycle — plan, cold-execute, warm up — but
+//! *how* a planned model actually executes differs by deployment:
+//! simulated on a modelled device (the evaluation path), charged from a
+//! baseline engine's cost model (comparison arms), or executed for real
+//! through PJRT (the `real-runtime` feature). [`ExecBackend`] is that
+//! seam: callers pick a backend once at
+//! [`crate::engine::EngineBuilder::backend`] and never change code.
+
+use crate::baselines;
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::heuristic::{Scheduled, SchedulerConfig};
+use crate::sched::makespan::OpTiming;
+use crate::sched::price::Pricer;
+use crate::sim::{simulate, SimConfig};
+use crate::warm::{continuous_from, ContinuousReport};
+use crate::Ms;
+
+/// Everything a backend may need about the model it is running: the
+/// session's device view (recalibrated when the engine is calibrated),
+/// the graph, the kernel registry, and the scheduler knobs in force.
+pub struct BackendCtx<'a> {
+    pub dev: &'a DeviceProfile,
+    pub graph: &'a ModelGraph,
+    pub registry: &'a Registry,
+    pub sched: &'a SchedulerConfig,
+}
+
+/// Result of one cold inference executed by a backend.
+#[derive(Debug, Clone)]
+pub struct ColdOutcome {
+    /// End-to-end cold latency.
+    pub latency_ms: Ms,
+    /// Energy over the cold inference (0 when the backend does not model
+    /// energy).
+    pub energy_mj: f64,
+    /// Ops moved off their planned unit by workload stealing.
+    pub steals: usize,
+    /// Per-op timings indexed by `OpId` (empty when the backend does not
+    /// produce an op-level trace).
+    pub timings: Vec<OpTiming>,
+}
+
+/// How a planned model executes. Implementations must be deterministic in
+/// their inputs where they model latency (the plan store and the parity
+/// tests rely on it); a real backend reports measured wall time instead.
+pub trait ExecBackend {
+    /// Backend name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend consumes the NNV12 plan. When `false`
+    /// (baseline engines, which charge their own cost model), the engine
+    /// skips the kernel-combination search at load time and attaches a
+    /// cheap warm-default sequential plan to the session instead.
+    fn needs_plan(&self) -> bool {
+        true
+    }
+
+    /// Cold-makespan estimate of a planned model under this backend,
+    /// without executing it (the planner's objective view).
+    fn plan_makespan(&self, ctx: &BackendCtx, s: &Scheduled) -> Ms;
+
+    /// Execute one cold inference of the planned model.
+    fn run(&self, ctx: &BackendCtx, s: &Scheduled) -> Result<ColdOutcome, String>;
+
+    /// Latency ladder of `depth` consecutive inferences starting cold
+    /// (§3.5 kernel switching). The default derives it from the plan via
+    /// the continuous-inference model; backends with their own warm story
+    /// (baseline engines) override. Implementations should return at
+    /// least one rung (the cold latency); an empty ladder makes the
+    /// residency manager fall back to `warm_ms` for every inference.
+    fn warm_ladder(&self, ctx: &BackendCtx, s: &Scheduled, depth: usize) -> ContinuousReport {
+        continuous_from(ctx.dev, ctx.graph, ctx.registry, depth, s)
+    }
+}
+
+/// The simulated-device backend: executes plans on the discrete-event
+/// simulator with bandwidth contention and workload stealing
+/// ([`crate::sim`]). This is the default backend and the one every paper
+/// figure uses.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    pub cfg: SimConfig,
+}
+
+impl SimBackend {
+    /// NNV12 runtime defaults: stealing on, contention on.
+    pub fn nnv12() -> SimBackend {
+        SimBackend { cfg: SimConfig::nnv12() }
+    }
+
+    /// A simulator backend with explicit knobs (ablations, background
+    /// load experiments).
+    pub fn with(cfg: SimConfig) -> SimBackend {
+        SimBackend { cfg }
+    }
+}
+
+impl Default for SimBackend {
+    fn default() -> SimBackend {
+        SimBackend::nnv12()
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn plan_makespan(&self, _ctx: &BackendCtx, s: &Scheduled) -> Ms {
+        s.schedule.makespan
+    }
+
+    fn run(&self, ctx: &BackendCtx, s: &Scheduled) -> Result<ColdOutcome, String> {
+        let pricer = Pricer::new(ctx.dev, ctx.graph, &s.plan.choices, ctx.sched.shader_cache);
+        let r = simulate(ctx.dev, &s.set, &s.plan, &pricer, &self.cfg);
+        Ok(ColdOutcome {
+            latency_ms: r.makespan,
+            energy_mj: r.energy_mj,
+            steals: r.steals,
+            timings: r.timings,
+        })
+    }
+}
+
+/// A comparison backend that charges the latencies of a vanilla engine
+/// (ncnn, TFLite, …) from [`crate::baselines`]. It ignores the NNV12
+/// plan: the point is serving the same workload through a baseline for
+/// side-by-side numbers (Fig. 8/10, the serving comparisons).
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineBackend {
+    pub engine: baselines::Engine,
+}
+
+impl BaselineBackend {
+    pub fn new(engine: baselines::Engine) -> BaselineBackend {
+        BaselineBackend { engine }
+    }
+
+    pub fn ncnn() -> BaselineBackend {
+        BaselineBackend::new(baselines::Engine::Ncnn)
+    }
+}
+
+impl ExecBackend for BaselineBackend {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn needs_plan(&self) -> bool {
+        false
+    }
+
+    fn plan_makespan(&self, ctx: &BackendCtx, _s: &Scheduled) -> Ms {
+        baselines::cold_ms(self.engine, ctx.dev, ctx.graph)
+    }
+
+    fn run(&self, ctx: &BackendCtx, s: &Scheduled) -> Result<ColdOutcome, String> {
+        Ok(ColdOutcome {
+            latency_ms: self.plan_makespan(ctx, s),
+            energy_mj: 0.0,
+            steals: 0,
+            timings: Vec::new(),
+        })
+    }
+
+    fn warm_ladder(&self, ctx: &BackendCtx, _s: &Scheduled, _depth: usize) -> ContinuousReport {
+        let cold = baselines::cold_ms(self.engine, ctx.dev, ctx.graph);
+        let warm = baselines::warm_ms(self.engine, ctx.dev, ctx.graph);
+        ContinuousReport {
+            latencies: vec![cold, warm],
+            warm_ms: warm,
+            switched_layers: 0,
+        }
+    }
+}
+
+/// The real-execution backend: cold inference over AOT HLO artifacts
+/// through the PJRT runtime and the pipelined executor
+/// ([`crate::runtime`] + [`crate::pipeline`]). Artifacts for a model
+/// named `m` are expected under `<artifacts_root>/m` (as produced by
+/// `make artifacts`). `plan_makespan` still reports the modelled
+/// estimate; [`ExecBackend::run`] reports measured wall time.
+#[cfg(feature = "real-runtime")]
+pub struct RealBackend {
+    pub artifacts_root: std::path::PathBuf,
+    pub opts: crate::pipeline::RealRunOpts,
+    runtime: std::cell::RefCell<Option<crate::runtime::Runtime>>,
+}
+
+#[cfg(feature = "real-runtime")]
+impl RealBackend {
+    pub fn new(
+        artifacts_root: impl Into<std::path::PathBuf>,
+        opts: crate::pipeline::RealRunOpts,
+    ) -> RealBackend {
+        RealBackend {
+            artifacts_root: artifacts_root.into(),
+            opts,
+            runtime: std::cell::RefCell::new(None),
+        }
+    }
+}
+
+#[cfg(feature = "real-runtime")]
+impl ExecBackend for RealBackend {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn plan_makespan(&self, _ctx: &BackendCtx, s: &Scheduled) -> Ms {
+        s.schedule.makespan
+    }
+
+    fn run(&self, ctx: &BackendCtx, _s: &Scheduled) -> Result<ColdOutcome, String> {
+        use crate::graph::manifest::Manifest;
+        use crate::pipeline::run_cold;
+        use crate::runtime::Runtime;
+        use crate::weights::read_f32;
+
+        let dir = self.artifacts_root.join(&ctx.graph.name);
+        let manifest = Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+        let mut slot = self.runtime.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Runtime::cpu().map_err(|e| format!("{e:#}"))?);
+        }
+        let runtime = slot.as_ref().unwrap();
+        // Prefer the build-time fixture input; fall back to zeros shaped
+        // like the first real layer's input (artifact 0 is the input
+        // layer when present).
+        let input: Vec<f32> = match &manifest.fixture_input {
+            Some(p) => read_f32(&manifest.resolve(p)).map_err(|e| format!("{e:#}"))?,
+            None => {
+                let arts = &manifest.artifacts;
+                let first = arts
+                    .get(1)
+                    .or_else(|| arts.first())
+                    .ok_or_else(|| format!("{dir:?}: manifest has no layer artifacts"))?;
+                let n: i64 = first.in_dims.iter().product();
+                vec![0.0; n as usize]
+            }
+        };
+        let r = run_cold(&manifest, runtime, &input, &self.opts).map_err(|e| format!("{e:#}"))?;
+        Ok(ColdOutcome {
+            latency_ms: r.wall_ms,
+            energy_mj: 0.0,
+            steals: 0,
+            timings: Vec::new(),
+        })
+    }
+}

@@ -1,0 +1,499 @@
+//! The unified engine facade — the crate's primary public API.
+//!
+//! NNV12's pipeline (§3) is one lifecycle: plan kernels offline, read and
+//! transform (or cache-read) weights, execute the cold inference, then
+//! switch kernels toward steady-state warm speed. [`Engine`] owns the
+//! shared substrate of that lifecycle — device profile, kernel registry,
+//! scheduler configuration, the fingerprint-keyed (optionally
+//! disk-persistent) [`PlanCache`], and a pluggable [`ExecBackend`] — and
+//! hands out per-model [`Session`]s with an explicit state machine:
+//!
+//! ```
+//! use nnv12::device::profiles;
+//! use nnv12::engine::{Engine, Phase};
+//! use nnv12::graph::zoo;
+//!
+//! let engine = Engine::builder().device(profiles::meizu_16t()).build();
+//! let session = engine.load(zoo::tiny_net());
+//! let first = session.infer();
+//! assert_eq!(first.phase, Phase::Cold);
+//! let second = session.infer();
+//! assert!(second.latency_ms <= first.latency_ms);
+//! ```
+//!
+//! [`Engine::load`] plans the model (a [`PlanCache`] hit skips the
+//! search; with [`EngineBuilder::plan_store`] the hit survives the
+//! process — Fig. 4's offline decision stage as an on-disk artifact) and
+//! computes the §3.5 warm-up ladder. [`Session::infer`] then drives the
+//! cold → warming → warm lifecycle against the engine's memory budget:
+//! loading more models than fit evicts least-recently-used sessions,
+//! whose next inference is cold again — the multi-tenant environment of
+//! §1–2 that motivates the whole system.
+//!
+//! Execution is a backend choice, not a code path: [`SimBackend`] runs
+//! plans on the contention-aware device simulator (default),
+//! [`BaselineBackend`] charges a vanilla engine's latencies for
+//! comparison arms, and `RealBackend` (behind the `real-runtime` cargo
+//! feature) executes AOT artifacts through PJRT.
+
+mod backend;
+mod session;
+
+pub use backend::{BackendCtx, BaselineBackend, ColdOutcome, ExecBackend, SimBackend};
+#[cfg(feature = "real-runtime")]
+pub use backend::RealBackend;
+pub use session::{InferenceReport, Phase, Session};
+
+use std::cell::{Cell, RefCell};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::cache::PlanCache;
+use crate::sched::heuristic::{schedule, schedule_calibrated, Scheduled, SchedulerConfig};
+use crate::util::parallel::par_map;
+use crate::Ms;
+
+/// LRU residency state shared by an engine's sessions: `(session id,
+/// resident bytes, inferences since last cold start)`, most recently used
+/// last.
+struct Residency {
+    budget: u64,
+    mem_used: u64,
+    resident: Vec<(u64, u64, usize)>,
+}
+
+/// Shared engine internals ([`Engine`] and every [`Session`] hold an
+/// `Rc` of this — the engine/session pair is deliberately
+/// single-threaded, since backends may own thread-bound resources like a
+/// PJRT client; only the [`PlanCache`] crosses threads, in
+/// [`Engine::load_all`]'s planning fan-out).
+pub(crate) struct Inner {
+    pub(crate) dev: DeviceProfile,
+    pub(crate) registry: Registry,
+    pub(crate) registry_tag: &'static str,
+    pub(crate) sched: SchedulerConfig,
+    pub(crate) warmup_depth: usize,
+    pub(crate) calibrated: bool,
+    pub(crate) plan_cache: Arc<PlanCache>,
+    pub(crate) backend: Box<dyn ExecBackend>,
+    residency: RefCell<Residency>,
+    next_session: Cell<u64>,
+}
+
+impl Inner {
+    /// Charge one inference for session `id`: warm-ladder latency when
+    /// resident, otherwise evict-until-fit and charge cold.
+    pub(crate) fn charge(
+        &self,
+        id: u64,
+        bytes: u64,
+        ladder: &[Ms],
+        warm_ms: Ms,
+    ) -> InferenceReport {
+        let mut r = self.residency.borrow_mut();
+        if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
+            let (i, b, count) = r.resident.remove(pos);
+            // Rung `count + 1` of the ladder; past the end the session is
+            // at steady state (so a depth-1 ladder never re-bills its cold
+            // rung to warm inferences).
+            let idx = count + 1;
+            let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
+            r.resident.push((i, b, count + 1));
+            let phase = if latency.to_bits() == warm_ms.to_bits() {
+                Phase::Warm
+            } else {
+                Phase::Warming { n: idx }
+            };
+            return InferenceReport { latency_ms: latency, phase, evictions: 0 };
+        }
+        // Cold path: evict LRU sessions until this one fits (a model
+        // larger than the whole budget still runs, transiently
+        // overcommitting like a real OS would).
+        let mut evictions = 0;
+        while r.mem_used + bytes > r.budget && !r.resident.is_empty() {
+            let (_, b, _) = r.resident.remove(0);
+            r.mem_used -= b;
+            evictions += 1;
+        }
+        r.mem_used += bytes;
+        r.resident.push((id, bytes, 0));
+        // A well-formed ladder always has a cold rung; a custom backend
+        // returning an empty one degrades to warm pricing rather than
+        // panicking inside the residency manager.
+        let latency = ladder.first().copied().unwrap_or(warm_ms);
+        InferenceReport { latency_ms: latency, phase: Phase::Cold, evictions }
+    }
+
+    pub(crate) fn is_resident(&self, id: u64) -> bool {
+        self.residency
+            .borrow()
+            .resident
+            .iter()
+            .any(|(i, _, _)| *i == id)
+    }
+
+    /// Drop a session's residency (called on [`Session`] drop).
+    pub(crate) fn release(&self, id: u64) {
+        let mut r = self.residency.borrow_mut();
+        if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
+            let (_, b, _) = r.resident.remove(pos);
+            r.mem_used -= b;
+        }
+    }
+}
+
+/// The engine: shared planning/execution substrate + session factory.
+/// Cheap to clone (all state is behind an `Rc`); clones and their
+/// sessions share the plan cache and the residency budget.
+#[derive(Clone)]
+pub struct Engine {
+    inner: Rc<Inner>,
+}
+
+impl Engine {
+    /// Start configuring an engine. [`EngineBuilder::device`] is the only
+    /// required call.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Plan `graph` and open a session: resolves the plan (cache →
+    /// disk store → scheduler) and registers the session with the
+    /// residency manager (not yet resident — the first
+    /// [`Session::infer`] is cold). The §3.5 warm-up ladder is computed
+    /// through the backend lazily, on first use.
+    pub fn load(&self, graph: ModelGraph) -> Session {
+        let (scheduled, dev) = self.plan_with_dev(&graph);
+        self.open_session(graph, scheduled, dev)
+    }
+
+    /// [`Engine::load`] for a fleet of models, planning them in parallel
+    /// (multi-model startup planning is embarrassingly parallel; the
+    /// shared [`PlanCache`] makes repeats free).
+    pub fn load_all(&self, graphs: Vec<ModelGraph>) -> Vec<Session> {
+        let inner = &self.inner;
+        let sched_cfg = self.effective_sched();
+        // The closures capture only `Sync` pieces of the engine (never the
+        // backend, which is allowed to be single-threaded): only planning
+        // fans out across cores; warm-up ladders stay lazy per session.
+        let planned: Vec<(Arc<Scheduled>, DeviceProfile)> =
+            if inner.calibrated && inner.backend.needs_plan() {
+                let (dev, registry) = (&inner.dev, &inner.registry);
+                let sched = &sched_cfg;
+                par_map(&graphs, move |_, g| {
+                    let (s, d) = schedule_calibrated(dev, g, registry, sched);
+                    (Arc::new(s), d)
+                })
+            } else {
+                let (dev, registry, tag, cache) = (
+                    &inner.dev,
+                    &inner.registry,
+                    inner.registry_tag,
+                    &inner.plan_cache,
+                );
+                let sched = &sched_cfg;
+                par_map(&graphs, move |_, g| {
+                    (cache.get_or_plan(dev, g, registry, sched, tag), dev.clone())
+                })
+            };
+        graphs
+            .into_iter()
+            .zip(planned)
+            .map(|(g, (s, d))| self.open_session(g, s, d))
+            .collect()
+    }
+
+    /// The plan for `graph` under this engine's configuration, via the
+    /// plan cache (and disk store, if configured).
+    pub fn plan(&self, graph: &ModelGraph) -> Arc<Scheduled> {
+        self.plan_with_dev(graph).0
+    }
+
+    /// Run the scheduler from scratch, bypassing the cache and store —
+    /// offline plan generation and planner benchmarks.
+    pub fn plan_fresh(&self, graph: &ModelGraph) -> Scheduled {
+        let inner = &self.inner;
+        schedule(&inner.dev, graph, &inner.registry, &inner.sched)
+    }
+
+    /// Scheduler config actually used at load time: the configured one,
+    /// or — for backends that never execute the plan
+    /// ([`ExecBackend::needs_plan`] is false) — a search-free warm-default
+    /// sequential config, so baseline arms don't pay the
+    /// kernel-combination search for a plan nothing reads.
+    fn effective_sched(&self) -> SchedulerConfig {
+        let inner = &self.inner;
+        if inner.backend.needs_plan() {
+            inner.sched.clone()
+        } else {
+            SchedulerConfig {
+                kernel_selection: false,
+                weight_cache: false,
+                pipeline: false,
+                max_outer_passes: 0,
+                ..inner.sched.clone()
+            }
+        }
+    }
+
+    fn plan_with_dev(&self, graph: &ModelGraph) -> (Arc<Scheduled>, DeviceProfile) {
+        let inner = &self.inner;
+        if inner.calibrated && inner.backend.needs_plan() {
+            let (s, d) = schedule_calibrated(&inner.dev, graph, &inner.registry, &inner.sched);
+            (Arc::new(s), d)
+        } else {
+            let s = inner.plan_cache.get_or_plan(
+                &inner.dev,
+                graph,
+                &inner.registry,
+                &self.effective_sched(),
+                inner.registry_tag,
+            );
+            (s, inner.dev.clone())
+        }
+    }
+
+    fn open_session(
+        &self,
+        graph: ModelGraph,
+        scheduled: Arc<Scheduled>,
+        dev: DeviceProfile,
+    ) -> Session {
+        let inner = &self.inner;
+        // Resident-set size: weights + transformed layouts + workspace.
+        let resident_bytes = graph.weight_bytes() + graph.weight_bytes() / 4;
+        let id = inner.next_session.get();
+        inner.next_session.set(id + 1);
+        Session {
+            engine: inner.clone(),
+            id,
+            graph,
+            dev,
+            scheduled,
+            ladder: std::cell::OnceCell::new(),
+            resident_bytes,
+        }
+    }
+
+    /// The shared plan cache (hit/miss/disk-hit counters live here).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.inner.plan_cache
+    }
+
+    /// The device this engine targets.
+    pub fn device(&self) -> &DeviceProfile {
+        &self.inner.dev
+    }
+
+    /// The kernel registry sessions plan against.
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
+    }
+
+    /// The backend executing this engine's sessions.
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend.name()
+    }
+
+    /// Bytes of the residency budget currently in use.
+    pub fn mem_used(&self) -> u64 {
+        self.inner.residency.borrow().mem_used
+    }
+
+    /// Evict every resident session (their next inference is cold).
+    pub fn evict_all(&self) {
+        let mut r = self.inner.residency.borrow_mut();
+        r.resident.clear();
+        r.mem_used = 0;
+    }
+}
+
+/// Builder for [`Engine`]. Defaults: full kernel registry, `kcp`
+/// scheduler config, simulated execution ([`SimBackend::nnv12`]),
+/// unbounded residency budget, warm-up ladder depth 4, in-memory plan
+/// cache, no calibration.
+pub struct EngineBuilder {
+    dev: Option<DeviceProfile>,
+    registry: Registry,
+    sched: SchedulerConfig,
+    warmup_depth: usize,
+    memory_budget: u64,
+    calibrated: bool,
+    backend: Option<Box<dyn ExecBackend>>,
+    plan_cache: Option<Arc<PlanCache>>,
+    plan_store: Option<PathBuf>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            dev: None,
+            registry: Registry::full(),
+            sched: SchedulerConfig::kcp(),
+            warmup_depth: 4,
+            memory_budget: u64::MAX,
+            calibrated: false,
+            backend: None,
+            plan_cache: None,
+            plan_store: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Target device (required).
+    pub fn device(mut self, dev: DeviceProfile) -> EngineBuilder {
+        self.dev = Some(dev);
+        self
+    }
+
+    /// Kernel registry (default: [`Registry::full`]).
+    pub fn registry(mut self, registry: Registry) -> EngineBuilder {
+        self.registry = registry;
+        self
+    }
+
+    /// Scheduler configuration (default: [`SchedulerConfig::kcp`]).
+    pub fn sched(mut self, cfg: SchedulerConfig) -> EngineBuilder {
+        self.sched = cfg;
+        self
+    }
+
+    /// Length of the warm-up latency ladder computed per session
+    /// (default 4: cold, 2nd, 3rd, steady).
+    pub fn warmup_depth(mut self, depth: usize) -> EngineBuilder {
+        self.warmup_depth = depth.max(1);
+        self
+    }
+
+    /// Memory budget for resident sessions, bytes (default unbounded).
+    pub fn memory_budget(mut self, bytes: u64) -> EngineBuilder {
+        self.memory_budget = bytes;
+        self
+    }
+
+    /// Re-profile prep-parallelism degrees under the contention-aware
+    /// simulator at plan time (§3.3 calibration; used by the paper's
+    /// end-to-end figures). Calibrated plans bypass the plan cache: the
+    /// chosen device view is part of the answer.
+    pub fn calibrated(mut self, on: bool) -> EngineBuilder {
+        self.calibrated = on;
+        self
+    }
+
+    /// Execution backend (default: [`SimBackend::nnv12`]).
+    pub fn backend(self, backend: impl ExecBackend + 'static) -> EngineBuilder {
+        self.backend_box(Box::new(backend))
+    }
+
+    /// [`EngineBuilder::backend`] for an already-boxed backend.
+    pub fn backend_box(mut self, backend: Box<dyn ExecBackend>) -> EngineBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Share a plan cache with other engines (ablation arms, engine
+    /// comparisons, restarts).
+    pub fn plan_cache(mut self, cache: Arc<PlanCache>) -> EngineBuilder {
+        self.plan_cache = Some(cache);
+        self
+    }
+
+    /// Persist plans to `dir` ([`PlanCache::persistent`]): a later engine
+    /// — including one in a fresh process — pointed at the same directory
+    /// skips planning. Overrides [`EngineBuilder::plan_cache`].
+    pub fn plan_store(mut self, dir: impl Into<PathBuf>) -> EngineBuilder {
+        self.plan_store = Some(dir.into());
+        self
+    }
+
+    /// Build the engine.
+    ///
+    /// Panics if no device was set or the plan-store directory cannot be
+    /// created; use [`EngineBuilder::try_build`] to handle a bad store
+    /// path gracefully.
+    pub fn build(self) -> Engine {
+        self.try_build()
+            .unwrap_or_else(|e| panic!("Engine::builder(): plan store: {e}"))
+    }
+
+    /// [`EngineBuilder::build`], surfacing plan-store I/O errors instead
+    /// of panicking. Still panics if no device was set (a programming
+    /// error, not an environment one).
+    pub fn try_build(self) -> std::io::Result<Engine> {
+        let dev = self
+            .dev
+            .expect("Engine::builder(): .device(..) is required");
+        let plan_cache = match self.plan_store {
+            Some(dir) => Arc::new(PlanCache::persistent(dir)?),
+            None => self.plan_cache.unwrap_or_default(),
+        };
+        let registry_tag = if self.registry.warm_only {
+            "warm-default"
+        } else {
+            "full"
+        };
+        Ok(Engine {
+            inner: Rc::new(Inner {
+                dev,
+                registry: self.registry,
+                registry_tag,
+                sched: self.sched,
+                warmup_depth: self.warmup_depth,
+                calibrated: self.calibrated,
+                plan_cache,
+                backend: self.backend.unwrap_or_else(|| Box::new(SimBackend::nnv12())),
+                residency: RefCell::new(Residency {
+                    budget: self.memory_budget,
+                    mem_used: 0,
+                    resident: Vec::new(),
+                }),
+                next_session: Cell::new(0),
+            }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+
+    #[test]
+    fn builder_defaults_and_load() {
+        let engine = Engine::builder().device(profiles::meizu_16t()).build();
+        assert_eq!(engine.backend_name(), "sim");
+        let s = engine.load(zoo::tiny_net());
+        assert_eq!(s.name(), "tinynet");
+        assert!(s.cold_ms() > s.warm_ms());
+        assert!(!s.is_resident());
+        assert_eq!(engine.plan_cache().misses(), 1);
+    }
+
+    #[test]
+    fn cloned_engines_share_state() {
+        let a = Engine::builder().device(profiles::meizu_16t()).build();
+        let b = a.clone();
+        let s = a.load(zoo::tiny_net());
+        assert_eq!(b.plan_cache().misses(), 1);
+        s.infer();
+        assert_eq!(b.mem_used(), s.resident_bytes());
+        b.evict_all();
+        assert!(!s.is_resident());
+    }
+
+    #[test]
+    fn dropping_a_session_releases_residency() {
+        let engine = Engine::builder().device(profiles::meizu_16t()).build();
+        let s = engine.load(zoo::tiny_net());
+        s.infer();
+        assert!(engine.mem_used() > 0);
+        drop(s);
+        assert_eq!(engine.mem_used(), 0);
+    }
+}

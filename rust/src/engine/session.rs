@@ -1,0 +1,163 @@
+//! Per-model sessions: the explicit cold → warming → warm lifecycle.
+
+use std::cell::OnceCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::engine::backend::{BackendCtx, ColdOutcome};
+use crate::engine::Inner;
+use crate::graph::ModelGraph;
+use crate::sched::heuristic::Scheduled;
+use crate::sched::plan::Plan;
+use crate::warm::ContinuousReport;
+use crate::Ms;
+
+/// Where a session is in its warm-up lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// The model was not resident: this inference paid the full cold path
+    /// (reads, transforms/cache reads, pipelined execution).
+    Cold,
+    /// The `n`-th inference after a cold start, still above steady state
+    /// while §3.5 kernel switching completes (`n` starts at 1).
+    Warming { n: usize },
+    /// Steady-state warm inference.
+    Warm,
+}
+
+/// Outcome of one [`Session::infer`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferenceReport {
+    pub latency_ms: Ms,
+    pub phase: Phase,
+    /// Sessions evicted from residency to make room for this one.
+    pub evictions: usize,
+}
+
+/// A loaded model with its plan, warm-up ladder, and residency identity.
+///
+/// Created by [`crate::engine::Engine::load`]; holds a handle to its
+/// engine, so sessions of one engine share the residency budget — an
+/// inference on one session can evict another (the next inference on the
+/// evicted session is [`Phase::Cold`] again). Dropping a session releases
+/// its residency.
+pub struct Session {
+    pub(crate) engine: Rc<Inner>,
+    pub(crate) id: u64,
+    pub(crate) graph: ModelGraph,
+    /// The device view this session was planned against (differs from the
+    /// engine's device only when calibration is on).
+    pub(crate) dev: DeviceProfile,
+    pub(crate) scheduled: Arc<Scheduled>,
+    /// §3.5 warm-up ladder, computed through the backend on first use
+    /// (plan-only consumers — `run_cold`, plan inspection — never pay for
+    /// it).
+    pub(crate) ladder: OnceCell<ContinuousReport>,
+    pub(crate) resident_bytes: u64,
+}
+
+impl Session {
+    /// The continuous-inference model for this session (lazy).
+    fn ladder_report(&self) -> &ContinuousReport {
+        self.ladder.get_or_init(|| {
+            let ctx = BackendCtx {
+                dev: &self.dev,
+                graph: &self.graph,
+                registry: &self.engine.registry,
+                sched: &self.engine.sched,
+            };
+            self.engine
+                .backend
+                .warm_ladder(&ctx, &self.scheduled, self.engine.warmup_depth)
+        })
+    }
+
+    /// One inference request against this session: makes the model
+    /// resident (evicting LRU sessions as needed), charges cold or
+    /// warm-ladder latency, and reports the lifecycle phase.
+    pub fn infer(&self) -> InferenceReport {
+        let ladder = self.ladder_report();
+        self.engine
+            .charge(self.id, self.resident_bytes, &ladder.latencies, ladder.warm_ms)
+    }
+
+    /// Execute one full cold inference through the engine's backend
+    /// (simulated with contention/stealing, or real execution), without
+    /// touching residency state.
+    pub fn run_cold(&self) -> Result<ColdOutcome, String> {
+        let ctx = BackendCtx {
+            dev: &self.dev,
+            graph: &self.graph,
+            registry: &self.engine.registry,
+            sched: &self.engine.sched,
+        };
+        self.engine.backend.run(&ctx, &self.scheduled)
+    }
+
+    /// The model graph this session serves.
+    pub fn graph(&self) -> &ModelGraph {
+        &self.graph
+    }
+
+    /// Model name (the residency/report key).
+    pub fn name(&self) -> &str {
+        &self.graph.name
+    }
+
+    /// The planned schedule (plan + op set + evaluated timings).
+    pub fn scheduled(&self) -> &Arc<Scheduled> {
+        &self.scheduled
+    }
+
+    /// The kernel scheduling plan.
+    pub fn plan(&self) -> &Plan {
+        &self.scheduled.plan
+    }
+
+    /// Device view the plan targets (recalibrated when the engine was
+    /// built with calibration).
+    pub fn device(&self) -> &DeviceProfile {
+        &self.dev
+    }
+
+    /// Latency ladder `[cold, 2nd, …, steady warm]` of the §3.5
+    /// continuous-inference model.
+    pub fn ladder(&self) -> &[Ms] {
+        &self.ladder_report().latencies
+    }
+
+    /// Planner's cold-latency estimate (first rung of the ladder; falls
+    /// back to the warm latency if a custom backend returned no rungs).
+    pub fn cold_ms(&self) -> Ms {
+        let r = self.ladder_report();
+        r.latencies.first().copied().unwrap_or(r.warm_ms)
+    }
+
+    /// Steady-state warm latency.
+    pub fn warm_ms(&self) -> Ms {
+        self.ladder_report().warm_ms
+    }
+
+    /// Layers whose kernel is switched after cold inference (§3.5).
+    pub fn switched_layers(&self) -> usize {
+        self.ladder_report().switched_layers
+    }
+
+    /// Resident-set size charged against the engine's memory budget.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Whether the session currently occupies residency (a cold start is
+    /// due when false).
+    pub fn is_resident(&self) -> bool {
+        self.engine.is_resident(self.id)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.engine.release(self.id);
+    }
+}

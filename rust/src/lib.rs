@@ -1,49 +1,81 @@
 //! # NNV12 — boosting DNN cold inference on edge devices
 //!
-//! Reproduction of the MobiSys'23 NNV12 system as a three-layer
-//! Rust + JAX + Pallas stack. Cold inference — reading weights from disk,
-//! transforming them into a kernel's execution-ready layout, and executing
-//! the model — is optimized through three knobs (§3.1 of the paper):
+//! Reproduction of the MobiSys'23 NNV12 system. Cold inference — reading
+//! weights from disk, transforming them into a kernel's execution-ready
+//! layout, and executing the model — is optimized through three knobs
+//! (§3.1 of the paper): cold-aware **kernel selection**,
+//! **post-transformed-weights caching**, and **pipelined** preparation
+//! across the asymmetric cores of an edge SoC.
 //!
-//! 1. **Kernel selection** — every operator has many kernel implementations
-//!    (ncnn ships 28 for convolution alone, Fig. 5); the fastest kernel for
-//!    *warm* inference is often not the fastest end-to-end in *cold*
-//!    inference because of its weight-transformation cost
-//!    ([`kernels`]).
-//! 2. **Post-transformed-weights caching** — the transformation can be
-//!    bypassed by caching transformed weights on disk, trading disk I/O for
-//!    memory-bound transformation work ([`weights`]).
-//! 3. **Pipelined inference** — per-layer read/transform/execute operations
-//!    are pipelined across the asymmetric cores of an edge SoC
-//!    ([`sched`], [`sim`], [`pipeline`]).
+//! ## Entry point: [`engine::Engine`] and [`engine::Session`]
 //!
-//! The crate is organized bottom-up:
+//! The whole lifecycle — plan kernels, read/transform or cache weights,
+//! execute cold, switch kernels toward warm speed — hangs off one facade:
+//!
+//! ```
+//! use nnv12::device::profiles;
+//! use nnv12::engine::{Engine, Phase};
+//! use nnv12::graph::zoo;
+//!
+//! // An engine owns the shared substrate: device, kernel registry,
+//! // scheduler config, plan cache, and an execution backend.
+//! let engine = Engine::builder()
+//!     .device(profiles::meizu_16t())
+//!     .memory_budget(64 << 20)
+//!     .build();
+//!
+//! // Loading a model plans it (cached; optionally disk-persistent via
+//! // `.plan_store(dir)`) and computes its §3.5 warm-up ladder.
+//! let session = engine.load(zoo::tiny_net());
+//!
+//! // Sessions expose the explicit cold → warming → warm state machine.
+//! let report = session.infer();
+//! assert_eq!(report.phase, Phase::Cold);
+//! assert!(session.infer().latency_ms <= report.latency_ms);
+//! ```
+//!
+//! Execution is pluggable ([`engine::ExecBackend`]): the default
+//! [`engine::SimBackend`] runs plans on the contention-aware device
+//! simulator; [`engine::BaselineBackend`] charges a vanilla engine's
+//! latencies for comparison arms; `engine::RealBackend` (behind the
+//! default-on `real-runtime` cargo feature, the only thing that pulls in
+//! the `xla` crate) executes AOT HLO artifacts through PJRT. Everything
+//! above compiles and runs under `--no-default-features`.
+//!
+//! ## Layers underneath
 //!
 //! * [`util`] — in-tree substrates for the offline build environment
-//!   (JSON, CLI, statistics, PRNG, property testing, bench harness).
+//!   (JSON, CLI, statistics, PRNG, property testing, bench harness,
+//!   scoped parallel map).
 //! * [`graph`] — model-graph IR plus builders for the paper's 12 models.
 //! * [`kernels`] — kernel registry, the Fig. 5 selection tree, per-family
 //!   cost functions.
 //! * [`device`] — edge-device profiles (Meizu 16T, Pixel 5, Redmi 9,
 //!   Meizu 18 Pro, Jetson TX2, Jetson Nano).
 //! * [`cost`] — the per-operation latency model `T(op, core, threads)`.
-//! * [`sched`] — the §3.2 scheduling problem and the §3.3 heuristic
-//!   scheduler (Algorithm 1), plus an exact brute-force oracle.
+//! * [`sched`] — the §3.2 scheduling problem, the §3.3 heuristic
+//!   scheduler (Algorithm 1) with its incremental plan-search engine, and
+//!   the fingerprint-keyed, disk-persistent plan cache.
 //! * [`baselines`] — ncnn / TFLite / AsyMo / TensorFlow-GPU engine models.
 //! * [`sim`] — discrete-event simulator of the device executing a plan,
 //!   with bandwidth contention, background load, and workload stealing.
 //! * [`transform`] — real weight-transformation math (im2col packing,
 //!   Winograd F(2,3), pack4) used on the real execution path.
 //! * [`weights`] — raw weight store and the post-transform disk cache.
-//! * [`runtime`] — PJRT client wrapper: loads AOT HLO-text artifacts
-//!   produced by `python/compile/aot.py` and executes them.
-//! * [`pipeline`] — real-thread pipelined executor over the runtime.
-//! * [`serving`] — multi-tenant serving front: request router and LRU model
-//!   residency manager (cold inferences are induced by eviction).
-//! * [`warm`] — §3.5 kernel switching for subsequent warm inference.
+//! * [`runtime`] (`real-runtime`) — PJRT client wrapper: loads AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py`.
+//! * [`pipeline`] (`real-runtime`) — real-thread pipelined executor over
+//!   the runtime.
+//! * [`engine`] — **the facade**: `Engine`/`Session` lifecycle over
+//!   pluggable backends and the persistent plan store.
+//! * [`serving`] — multi-tenant serving front over the engine: request
+//!   router, workload generator (cold inferences are induced by
+//!   eviction).
+//! * [`warm`] — §3.5 kernel switching for subsequent warm inference (the
+//!   primitive behind session warm-up ladders).
 //! * [`metrics`] — timing, summaries, and the energy model.
 //! * [`report`] — regenerates every table and figure of the paper's
-//!   evaluation.
+//!   evaluation through the facade.
 
 pub mod util;
 pub mod graph;
@@ -55,8 +87,11 @@ pub mod baselines;
 pub mod sim;
 pub mod transform;
 pub mod weights;
+#[cfg(feature = "real-runtime")]
 pub mod runtime;
+#[cfg(feature = "real-runtime")]
 pub mod pipeline;
+pub mod engine;
 pub mod serving;
 pub mod warm;
 pub mod metrics;

@@ -1,4 +1,5 @@
-//! `repro` — the NNV12 coordinator CLI.
+//! `repro` — the NNV12 coordinator CLI, built on the [`nnv12::engine`]
+//! facade.
 //!
 //! Subcommands:
 //!   plan      — generate + print a kernel scheduling plan for a model
@@ -7,10 +8,11 @@
 //!   kernels   — list kernel candidates for a conv configuration
 //!   serve     — run the multi-tenant serving workload (simulated device)
 //!   cold      — real-mode cold inference over PJRT artifacts
+//!               (needs the `real-runtime` feature, on by default)
 //!   devices   — list device profiles
 //!
 //! Examples:
-//!   repro plan --model resnet50 --device meizu16t
+//!   repro plan --model resnet50 --device meizu16t --store plans/
 //!   repro report fig8
 //!   repro cold --artifacts artifacts/tinynet --workers 2 --cache
 //!   repro serve --device meizu16t --requests 200 --budget-mb 48
@@ -18,16 +20,13 @@
 use anyhow::{anyhow, bail, Result};
 
 use nnv12::device::profiles;
-use nnv12::graph::manifest::Manifest;
+use nnv12::engine::{Engine, SimBackend};
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
-use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
 use nnv12::report;
-use nnv12::runtime::Runtime;
-use nnv12::sched::heuristic::{schedule, SchedulerConfig};
-use nnv12::sched::price::Pricer;
+use nnv12::sched::heuristic::SchedulerConfig;
 use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
-use nnv12::sim::{simulate, trace, SimConfig};
+use nnv12::sim::{trace, SimConfig};
 use nnv12::util::cli::Args;
 
 fn main() {
@@ -67,7 +66,7 @@ fn print_help() {
         "repro — NNV12 cold-inference engine (MobiSys'23 reproduction)\n\
          \n\
          subcommands:\n\
-           plan      --model M --device D [--no-pipeline]   print a scheduling plan\n\
+           plan      --model M --device D [--no-pipeline] [--store DIR]  print a scheduling plan\n\
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
            report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
@@ -87,53 +86,70 @@ fn model_of(args: &Args) -> Result<nnv12::graph::ModelGraph> {
     zoo::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
 }
 
+/// Engine for one CLI invocation; `--store DIR` makes plans persistent
+/// across invocations (a second `repro plan` of the same problem skips
+/// the search).
+fn engine_of(args: &Args, cfg: SchedulerConfig) -> Result<Engine> {
+    let mut b = Engine::builder().device(device_of(args)?).sched(cfg);
+    if let Some(dir) = args.get("store") {
+        b = b.plan_store(dir);
+    }
+    b.try_build()
+        .map_err(|e| anyhow!("cannot open plan store: {e}"))
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
-    let dev = device_of(args)?;
-    let g = model_of(args)?;
     let cfg = SchedulerConfig {
         pipeline: !args.has("no-pipeline"),
         ..SchedulerConfig::default()
     };
+    let engine = engine_of(args, cfg)?;
     let t = nnv12::metrics::Timer::start();
-    let s = schedule(&dev, &g, &Registry::full(), &cfg);
+    let session = engine.load(model_of(args)?);
+    let s = session.scheduled();
     println!(
-        "model={} device={} layers={} plan generated in {:.1} ms",
-        g.name,
-        dev.name,
-        g.len(),
-        t.elapsed_ms()
+        "model={} device={} layers={} plan generated in {:.1} ms{}",
+        session.name(),
+        engine.device().name,
+        session.graph().len(),
+        t.elapsed_ms(),
+        if engine.plan_cache().disk_hits() > 0 { " (plan-store hit)" } else { "" }
     );
     println!(
-        "estimated cold latency: {:.2} ms (cache storage {})",
+        "estimated cold latency: {:.2} ms (cache storage {}, warm {:.2} ms)",
         s.schedule.makespan,
-        nnv12::util::table::fmt_bytes(s.plan.cache_bytes(&g))
+        nnv12::util::table::fmt_bytes(session.plan().cache_bytes(session.graph())),
+        session.warm_ms()
     );
     if args.has("verbose") {
-        println!("{}", s.plan.to_json(&g).to_pretty());
+        println!("{}", session.plan().to_json(session.graph()).to_pretty());
     }
     println!("{}", trace::gantt(&s.set, &s.schedule.timings, 100));
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let dev = device_of(args)?;
-    let g = model_of(args)?;
-    let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
-    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
     let bg_u = args.get_f64("bg-little", 0.0).map_err(|e| anyhow!(e))?;
-    let mut cfg = SimConfig::nnv12();
+    let mut sim_cfg = SimConfig::nnv12();
     if bg_u > 0.0 {
-        cfg.background = vec![
+        sim_cfg.background = vec![
             nnv12::sim::BgLoad { unit: nnv12::sched::plan::UnitId::Little(0), utilization: bg_u },
             nnv12::sim::BgLoad { unit: nnv12::sched::plan::UnitId::Little(1), utilization: bg_u },
         ];
     }
-    let r = simulate(&dev, &s.set, &s.plan, &pricer, &cfg);
+    let engine = Engine::builder()
+        .device(device_of(args)?)
+        .backend(SimBackend::with(sim_cfg))
+        .build();
+    let session = engine.load(model_of(args)?);
+    let r = session
+        .run_cold()
+        .map_err(|e| anyhow!("simulation failed: {e}"))?;
     println!(
         "simulated cold latency: {:.2} ms (steals={}, energy={:.0} mJ)",
-        r.makespan, r.steals, r.energy_mj
+        r.latency_ms, r.steals, r.energy_mj
     );
-    println!("{}", trace::gantt(&s.set, &r.timings, 100));
+    println!("{}", trace::gantt(&session.scheduled().set, &r.timings, 100));
     Ok(())
 }
 
@@ -193,6 +209,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .iter()
             .map(|m| zoo::by_name(m).unwrap())
             .collect();
+    // The serving front is itself a thin layer over Engine/Session — it
+    // adds the request surface and per-model accounting used here.
     let mut router = Router::new(
         &dev,
         models,
@@ -223,7 +241,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "real-runtime")]
 fn cmd_cold(args: &Args) -> Result<()> {
+    use nnv12::graph::manifest::Manifest;
+    use nnv12::pipeline::{run_cold, RealRunOpts, VariantPref};
+    use nnv12::runtime::Runtime;
+
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts/tinynet"));
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::cpu()?;
@@ -255,6 +278,14 @@ fn cmd_cold(args: &Args) -> Result<()> {
     );
     println!("output[0..4] = {:?}", &r.output[..r.output.len().min(4)]);
     Ok(())
+}
+
+#[cfg(not(feature = "real-runtime"))]
+fn cmd_cold(_args: &Args) -> Result<()> {
+    bail!(
+        "the 'cold' subcommand needs real PJRT execution; rebuild with the \
+         default 'real-runtime' feature enabled"
+    )
 }
 
 fn cmd_devices() -> Result<()> {

@@ -4,16 +4,19 @@
 //! values included where the paper states them, so EXPERIMENTS.md can
 //! record paper-vs-measured side by side.
 
+use std::sync::Arc;
+
 use crate::baselines::{cold_breakdown, cold_ms, cold_ms_with_cores, warm_ms, Engine};
 use crate::cost::CostModel;
 use crate::device::{profiles, CoreClass, DeviceProfile};
+use crate::engine::{Engine as Nnv12Engine, SimBackend};
 use crate::graph::zoo;
 use crate::kernels::{Kernel, KernelFamily, Registry};
 use crate::metrics::{energy_mj, Timer};
-use crate::sched::heuristic::{schedule, SchedulerConfig};
+use crate::sched::cache::PlanCache;
+use crate::sched::heuristic::SchedulerConfig;
 use crate::sched::plan::UnitId;
-use crate::sched::price::Pricer;
-use crate::sim::{simulate, BgLoad, SimConfig};
+use crate::sim::{BgLoad, SimConfig};
 use crate::util::stats::geomean;
 use crate::util::table::{fmt_bytes, fmt_ms, fmt_x, Table};
 
@@ -21,10 +24,12 @@ use crate::util::table::{fmt_bytes, fmt_ms, fmt_x, Table};
 /// executed by the contention-aware simulator with workload stealing on).
 pub fn nnv12_cold_ms(dev: &DeviceProfile, model: &str) -> f64 {
     let g = zoo::by_name(model).expect("unknown model");
-    let (s, d) =
-        crate::sched::heuristic::schedule_calibrated(dev, &g, &Registry::full(), &SchedulerConfig::kcp());
-    let pricer = Pricer::new(&d, &g, &s.plan.choices, true);
-    simulate(&d, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan
+    let engine = Nnv12Engine::builder().device(dev.clone()).calibrated(true).build();
+    engine
+        .load(g)
+        .run_cold()
+        .expect("sim backend is infallible")
+        .latency_ms
 }
 
 /// Fig. 2 — cold vs warm inference gap on vanilla engines.
@@ -225,14 +230,12 @@ pub fn fig9() -> Table {
             let mut sub = dev.clone();
             sub.n_big = nb;
             sub.n_little = nl;
-            let (s, subd) = crate::sched::heuristic::schedule_calibrated(
-                &sub,
-                &g,
-                &Registry::full(),
-                &SchedulerConfig::kcp(),
-            );
-            let pricer = Pricer::new(&subd, &g, &s.plan.choices, true);
-            let nnv12 = simulate(&subd, &s.set, &s.plan, &pricer, &SimConfig::nnv12()).makespan;
+            let engine = Nnv12Engine::builder().device(sub).calibrated(true).build();
+            let nnv12 = engine
+                .load(g.clone())
+                .run_cold()
+                .expect("sim backend")
+                .latency_ms;
             t.row(vec![
                 model.into(),
                 name.into(),
@@ -254,8 +257,17 @@ pub fn fig11() -> Table {
     );
     let dev = profiles::meizu_16t();
     let g = zoo::googlenet();
-    let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
-    let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
+    // One plan, many runtime conditions: engines per (stealing,
+    // background) arm share the plan through one cache.
+    let cache = Arc::new(PlanCache::new());
+    let run = |stealing: bool, background: Vec<BgLoad>| -> f64 {
+        let engine = Nnv12Engine::builder()
+            .device(dev.clone())
+            .plan_cache(cache.clone())
+            .backend(SimBackend::with(SimConfig { stealing, contention: true, background }))
+            .build();
+        engine.load(g.clone()).run_cold().expect("sim backend").latency_ms
+    };
     let cases: [(&str, Vec<BgLoad>); 4] = [
         ("none", vec![]),
         (
@@ -282,20 +294,9 @@ pub fn fig11() -> Table {
         } else {
             ncnn_base
         };
-        let no_ws = simulate(
-            &dev, &s.set, &s.plan, &pricer,
-            &SimConfig { stealing: false, contention: true, background: bg.clone() },
-        );
-        let ws = simulate(
-            &dev, &s.set, &s.plan, &pricer,
-            &SimConfig { stealing: true, contention: true, background: bg },
-        );
-        t.row(vec![
-            name.into(),
-            fmt_ms(ncnn),
-            fmt_ms(no_ws.makespan),
-            fmt_ms(ws.makespan),
-        ]);
+        let no_ws = run(false, bg.clone());
+        let ws = run(true, bg);
+        t.row(vec![name.into(), fmt_ms(ncnn), fmt_ms(no_ws), fmt_ms(ws)]);
     }
     t
 }
@@ -307,6 +308,7 @@ pub fn fig12() -> Table {
         &["model", "ncnn (mJ)", "NNV12 (mJ)", "ratio"],
     );
     let dev = profiles::meizu_16t();
+    let engine = Nnv12Engine::builder().device(dev.clone()).build();
     for model in ["googlenet", "mobilenetv2", "resnet50", "squeezenet"] {
         let g = zoo::by_name(model).unwrap();
         // ncnn: sequential on big cores — busy the whole cold latency.
@@ -318,9 +320,7 @@ pub fn fig12() -> Table {
             0.0,
             b.total(),
         );
-        let s = schedule(&dev, &g, &Registry::full(), &SchedulerConfig::kcp());
-        let pricer = Pricer::new(&dev, &g, &s.plan.choices, true);
-        let sim = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
+        let sim = engine.load(g).run_cold().expect("sim backend");
         t.row(vec![
             model.into(),
             format!("{:.0}", ncnn_mj),
@@ -346,8 +346,6 @@ pub fn fig13() -> Table {
     for (model, dev) in cases {
         let g = zoo::by_name(model).unwrap();
         let run = |cfg: &SchedulerConfig| {
-            let s = schedule(&dev, &g, &Registry::full(), cfg);
-            let pricer = Pricer::new(&dev, &g, &s.plan.choices, cfg.shader_cache);
             // Workload stealing is part of the "P" knob: without pipelining
             // the engine is single-queue sequential, so nothing steals.
             let sim_cfg = SimConfig {
@@ -355,7 +353,12 @@ pub fn fig13() -> Table {
                 contention: true,
                 background: vec![],
             };
-            simulate(&dev, &s.set, &s.plan, &pricer, &sim_cfg).makespan
+            let engine = Nnv12Engine::builder()
+                .device(dev.clone())
+                .sched(cfg.clone())
+                .backend(SimBackend::with(sim_cfg))
+                .build();
+            engine.load(g.clone()).run_cold().expect("sim backend").latency_ms
         };
         let baseline = run(&SchedulerConfig {
             kernel_selection: false,
@@ -383,16 +386,18 @@ pub fn fig14() -> Table {
         &["model", "engine", "1st (cold)", "2nd", "3rd", "4th"],
     );
     let dev = profiles::meizu_16t();
+    let engine = Nnv12Engine::builder().device(dev.clone()).warmup_depth(4).build();
     for model in ["googlenet", "resnet50"] {
         let g = zoo::by_name(model).unwrap();
-        let r = crate::warm::continuous(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 4);
+        let session = engine.load(g);
+        let ladder = session.ladder();
         t.row(vec![
             model.into(),
             "NNV12".into(),
-            fmt_ms(r.latencies[0]),
-            fmt_ms(r.latencies[1]),
-            fmt_ms(r.latencies[2]),
-            fmt_ms(r.latencies[3]),
+            fmt_ms(ladder[0]),
+            fmt_ms(ladder[1]),
+            fmt_ms(ladder[2]),
+            fmt_ms(ladder[3]),
         ]);
         let ncnn_cold = cold_ms(Engine::Ncnn, &dev, &g);
         let ncnn_warm = warm_ms(Engine::Ncnn, &dev, &g);
@@ -414,18 +419,17 @@ pub fn table4() -> Table {
         "Table 4 — models, offline plan generation time, cache storage overhead",
         &["model", "params", "size", "FLOPs", "cache storage", "plangen meizu16t", "plangen tx2"],
     );
-    let meizu = profiles::meizu_16t();
-    let tx2 = profiles::jetson_tx2();
-    let reg = Registry::full();
+    let meizu = Nnv12Engine::builder().device(profiles::meizu_16t()).build();
+    let tx2 = Nnv12Engine::builder().device(profiles::jetson_tx2()).build();
     let mut models: Vec<&str> = zoo::PAPER_MODELS.to_vec();
     models.push("crnn-lite");
     for model in models {
         let g = zoo::by_name(model).unwrap();
         let t0 = Timer::start();
-        let s1 = schedule(&meizu, &g, &reg, &SchedulerConfig::kcp());
+        let s1 = meizu.plan_fresh(&g);
         let meizu_ms = t0.elapsed_ms();
         let t1 = Timer::start();
-        let _s2 = schedule(&tx2, &g, &reg, &SchedulerConfig::kcp());
+        let _s2 = tx2.plan_fresh(&g);
         let tx2_ms = t1.elapsed_ms();
         t.row(vec![
             model.into(),

@@ -1,20 +1,33 @@
-//! Fingerprint-keyed plan cache.
+//! Fingerprint-keyed plan cache with an optional disk-persistent store.
 //!
 //! Plan generation is deterministic in (device, model, scheduler config,
 //! registry), so a serving front that cold-starts the same model on the
-//! same device repeatedly — the [`crate::serving`] router re-planning per
-//! registered model, ablation sweeps re-planning per arm — can skip the
+//! same device repeatedly — the [`crate::engine::Engine`] planning per
+//! loaded model, ablation sweeps re-planning per arm — can skip the
 //! search entirely after the first request. The key is a structural
 //! fingerprint, not an object identity: two independently built
 //! `ModelGraph`s of the same architecture hash alike.
 //!
+//! A cache opened with [`PlanCache::persistent`] additionally mirrors
+//! every planned entry to a directory of `plan-<fingerprint>.json` files
+//! ([`crate::sched::plan::Plan::to_json`] payloads). A *fresh process*
+//! pointing at the same directory then reloads plans instead of
+//! re-planning — the paper's offline decision stage (Fig. 4) as an actual
+//! on-disk artifact. Loads are fully validated (model identity, kernel
+//! names against the registry, queue coverage); any mismatch is treated
+//! as a miss and the file is rewritten, so stale or corrupt artifacts can
+//! never poison a plan.
+//!
 //! Thread-safe (`Mutex` around the map; planning happens outside the
 //! lock, so concurrent misses on *different* keys plan in parallel, and a
-//! racing duplicate insert is resolved first-wins).
+//! racing duplicate insert is resolved first-wins). Disk writes go
+//! through a temp file + rename, so concurrent processes sharing a store
+//! directory only ever observe complete documents.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -22,6 +35,11 @@ use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::heuristic::{schedule, Scheduled, SchedulerConfig};
+use crate::sched::makespan::evaluate;
+use crate::sched::op::OpSet;
+use crate::sched::plan::Plan;
+use crate::sched::price::Pricer;
+use crate::util::json::Json;
 
 /// Structural fingerprint of one planning problem. `registry_tag`
 /// distinguishes kernel registries (e.g. `"full"` vs `"warm-default"`),
@@ -72,17 +90,108 @@ pub fn fingerprint(
     h.finish()
 }
 
-/// The cache. Cheap to share (`Arc<PlanCache>`) across routers/threads.
+/// The disk side of a persistent cache: a directory of per-fingerprint
+/// plan JSON files.
+struct DiskStore {
+    dir: PathBuf,
+    hits: AtomicUsize,
+}
+
+impl DiskStore {
+    fn path_of(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("plan-{key:016x}.json"))
+    }
+
+    /// Reconstruct a [`Scheduled`] from the stored plan. The op set is
+    /// rebuilt from the resolved choices and the schedule re-evaluated
+    /// under the same deterministic pricing the planner used, so the
+    /// result is bit-identical to what planning would have produced.
+    fn load(
+        &self,
+        key: u64,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+    ) -> Option<Scheduled> {
+        let text = std::fs::read_to_string(self.path_of(key)).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("fingerprint").as_str() != Some(format!("{key:016x}").as_str()) {
+            return None;
+        }
+        let plan = Plan::from_json(doc.get("plan"), graph, registry).ok()?;
+        let set = OpSet::build(graph, &plan.choices, dev.executes_on_gpu());
+        let pricer = Pricer::new(dev, graph, &plan.choices, cfg.shader_cache);
+        let schedule = evaluate(&set, &plan, &pricer).ok()?;
+        // The planner guarantees `estimated_ms == makespan` bit-for-bit;
+        // a mismatch means the artifact is stale (older cost model) or
+        // hand-edited — treat it as a miss and replan rather than serve a
+        // plan that disagrees with its own evaluation.
+        if schedule.makespan.to_bits() != plan.estimated_ms.to_bits() {
+            return None;
+        }
+        Some(Scheduled { plan, schedule, set })
+    }
+
+    /// Best-effort write (temp file + rename): an unwritable store degrades
+    /// to in-memory caching rather than failing planning. The temp name is
+    /// process- *and* writer-unique so concurrent misses on the same key
+    /// (e.g. parallel engines sharing one persistent cache) never
+    /// interleave writes into one file — whichever complete document wins
+    /// the rename is kept.
+    fn save(&self, key: u64, s: &Scheduled, graph: &ModelGraph) {
+        static NEXT_TMP: AtomicUsize = AtomicUsize::new(0);
+        let doc = Json::obj(vec![
+            ("fingerprint", Json::from(format!("{key:016x}"))),
+            ("plan", s.plan.to_json(graph)),
+        ]);
+        let path = self.path_of(key);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            NEXT_TMP.fetch_add(1, Ordering::Relaxed)
+        ));
+        match std::fs::write(&tmp, doc.to_pretty()) {
+            Ok(()) if std::fs::rename(&tmp, &path).is_ok() => {}
+            // Failed write or rename: don't leave orphaned temp files
+            // accumulating in a long-lived store directory.
+            _ => {
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+    }
+}
+
+/// The cache. Cheap to share (`Arc<PlanCache>`) across engines/threads.
 #[derive(Default)]
 pub struct PlanCache {
     map: Mutex<HashMap<u64, Arc<Scheduled>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    disk: Option<DiskStore>,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// An in-memory cache mirrored to `dir` (created if absent): plans
+    /// survive the process, so a fresh engine pointing at the same store
+    /// directory skips planning entirely (observable via
+    /// [`PlanCache::disk_hits`]).
+    pub fn persistent(dir: impl Into<PathBuf>) -> std::io::Result<PlanCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(PlanCache {
+            disk: Some(DiskStore { dir, hits: AtomicUsize::new(0) }),
+            ..PlanCache::default()
+        })
+    }
+
+    /// The backing directory of a persistent cache.
+    pub fn store_dir(&self) -> Option<&Path> {
+        self.disk.as_ref().map(|d| d.dir.as_path())
     }
 
     /// Return the cached plan for this problem, or run the scheduler and
@@ -101,9 +210,25 @@ impl PlanCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return s.clone();
         }
-        // Plan outside the lock: misses on different keys run concurrently.
+        // Disk, then plan — both outside the lock, so misses on different
+        // keys load/plan concurrently.
+        if let Some(disk) = &self.disk {
+            if let Some(s) = disk.load(key, dev, graph, registry, cfg) {
+                disk.hits.fetch_add(1, Ordering::Relaxed);
+                return self
+                    .map
+                    .lock()
+                    .unwrap()
+                    .entry(key)
+                    .or_insert(Arc::new(s))
+                    .clone();
+            }
+        }
         let planned = Arc::new(schedule(dev, graph, registry, cfg));
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(disk) = &self.disk {
+            disk.save(key, &planned, graph);
+        }
         self.map
             .lock()
             .unwrap()
@@ -120,6 +245,14 @@ impl PlanCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Plans served from the disk store instead of being re-planned
+    /// (always 0 for a purely in-memory cache).
+    pub fn disk_hits(&self) -> usize {
+        self.disk
+            .as_ref()
+            .map_or(0, |d| d.hits.load(Ordering::Relaxed))
+    }
+
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -128,7 +261,9 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Drop all cached plans (e.g. after a device-profile recalibration).
+    /// Drop all in-memory cached plans (e.g. after a device-profile
+    /// recalibration). Disk artifacts are left in place; they are
+    /// re-validated on the next load.
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
     }
@@ -176,6 +311,71 @@ mod tests {
         cache.get_or_plan(&profiles::meizu_16t(), &zoo::micro_mobilenet(), &reg, &cfg, "full");
         assert_eq!(cache.len(), 4);
         assert_eq!(cache.hits(), 0);
+    }
+
+    fn temp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nnv12-store-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn persistent_cache_reloads_across_instances() {
+        let dir = temp_store("reload");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::squeezenet();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+
+        let a = PlanCache::persistent(&dir).unwrap();
+        let planned = a.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!((a.misses(), a.disk_hits()), (1, 0));
+
+        // A fresh cache (≈ a fresh process) loads from disk, not the planner.
+        let b = PlanCache::persistent(&dir).unwrap();
+        let loaded = b.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!((b.misses(), b.disk_hits()), (0, 1), "disk must satisfy the miss");
+        assert_eq!(
+            loaded.schedule.makespan.to_bits(),
+            planned.schedule.makespan.to_bits()
+        );
+        assert_eq!(
+            loaded.plan.to_json(&g).to_compact(),
+            planned.plan.to_json(&g).to_compact(),
+            "reloaded plan must be bit-identical"
+        );
+        // Second request in the same instance is a plain memory hit.
+        let again = b.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert!(Arc::ptr_eq(&loaded, &again));
+        assert_eq!(b.hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_store_entry_degrades_to_replanning() {
+        let dir = temp_store("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let a = PlanCache::persistent(&dir).unwrap();
+        let planned = a.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        // Truncate every stored artifact.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            std::fs::write(entry.unwrap().path(), "{ not json").unwrap();
+        }
+        let b = PlanCache::persistent(&dir).unwrap();
+        let replanned = b.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!((b.misses(), b.disk_hits()), (1, 0));
+        assert_eq!(
+            replanned.schedule.makespan.to_bits(),
+            planned.schedule.makespan.to_bits()
+        );
+        // The rewrite healed the store.
+        let c = PlanCache::persistent(&dir).unwrap();
+        c.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!(c.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -55,15 +55,23 @@
 //! `candidate_prices_match_pricer_exactly`).
 //!
 //! Repeat planning of an identical problem skips all of the above via the
-//! fingerprint-keyed [`cache::PlanCache`] (used by the serving router).
+//! fingerprint-keyed [`cache::PlanCache`]; a cache opened with
+//! [`cache::PlanCache::persistent`] additionally survives the *process*
+//! as a directory of plan-JSON artifacts (Fig. 4's offline decision stage
+//! on disk), so even a fresh engine skips the search.
 //!
-//! Modules: [`op`] (operation set + dependencies), [`plan`] (the output),
-//! [`price`] (operation costing on units + the flat price table),
-//! [`makespan`] (list-schedule evaluator: heap-based, incremental, and
-//! reference), [`filter`] (kernel candidate Pareto filtering + candidate
-//! pricing), [`heuristic`] (Algorithm 1 + the incremental outer search),
-//! [`cache`] (fingerprint-keyed plan cache), [`bruteforce`] (exact oracle
-//! for tiny instances, test-only scale).
+//! Callers normally do not drive this module directly: the
+//! [`crate::engine::Engine`] facade owns planning (cache, store,
+//! calibration) and hands out sessions; `sched` is the planner it drives.
+//!
+//! Modules: [`op`] (operation set + dependencies), [`plan`] (the output,
+//! JSON round-trippable), [`price`] (operation costing on units + the
+//! flat price table), [`makespan`] (list-schedule evaluator: heap-based,
+//! incremental, and reference), [`filter`] (kernel candidate Pareto
+//! filtering + candidate pricing), [`heuristic`] (Algorithm 1 + the
+//! incremental outer search), [`cache`] (fingerprint-keyed,
+//! disk-persistent plan cache), [`bruteforce`] (exact oracle for tiny
+//! instances, test-only scale).
 
 pub mod op;
 pub mod plan;

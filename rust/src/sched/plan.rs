@@ -95,6 +95,73 @@ impl Plan {
             .sum()
     }
 
+    /// Deserialize a plan previously written by [`Plan::to_json`].
+    ///
+    /// Kernel choices are resolved by name against `registry`'s candidates
+    /// for each layer, so a plan only loads against a registry that still
+    /// offers the kernels it chose (the persistent plan store treats any
+    /// failure here as a cache miss and replans). The round trip is exact:
+    /// `Plan::from_json(&p.to_json(g), g, reg)` reproduces `p` including
+    /// `estimated_ms` bit-for-bit.
+    pub fn from_json(j: &Json, graph: &ModelGraph, registry: &Registry) -> Result<Plan, String> {
+        if j.get("model").as_str() != Some(graph.name.as_str()) {
+            return Err(format!(
+                "plan is for model {:?}, not '{}'",
+                j.get("model").as_str(),
+                graph.name
+            ));
+        }
+        let estimated_ms = j
+            .get("estimated_ms")
+            .as_f64()
+            .ok_or("plan missing estimated_ms")?;
+        let choices_j = j.get("choices").as_arr().ok_or("plan missing choices")?;
+        if choices_j.len() != graph.len() {
+            return Err(format!(
+                "plan has {} choices for a {}-layer model",
+                choices_j.len(),
+                graph.len()
+            ));
+        }
+        let mut choices: Vec<Option<KernelChoice>> = Vec::with_capacity(choices_j.len());
+        for (i, c) in choices_j.iter().enumerate() {
+            if matches!(*c, Json::Null) {
+                choices.push(None);
+                continue;
+            }
+            let name = c
+                .get("kernel")
+                .as_str()
+                .ok_or_else(|| format!("choice {i} missing kernel name"))?;
+            let kernel = registry
+                .candidates(graph.layer(i))
+                .into_iter()
+                .find(|k| k.name == name)
+                .ok_or_else(|| format!("layer {i}: kernel '{name}' not offered by registry"))?;
+            let cache = c.get("cache").as_bool().unwrap_or(false);
+            choices.push(Some(KernelChoice { kernel, cache }));
+        }
+        let queue = |v: &Json, what: &str| -> Result<Vec<OpId>, String> {
+            v.as_arr()
+                .ok_or_else(|| format!("plan {what} queue is not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| format!("plan {what} queue holds a non-index entry"))
+                })
+                .collect()
+        };
+        let gang = queue(j.get("gang"), "gang")?;
+        let little = j
+            .get("little")
+            .as_arr()
+            .ok_or("plan missing little queues")?
+            .iter()
+            .map(|q| queue(q, "little"))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Plan { choices, gang, little, estimated_ms })
+    }
+
     /// Serialize to JSON (the on-device representation NNV12 stores next to
     /// the model after offline plan generation — Fig. 4's decision stage).
     pub fn to_json(&self, graph: &ModelGraph) -> Json {
@@ -223,6 +290,36 @@ mod tests {
         let plan = Plan { choices, gang: vec![], little: vec![], estimated_ms: 0.0 };
         assert_eq!(plan.cache_bytes(&g), expected);
         assert!(expected > 0);
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let g = zoo::tiny_net();
+        let reg = Registry::full();
+        let mut choices = default_choices(&g, &reg);
+        for c in choices.iter_mut().flatten() {
+            if c.kernel.family.needs_transform() {
+                c.cache = true;
+            }
+        }
+        let set = OpSet::build(&g, &choices, false);
+        let plan = Plan {
+            choices,
+            gang: (0..set.len()).collect(),
+            little: vec![vec![], vec![]],
+            estimated_ms: 17.25,
+        };
+        let text = plan.to_json(&g).to_pretty();
+        let back = Plan::from_json(&Json::parse(&text).unwrap(), &g, &reg).unwrap();
+        assert_eq!(back.choices, plan.choices);
+        assert_eq!(back.gang, plan.gang);
+        assert_eq!(back.little, plan.little);
+        assert_eq!(back.estimated_ms.to_bits(), plan.estimated_ms.to_bits());
+        // And the reserialization is byte-identical.
+        assert_eq!(back.to_json(&g).to_pretty(), text);
+        // Wrong model / mangled payloads are rejected.
+        assert!(Plan::from_json(&Json::parse(&text).unwrap(), &zoo::squeezenet(), &reg).is_err());
+        assert!(Plan::from_json(&Json::Null, &g, &reg).is_err());
     }
 
     #[test]

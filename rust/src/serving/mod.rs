@@ -1,17 +1,20 @@
-//! Multi-tenant serving front: request router + model residency manager.
+//! Multi-tenant serving front over the engine facade.
 //!
 //! The paper's motivation (§1–2): edge devices host many DNNs; memory
 //! pressure means models cannot all stay resident, so inferences are cold
 //! whenever the OS or the app evicted the model. This module builds that
-//! environment: a router dispatches per-model requests; an LRU residency
-//! manager holds models within a memory budget; a request against a
-//! non-resident model pays the cold-inference latency of whichever engine
-//! is configured (NNV12's scheduled plan or a baseline), while resident
-//! models serve at warm latency — including NNV12's §3.5 kernel-switching
-//! warm-up sequence for the first post-cold inferences.
+//! environment on top of [`crate::engine`]: a [`Router`] names one
+//! [`crate::engine::Session`] per model and dispatches requests to it,
+//! while the engine's residency manager holds sessions within the memory
+//! budget — a request against a non-resident model pays the cold latency
+//! of whichever backend is configured (NNV12's scheduled plan via
+//! [`crate::engine::SimBackend`], or [`crate::engine::BaselineBackend`]
+//! for a vanilla engine), and resident models serve down the §3.5
+//! kernel-switching warm-up ladder. [`workload`] generates the
+//! Zipf-skewed request streams the serving experiments replay.
 
 pub mod router;
 pub mod workload;
 
-pub use router::{Router, RouterConfig, ServedModel};
+pub use router::{Outcome, Router, RouterConfig, ServeEngine};
 pub use workload::{generate, Request, WorkloadSpec};

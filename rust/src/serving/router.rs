@@ -1,15 +1,18 @@
-//! The request router and LRU model-residency manager.
+//! The request router: a thin serving front over the engine facade.
+//!
+//! All planning, warm-up-ladder computation, and LRU residency live in
+//! [`crate::engine`]; the router contributes the per-model request
+//! surface, request statistics, and the engine-choice knob (NNV12 vs a
+//! vanilla baseline) used by the serving comparisons.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::engine::{BaselineBackend, Engine, ExecBackend, Phase, Session, SimBackend};
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
-use crate::kernels::Registry;
 use crate::metrics::Recorder;
 use crate::sched::cache::PlanCache;
-use crate::sched::heuristic::SchedulerConfig;
-use crate::warm::continuous_from;
 use crate::Ms;
 
 /// Serving engine the router charges latencies from.
@@ -39,16 +42,6 @@ impl Default for RouterConfig {
     }
 }
 
-/// A model registered with the router.
-pub struct ServedModel {
-    pub graph: ModelGraph,
-    /// Latency ladder: [cold, 2nd, 3rd, …, steady warm].
-    pub ladder: Vec<Ms>,
-    pub warm_ms: Ms,
-    /// Resident-set size (weights + transformed layouts), bytes.
-    pub resident_bytes: u64,
-}
-
 /// Outcome of one routed request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Outcome {
@@ -57,18 +50,10 @@ pub struct Outcome {
     pub evictions: usize,
 }
 
-/// The router.
+/// The router: named [`Session`]s over one shared [`Engine`].
 pub struct Router {
-    cfg: RouterConfig,
-    models: HashMap<String, ServedModel>,
-    /// Resident models, most-recently-used last, with per-model inference
-    /// count since last cold start (drives the warm-up ladder).
-    resident: Vec<(String, usize)>,
-    mem_used: u64,
-    /// Shared fingerprint-keyed plan cache (hits when the same
-    /// model × device × config was already planned, by this router or a
-    /// sibling sharing the cache).
-    pub plan_cache: Arc<PlanCache>,
+    engine: Engine,
+    sessions: HashMap<String, Session>,
     pub recorder: Recorder,
     pub stats_cold: usize,
     pub stats_warm: usize,
@@ -76,11 +61,12 @@ pub struct Router {
 
 impl Router {
     /// Build a router: plans every model on `dev` up front (the paper's
-    /// offline decision stage) and computes its latency ladder. Plans come
-    /// from a fresh private [`PlanCache`]; use [`Router::with_plan_cache`]
-    /// to share one across routers (ablation arms, engine comparisons,
-    /// router restarts) so repeated cold-planning of the same
-    /// model × device × config is free.
+    /// offline decision stage, parallel across models); each model's
+    /// warm-up ladder is computed lazily on its first request. Plans come
+    /// from a fresh private [`PlanCache`]; use
+    /// [`Router::with_plan_cache`] to share one across routers (ablation
+    /// arms, engine comparisons, router restarts) so repeated
+    /// cold-planning of the same model × device × config is free.
     pub fn new(dev: &DeviceProfile, models: Vec<ModelGraph>, cfg: RouterConfig) -> Router {
         Router::with_plan_cache(dev, models, cfg, Arc::new(PlanCache::new()))
     }
@@ -92,34 +78,25 @@ impl Router {
         cfg: RouterConfig,
         plan_cache: Arc<PlanCache>,
     ) -> Router {
-        let registry = Registry::full();
-        let mut map = HashMap::new();
-        for g in models {
-            let (ladder, warm_ms) = match cfg.engine {
-                ServeEngine::Nnv12 => {
-                    let sched_cfg = SchedulerConfig::kcp();
-                    let s = plan_cache.get_or_plan(dev, &g, &registry, &sched_cfg, "full");
-                    let r = continuous_from(dev, &g, &registry, cfg.warmup_depth, &s);
-                    (r.latencies, r.warm_ms)
-                }
-                ServeEngine::Ncnn => {
-                    let cold = crate::baselines::cold_ms(crate::baselines::Engine::Ncnn, dev, &g);
-                    let warm = crate::baselines::warm_ms(crate::baselines::Engine::Ncnn, dev, &g);
-                    (vec![cold, warm], warm)
-                }
-            };
-            let resident_bytes = g.weight_bytes() + g.weight_bytes() / 4; // + workspace
-            map.insert(
-                g.name.clone(),
-                ServedModel { graph: g, ladder, warm_ms, resident_bytes },
-            );
-        }
+        let backend: Box<dyn ExecBackend> = match cfg.engine {
+            ServeEngine::Nnv12 => Box::new(SimBackend::nnv12()),
+            ServeEngine::Ncnn => Box::new(BaselineBackend::ncnn()),
+        };
+        let engine = Engine::builder()
+            .device(dev.clone())
+            .memory_budget(cfg.memory_budget)
+            .warmup_depth(cfg.warmup_depth)
+            .plan_cache(plan_cache)
+            .backend_box(backend)
+            .build();
+        let sessions = engine
+            .load_all(models)
+            .into_iter()
+            .map(|s| (s.name().to_string(), s))
+            .collect();
         Router {
-            cfg,
-            models: map,
-            resident: Vec::new(),
-            mem_used: 0,
-            plan_cache,
+            engine,
+            sessions,
             recorder: Recorder::new(),
             stats_cold: 0,
             stats_warm: 0,
@@ -127,54 +104,49 @@ impl Router {
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        let mut v: Vec<String> = self.sessions.keys().cloned().collect();
         v.sort();
         v
     }
 
     pub fn is_resident(&self, name: &str) -> bool {
-        self.resident.iter().any(|(n, _)| n == name)
+        self.sessions.get(name).map_or(false, |s| s.is_resident())
     }
 
-    /// Handle a request for `model`. Evicts LRU models as needed to make
-    /// the target resident; charges cold or warm-ladder latency.
+    /// Handle a request for `model`: one [`Session::infer`] plus request
+    /// accounting. `None` for unknown models.
     pub fn handle(&mut self, model: &str) -> Option<Outcome> {
-        let m = self.models.get(model)?;
-        let bytes = m.resident_bytes;
-        let mut evictions = 0;
-
-        if let Some(pos) = self.resident.iter().position(|(n, _)| n == model) {
-            // Warm path: bump LRU position, advance the ladder.
-            let (name, count) = self.resident.remove(pos);
-            let ladder = &self.models[&name].ladder;
-            let latency = *ladder
-                .get((count + 1).min(ladder.len() - 1))
-                .unwrap_or(&self.models[&name].warm_ms);
-            self.resident.push((name, count + 1));
+        let session = self.sessions.get(model)?;
+        let r = session.infer();
+        let cold = r.phase == Phase::Cold;
+        let label = if cold { "cold" } else { "warm" };
+        if cold {
+            self.stats_cold += 1;
+        } else {
             self.stats_warm += 1;
-            self.recorder.record("warm", latency);
-            self.recorder.record(&format!("{model}:warm"), latency);
-            return Some(Outcome { latency_ms: latency, cold: false, evictions: 0 });
         }
+        self.recorder.record(label, r.latency_ms);
+        self.recorder.record(&format!("{model}:{label}"), r.latency_ms);
+        Some(Outcome { latency_ms: r.latency_ms, cold, evictions: r.evictions })
+    }
 
-        // Cold path: evict until it fits (a model larger than the budget
-        // still runs, transiently overcommitting like a real OS would).
-        while self.mem_used + bytes > self.cfg.memory_budget && !self.resident.is_empty() {
-            let (victim, _) = self.resident.remove(0);
-            self.mem_used -= self.models[&victim].resident_bytes;
-            evictions += 1;
-        }
-        let latency = self.models[model].ladder[0];
-        self.mem_used += bytes;
-        self.resident.push((model.to_string(), 0));
-        self.stats_cold += 1;
-        self.recorder.record("cold", latency);
-        self.recorder.record(&format!("{model}:cold"), latency);
-        Some(Outcome { latency_ms: latency, cold: true, evictions })
+    /// The underlying engine (residency, plan cache, device).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The session serving `model`.
+    pub fn session(&self, model: &str) -> Option<&Session> {
+        self.sessions.get(model)
+    }
+
+    /// The shared plan cache.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        self.engine.plan_cache()
     }
 
     pub fn mem_used(&self) -> u64 {
-        self.mem_used
+        self.engine.mem_used()
     }
 }
 

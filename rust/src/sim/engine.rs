@@ -118,7 +118,17 @@ pub fn simulate(
     let mut steals = 0usize;
     let mut now: Ms = 0.0;
 
-    let deps_done = |op: usize, done: &[bool]| set.ops[op].deps.iter().all(|&d| done[d]);
+    // §Perf: the evaluator's notification discipline, ported to the
+    // simulator's start phase. Dependency readiness is a per-op pending
+    // count decremented through `set.dependents` at completion (never a
+    // deps rescan), unit occupancy is a flag maintained at start/finish
+    // (never a scan over `running`), and only *woken* units — the unit a
+    // completion freed, plus units whose queued op just became ready — are
+    // re-examined for normal dispatch.
+    let mut pending: Vec<u32> = set.ops.iter().map(|o| o.deps.len() as u32).collect();
+    let mut busy_unit = vec![false; n_units];
+    let mut wake: Vec<usize> = (0..n_units).collect();
+    let mut in_wake = vec![true; n_units];
 
     // Advance each queue's cursor past claimed ops; return next unclaimed.
     let next_in_queue = |u: usize, cursor: &mut [usize], claimed: &[bool],
@@ -161,32 +171,48 @@ pub fn simulate(
             guard < 20 * total_ops + 100,
             "simulator failed to make progress (deadlocked plan?)"
         );
-        // --- Start phase: put ready ops on idle units. ---
-        let unit_busy: Vec<bool> = (0..n_units)
-            .map(|u| running.iter().any(|r| r.unit_idx == u))
-            .collect();
-        for u in 0..n_units {
-            if unit_busy[u] {
+        // --- Start phase: put ready ops on woken idle units. A unit only
+        // lands on the wake list through an event that could unblock it
+        // (its own op finished, or a dependency of a queued op resolved),
+        // so nothing is rescanned. ---
+        while let Some(u) = wake.pop() {
+            in_wake[u] = false;
+            if busy_unit[u] {
                 continue;
             }
             if let Some(op) = next_in_queue(u, &mut cursor, &claimed, &queues) {
-                if deps_done(op, &done) {
+                if pending[op] == 0 {
                     claim(op, &mut claimed, &mut q_remaining, &queue_of, &queues);
+                    busy_unit[u] = true;
                     let dur = table.get(op, queues[u].0);
                     running.push(Running { op, unit_idx: u, remaining: dur, started: now });
-                    continue;
                 }
             }
-            // --- Work stealing (§3.3): the unit is idle (empty queue or
-            // blocked head). Steal the first ready, unclaimed, non-exec op
-            // from the most-loaded other queue. Only little cores steal:
-            // the gang's idle slots belong to execution (and to §3.5's
-            // warm-kernel preparation), and a gang steal would add disk
-            // contention right where execution needs the bandwidth. ---
-            if cfg.stealing && matches!(queues[u].0, UnitId::Little(_)) {
+        }
+        // --- Work stealing (§3.3): a still-idle unit (empty queue or
+        // blocked head) steals the first ready, unclaimed, non-exec op
+        // from the most-loaded busy queue. Only little cores steal: the
+        // gang's idle slots belong to execution (and to §3.5's warm-kernel
+        // preparation), and a gang steal would add disk contention right
+        // where execution needs the bandwidth.
+        //
+        // Note a deliberate timing refinement vs the pre-notification
+        // code: all normal dispatches for the event complete before the
+        // steal pass, so a unit that just started is visible as a busy
+        // steal source within the same event (previously only units
+        // earlier in index order were). Stealing is therefore slightly
+        // more eager; steal counts/makespans under stealing-enabled
+        // configs can differ marginally from older snapshots. ---
+        if cfg.stealing {
+            for u in 0..n_units {
+                if busy_unit[u] || !matches!(queues[u].0, UnitId::Little(_)) {
+                    continue;
+                }
                 let mut best: Option<(usize, usize, f64)> = None; // (queue, op, load)
                 for v in 0..n_units {
-                    if v == u {
+                    // Only steal from a currently busy source (an idle one
+                    // would start the op itself now).
+                    if v == u || !busy_unit[v] {
                         continue;
                     }
                     // Remaining nominal work in v's queue (incrementally
@@ -201,24 +227,20 @@ pub fn simulate(
                         .1
                         .iter()
                         .copied()
-                        .find(|&o| !claimed[o] && deps_done(o, &done)
+                        .find(|&o| !claimed[o] && pending[o] == 0
                             && set.ops[o].stage != OpStage::Exec
                             && set.ops[o].stage != OpStage::DriverInit);
                     if let Some(op) = head {
-                        // Only steal when the source unit is currently busy
-                        // (otherwise it would start the op itself now).
-                        let source_busy = running.iter().any(|r| r.unit_idx == v);
-                        if source_busy {
-                            match best {
-                                Some((_, _, l)) if l >= load => {}
-                                _ => best = Some((v, op, load)),
-                            }
+                        match best {
+                            Some((_, _, l)) if l >= load => {}
+                            _ => best = Some((v, op, load)),
                         }
                     }
                 }
                 if let Some((_, op, _)) = best {
                     claim(op, &mut claimed, &mut q_remaining, &queue_of, &queues);
                     steals += 1;
+                    busy_unit[u] = true;
                     let dur = table.get(op, queues[u].0);
                     running.push(Running { op, unit_idx: u, remaining: dur, started: now });
                 }
@@ -304,10 +326,6 @@ pub fn simulate(
         now += dt;
         for (r, &rate) in running.iter_mut().zip(&rates) {
             r.remaining -= rate * dt;
-            // busy time counts wall-clock occupancy
-        }
-        for r in running.iter() {
-            let _ = r;
         }
         // Track busy time: every running op occupies its unit for dt.
         for r in &running {
@@ -318,6 +336,24 @@ pub fn simulate(
         finish_time[fin.op] = now;
         timings[fin.op] = OpTiming { start: fin.started, finish: now, unit: queues[fin.unit_idx].0 };
         completed += 1;
+
+        // --- Notify: the freed unit re-examines its queue; dependents
+        // whose last dependency this was wake their (idle) planned unit.
+        busy_unit[fin.unit_idx] = false;
+        if !in_wake[fin.unit_idx] {
+            wake.push(fin.unit_idx);
+            in_wake[fin.unit_idx] = true;
+        }
+        for &d in &set.dependents[fin.op] {
+            pending[d] -= 1;
+            if pending[d] == 0 {
+                let v = queue_of[d];
+                if v != usize::MAX && !busy_unit[v] && !in_wake[v] {
+                    wake.push(v);
+                    in_wake[v] = true;
+                }
+            }
+        }
     }
 
     let makespan = finish_time[set.final_exec()];

@@ -8,6 +8,11 @@
 //! preparations pipeline into the 2nd inference (which is therefore
 //! slightly slower than steady-state — the paper measures 8%), and from
 //! the 3rd inference the engine runs at full warm speed.
+//!
+//! This module is the *primitive*; callers get the ladder through the
+//! facade ([`crate::engine::Engine::load`] →
+//! [`crate::engine::Session::ladder`]), whose backends call
+//! [`continuous_from`] with the cached plan.
 
 use crate::cost::CostModel;
 use crate::device::{CoreClass, DeviceProfile};
@@ -30,6 +35,10 @@ pub struct ContinuousReport {
 
 /// Simulate `n_inferences` consecutive inferences under NNV12's
 /// continuous-inference mode, planning the cold inference from scratch.
+#[deprecated(
+    note = "plan through the facade instead: `Engine::load(graph)` exposes the \
+            ladder as `Session::ladder()`/`Session::warm_ms()`"
+)]
 pub fn continuous(
     dev: &DeviceProfile,
     graph: &ModelGraph,
@@ -127,6 +136,7 @@ pub fn continuous_from(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the `continuous` shim directly
 mod tests {
     use super::*;
     use crate::device::profiles;

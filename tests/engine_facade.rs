@@ -1,0 +1,194 @@
+//! Engine/Session facade integration: the lifecycle state machine
+//! (cold → warming → warm, eviction re-colds), backend parity with the
+//! underlying simulator, the disk-persistent plan store round trip, and
+//! parallel multi-model startup planning.
+
+use std::path::PathBuf;
+
+use nnv12::device::profiles;
+use nnv12::engine::{BaselineBackend, Engine, Phase, SimBackend};
+use nnv12::graph::zoo;
+use nnv12::sched::price::Pricer;
+use nnv12::sim::{simulate, SimConfig};
+
+#[test]
+fn session_lifecycle_cold_then_monotone_to_warm() {
+    let engine = Engine::builder().device(profiles::meizu_16t()).build();
+    let session = engine.load(zoo::googlenet());
+    assert!(!session.is_resident());
+
+    let mut phases = Vec::new();
+    let mut latencies = Vec::new();
+    for _ in 0..8 {
+        let r = session.infer();
+        phases.push(r.phase);
+        latencies.push(r.latency_ms);
+    }
+    // First inference is cold; the lifecycle never regresses (warming
+    // cannot follow warm without an eviction) and ends warm.
+    assert_eq!(phases[0], Phase::Cold);
+    assert!(session.is_resident());
+    let first_warm = phases
+        .iter()
+        .position(|p| *p == Phase::Warm)
+        .expect("must reach steady state");
+    for (i, p) in phases.iter().enumerate() {
+        match p {
+            Phase::Cold => assert_eq!(i, 0, "cold only at the start"),
+            Phase::Warming { n } => {
+                assert!(i < first_warm, "warming after warm at step {i}");
+                assert_eq!(*n, i, "ladder rung mismatch at step {i}");
+            }
+            Phase::Warm => assert_eq!(latencies[i].to_bits(), session.warm_ms().to_bits()),
+        }
+    }
+    // Latencies walk down the session's ladder.
+    assert!(latencies[0] > *latencies.last().unwrap());
+    for w in latencies.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "ladder must be non-increasing: {w:?}");
+    }
+    assert_eq!(latencies[0].to_bits(), session.cold_ms().to_bits());
+}
+
+#[test]
+fn eviction_under_budget_pressure_recolds() {
+    // Budget fits roughly one model: alternating inference thrashes.
+    let engine = Engine::builder()
+        .device(profiles::meizu_16t())
+        .memory_budget(6 << 20)
+        .build();
+    let squeeze = engine.load(zoo::squeezenet());
+    let micro = engine.load(zoo::micro_mobilenet());
+
+    assert_eq!(squeeze.infer().phase, Phase::Cold);
+    let b = micro.infer();
+    assert_eq!(b.phase, Phase::Cold);
+    assert!(b.evictions > 0 || engine.mem_used() <= 6 << 20);
+    assert!(!squeeze.is_resident(), "squeezenet must have been evicted");
+    // The evicted session cold-starts again — and again reports Cold.
+    let again = squeeze.infer();
+    assert_eq!(again.phase, Phase::Cold);
+    assert_eq!(again.latency_ms.to_bits(), squeeze.cold_ms().to_bits());
+}
+
+#[test]
+fn simbackend_matches_direct_simulator_call() {
+    let dev = profiles::meizu_16t();
+    let engine = Engine::builder()
+        .device(dev.clone())
+        .backend(SimBackend::with(SimConfig::nnv12()))
+        .build();
+    let session = engine.load(zoo::googlenet());
+    let via_facade = session.run_cold().expect("sim backend");
+
+    let s = session.scheduled();
+    let pricer = Pricer::new(&dev, session.graph(), &s.plan.choices, true);
+    let direct = simulate(&dev, &s.set, &s.plan, &pricer, &SimConfig::nnv12());
+    assert_eq!(
+        via_facade.latency_ms.to_bits(),
+        direct.makespan.to_bits(),
+        "facade and direct simulator must agree bit-for-bit"
+    );
+    assert_eq!(via_facade.steals, direct.steals);
+    assert_eq!(via_facade.energy_mj.to_bits(), direct.energy_mj.to_bits());
+    assert_eq!(via_facade.timings.len(), direct.timings.len());
+}
+
+#[test]
+fn baseline_backend_charges_ncnn_latencies() {
+    let dev = profiles::meizu_16t();
+    let g = zoo::squeezenet();
+    let engine = Engine::builder()
+        .device(dev.clone())
+        .backend(BaselineBackend::ncnn())
+        .build();
+    let session = engine.load(g.clone());
+    let cold = nnv12::baselines::cold_ms(nnv12::baselines::Engine::Ncnn, &dev, &g);
+    let warm = nnv12::baselines::warm_ms(nnv12::baselines::Engine::Ncnn, &dev, &g);
+    assert_eq!(session.cold_ms().to_bits(), cold.to_bits());
+    assert_eq!(session.warm_ms().to_bits(), warm.to_bits());
+    // Baseline ladders have no warming phase: 2nd inference is warm.
+    assert_eq!(session.infer().phase, Phase::Cold);
+    let second = session.infer();
+    assert_eq!(second.phase, Phase::Warm);
+    assert_eq!(second.latency_ms.to_bits(), warm.to_bits());
+}
+
+fn store_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nnv12-facade-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn plan_store_round_trip_skips_planning_in_fresh_engine() {
+    let dir = store_dir("roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // First engine: plans, persists.
+    let a = Engine::builder()
+        .device(profiles::meizu_16t())
+        .plan_store(&dir)
+        .build();
+    let s1 = a.load(zoo::squeezenet());
+    assert_eq!(a.plan_cache().misses(), 1);
+    assert_eq!(a.plan_cache().disk_hits(), 0);
+
+    // Second engine on the same directory (≈ a process restart): the
+    // plan comes from disk — planning is skipped entirely.
+    let b = Engine::builder()
+        .device(profiles::meizu_16t())
+        .plan_store(&dir)
+        .build();
+    let s2 = b.load(zoo::squeezenet());
+    assert_eq!(b.plan_cache().misses(), 0, "fresh engine must not re-plan");
+    assert_eq!(b.plan_cache().disk_hits(), 1, "plan must come from the store");
+
+    // The reloaded plan is bit-identical: same JSON artifact, same
+    // makespan, same cold/warm ladder.
+    assert_eq!(
+        s1.plan().to_json(s1.graph()).to_compact(),
+        s2.plan().to_json(s2.graph()).to_compact()
+    );
+    assert_eq!(
+        s1.scheduled().schedule.makespan.to_bits(),
+        s2.scheduled().schedule.makespan.to_bits()
+    );
+    assert_eq!(s1.cold_ms().to_bits(), s2.cold_ms().to_bits());
+    assert_eq!(s1.warm_ms().to_bits(), s2.warm_ms().to_bits());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_all_plans_in_parallel_and_matches_sequential() {
+    let dev = profiles::meizu_16t();
+    let models = || {
+        vec![
+            zoo::squeezenet(),
+            zoo::mobilenet_v1(),
+            zoo::micro_mobilenet(),
+            zoo::tiny_net(),
+        ]
+    };
+    let par = Engine::builder().device(dev.clone()).build();
+    let sessions = par.load_all(models());
+    assert_eq!(sessions.len(), 4);
+    assert_eq!(par.plan_cache().misses(), 4, "each model planned exactly once");
+
+    let seq = Engine::builder().device(dev).build();
+    for (i, g) in models().into_iter().enumerate() {
+        let s = seq.load(g);
+        assert_eq!(
+            s.scheduled().schedule.makespan.to_bits(),
+            sessions[i].scheduled().schedule.makespan.to_bits(),
+            "parallel and sequential planning disagree for {}",
+            s.name()
+        );
+        assert_eq!(s.cold_ms().to_bits(), sessions[i].cold_ms().to_bits());
+    }
+
+    // Shared cache: a second fleet load is all hits.
+    let again = par.load_all(models());
+    assert_eq!(par.plan_cache().misses(), 4);
+    assert_eq!(par.plan_cache().hits(), 4);
+    assert_eq!(again.len(), 4);
+}
