@@ -105,13 +105,13 @@ fn main() {
     let _ = std::fs::remove_dir_all(&store_dir);
     Engine::builder()
         .device(dev.clone())
-        .plan_store(&store_dir)
+        .artifact_store(&store_dir)
         .build()
         .plan(&g);
     b.case("plan-store-reload/resnet50", || {
         let fresh = Engine::builder()
             .device(dev.clone())
-            .plan_store(&store_dir)
+            .artifact_store(&store_dir)
             .build();
         let s = fresh.plan(&g);
         assert_eq!(s.schedule.makespan.to_bits(), sched.schedule.makespan.to_bits());

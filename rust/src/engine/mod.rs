@@ -22,8 +22,11 @@
 //! ```
 //!
 //! [`Engine::load`] plans the model (a [`PlanCache`] hit skips the
-//! search; with [`EngineBuilder::plan_store`] the hit survives the
-//! process — Fig. 4's offline decision stage as an on-disk artifact) and
+//! search; with [`EngineBuilder::artifact_store`] the hit survives the
+//! process — Fig. 4's offline decision stage as an on-disk artifact in
+//! the content-addressed [`crate::store::ArtifactStore`], which also
+//! persists calibrated plans and transformed weights under one size cap
+//! and integrity story; counters surface via [`Engine::store_stats`]) and
 //! computes the §3.5 warm-up ladder. [`Session::infer`] then drives the
 //! cold → warming → warm lifecycle against the engine's memory budget:
 //! loading more models than fit evicts least-recently-used sessions,
@@ -52,8 +55,9 @@ use std::sync::Arc;
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
-use crate::sched::cache::PlanCache;
-use crate::sched::heuristic::{schedule, schedule_calibrated, Scheduled, SchedulerConfig};
+use crate::sched::cache::{CalibratedPlanCache, PlanCache};
+use crate::sched::heuristic::{schedule, Scheduled, SchedulerConfig};
+use crate::store::{ArtifactStore, StoreStats};
 use crate::util::parallel::par_map;
 use crate::Ms;
 
@@ -69,8 +73,8 @@ struct Residency {
 /// Shared engine internals ([`Engine`] and every [`Session`] hold an
 /// `Rc` of this — the engine/session pair is deliberately
 /// single-threaded, since backends may own thread-bound resources like a
-/// PJRT client; only the [`PlanCache`] crosses threads, in
-/// [`Engine::load_all`]'s planning fan-out).
+/// PJRT client; only the plan caches and the artifact store cross
+/// threads, in [`Engine::load_all`]'s planning fan-out).
 pub(crate) struct Inner {
     pub(crate) dev: DeviceProfile,
     pub(crate) registry: Registry,
@@ -79,6 +83,8 @@ pub(crate) struct Inner {
     pub(crate) warmup_depth: usize,
     pub(crate) calibrated: bool,
     pub(crate) plan_cache: Arc<PlanCache>,
+    pub(crate) calibrated_cache: Arc<CalibratedPlanCache>,
+    pub(crate) store: Option<Arc<ArtifactStore>>,
     pub(crate) backend: Box<dyn ExecBackend>,
     residency: RefCell<Residency>,
     next_session: Cell<u64>,
@@ -182,11 +188,15 @@ impl Engine {
         // fans out across cores; warm-up ladders stay lazy per session.
         let planned: Vec<(Arc<Scheduled>, DeviceProfile)> =
             if inner.calibrated && inner.backend.needs_plan() {
-                let (dev, registry) = (&inner.dev, &inner.registry);
+                let (dev, registry, tag, cache) = (
+                    &inner.dev,
+                    &inner.registry,
+                    inner.registry_tag,
+                    &inner.calibrated_cache,
+                );
                 let sched = &sched_cfg;
                 par_map(&graphs, move |_, g| {
-                    let (s, d) = schedule_calibrated(dev, g, registry, sched);
-                    (Arc::new(s), d)
+                    cache.get_or_plan(dev, g, registry, sched, tag)
                 })
             } else {
                 let (dev, registry, tag, cache) = (
@@ -243,8 +253,13 @@ impl Engine {
     fn plan_with_dev(&self, graph: &ModelGraph) -> (Arc<Scheduled>, DeviceProfile) {
         let inner = &self.inner;
         if inner.calibrated && inner.backend.needs_plan() {
-            let (s, d) = schedule_calibrated(&inner.dev, graph, &inner.registry, &inner.sched);
-            (Arc::new(s), d)
+            inner.calibrated_cache.get_or_plan(
+                &inner.dev,
+                graph,
+                &inner.registry,
+                &inner.sched,
+                inner.registry_tag,
+            )
         } else {
             let s = inner.plan_cache.get_or_plan(
                 &inner.dev,
@@ -282,6 +297,25 @@ impl Engine {
     /// The shared plan cache (hit/miss/disk-hit counters live here).
     pub fn plan_cache(&self) -> &Arc<PlanCache> {
         &self.inner.plan_cache
+    }
+
+    /// The shared calibrated-plan cache (only consulted by engines built
+    /// with [`EngineBuilder::calibrated`]).
+    pub fn calibrated_cache(&self) -> &Arc<CalibratedPlanCache> {
+        &self.inner.calibrated_cache
+    }
+
+    /// The backing artifact store, when this engine persists artifacts
+    /// ([`EngineBuilder::artifact_store`]).
+    pub fn artifact_store(&self) -> Option<&Arc<ArtifactStore>> {
+        self.inner.store.as_ref()
+    }
+
+    /// Counter snapshot of the artifact store (hits, misses, evictions,
+    /// corrupt-rejections, bytes), or `None` for a purely in-memory
+    /// engine.
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.inner.store.as_ref().map(|s| s.stats())
     }
 
     /// The device this engine targets.
@@ -325,7 +359,10 @@ pub struct EngineBuilder {
     calibrated: bool,
     backend: Option<Box<dyn ExecBackend>>,
     plan_cache: Option<Arc<PlanCache>>,
-    plan_store: Option<PathBuf>,
+    shared_calibrated: Option<Arc<CalibratedPlanCache>>,
+    store_dir: Option<PathBuf>,
+    store_cap: Option<u64>,
+    shared_store: Option<Arc<ArtifactStore>>,
 }
 
 impl Default for EngineBuilder {
@@ -339,7 +376,10 @@ impl Default for EngineBuilder {
             calibrated: false,
             backend: None,
             plan_cache: None,
-            plan_store: None,
+            shared_calibrated: None,
+            store_dir: None,
+            store_cap: None,
+            shared_store: None,
         }
     }
 }
@@ -378,8 +418,10 @@ impl EngineBuilder {
 
     /// Re-profile prep-parallelism degrees under the contention-aware
     /// simulator at plan time (§3.3 calibration; used by the paper's
-    /// end-to-end figures). Calibrated plans bypass the plan cache: the
-    /// chosen device view is part of the answer.
+    /// end-to-end figures). Calibrated plans carry their chosen device
+    /// view as part of the answer, so they live in their own
+    /// [`CalibratedPlanCache`] (and, with an artifact store, the
+    /// `calibrated-plan` namespace) rather than the plain plan cache.
     pub fn calibrated(mut self, on: bool) -> EngineBuilder {
         self.calibrated = on;
         self
@@ -403,34 +445,86 @@ impl EngineBuilder {
         self
     }
 
-    /// Persist plans to `dir` ([`PlanCache::persistent`]): a later engine
-    /// — including one in a fresh process — pointed at the same directory
-    /// skips planning. Overrides [`EngineBuilder::plan_cache`].
-    pub fn plan_store(mut self, dir: impl Into<PathBuf>) -> EngineBuilder {
-        self.plan_store = Some(dir.into());
+    /// Share a calibrated-plan cache with other engines — e.g. the report
+    /// grids, which rebuild a calibrated engine per cell; sharing one
+    /// cache makes revisited (device, model) cells free. Ignored when an
+    /// artifact store is configured (the store-backed cache persists and
+    /// already deduplicates).
+    pub fn calibrated_cache(mut self, cache: Arc<CalibratedPlanCache>) -> EngineBuilder {
+        self.shared_calibrated = Some(cache);
         self
+    }
+
+    /// Persist every expensive artifact — plans, calibrated plans,
+    /// transformed weights — to a content-addressed
+    /// [`ArtifactStore`] at `dir`: a later engine — including one in a
+    /// fresh process — pointed at the same directory skips planning (and
+    /// calibration) entirely, observable via [`Engine::store_stats`].
+    /// Overrides [`EngineBuilder::plan_cache`].
+    pub fn artifact_store(mut self, dir: impl Into<PathBuf>) -> EngineBuilder {
+        self.store_dir = Some(dir.into());
+        self
+    }
+
+    /// Share an already-open artifact store with other engines (ablation
+    /// arms, serving routers, sibling processes' handles). Takes
+    /// precedence over [`EngineBuilder::artifact_store`].
+    pub fn artifact_store_shared(mut self, store: Arc<ArtifactStore>) -> EngineBuilder {
+        self.shared_store = Some(store);
+        self
+    }
+
+    /// Bound the artifact store opened by
+    /// [`EngineBuilder::artifact_store`] to `bytes` total, evicting
+    /// least-recently-used artifacts past the cap (ignored for shared or
+    /// absent stores).
+    pub fn store_cap_bytes(mut self, bytes: u64) -> EngineBuilder {
+        self.store_cap = Some(bytes);
+        self
+    }
+
+    /// Deprecated spelling of [`EngineBuilder::artifact_store`].
+    #[deprecated(
+        note = "use `artifact_store(dir)`: plans now persist through the unified \
+                content-addressed ArtifactStore alongside calibrated plans and weights"
+    )]
+    pub fn plan_store(self, dir: impl Into<PathBuf>) -> EngineBuilder {
+        self.artifact_store(dir)
     }
 
     /// Build the engine.
     ///
-    /// Panics if no device was set or the plan-store directory cannot be
-    /// created; use [`EngineBuilder::try_build`] to handle a bad store
+    /// Panics if no device was set or the artifact-store directory cannot
+    /// be created; use [`EngineBuilder::try_build`] to handle a bad store
     /// path gracefully.
     pub fn build(self) -> Engine {
         self.try_build()
-            .unwrap_or_else(|e| panic!("Engine::builder(): plan store: {e}"))
+            .unwrap_or_else(|e| panic!("Engine::builder(): artifact store: {e}"))
     }
 
-    /// [`EngineBuilder::build`], surfacing plan-store I/O errors instead
-    /// of panicking. Still panics if no device was set (a programming
-    /// error, not an environment one).
+    /// [`EngineBuilder::build`], surfacing artifact-store I/O errors
+    /// instead of panicking. Still panics if no device was set (a
+    /// programming error, not an environment one).
     pub fn try_build(self) -> std::io::Result<Engine> {
         let dev = self
             .dev
             .expect("Engine::builder(): .device(..) is required");
-        let plan_cache = match self.plan_store {
-            Some(dir) => Arc::new(PlanCache::persistent(dir)?),
+        let store: Option<Arc<ArtifactStore>> = match (self.shared_store, self.store_dir) {
+            (Some(s), _) => Some(s),
+            (None, Some(dir)) => Some(Arc::new(match self.store_cap {
+                Some(cap) => ArtifactStore::with_cap(dir, cap)?,
+                None => ArtifactStore::open(dir)?,
+            })),
+            (None, None) => None,
+        };
+        let plan_cache = match &store {
+            Some(s) => Arc::new(PlanCache::with_store(s.clone())),
             None => self.plan_cache.unwrap_or_default(),
+        };
+        let calibrated_cache = match (&store, self.shared_calibrated) {
+            (Some(s), _) => Arc::new(CalibratedPlanCache::with_store(Some(s.clone()))),
+            (None, Some(c)) => c,
+            (None, None) => Arc::new(CalibratedPlanCache::new()),
         };
         let registry_tag = if self.registry.warm_only {
             "warm-default"
@@ -446,6 +540,8 @@ impl EngineBuilder {
                 warmup_depth: self.warmup_depth,
                 calibrated: self.calibrated,
                 plan_cache,
+                calibrated_cache,
+                store,
                 backend: self.backend.unwrap_or_else(|| Box::new(SimBackend::nnv12())),
                 residency: RefCell::new(Residency {
                     budget: self.memory_budget,

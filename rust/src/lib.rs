@@ -25,7 +25,7 @@
 //!     .build();
 //!
 //! // Loading a model plans it (cached; optionally disk-persistent via
-//! // `.plan_store(dir)`) and computes its §3.5 warm-up ladder.
+//! // `.artifact_store(dir)`) and computes its §3.5 warm-up ladder.
 //! let session = engine.load(zoo::tiny_net());
 //!
 //! // Sessions expose the explicit cold → warming → warm state machine.
@@ -55,19 +55,23 @@
 //! * [`cost`] — the per-operation latency model `T(op, core, threads)`.
 //! * [`sched`] — the §3.2 scheduling problem, the §3.3 heuristic
 //!   scheduler (Algorithm 1) with its incremental plan-search engine, and
-//!   the fingerprint-keyed, disk-persistent plan cache.
+//!   the fingerprint-keyed plan + calibrated-plan caches.
+//! * [`store`] — the content-addressed artifact store: one persistence
+//!   layer (typed namespaces, version+checksum headers, atomic writes,
+//!   LRU size cap) for plans, calibrated plans, and transformed weights.
 //! * [`baselines`] — ncnn / TFLite / AsyMo / TensorFlow-GPU engine models.
 //! * [`sim`] — discrete-event simulator of the device executing a plan,
 //!   with bandwidth contention, background load, and workload stealing.
 //! * [`transform`] — real weight-transformation math (im2col packing,
 //!   Winograd F(2,3), pack4) used on the real execution path.
-//! * [`weights`] — raw weight store and the post-transform disk cache.
+//! * [`weights`] — raw weight I/O and the post-transform cache (a typed
+//!   view over the artifact store).
 //! * [`runtime`] (`real-runtime`) — PJRT client wrapper: loads AOT
 //!   HLO-text artifacts produced by `python/compile/aot.py`.
 //! * [`pipeline`] (`real-runtime`) — real-thread pipelined executor over
 //!   the runtime.
 //! * [`engine`] — **the facade**: `Engine`/`Session` lifecycle over
-//!   pluggable backends and the persistent plan store.
+//!   pluggable backends and the persistent artifact store.
 //! * [`serving`] — multi-tenant serving front over the engine: request
 //!   router, workload generator (cold inferences are induced by
 //!   eviction).
@@ -83,6 +87,7 @@ pub mod kernels;
 pub mod device;
 pub mod cost;
 pub mod sched;
+pub mod store;
 pub mod baselines;
 pub mod sim;
 pub mod transform;

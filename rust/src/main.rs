@@ -66,7 +66,7 @@ fn print_help() {
         "repro — NNV12 cold-inference engine (MobiSys'23 reproduction)\n\
          \n\
          subcommands:\n\
-           plan      --model M --device D [--no-pipeline] [--store DIR]  print a scheduling plan\n\
+           plan      --model M --device D [--no-pipeline] [--store DIR [--store-cap-mb N]]  print a scheduling plan\n\
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
            report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
@@ -86,16 +86,22 @@ fn model_of(args: &Args) -> Result<nnv12::graph::ModelGraph> {
     zoo::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
 }
 
-/// Engine for one CLI invocation; `--store DIR` makes plans persistent
-/// across invocations (a second `repro plan` of the same problem skips
-/// the search).
+/// Engine for one CLI invocation; `--store DIR` persists artifacts
+/// (plans, calibrated plans, transformed weights) across invocations
+/// through the content-addressed store, so a second `repro plan` of the
+/// same problem skips the search. `--store-cap-mb N` bounds the store,
+/// evicting least-recently-used artifacts past the cap.
 fn engine_of(args: &Args, cfg: SchedulerConfig) -> Result<Engine> {
     let mut b = Engine::builder().device(device_of(args)?).sched(cfg);
     if let Some(dir) = args.get("store") {
-        b = b.plan_store(dir);
+        b = b.artifact_store(dir);
+        let cap_mb = args.get_usize("store-cap-mb", 0).map_err(|e| anyhow!(e))?;
+        if cap_mb > 0 {
+            b = b.store_cap_bytes((cap_mb as u64) << 20);
+        }
     }
     b.try_build()
-        .map_err(|e| anyhow!("cannot open plan store: {e}"))
+        .map_err(|e| anyhow!("cannot open artifact store: {e}"))
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
@@ -121,6 +127,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
         nnv12::util::table::fmt_bytes(session.plan().cache_bytes(session.graph())),
         session.warm_ms()
     );
+    if let Some(stats) = engine.store_stats() {
+        println!(
+            "artifact store: {} hits, {} misses, {} evictions, {} rejected, {} used",
+            stats.hits,
+            stats.misses,
+            stats.evictions,
+            stats.rejected,
+            nnv12::util::table::fmt_bytes(stats.bytes_used)
+        );
+    }
     if args.has("verbose") {
         println!("{}", session.plan().to_json(session.graph()).to_pretty());
     }

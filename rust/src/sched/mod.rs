@@ -56,9 +56,14 @@
 //!
 //! Repeat planning of an identical problem skips all of the above via the
 //! fingerprint-keyed [`cache::PlanCache`]; a cache opened with
-//! [`cache::PlanCache::persistent`] additionally survives the *process*
-//! as a directory of plan-JSON artifacts (Fig. 4's offline decision stage
-//! on disk), so even a fresh engine skips the search.
+//! [`cache::PlanCache::persistent`] (or over a shared
+//! [`crate::store::ArtifactStore`]) additionally survives the *process*
+//! as content-addressed plan artifacts (Fig. 4's offline decision stage
+//! on disk), so even a fresh engine skips the search. Calibrated plans —
+//! which carry a re-profiled device view as part of the answer — live in
+//! their own [`cache::CalibratedPlanCache`] and store namespace, so the
+//! fig8/fig10 grids and repeated calibrated engines skip the (much more
+//! expensive) calibration loop the same way.
 //!
 //! Callers normally do not drive this module directly: the
 //! [`crate::engine::Engine`] facade owns planning (cache, store,
@@ -69,9 +74,9 @@
 //! flat price table), [`makespan`] (list-schedule evaluator: heap-based,
 //! incremental, and reference), [`filter`] (kernel candidate Pareto
 //! filtering + candidate pricing), [`heuristic`] (Algorithm 1 + the
-//! incremental outer search), [`cache`] (fingerprint-keyed,
-//! disk-persistent plan cache), [`bruteforce`] (exact oracle for tiny
-//! instances, test-only scale).
+//! incremental outer search), [`cache`] (fingerprint-keyed plan +
+//! calibrated-plan caches over the artifact store), [`bruteforce`]
+//! (exact oracle for tiny instances, test-only scale).
 
 pub mod op;
 pub mod plan;
@@ -82,7 +87,7 @@ pub mod heuristic;
 pub mod cache;
 pub mod bruteforce;
 
-pub use cache::PlanCache;
+pub use cache::{CalibratedPlanCache, PlanCache};
 pub use heuristic::{schedule, SchedulerConfig};
 pub use makespan::IncrementalEval;
 pub use op::{OpId, OpSet, OpStage, Operation};

@@ -99,10 +99,12 @@ impl Plan {
     ///
     /// Kernel choices are resolved by name against `registry`'s candidates
     /// for each layer, so a plan only loads against a registry that still
-    /// offers the kernels it chose (the persistent plan store treats any
-    /// failure here as a cache miss and replans). The round trip is exact:
-    /// `Plan::from_json(&p.to_json(g), g, reg)` reproduces `p` including
-    /// `estimated_ms` bit-for-bit.
+    /// offers the kernels it chose — this is the *structural* half of the
+    /// artifact store's revalidation (the store's header + checksum catch
+    /// byte-level damage; this catches semantic drift, and the plan caches
+    /// treat any failure here as a miss and replan). The round trip is
+    /// exact: `Plan::from_json(&p.to_json(g), g, reg)` reproduces `p`
+    /// including `estimated_ms` bit-for-bit.
     pub fn from_json(j: &Json, graph: &ModelGraph, registry: &Registry) -> Result<Plan, String> {
         if j.get("model").as_str() != Some(graph.name.as_str()) {
             return Err(format!(

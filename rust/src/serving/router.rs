@@ -13,6 +13,7 @@ use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::metrics::Recorder;
 use crate::sched::cache::PlanCache;
+use crate::store::ArtifactStore;
 use crate::Ms;
 
 /// Serving engine the router charges latencies from.
@@ -78,17 +79,37 @@ impl Router {
         cfg: RouterConfig,
         plan_cache: Arc<PlanCache>,
     ) -> Router {
+        let builder = Router::builder_for(dev, &cfg).plan_cache(plan_cache);
+        Router::finish(builder.build(), models)
+    }
+
+    /// [`Router::new`] persisting plans through a shared content-addressed
+    /// [`ArtifactStore`]: a restarted router — including one in a fresh
+    /// process — pointed at the same store directory skips every plan
+    /// search (observable via [`Engine::store_stats`]).
+    pub fn with_artifact_store(
+        dev: &DeviceProfile,
+        models: Vec<ModelGraph>,
+        cfg: RouterConfig,
+        store: Arc<ArtifactStore>,
+    ) -> Router {
+        let builder = Router::builder_for(dev, &cfg).artifact_store_shared(store);
+        Router::finish(builder.build(), models)
+    }
+
+    fn builder_for(dev: &DeviceProfile, cfg: &RouterConfig) -> crate::engine::EngineBuilder {
         let backend: Box<dyn ExecBackend> = match cfg.engine {
             ServeEngine::Nnv12 => Box::new(SimBackend::nnv12()),
             ServeEngine::Ncnn => Box::new(BaselineBackend::ncnn()),
         };
-        let engine = Engine::builder()
+        Engine::builder()
             .device(dev.clone())
             .memory_budget(cfg.memory_budget)
             .warmup_depth(cfg.warmup_depth)
-            .plan_cache(plan_cache)
             .backend_box(backend)
-            .build();
+    }
+
+    fn finish(engine: Engine, models: Vec<ModelGraph>) -> Router {
         let sessions = engine
             .load_all(models)
             .into_iter()
@@ -219,6 +240,38 @@ mod tests {
             a.handle("squeezenet").unwrap().latency_ms.to_bits(),
             b.handle("squeezenet").unwrap().latency_ms.to_bits()
         );
+    }
+
+    #[test]
+    fn restarted_router_on_shared_store_skips_planning() {
+        let dir = std::env::temp_dir().join(format!(
+            "nnv12-router-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let models = || vec![zoo::tiny_net(), zoo::squeezenet()];
+
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let a = Router::with_artifact_store(&dev, models(), RouterConfig::default(), store);
+        assert_eq!(a.plan_cache().misses(), 2, "first router plans each model");
+
+        // A "restarted" router: fresh store handle over the same directory
+        // (≈ a fresh process). Every plan comes from disk.
+        let store2 = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let mut b =
+            Router::with_artifact_store(&dev, models(), RouterConfig::default(), store2);
+        assert_eq!(b.plan_cache().misses(), 0, "restart must not re-plan");
+        assert_eq!(b.plan_cache().disk_hits(), 2);
+        let stats = b.engine().store_stats().unwrap();
+        assert_eq!(stats.hits, 2);
+        let mut a = a;
+        assert_eq!(
+            a.handle("squeezenet").unwrap().latency_ms.to_bits(),
+            b.handle("squeezenet").unwrap().latency_ms.to_bits(),
+            "stored plans must reproduce identical serving latencies"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

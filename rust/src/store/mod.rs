@@ -1,0 +1,705 @@
+//! The content-addressed artifact store: one persistence layer for every
+//! byte the system finds expensive to recompute.
+//!
+//! NNV12 produces three kinds of durable artifacts: scheduling **plans**
+//! (the Fig. 4 offline decision stage), **calibrated plans** (a plan plus
+//! the §3.3 re-profiled device view), and post-transformed **weights**
+//! (the §3.1.2 transformation-bypass cache). Before this module each had
+//! its own ad-hoc disk format with no shared integrity, versioning, or
+//! eviction story; [`ArtifactStore`] gives them one.
+//!
+//! # Key scheme
+//!
+//! Artifacts are *content-addressed*: the key is a 64-bit structural
+//! fingerprint of everything the artifact is a function of — device
+//! profile fields, model architecture, scheduler config knobs, registry
+//! tag for plans ([`crate::sched::cache::fingerprint`]); model name,
+//! layer, kernel variant, and the raw blob's length + checksum for
+//! weights ([`crate::weights::TransformCache`]). A changed input produces
+//! a different key, so stale artifacts are never *returned* — they simply
+//! stop being addressed and age out through LRU eviction. Keys are
+//! namespaced ([`Namespace`]) so a plan and a weight blob can never
+//! collide even at equal hashes.
+//!
+//! # On-disk layout
+//!
+//! One flat directory of `<namespace>-<key:016x>.art` files. Each file is
+//! a fixed 40-byte header followed by the payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"NNV12ART"
+//!      8     4  format version (little-endian u32, currently 1)
+//!     12     4  namespace id (u32: 0 plan, 1 calibrated-plan, 2 weights)
+//!     16     8  key (u64; must match the filename)
+//!     24     8  payload length (u64)
+//!     32     8  FNV-1a 64 checksum of the payload
+//!     40     …  payload bytes
+//! ```
+//!
+//! Reads validate all six header fields plus the checksum; any mismatch
+//! (foreign file, truncation, bit rot, older format version) rejects the
+//! artifact, deletes it, and reports a miss — corrupt artifacts can never
+//! poison a consumer, they only cost a recompute. Typed views layer
+//! *structural* revalidation on top (a plan JSON is re-validated against
+//! the live model graph and kernel registry before it is trusted).
+//!
+//! # Writes and concurrency
+//!
+//! Writes go to a process- and writer-unique temp file, then rename into
+//! place, so concurrent processes sharing a store directory only ever
+//! observe complete documents; whichever complete document wins the
+//! rename is kept (put is last-wins, which is safe because equal keys
+//! address equal content). All counters are atomics; the store is `Sync`
+//! and cheap to share as an `Arc` across caches, engines, and threads.
+//!
+//! # Eviction
+//!
+//! A store opened with [`ArtifactStore::with_cap`] bounds its total
+//! payload+header bytes. After every write the store scans its directory
+//! and removes least-recently-used `.art` files (by modification time)
+//! until it fits the cap; a validated read re-stamps the artifact's
+//! header in place, refreshing its recency, so hot artifacts survive.
+//! The most recently written artifact is always kept, even when it alone
+//! exceeds the cap — a store too small for its newest artifact would
+//! otherwise evict everything and thrash. Evicting an artifact is always
+//! safe: the next consumer takes a miss and recomputes (observable as a
+//! cold re-plan or a re-transform), then re-stores.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::SystemTime;
+
+const MAGIC: [u8; 8] = *b"NNV12ART";
+const FORMAT_VERSION: u32 = 1;
+const HEADER_LEN: usize = 40;
+
+/// Typed artifact namespaces. The namespace is part of the address (file
+/// name prefix + header field), so artifacts of different kinds can never
+/// collide or be misinterpreted for one another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Namespace {
+    /// Scheduling plans (JSON payload, see [`crate::sched::plan::Plan`]).
+    Plan,
+    /// Calibrated `(plan, device-view)` pairs (JSON payload).
+    CalibratedPlan,
+    /// Post-transformed weight blobs (little-endian f32 payload).
+    Weights,
+}
+
+impl Namespace {
+    /// Stable file-name prefix of this namespace.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Namespace::Plan => "plan",
+            Namespace::CalibratedPlan => "calibrated-plan",
+            Namespace::Weights => "weights",
+        }
+    }
+
+    fn id(self) -> u32 {
+        match self {
+            Namespace::Plan => 0,
+            Namespace::CalibratedPlan => 1,
+            Namespace::Weights => 2,
+        }
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice — the store's payload checksum, also
+/// usable by views to fingerprint source content (e.g. raw weight blobs).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Snapshot of a store's counters ([`ArtifactStore::stats`]); surfaced
+/// through [`crate::engine::Engine::store_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Validated artifact reads served.
+    pub hits: usize,
+    /// Lookups of absent keys.
+    pub misses: usize,
+    /// Files removed by the LRU size-cap sweep.
+    pub evictions: usize,
+    /// Artifacts rejected (and deleted) by header/checksum validation.
+    pub rejected: usize,
+    /// Current total bytes of artifact files in the directory.
+    pub bytes_used: u64,
+    /// Total artifact bytes written over this store handle's lifetime.
+    pub bytes_written: u64,
+}
+
+/// The store. See the module docs for the key scheme, on-disk layout, and
+/// eviction policy.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    cap_bytes: Option<u64>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+    rejected: AtomicUsize,
+    bytes_written: AtomicU64,
+    /// Running estimate of on-disk bytes, used only to decide *when* a
+    /// capped store must run an eviction sweep (each sweep re-measures
+    /// exactly and re-seeds this, so drift from other writers
+    /// self-corrects). Keeps `put` O(1) instead of a directory walk.
+    approx_used: AtomicU64,
+    next_tmp: AtomicUsize,
+}
+
+impl ArtifactStore {
+    /// Open (creating if absent) an unbounded store at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<ArtifactStore> {
+        let store = ArtifactStore::at(dir);
+        std::fs::create_dir_all(&store.dir)?;
+        Ok(store)
+    }
+
+    /// [`ArtifactStore::open`] with a total size cap in bytes: after every
+    /// write, least-recently-used artifacts are evicted until the store
+    /// fits (the newest artifact is always kept).
+    pub fn with_cap(dir: impl Into<PathBuf>, cap_bytes: u64) -> std::io::Result<ArtifactStore> {
+        let mut store = ArtifactStore::open(dir)?;
+        store.cap_bytes = Some(cap_bytes);
+        store
+            .approx_used
+            .store(store.bytes_used(), Ordering::Relaxed);
+        Ok(store)
+    }
+
+    /// A store handle that defers directory creation to the first write
+    /// (infallible; reads against a missing directory are plain misses).
+    pub fn at(dir: impl Into<PathBuf>) -> ArtifactStore {
+        ArtifactStore {
+            dir: dir.into(),
+            cap_bytes: None,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            bytes_written: AtomicU64::new(0),
+            approx_used: AtomicU64::new(0),
+            next_tmp: AtomicUsize::new(0),
+        }
+    }
+
+    /// The backing directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The size cap, if this store is bounded.
+    pub fn cap_bytes(&self) -> Option<u64> {
+        self.cap_bytes
+    }
+
+    /// Content-address helper: hash an ordered list of string parts into a
+    /// key. Views with richer inputs (device profiles, graphs) hash those
+    /// directly instead.
+    pub fn key_of(parts: &[&str]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for p in parts {
+            h = fnv1a_continue(h, p.as_bytes());
+            // Separator so ["ab","c"] != ["a","bc"].
+            h = fnv1a_continue(h, &[0x1f]);
+        }
+        h
+    }
+
+    fn path_of(&self, ns: Namespace, key: u64) -> PathBuf {
+        self.dir.join(format!("{}-{key:016x}.art", ns.tag()))
+    }
+
+    /// File name of a *scoped* artifact: `<ns>~<scope>-<key>.art`. The
+    /// scope (e.g. a model name) groups artifacts for enumeration —
+    /// [`ArtifactStore::clear_scope`] / [`ArtifactStore::bytes_in_scope`]
+    /// — without affecting addressing (the key already covers the scope's
+    /// content). Sanitized so the `~`/`-` separators stay unambiguous.
+    fn scoped_path(&self, ns: Namespace, scope: &str, key: u64) -> PathBuf {
+        self.dir
+            .join(format!("{}~{}-{key:016x}.art", ns.tag(), sanitize_scope(scope)))
+    }
+
+    fn header(ns: Namespace, key: u64, payload: &[u8]) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(&MAGIC);
+        h[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        h[12..16].copy_from_slice(&ns.id().to_le_bytes());
+        h[16..24].copy_from_slice(&key.to_le_bytes());
+        h[24..32].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        h[32..40].copy_from_slice(&fnv1a(payload).to_le_bytes());
+        h
+    }
+
+    /// Fetch and validate an artifact. `None` means absent, truncated,
+    /// corrupt, foreign, or old-format — in every case the caller should
+    /// recompute (invalid files are deleted so the recompute's `put`
+    /// heals the store; a *transient read error* is reported as a plain
+    /// miss and deletes nothing, since it is not evidence of corruption).
+    /// A validated read refreshes the artifact's LRU recency.
+    pub fn get(&self, ns: Namespace, key: u64) -> Option<Vec<u8>> {
+        self.get_at(&self.path_of(ns, key), ns, key)
+    }
+
+    /// [`ArtifactStore::get`] for a scoped artifact (see
+    /// [`ArtifactStore::put_scoped`]).
+    pub fn get_scoped(&self, ns: Namespace, scope: &str, key: u64) -> Option<Vec<u8>> {
+        self.get_at(&self.scoped_path(ns, scope, key), ns, key)
+    }
+
+    fn get_at(&self, path: &Path, ns: Namespace, key: u64) -> Option<Vec<u8>> {
+        let mut file = match std::fs::File::open(path) {
+            Ok(f) => f,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        let mut bytes = Vec::new();
+        if file.read_to_end(&mut bytes).is_err() {
+            // Transient I/O failure (EIO, flaky network fs): the bytes on
+            // disk may be perfectly valid, so don't delete — miss and let
+            // the caller recompute.
+            drop(file);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        drop(file);
+        if bytes.len() < HEADER_LEN {
+            return self.reject(path);
+        }
+        let (header, payload) = bytes.split_at(HEADER_LEN);
+        let field = |a: usize, b: usize| -> u64 {
+            let mut buf = [0u8; 8];
+            buf[..b - a].copy_from_slice(&header[a..b]);
+            u64::from_le_bytes(buf)
+        };
+        let ok = header[0..8] == MAGIC
+            && field(8, 12) as u32 == FORMAT_VERSION
+            && field(12, 16) as u32 == ns.id()
+            && field(16, 24) == key
+            && field(24, 32) == payload.len() as u64
+            && field(32, 40) == fnv1a(payload);
+        if !ok {
+            return self.reject(path);
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        // Recency only matters for LRU eviction; keep reads read-only on
+        // unbounded stores.
+        if self.cap_bytes.is_some() {
+            self.touch(path, ns, key, payload);
+        }
+        Some(payload.to_vec())
+    }
+
+    fn reject(&self, path: &Path) -> Option<Vec<u8>> {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = std::fs::remove_file(path);
+        None
+    }
+
+    /// Refresh LRU recency: rewrite the (identical) header bytes in
+    /// place, which bumps the file's modification time portably.
+    /// Best-effort — a read-only store still serves hits, it just loses
+    /// recency tracking.
+    fn touch(&self, path: &Path, ns: Namespace, key: u64, payload: &[u8]) {
+        if let Ok(mut f) = std::fs::OpenOptions::new().write(true).open(path) {
+            let header = ArtifactStore::header(ns, key, payload);
+            let _ = f
+                .seek(SeekFrom::Start(0))
+                .and_then(|_| f.write_all(&header));
+        }
+    }
+
+    /// Store an artifact atomically (temp file + rename), then enforce the
+    /// size cap. Equal keys address equal content, so concurrent writers
+    /// racing on one key are benign: whichever complete document wins the
+    /// rename is kept.
+    pub fn put(&self, ns: Namespace, key: u64, payload: &[u8]) -> std::io::Result<()> {
+        self.put_at(self.path_of(ns, key), ns, key, payload)
+    }
+
+    /// [`ArtifactStore::put`] under a scope (e.g. a model name): the
+    /// artifact is addressed exactly like an unscoped one, but its file
+    /// name carries the scope so a whole scope can be enumerated, sized
+    /// ([`ArtifactStore::bytes_in_scope`]), or dropped
+    /// ([`ArtifactStore::clear_scope`]) without knowing its keys.
+    pub fn put_scoped(
+        &self,
+        ns: Namespace,
+        scope: &str,
+        key: u64,
+        payload: &[u8],
+    ) -> std::io::Result<()> {
+        self.put_at(self.scoped_path(ns, scope, key), ns, key, payload)
+    }
+
+    fn put_at(
+        &self,
+        path: PathBuf,
+        ns: Namespace,
+        key: u64,
+        payload: &[u8],
+    ) -> std::io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let tmp = self.dir.join(format!(
+            "{}-{key:016x}.tmp.{}.{}",
+            ns.tag(),
+            std::process::id(),
+            self.next_tmp.fetch_add(1, Ordering::Relaxed)
+        ));
+        let header = ArtifactStore::header(ns, key, payload);
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&header)?;
+            f.write_all(payload)?;
+            Ok(())
+        };
+        if let Err(e) = write().and_then(|_| std::fs::rename(&tmp, &path)) {
+            // Don't leave orphaned temp files accumulating in a long-lived
+            // store directory.
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        let entry_bytes = (HEADER_LEN + payload.len()) as u64;
+        self.bytes_written.fetch_add(entry_bytes, Ordering::Relaxed);
+        let estimated = self.approx_used.fetch_add(entry_bytes, Ordering::Relaxed) + entry_bytes;
+        if self.cap_bytes.is_some_and(|cap| estimated > cap) {
+            self.evict_to_cap();
+        }
+        Ok(())
+    }
+
+    /// Whether a file for this artifact exists (without validating it).
+    pub fn contains(&self, ns: Namespace, key: u64) -> bool {
+        self.path_of(ns, key).exists()
+    }
+
+    /// [`ArtifactStore::contains`] for a scoped artifact.
+    pub fn contains_scoped(&self, ns: Namespace, scope: &str, key: u64) -> bool {
+        self.scoped_path(ns, scope, key).exists()
+    }
+
+    /// Remove one artifact. Returns whether a file was deleted.
+    pub fn remove(&self, ns: Namespace, key: u64) -> bool {
+        std::fs::remove_file(self.path_of(ns, key)).is_ok()
+    }
+
+    /// Remove every artifact in one namespace (scoped and unscoped).
+    pub fn clear_namespace(&self, ns: Namespace) {
+        let unscoped = format!("{}-", ns.tag());
+        let scoped = format!("{}~", ns.tag());
+        for (path, _, _) in self.scan() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with(&unscoped) || name.starts_with(&scoped) {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+
+    /// Remove every artifact of one scope within a namespace.
+    pub fn clear_scope(&self, ns: Namespace, scope: &str) {
+        let prefix = format!("{}~{}-", ns.tag(), sanitize_scope(scope));
+        for (path, _, _) in self.scan() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with(&prefix) {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+
+    /// Total bytes of one scope's artifacts within a namespace.
+    pub fn bytes_in_scope(&self, ns: Namespace, scope: &str) -> u64 {
+        let prefix = format!("{}~{}-", ns.tag(), sanitize_scope(scope));
+        self.scan()
+            .iter()
+            .filter(|(path, _, _)| {
+                path.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(&prefix))
+            })
+            .map(|(_, b, _)| *b)
+            .sum()
+    }
+
+    /// All `.art` files: (path, bytes, mtime).
+    fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("art") {
+                continue;
+            }
+            if let Ok(meta) = entry.metadata() {
+                let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push((path, meta.len(), mtime));
+            }
+        }
+        out
+    }
+
+    /// Total bytes of artifact files currently in the directory.
+    pub fn bytes_used(&self) -> u64 {
+        self.scan().iter().map(|(_, b, _)| *b).sum()
+    }
+
+    /// Number of artifact files currently in the directory.
+    pub fn len(&self) -> usize {
+        self.scan().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One eviction sweep: measure the directory exactly, evict LRU files
+    /// until the cap fits, and re-seed the running estimate with the exact
+    /// result (correcting any drift from concurrent writers).
+    fn evict_to_cap(&self) {
+        let Some(cap) = self.cap_bytes else { return };
+        let mut files = self.scan();
+        let mut total: u64 = files.iter().map(|(_, b, _)| *b).sum();
+        if total > cap {
+            // Oldest modification time first = least recently used first
+            // (validated reads re-stamp the header, refreshing mtime).
+            files.sort_by_key(|(_, _, mtime)| *mtime);
+            let n = files.len();
+            for (i, (path, bytes, _)) in files.into_iter().enumerate() {
+                if total <= cap || i + 1 == n {
+                    // Always keep the newest artifact, even over cap.
+                    break;
+                }
+                if std::fs::remove_file(&path).is_ok() {
+                    total = total.saturating_sub(bytes);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.approx_used.store(total, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (`bytes_used` is measured live from the
+    /// directory, so it reflects other processes' writes and evictions).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            bytes_used: self.bytes_used(),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn fnv1a_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Encode a scope for use between the `~` and `-` file-name separators.
+/// ASCII alphanumerics pass through; every other byte becomes `_xx`
+/// (two hex digits). The encoding is injective — a literal alphanumeric
+/// never starts with `_` and every escape is exactly three characters —
+/// so distinct scopes (e.g. `net-a` vs `net_a`) can never share a file
+/// prefix, which the per-scope clear/size guarantees rely on.
+fn sanitize_scope(scope: &str) -> String {
+    let mut out = String::with_capacity(scope.len());
+    for b in scope.bytes() {
+        if b.is_ascii_alphanumeric() {
+            out.push(b as char);
+        } else {
+            out.push_str(&format!("_{b:02x}"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "nnv12-artifact-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_counters() {
+        let dir = temp_store("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = b"plan payload".to_vec();
+        assert!(s.get(Namespace::Plan, 7).is_none());
+        s.put(Namespace::Plan, 7, &payload).unwrap();
+        assert!(s.contains(Namespace::Plan, 7));
+        assert_eq!(s.get(Namespace::Plan, 7).unwrap(), payload);
+        // Namespaces are part of the address.
+        assert!(s.get(Namespace::Weights, 7).is_none());
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses), (1, 2));
+        assert_eq!(st.bytes_used, (HEADER_LEN + payload.len()) as u64);
+        assert_eq!(st.bytes_written, st.bytes_used);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_truncated_and_foreign_files_rejected_and_healed() {
+        let dir = temp_store("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload: Vec<u8> = (0u8..=255).collect();
+
+        // Bit flip in the payload.
+        s.put(Namespace::Weights, 1, &payload).unwrap();
+        let path = s.path_of(Namespace::Weights, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(s.get(Namespace::Weights, 1).is_none());
+        assert!(!path.exists(), "rejected artifact must be deleted");
+
+        // Truncation inside the header.
+        s.put(Namespace::Weights, 2, &payload).unwrap();
+        let path2 = s.path_of(Namespace::Weights, 2);
+        let bytes = std::fs::read(&path2).unwrap();
+        std::fs::write(&path2, &bytes[..HEADER_LEN / 2]).unwrap();
+        assert!(s.get(Namespace::Weights, 2).is_none());
+
+        // Foreign file under the right name.
+        std::fs::write(s.path_of(Namespace::Weights, 3), b"not an artifact").unwrap();
+        assert!(s.get(Namespace::Weights, 3).is_none());
+
+        assert_eq!(s.stats().rejected, 3);
+        // A rewrite heals: the store serves the new artifact.
+        s.put(Namespace::Weights, 1, &payload).unwrap();
+        assert_eq!(s.get(Namespace::Weights, 1).unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_cap_evicts_lru_and_keeps_touched_entries() {
+        let dir = temp_store("evict");
+        let _ = std::fs::remove_dir_all(&dir);
+        let entry_bytes = (HEADER_LEN + 100) as u64;
+        // Cap fits two entries.
+        let s = ArtifactStore::with_cap(&dir, 2 * entry_bytes).unwrap();
+        let payload = vec![0xabu8; 100];
+        s.put(Namespace::Plan, 1, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.put(Namespace::Plan, 2, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Touch 1: it becomes most recently used.
+        assert!(s.get(Namespace::Plan, 1).is_some());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Third entry exceeds the cap: the LRU entry (2, untouched) goes.
+        s.put(Namespace::Plan, 3, &payload).unwrap();
+        assert!(s.contains(Namespace::Plan, 1), "touched entry must survive");
+        assert!(!s.contains(Namespace::Plan, 2), "LRU entry must be evicted");
+        assert!(s.contains(Namespace::Plan, 3), "newest entry must survive");
+        assert_eq!(s.stats().evictions, 1);
+        assert!(s.bytes_used() <= 2 * entry_bytes);
+
+        // A single artifact larger than the whole cap is still kept.
+        let big = vec![0u8; 3 * entry_bytes as usize];
+        s.put(Namespace::Plan, 4, &big).unwrap();
+        assert!(s.contains(Namespace::Plan, 4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scope_encoding_is_injective() {
+        // `net-a` vs `net_a` vs `net a` must not share a file prefix.
+        let dir = temp_store("scope-enc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![1u8; 8];
+        for scope in ["net-a", "net_a", "net a", "net-a-"] {
+            s.put_scoped(Namespace::Weights, scope, 5, &payload).unwrap();
+        }
+        assert_eq!(s.len(), 4, "distinct scopes must produce distinct files");
+        s.clear_scope(Namespace::Weights, "net-a");
+        assert!(!s.contains_scoped(Namespace::Weights, "net-a", 5));
+        assert!(s.contains_scoped(Namespace::Weights, "net_a", 5));
+        assert!(s.contains_scoped(Namespace::Weights, "net a", 5));
+        assert!(s.contains_scoped(Namespace::Weights, "net-a-", 5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_of_separates_parts() {
+        assert_ne!(
+            ArtifactStore::key_of(&["ab", "c"]),
+            ArtifactStore::key_of(&["a", "bc"])
+        );
+        assert_eq!(
+            ArtifactStore::key_of(&["model", "L3", "winograd"]),
+            ArtifactStore::key_of(&["model", "L3", "winograd"])
+        );
+    }
+
+    #[test]
+    fn scoped_artifacts_enumerate_and_clear_per_scope() {
+        let dir = temp_store("scoped");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![7u8; 64];
+        s.put_scoped(Namespace::Weights, "model-a", 1, &payload).unwrap();
+        s.put_scoped(Namespace::Weights, "model-a", 2, &payload).unwrap();
+        s.put_scoped(Namespace::Weights, "model-b", 1, &payload).unwrap();
+        s.put(Namespace::Plan, 9, &payload).unwrap();
+
+        assert_eq!(s.get_scoped(Namespace::Weights, "model-a", 1).unwrap(), payload);
+        assert!(s.contains_scoped(Namespace::Weights, "model-b", 1));
+        // Same key under different scopes addresses different files.
+        assert!(!s.contains(Namespace::Weights, 1));
+        let entry = (HEADER_LEN + payload.len()) as u64;
+        assert_eq!(s.bytes_in_scope(Namespace::Weights, "model-a"), 2 * entry);
+        assert_eq!(s.bytes_in_scope(Namespace::Weights, "model-b"), entry);
+
+        // Clearing one scope leaves the other scope and other namespaces.
+        s.clear_scope(Namespace::Weights, "model-a");
+        assert!(!s.contains_scoped(Namespace::Weights, "model-a", 1));
+        assert!(s.contains_scoped(Namespace::Weights, "model-b", 1));
+        assert!(s.contains(Namespace::Plan, 9));
+        // clear_namespace takes scoped files too.
+        s.clear_namespace(Namespace::Weights);
+        assert!(!s.contains_scoped(Namespace::Weights, "model-b", 1));
+        assert!(s.contains(Namespace::Plan, 9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_handle_sees_prior_process_artifacts() {
+        let dir = temp_store("crossproc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let payload = b"persisted".to_vec();
+        ArtifactStore::open(&dir)
+            .unwrap()
+            .put(Namespace::CalibratedPlan, 42, &payload)
+            .unwrap();
+        // A fresh handle (≈ a fresh process) serves the artifact.
+        let b = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(b.get(Namespace::CalibratedPlan, 42).unwrap(), payload);
+        assert_eq!(b.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

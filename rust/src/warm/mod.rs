@@ -18,7 +18,6 @@ use crate::cost::CostModel;
 use crate::device::{CoreClass, DeviceProfile};
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
-use crate::sched::heuristic::{schedule, SchedulerConfig};
 use crate::sched::plan::UnitId;
 use crate::Ms;
 
@@ -33,27 +32,11 @@ pub struct ContinuousReport {
     pub switched_layers: usize,
 }
 
-/// Simulate `n_inferences` consecutive inferences under NNV12's
-/// continuous-inference mode, planning the cold inference from scratch.
-#[deprecated(
-    note = "plan through the facade instead: `Engine::load(graph)` exposes the \
-            ladder as `Session::ladder()`/`Session::warm_ms()`"
-)]
-pub fn continuous(
-    dev: &DeviceProfile,
-    graph: &ModelGraph,
-    registry: &Registry,
-    cfg: &SchedulerConfig,
-    n_inferences: usize,
-) -> ContinuousReport {
-    let s = schedule(dev, graph, registry, cfg);
-    continuous_from(dev, graph, registry, n_inferences, &s)
-}
-
-/// [`continuous`] with an already-scheduled cold plan — the serving
-/// router's path, which draws `s` from its fingerprint-keyed
-/// [`crate::sched::cache::PlanCache`] instead of re-planning per model.
-/// The scheduler config is already baked into `s`.
+/// The continuous-inference model over an already-scheduled cold plan —
+/// the facade's path ([`crate::engine::Session::ladder`] via
+/// [`crate::engine::ExecBackend::warm_ladder`]), which draws `s` from the
+/// fingerprint-keyed [`crate::sched::cache::PlanCache`] instead of
+/// re-planning per model. The scheduler config is already baked into `s`.
 pub fn continuous_from(
     dev: &DeviceProfile,
     graph: &ModelGraph,
@@ -136,11 +119,25 @@ pub fn continuous_from(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the `continuous` shim directly
 mod tests {
     use super::*;
     use crate::device::profiles;
     use crate::graph::zoo;
+    use crate::sched::heuristic::{schedule, SchedulerConfig};
+
+    /// Plan from scratch, then model `n` consecutive inferences — what the
+    /// removed `continuous` shim did; callers outside tests go through the
+    /// facade (`Engine::load` → `Session::ladder`).
+    fn plan_and_run(
+        dev: &DeviceProfile,
+        g: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        n: usize,
+    ) -> ContinuousReport {
+        let s = schedule(dev, g, registry, cfg);
+        continuous_from(dev, g, registry, n, &s)
+    }
 
     #[test]
     fn fig14_shape() {
@@ -148,7 +145,7 @@ mod tests {
         let dev = profiles::meizu_16t();
         for model in ["googlenet", "resnet50"] {
             let g = zoo::by_name(model).unwrap();
-            let r = continuous(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 4);
+            let r = plan_and_run(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 4);
             assert_eq!(r.latencies.len(), 4);
             let cold = r.latencies[0];
             let second = r.latencies[1];
@@ -172,7 +169,7 @@ mod tests {
         // switch. Just assert the count is consistent.
         let dev = profiles::meizu_16t();
         let g = zoo::resnet50();
-        let r = continuous(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 3);
+        let r = plan_and_run(&dev, &g, &Registry::full(), &SchedulerConfig::kcp(), 3);
         assert!(r.switched_layers <= g.weighted_layers().len());
     }
 }

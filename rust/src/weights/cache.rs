@@ -1,19 +1,21 @@
-//! The post-transformed-weights disk cache (§3.1.2).
+//! The post-transformed-weights cache (§3.1.2), a typed view over the
+//! content-addressed [`crate::store::ArtifactStore`].
 //!
-//! Entries live under `<dir>/<model>/L<layer>.<variant>.cache.bin` with a
-//! 16-byte header: magic, header version, source length (f32 count), and an
-//! FNV-1a checksum of the source blob — so a re-downloaded or updated model
-//! invalidates stale entries instead of silently executing on wrong
-//! weights (zero-accuracy-loss principle, §3).
+//! Entries live in the store's [`Namespace::Weights`] namespace. The key
+//! is content-addressed over (model, layer, kernel variant, raw blob
+//! length, raw blob checksum), so a re-downloaded or updated model simply
+//! addresses *different* entries instead of silently executing on wrong
+//! weights (zero-accuracy-loss principle, §3); the stale entries stop
+//! being referenced and age out through the store's LRU eviction. The
+//! store's header + checksum validation additionally rejects truncated or
+//! corrupt blobs on read.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use super::store::{read_f32, write_f32};
-
-const MAGIC: u32 = 0x4E4E_5631; // "NNV1"
-const VERSION: u32 = 1;
+use crate::store::{ArtifactStore, Namespace};
 
 /// FNV-1a over the bit pattern of an f32 slice.
 pub fn checksum(data: &[f32]) -> u32 {
@@ -27,86 +29,125 @@ pub fn checksum(data: &[f32]) -> u32 {
     h
 }
 
-/// Disk cache rooted at a directory.
+/// Per-model view over a weights store.
 #[derive(Debug, Clone)]
 pub struct TransformCache {
-    dir: PathBuf,
+    store: Arc<ArtifactStore>,
     model: String,
 }
 
 impl TransformCache {
+    /// A cache rooted at a private store directory (created lazily on the
+    /// first write).
     pub fn new(dir: &Path, model: &str) -> TransformCache {
-        TransformCache { dir: dir.to_path_buf(), model: model.to_string() }
+        TransformCache::over(Arc::new(ArtifactStore::at(dir)), model)
     }
 
-    fn path(&self, layer: usize, variant: &str) -> PathBuf {
-        self.dir
-            .join(&self.model)
-            .join(format!("L{layer:03}.{variant}.cache.bin"))
+    /// A cache over a shared artifact store — the engine facade's path,
+    /// where weights share the store (and its size cap) with plans.
+    pub fn over(store: Arc<ArtifactStore>, model: &str) -> TransformCache {
+        TransformCache { store, model: model.to_string() }
     }
 
-    /// Store transformed weights, stamped against the raw source blob.
+    /// The backing store (hit/miss/eviction counters live there).
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// Content-addressed key of one entry: everything the transformed
+    /// blob is a function of.
+    fn key(&self, layer: usize, variant: &str, raw: &[f32]) -> u64 {
+        ArtifactStore::key_of(&[
+            &self.model,
+            &format!("L{layer:03}"),
+            variant,
+            &raw.len().to_string(),
+            &format!("{:08x}", checksum(raw)),
+        ])
+    }
+
+    /// Store transformed weights, addressed by the raw source blob and
+    /// scoped under this model's name (so the model's entries can be
+    /// sized and cleared as a group).
     pub fn put(&self, layer: usize, variant: &str, raw: &[f32], transformed: &[f32]) -> Result<()> {
-        let p = self.path(layer, variant);
-        let mut blob = Vec::with_capacity(transformed.len() + 4);
-        blob.push(f32::from_bits(MAGIC));
-        blob.push(f32::from_bits(VERSION));
-        blob.push(f32::from_bits(raw.len() as u32));
-        blob.push(f32::from_bits(checksum(raw)));
-        blob.extend_from_slice(transformed);
-        write_f32(&p, &blob).with_context(|| format!("writing cache {}", p.display()))
+        let mut payload = Vec::with_capacity(transformed.len() * 4);
+        for x in transformed {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        self.store
+            .put_scoped(
+                Namespace::Weights,
+                &self.model,
+                self.key(layer, variant, raw),
+                &payload,
+            )
+            .with_context(|| {
+                format!(
+                    "writing weights cache entry {}/L{layer:03}.{variant} under {}",
+                    self.model,
+                    self.store.dir().display()
+                )
+            })
     }
 
-    /// Fetch transformed weights if present *and* still valid for `raw`.
+    /// Fetch transformed weights if present *and* still valid for `raw`
+    /// (a changed source blob addresses a different key, so stale entries
+    /// can never be returned).
     pub fn get(&self, layer: usize, variant: &str, raw: &[f32]) -> Result<Option<Vec<f32>>> {
-        let p = self.path(layer, variant);
-        if !p.exists() {
+        let Some(payload) =
+            self.store
+                .get_scoped(Namespace::Weights, &self.model, self.key(layer, variant, raw))
+        else {
+            return Ok(None);
+        };
+        if payload.len() % 4 != 0 {
+            // Cannot happen for our own writes (checksum-validated), but a
+            // foreign writer could store a non-f32 payload under this key.
             return Ok(None);
         }
-        let blob = read_f32(&p)?;
-        if blob.len() < 4 {
-            bail!("cache {} truncated", p.display());
-        }
-        let magic = blob[0].to_bits();
-        let version = blob[1].to_bits();
-        let src_len = blob[2].to_bits() as usize;
-        let src_sum = blob[3].to_bits();
-        if magic != MAGIC || version != VERSION {
-            return Ok(None); // foreign or old-format file: ignore
-        }
-        if src_len != raw.len() || src_sum != checksum(raw) {
-            return Ok(None); // stale: model changed underneath
-        }
-        Ok(Some(blob[4..].to_vec()))
+        Ok(Some(
+            payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ))
     }
 
-    /// Whether a valid-looking entry exists (without verifying the source).
-    pub fn contains(&self, layer: usize, variant: &str) -> bool {
-        self.path(layer, variant).exists()
+    /// Whether an entry for this exact (layer, variant, raw source)
+    /// exists (without reading or validating the payload).
+    pub fn contains(&self, layer: usize, variant: &str, raw: &[f32]) -> bool {
+        self.store
+            .contains_scoped(Namespace::Weights, &self.model, self.key(layer, variant, raw))
     }
 
-    /// Total bytes used by this model's cache entries (Table 4's "Storage
+    /// Total bytes of *this model's* weight artifacts (Table 4's "Storage
     /// Overhead" column).
     pub fn bytes_used(&self) -> u64 {
-        let dir = self.dir.join(&self.model);
-        std::fs::read_dir(&dir)
-            .map(|rd| {
-                rd.flatten()
-                    .filter_map(|e| e.metadata().ok())
-                    .map(|m| m.len())
-                    .sum()
-            })
-            .unwrap_or(0)
+        self.store.bytes_in_scope(Namespace::Weights, &self.model)
     }
 
-    /// Drop all entries for this model.
+    /// Drop this model's weight entries (other models sharing the store
+    /// are untouched). Also removes the pre-artifact-store layout
+    /// (`<dir>/<model>/L*.cache.bin`) if a directory from an older cache
+    /// is still sitting there, so upgraded stores don't leak stale blobs.
     pub fn clear(&self) -> Result<()> {
-        let dir = self.dir.join(&self.model);
-        if dir.exists() {
-            std::fs::remove_dir_all(&dir)?;
+        self.store.clear_scope(Namespace::Weights, &self.model);
+        let legacy = self.store.dir().join(&self.model);
+        if legacy.is_dir() {
+            std::fs::remove_dir_all(&legacy)
+                .with_context(|| format!("removing legacy cache dir {}", legacy.display()))?;
         }
         Ok(())
     }
+}
+
+/// Kept for callers that want a throwaway cache directory in tests.
+pub fn temp_cache_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "nnv12-weights-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
 }
 
 #[cfg(test)]
@@ -114,12 +155,7 @@ mod tests {
     use super::*;
 
     fn cache() -> TransformCache {
-        let d = std::env::temp_dir().join(format!(
-            "nnv12-cache-{}-{:?}",
-            std::process::id(),
-            std::thread::current().id()
-        ));
-        TransformCache::new(&d, "unit")
+        TransformCache::new(&temp_cache_dir("unit"), "unit")
     }
 
     #[test]
@@ -129,7 +165,7 @@ mod tests {
         let raw: Vec<f32> = (0..100).map(|i| i as f32).collect();
         let transformed: Vec<f32> = raw.iter().map(|x| x * 2.0).collect();
         c.put(3, "winograd", &raw, &transformed).unwrap();
-        assert!(c.contains(3, "winograd"));
+        assert!(c.contains(3, "winograd", &raw));
         assert_eq!(c.get(3, "winograd", &raw).unwrap().unwrap(), transformed);
         assert!(c.get(3, "sgemm", &raw).unwrap().is_none());
         assert!(c.bytes_used() > transformed.len() as u64 * 4);
@@ -157,5 +193,40 @@ mod tests {
         b[1] = 2.0000002;
         assert_ne!(checksum(&a), checksum(&b));
         assert_eq!(checksum(&a), checksum(&a.clone()));
+    }
+
+    #[test]
+    fn shared_store_serves_fresh_view() {
+        let dir = temp_cache_dir("shared");
+        let _ = std::fs::remove_dir_all(&dir);
+        let raw: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let tr: Vec<f32> = raw.iter().map(|x| x + 7.0).collect();
+        TransformCache::new(&dir, "m").put(5, "im2col", &raw, &tr).unwrap();
+        // A fresh view (≈ a fresh process) over the same directory hits.
+        let c2 = TransformCache::new(&dir, "m");
+        assert_eq!(c2.get(5, "im2col", &raw).unwrap().unwrap(), tr);
+        assert_eq!(c2.store().stats().hits, 1);
+        // A different model name addresses different entries.
+        assert!(TransformCache::new(&dir, "other").get(5, "im2col", &raw).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_and_bytes_used_are_per_model() {
+        let dir = temp_cache_dir("per-model");
+        let _ = std::fs::remove_dir_all(&dir);
+        let raw: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let a = TransformCache::new(&dir, "model-a");
+        let b = TransformCache::new(&dir, "model-b");
+        a.put(0, "winograd", &raw, &raw).unwrap();
+        b.put(0, "winograd", &raw, &raw).unwrap();
+        assert!(a.bytes_used() > 0);
+        assert_eq!(a.bytes_used(), b.bytes_used());
+        // Clearing model A must not touch model B's entries.
+        a.clear().unwrap();
+        assert_eq!(a.bytes_used(), 0);
+        assert!(a.get(0, "winograd", &raw).unwrap().is_none());
+        assert!(b.get(0, "winograd", &raw).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,10 +1,12 @@
-//! Weight storage: raw blobs + the post-transformed-weights disk cache.
+//! Weight storage: raw blobs + the post-transformed-weights cache.
 //!
 //! The decision stage (Fig. 4) writes transformed weights next to the raw
-//! model; the runtime then reads whichever the plan asks for. Cache entries
-//! are keyed by (layer, kernel variant) and carry a header with the source
-//! blob's length + checksum, so stale caches are detected after a model
-//! update (versioned invalidation).
+//! model; the runtime then reads whichever the plan asks for. Cache
+//! entries live in the [`crate::store::ArtifactStore`]'s `weights`
+//! namespace, content-addressed by (model, layer, kernel variant, raw
+//! blob length + checksum) — so a model update addresses fresh entries
+//! and stale ones age out through the store's LRU eviction instead of
+//! being silently served (versioned invalidation).
 
 pub mod store;
 pub mod cache;

@@ -1,0 +1,323 @@
+//! Artifact-store integration: the acceptance path (a second "process"
+//! pointed at the same store dir loads resnet50 with zero plan-search and
+//! zero weight-transform work), LRU eviction under a size cap, corrupt
+//! artifact rejection, and calibrated-plan reuse.
+//!
+//! "Fresh process" is modelled as a fresh [`Engine`]/[`ArtifactStore`]
+//! handle over the same directory — nothing in-memory survives the
+//! handle, so the only channel is the on-disk store, exactly as across
+//! real processes (CI additionally runs a literal two-process check via
+//! the `repro plan --store` CLI).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::engine::Engine;
+use nnv12::graph::zoo;
+use nnv12::store::ArtifactStore;
+use nnv12::weights::TransformCache;
+
+fn store_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nnv12-storeit-{tag}-{}", std::process::id()))
+}
+
+/// Deterministic per-layer "raw weights" — stands in for the model file,
+/// which is identical in both processes.
+fn raw_weights(layer: usize) -> Vec<f32> {
+    (0..256usize).map(|i| ((layer * 31 + i) % 97) as f32 * 0.125 - 3.0).collect()
+}
+
+/// The stand-in weight transformation; the test counts how often it runs.
+fn transform(raw: &[f32]) -> Vec<f32> {
+    raw.iter().map(|x| x * 1.5 + 1.0).collect()
+}
+
+/// Prepare every weighted layer of `model` through the cache, returning
+/// how many transformations actually ran (vs were served from the store).
+fn prepare_weights(cache: &TransformCache, model: &nnv12::graph::ModelGraph) -> usize {
+    let mut transforms_run = 0;
+    for &l in &model.weighted_layers() {
+        let raw = raw_weights(l);
+        let transformed = match cache.get(l, "winograd", &raw).unwrap() {
+            Some(t) => t,
+            None => {
+                transforms_run += 1;
+                let t = transform(&raw);
+                cache.put(l, "winograd", &raw, &t).unwrap();
+                t
+            }
+        };
+        assert_eq!(transformed, transform(&raw), "cache must be value-preserving");
+    }
+    transforms_run
+}
+
+#[test]
+fn second_process_loads_resnet50_from_disk_hits_only() {
+    let dir = store_dir("acceptance");
+    let _ = std::fs::remove_dir_all(&dir);
+    let g = zoo::resnet50();
+    let n_weighted = g.weighted_layers().len();
+
+    // Process 1: plans resnet50 and transforms every layer's weights,
+    // persisting both through one store.
+    let a = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let s1 = a.load(g.clone());
+    assert_eq!(a.plan_cache().misses(), 1);
+    let cache_a = TransformCache::over(a.artifact_store().unwrap().clone(), "resnet50");
+    assert_eq!(prepare_weights(&cache_a, &g), n_weighted, "cold run transforms every layer");
+
+    // Process 2: a fresh engine + store handle over the same directory.
+    let b = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let s2 = b.load(g.clone());
+    let cache_b = TransformCache::over(b.artifact_store().unwrap().clone(), "resnet50");
+    let transforms = prepare_weights(&cache_b, &g);
+
+    // Zero plan-search, zero weight-transform work: disk hits only.
+    assert_eq!(b.plan_cache().misses(), 0, "no plan search in process 2");
+    assert_eq!(b.plan_cache().disk_hits(), 1);
+    assert_eq!(transforms, 0, "no weight transforms in process 2");
+    let stats = b.store_stats().unwrap();
+    assert_eq!(stats.hits, 1 + n_weighted, "one plan + every weight blob from disk");
+    assert_eq!(stats.misses, 0);
+    assert_eq!(stats.rejected, 0);
+
+    // And the reloaded plan is bit-identical to the planned one.
+    assert_eq!(
+        s1.plan().to_json(s1.graph()).to_compact(),
+        s2.plan().to_json(s2.graph()).to_compact()
+    );
+    assert_eq!(
+        s1.scheduled().schedule.makespan.to_bits(),
+        s2.scheduled().schedule.makespan.to_bits()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn size_cap_evicts_lru_plan_which_replans_cold() {
+    // Probe pass: measure the two plan artifacts in an unbounded store.
+    let probe = store_dir("evict-probe");
+    let _ = std::fs::remove_dir_all(&probe);
+    let engine = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&probe)
+        .build();
+    let tiny_plan = engine.load(zoo::tiny_net());
+    let tiny_bytes = engine.store_stats().unwrap().bytes_used;
+    engine.load(zoo::squeezenet());
+    let both_bytes = engine.store_stats().unwrap().bytes_used;
+    assert!(both_bytes > tiny_bytes);
+    let _ = std::fs::remove_dir_all(&probe);
+
+    // Capped pass: the cap fits either plan alone but not both, so the
+    // second load evicts the first (LRU) plan artifact.
+    let dir = store_dir("evict");
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .store_cap_bytes(both_bytes - 1)
+        .build();
+    a.load(zoo::tiny_net());
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    a.load(zoo::squeezenet());
+    let stats = a.store_stats().unwrap();
+    assert!(stats.evictions >= 1, "cap must force an eviction, got {stats:?}");
+    assert!(stats.bytes_used <= both_bytes - 1, "store must respect its cap");
+
+    // A fresh engine finds squeezenet's plan but must re-plan the evicted
+    // tiny_net — and reproduces it bit-for-bit, healing the store.
+    let b = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    b.load(zoo::squeezenet());
+    assert_eq!(b.plan_cache().disk_hits(), 1, "survivor must come from disk");
+    let tiny_again = b.load(zoo::tiny_net());
+    assert_eq!(b.plan_cache().misses(), 1, "evicted plan must re-plan cold");
+    assert_eq!(
+        tiny_again.scheduled().schedule.makespan.to_bits(),
+        tiny_plan.scheduled().schedule.makespan.to_bits()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_and_truncated_artifacts_are_rejected_then_healed() {
+    let dir = store_dir("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let original = a.load(zoo::tiny_net());
+    assert_eq!(a.plan_cache().misses(), 1);
+
+    // Damage every artifact: truncate the first, bit-flip the rest.
+    let mut damaged = 0;
+    for (i, entry) in std::fs::read_dir(&dir).unwrap().flatten().enumerate() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("art") {
+            continue;
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        if i == 0 {
+            bytes.truncate(bytes.len() / 2);
+        } else {
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0x40;
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        damaged += 1;
+    }
+    assert!(damaged >= 1);
+
+    // A fresh engine rejects the damage, replans identically, and heals.
+    let b = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let replanned = b.load(zoo::tiny_net());
+    assert_eq!(b.plan_cache().disk_hits(), 0, "damaged artifact must not load");
+    assert_eq!(b.plan_cache().misses(), 1);
+    assert!(b.store_stats().unwrap().rejected >= 1);
+    assert_eq!(
+        replanned.scheduled().schedule.makespan.to_bits(),
+        original.scheduled().schedule.makespan.to_bits()
+    );
+
+    let c = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    c.load(zoo::tiny_net());
+    assert_eq!(c.plan_cache().disk_hits(), 1, "store must be healed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn calibrated_plans_come_from_store_not_recalibration() {
+    let dir = store_dir("calibrated");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dev = profiles::meizu_16t();
+
+    let a = Engine::builder()
+        .device(dev.clone())
+        .calibrated(true)
+        .artifact_store(&dir)
+        .build();
+    let s1 = a.load(zoo::squeezenet());
+    assert_eq!(a.calibrated_cache().misses(), 1);
+    assert_eq!(a.plan_cache().misses(), 0, "calibrated plans bypass the plain cache");
+    // Loading the same model again in the same engine is a memory hit —
+    // calibration no longer re-runs per load.
+    let s1b = a.load(zoo::squeezenet());
+    assert_eq!(a.calibrated_cache().misses(), 1);
+    assert_eq!(a.calibrated_cache().hits(), 1);
+    assert_eq!(
+        s1b.scheduled().schedule.makespan.to_bits(),
+        s1.scheduled().schedule.makespan.to_bits()
+    );
+
+    // A fresh engine loads the calibrated (plan, device-view) pair from
+    // the store: no re-calibration, identical plan *and* device view.
+    let b = Engine::builder()
+        .device(dev.clone())
+        .calibrated(true)
+        .artifact_store(&dir)
+        .build();
+    let s2 = b.load(zoo::squeezenet());
+    assert_eq!(b.calibrated_cache().misses(), 0, "fresh engine must not recalibrate");
+    assert_eq!(b.calibrated_cache().disk_hits(), 1);
+    assert_eq!(
+        s2.scheduled().schedule.makespan.to_bits(),
+        s1.scheduled().schedule.makespan.to_bits()
+    );
+    assert_eq!(s2.device().n_little, s1.device().n_little);
+    assert_eq!(s2.device().n_big, s1.device().n_big);
+    assert_eq!(
+        s2.plan().to_json(s2.graph()).to_compact(),
+        s1.plan().to_json(s1.graph()).to_compact()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sibling_engines_share_a_calibrated_cache() {
+    // The report grids rebuild a calibrated engine per cell; sharing one
+    // cache across those engines makes revisited cells free.
+    let dev = profiles::meizu_16t();
+    let shared = Arc::new(nnv12::sched::CalibratedPlanCache::new());
+    let a = Engine::builder()
+        .device(dev.clone())
+        .calibrated(true)
+        .calibrated_cache(shared.clone())
+        .build();
+    let s1 = a.load(zoo::tiny_net());
+    assert_eq!(shared.misses(), 1);
+    let b = Engine::builder()
+        .device(dev)
+        .calibrated(true)
+        .calibrated_cache(shared.clone())
+        .build();
+    let s2 = b.load(zoo::tiny_net());
+    assert_eq!(shared.misses(), 1, "sibling engine must reuse the calibration");
+    assert_eq!(shared.hits(), 1);
+    assert_eq!(
+        s1.scheduled().schedule.makespan.to_bits(),
+        s2.scheduled().schedule.makespan.to_bits()
+    );
+}
+
+#[test]
+fn load_all_calibrated_shares_the_cache() {
+    let dev = profiles::meizu_16t();
+    let models = || vec![zoo::tiny_net(), zoo::micro_mobilenet()];
+    let engine = Engine::builder().device(dev).calibrated(true).build();
+    let first = engine.load_all(models());
+    assert_eq!(engine.calibrated_cache().misses(), 2);
+    // A second fleet load is all memory hits.
+    let again = engine.load_all(models());
+    assert_eq!(engine.calibrated_cache().misses(), 2);
+    assert_eq!(engine.calibrated_cache().hits(), 2);
+    for (x, y) in first.iter().zip(&again) {
+        assert_eq!(
+            x.scheduled().schedule.makespan.to_bits(),
+            y.scheduled().schedule.makespan.to_bits()
+        );
+    }
+}
+
+#[test]
+fn plan_and_weight_artifacts_share_one_store_namespace_safely() {
+    let dir = store_dir("namespaces");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let engine = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store_shared(store.clone())
+        .build();
+    engine.load(zoo::tiny_net());
+    let cache = TransformCache::over(store.clone(), "tinynet");
+    let raw = raw_weights(0);
+    cache.put(0, "winograd", &raw, &transform(&raw)).unwrap();
+    // Both kinds of artifact live in the same directory and are
+    // individually addressable.
+    assert!(store.len() >= 2);
+    assert_eq!(cache.get(0, "winograd", &raw).unwrap().unwrap(), transform(&raw));
+    let fresh = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    fresh.load(zoo::tiny_net());
+    assert_eq!(fresh.plan_cache().disk_hits(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -119,28 +119,32 @@ fn store_dir(tag: &str) -> PathBuf {
 }
 
 #[test]
-fn plan_store_round_trip_skips_planning_in_fresh_engine() {
+fn artifact_store_round_trip_skips_planning_in_fresh_engine() {
     let dir = store_dir("roundtrip");
     let _ = std::fs::remove_dir_all(&dir);
 
     // First engine: plans, persists.
     let a = Engine::builder()
         .device(profiles::meizu_16t())
-        .plan_store(&dir)
+        .artifact_store(&dir)
         .build();
     let s1 = a.load(zoo::squeezenet());
     assert_eq!(a.plan_cache().misses(), 1);
     assert_eq!(a.plan_cache().disk_hits(), 0);
+    let stats = a.store_stats().expect("store-backed engine has stats");
+    assert_eq!(stats.hits, 0);
+    assert!(stats.bytes_used > 0, "plan artifact must be on disk");
 
     // Second engine on the same directory (≈ a process restart): the
     // plan comes from disk — planning is skipped entirely.
     let b = Engine::builder()
         .device(profiles::meizu_16t())
-        .plan_store(&dir)
+        .artifact_store(&dir)
         .build();
     let s2 = b.load(zoo::squeezenet());
     assert_eq!(b.plan_cache().misses(), 0, "fresh engine must not re-plan");
     assert_eq!(b.plan_cache().disk_hits(), 1, "plan must come from the store");
+    assert_eq!(b.store_stats().unwrap().hits, 1);
 
     // The reloaded plan is bit-identical: same JSON artifact, same
     // makespan, same cold/warm ladder.
@@ -155,6 +159,28 @@ fn plan_store_round_trip_skips_planning_in_fresh_engine() {
     assert_eq!(s1.cold_ms().to_bits(), s2.cold_ms().to_bits());
     assert_eq!(s1.warm_ms().to_bits(), s2.warm_ms().to_bits());
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+#[allow(deprecated)] // exercises the `plan_store` compatibility shim
+fn deprecated_plan_store_shim_still_persists() {
+    let dir = store_dir("shim");
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = Engine::builder()
+        .device(profiles::meizu_16t())
+        .plan_store(&dir)
+        .build();
+    a.load(zoo::tiny_net());
+    assert_eq!(a.plan_cache().misses(), 1);
+
+    let b = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    b.load(zoo::tiny_net());
+    assert_eq!(b.plan_cache().misses(), 0, "shim and store must share artifacts");
+    assert_eq!(b.plan_cache().disk_hits(), 1);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
