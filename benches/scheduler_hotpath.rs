@@ -11,7 +11,7 @@ use nnv12::device::profiles;
 use nnv12::engine::Engine;
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
-use nnv12::sched::heuristic::swap_prices;
+use nnv12::sched::heuristic::{confirm_from_table, prep_units, swap_prices, SchedulerConfig};
 use nnv12::sched::makespan::{evaluate, evaluate_reference, evaluate_with, IncrementalEval};
 use nnv12::sched::op::OpSet;
 use nnv12::sched::plan::default_choices;
@@ -70,7 +70,7 @@ fn main() {
     let sched = engine.plan(&g);
     let spricer = Pricer::new(&dev, &g, &sched.plan.choices, true);
     let stable = PriceTable::build(&sched.set, &spricer);
-    let inc = IncrementalEval::new(&sched.set, &sched.plan, stable).unwrap();
+    let inc = IncrementalEval::new(&sched.set, &sched.plan, stable.clone()).unwrap();
     let weighted = g.weighted_layers();
     let swaps: Vec<Vec<(usize, f64, f64)>> = weighted
         .iter()
@@ -85,6 +85,24 @@ fn main() {
             let ms = inc.retime(&sched.set, dirty).unwrap();
             assert!(ms > 0.0);
         }
+    });
+
+    // The pass-end confirm in isolation: Algorithm-1 queue re-assembly +
+    // one evaluation over the already-exact canonical set and price table
+    // — no OpSet/Pricer/PriceTable reconstruction. CI ratchets this
+    // against `confirm-rebuild/resnet50` below: a regression back to a
+    // full rebuild makes the ratio ≈ 1 and trips the cap.
+    let kcp = SchedulerConfig::kcp();
+    let n_prep = prep_units(&dev);
+    b.case("confirm-incremental/resnet50", || {
+        let s = confirm_from_table(&sched.set, sched.plan.choices.clone(), &stable, &kcp, n_prep);
+        assert!(s.schedule.makespan > 0.0);
+    });
+    // The historical confirm: a full rebuild of the same combination via
+    // the retained oracle. Kept as the ratchet's denominator.
+    b.case("confirm-rebuild/resnet50", || {
+        let s = nnv12::sched::heuristic::inner_schedule(&dev, &g, &sched.plan.choices, &kcp);
+        assert!(s.schedule.makespan > 0.0);
     });
 
     b.case("schedule/resnet50", || {

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: false,
                 workers: 0,
                 cache_dir: cache_dir.clone(),
+                ..Default::default()
             },
         ),
         (
@@ -50,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: false,
                 workers: 0,
                 cache_dir: cache_dir.clone(),
+                ..Default::default()
             },
         ),
         (
@@ -61,6 +63,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: false,
                 workers: 0,
                 cache_dir: cache_dir.clone(),
+                ..Default::default()
             },
         ),
         (
@@ -72,6 +75,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: true,
                 workers: 3,
                 cache_dir: cache_dir.clone(),
+                ..Default::default()
             },
         ),
     ];

@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         pipelined: true,
         variant: VariantPref::Auto,
         cache_dir: std::env::temp_dir().join("nnv12-e2e-cache"),
+        ..Default::default()
     };
     let _ = std::fs::remove_dir_all(&opts.cache_dir);
 

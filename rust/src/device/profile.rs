@@ -108,6 +108,19 @@ impl DeviceProfile {
         self.gpu.is_some()
     }
 
+    /// Number of little-core (preparation) units the scheduler plans
+    /// for: on GPU devices every CPU core plays the little role (§3.4).
+    /// Single source of truth — the seed rebuild, the incremental
+    /// confirm, and the pricer must all agree on this count or the
+    /// search's bit-exact-confirm invariant silently breaks.
+    pub fn prep_units(&self) -> usize {
+        if self.executes_on_gpu() {
+            self.n_cpu()
+        } else {
+            self.n_little
+        }
+    }
+
     /// GFLOP/s of one core of the given class.
     pub fn core_gflops(&self, class: CoreClass) -> f64 {
         match class {

@@ -21,12 +21,16 @@ use crate::Ms;
 
 /// Everything a backend may need about the model it is running: the
 /// session's device view (recalibrated when the engine is calibrated),
-/// the graph, the kernel registry, and the scheduler knobs in force.
+/// the graph, the kernel registry, the scheduler knobs in force, and the
+/// engine's shared artifact store (if one is configured) so real
+/// execution can route its transformed-weights cache through the same
+/// capped, counted store as plans.
 pub struct BackendCtx<'a> {
     pub dev: &'a DeviceProfile,
     pub graph: &'a ModelGraph,
     pub registry: &'a Registry,
     pub sched: &'a SchedulerConfig,
+    pub store: Option<&'a std::sync::Arc<crate::store::ArtifactStore>>,
 }
 
 /// Result of one cold inference executed by a backend.
@@ -243,7 +247,14 @@ impl ExecBackend for RealBackend {
                 vec![0.0; n as usize]
             }
         };
-        let r = run_cold(&manifest, runtime, &input, &self.opts).map_err(|e| format!("{e:#}"))?;
+        // Route the weights cache through the engine's shared artifact
+        // store (size cap + counters) unless the caller pinned one;
+        // `cache_dir` remains the store-less fallback.
+        let mut opts = self.opts.clone();
+        if opts.store.is_none() {
+            opts.store = ctx.store.cloned();
+        }
+        let r = run_cold(&manifest, runtime, &input, &opts).map_err(|e| format!("{e:#}"))?;
         Ok(ColdOutcome {
             latency_ms: r.wall_ms,
             energy_mj: 0.0,

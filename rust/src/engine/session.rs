@@ -66,6 +66,7 @@ impl Session {
                 graph: &self.graph,
                 registry: &self.engine.registry,
                 sched: &self.engine.sched,
+                store: self.engine.store.as_ref(),
             };
             self.engine
                 .backend
@@ -91,6 +92,7 @@ impl Session {
             graph: &self.graph,
             registry: &self.engine.registry,
             sched: &self.engine.sched,
+            store: self.engine.store.as_ref(),
         };
         self.engine.backend.run(&ctx, &self.scheduled)
     }

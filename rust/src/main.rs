@@ -52,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
         "kernels" => cmd_kernels(args),
         "serve" => cmd_serve(args),
         "cold" => cmd_cold(args),
+        "store" => cmd_store(args),
         "devices" => cmd_devices(),
         "" | "help" => {
             print_help();
@@ -71,7 +72,8 @@ fn print_help() {
            report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
            serve     --device D --requests N --budget-mb B  multi-tenant serving sim\n\
-           cold      --artifacts DIR [--cache] [--workers N] [--mbps X] [--sequential]\n\
+           cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
+           store     gc --dir DIR [--days N]                drop artifacts untouched for N days\n\
            devices                                          list device profiles"
     );
 }
@@ -257,6 +259,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Store maintenance. `repro store gc --dir DIR [--days N]` removes
+/// artifacts not touched in N days (default 30) — the age-based sweep for
+/// unaddressed artifacts that capped stores handle via LRU eviction. The
+/// newest artifact of each namespace is always kept.
+fn cmd_store(args: &Args) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    match action {
+        "gc" => {
+            let dir = args
+                .get("dir")
+                .or_else(|| args.get("store"))
+                .ok_or_else(|| anyhow!("store gc: --dir DIR (or --store DIR) is required"))?;
+            let days = args.get_f64("days", 30.0).map_err(|e| anyhow!(e))?;
+            // Upper bound keeps days*86400 comfortably inside Duration's
+            // u64-seconds range (from_secs_f64 panics past it).
+            if !days.is_finite() || !(0.0..=3_650_000.0).contains(&days) {
+                bail!("--days expects a number of days between 0 and 3650000");
+            }
+            let store = nnv12::store::ArtifactStore::open(dir)
+                .map_err(|e| anyhow!("cannot open artifact store at {dir}: {e}"))?;
+            let r = store.gc(std::time::Duration::from_secs_f64(days * 86_400.0));
+            println!(
+                "store gc ({dir}, older than {days} day(s)): removed {} artifact(s) \
+                 ({} freed), kept {} — newest per namespace always kept; {} now in use",
+                r.removed,
+                nnv12::util::table::fmt_bytes(r.bytes_freed),
+                r.kept,
+                nnv12::util::table::fmt_bytes(store.bytes_used())
+            );
+            Ok(())
+        }
+        other => bail!("unknown store action '{other}' (expected 'gc')"),
+    }
+}
+
 #[cfg(feature = "real-runtime")]
 fn cmd_cold(args: &Args) -> Result<()> {
     use nnv12::graph::manifest::Manifest;
@@ -273,7 +310,9 @@ fn cmd_cold(args: &Args) -> Result<()> {
             .transpose()
             .map_err(|_| anyhow!("--mbps expects a number"))?,
         workers: args.get_usize("workers", 2).map_err(|e| anyhow!(e))?,
-        use_cache: args.has("cache"),
+        // Passing a store only makes sense to cache transformed weights
+        // through it, so `--store DIR` implies `--cache`.
+        use_cache: args.has("cache") || args.get("store").is_some(),
         pipelined: !args.has("sequential"),
         variant: match args.get_or("variant", "auto") {
             "auto" => VariantPref::Auto,
@@ -281,6 +320,16 @@ fn cmd_cold(args: &Args) -> Result<()> {
             "im2col" => VariantPref::Im2col,
             "winograd" => VariantPref::Winograd,
             v => bail!("unknown variant '{v}'"),
+        },
+        // `--store DIR` routes the weights cache through the shared
+        // content-addressed store (same cap/counters as plans) instead of
+        // the deprecated private cache_dir fallback.
+        store: match args.get("store") {
+            Some(dir) => Some(std::sync::Arc::new(
+                nnv12::store::ArtifactStore::open(dir)
+                    .map_err(|e| anyhow!("cannot open artifact store at {dir}: {e}"))?,
+            )),
+            None => None,
         },
         ..Default::default()
     };

@@ -23,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::graph::manifest::Manifest;
 use crate::metrics::Timer;
 use crate::runtime::Runtime;
+use crate::store::ArtifactStore;
 use crate::transform::transform_by_name;
 use crate::weights::{ThrottledReader, TransformCache};
 
@@ -46,6 +47,17 @@ pub struct RealRunOpts {
     pub workers: usize,
     /// Read/write the post-transformed-weights cache.
     pub use_cache: bool,
+    /// Shared content-addressed [`ArtifactStore`] backing the weights
+    /// cache — the engine facade's path ([`crate::engine::RealBackend`]
+    /// fills this from its engine), which puts real-mode transformed
+    /// weights under the same size cap, integrity checks, and counters
+    /// as plans. When `None`, `cache_dir` is used as a private fallback.
+    pub store: Option<Arc<ArtifactStore>>,
+    /// Deprecated fallback: private store directory used only when
+    /// `store` is `None` (standalone CLI/example runs). The default is
+    /// scoped per user (`$TMPDIR/nnv12-cache-<user>`), so concurrent
+    /// users on one machine no longer contend over a single shared path
+    /// whose files the second user cannot replace. Prefer `store`.
     pub cache_dir: PathBuf,
     /// Overlap preparation with execution (the "P" knob). Off = vanilla
     /// sequential engine.
@@ -59,11 +71,50 @@ impl Default for RealRunOpts {
             disk_mbps: None,
             workers: 2,
             use_cache: false,
-            cache_dir: std::env::temp_dir().join("nnv12-cache"),
+            store: None,
+            cache_dir: default_cache_dir(),
             pipelined: true,
             variant: VariantPref::Auto,
         }
     }
+}
+
+/// Per-user fallback weights-cache directory. The historical default was
+/// the shared `$TMPDIR/nnv12-cache`, which collided across users (the
+/// first user's files are unwritable to the second) and across concurrent
+/// processes' accounting; scoping by user keeps the benign cross-process
+/// reuse (atomic content-addressed writes make it safe) while removing
+/// the cross-user hazard.
+fn default_cache_dir() -> PathBuf {
+    // USER/LOGNAME (unix), USERNAME (windows), then the home directory's
+    // basename (covers stripped-env daemons that export only HOME) — the
+    // constant tail is a last resort, not the common path.
+    let user = ["USER", "LOGNAME", "USERNAME"]
+        .iter()
+        .find_map(|k| std::env::var(k).ok())
+        .filter(|u| !u.is_empty())
+        .or_else(|| {
+            std::env::var("HOME").ok().and_then(|h| {
+                PathBuf::from(h)
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+            })
+        })
+        .unwrap_or_else(|| "shared".to_string());
+    std::env::temp_dir().join(format!("nnv12-cache-{user}"))
+}
+
+/// Open the transform cache `opts` asks for: the shared artifact store
+/// when one is wired (the engine path), else the private `cache_dir`
+/// fallback; `None` when caching is off.
+fn open_cache(opts: &RealRunOpts, model: &str) -> Option<TransformCache> {
+    if !opts.use_cache {
+        return None;
+    }
+    Some(match &opts.store {
+        Some(store) => TransformCache::over(store.clone(), model),
+        None => TransformCache::new(&opts.cache_dir, model),
+    })
 }
 
 /// Phase timing breakdown of a real run (sums of op durations; phases
@@ -223,11 +274,7 @@ pub fn run_cold_session(
     let mut variant_of = HashMap::new();
     let mut weights = HashMap::new();
     let reader = ThrottledReader::default();
-    let cache = if opts.use_cache {
-        Some(TransformCache::new(&opts.cache_dir, &manifest.model.name))
-    } else {
-        None
-    };
+    let cache = open_cache(opts, &manifest.model.name);
     for &l in &weighted {
         let variant = pick_variant(manifest, l, opts.variant, opts.use_cache)?;
         let (w, b, _, _, _) = prepare_layer(manifest, l, &variant, &reader, cache.as_ref())?;
@@ -250,11 +297,7 @@ pub fn run_cold(
         Some(mbps) => ThrottledReader::throttled(mbps),
         None => ThrottledReader::default(),
     };
-    let cache = if opts.use_cache {
-        Some(TransformCache::new(&opts.cache_dir, &manifest.model.name))
-    } else {
-        None
-    };
+    let cache = open_cache(opts, &manifest.model.name);
 
     // Per-layer variant decision.
     let weighted = manifest.model.weighted_layers();

@@ -24,6 +24,17 @@
 //! artifacts can never poison a plan — any mismatch is a miss and the
 //! entry is rewritten.
 //!
+//! **Canonical op sets vs pre-canonical artifacts.** Canonical op sets
+//! changed the *payload* of plans whose kernels bypass transformation
+//! (queues now include the zero-cost transform ops). The fingerprint is
+//! deliberately unchanged — it hashes the planning *problem*, never the
+//! answer's shape — so a pre-canonical artifact sits under the same key,
+//! fails structural revalidation exactly once (its queues no longer
+//! cover the canonical op set), and is replanned and rewritten in place:
+//! one cold recompute per stale artifact, no key migration, and the next
+//! process hits the healed entry (`pre_canonical_artifact_recomputes_once`
+//! below).
+//!
 //! Both caches are thread-safe (`Mutex` around the map; planning happens
 //! outside the lock, so concurrent misses on *different* keys plan in
 //! parallel, and a racing duplicate insert is resolved first-wins).
@@ -579,6 +590,62 @@ mod tests {
         let (direct, view) = schedule_calibrated(&dev, &g, &reg, &cfg);
         assert_eq!(s3.schedule.makespan.to_bits(), direct.schedule.makespan.to_bits());
         assert_eq!(v3.n_little, view.n_little);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_canonical_artifact_recomputes_once() {
+        // Fabricate the artifact a PRE-canonical build would have stored:
+        // its op set materialized no transform op for cache-bypassing
+        // kernels, so its queues cannot cover today's canonical op set.
+        // The cache must treat it as a miss (structural revalidation),
+        // replan once under the SAME key, and heal the store.
+        let dir = temp_store("pre-canonical");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let key = fingerprint(&dev, &g, &cfg, "full");
+
+        let mut choices = crate::sched::plan::default_choices(&g, &reg);
+        for c in choices.iter_mut().flatten() {
+            if c.kernel.family.needs_transform() {
+                c.cache = true;
+            }
+        }
+        let minimal = OpSet::build_minimal(&g, &choices, false);
+        assert!(minimal.len() < OpSet::build(&g, &choices, false).len());
+        let stale = Plan {
+            choices,
+            gang: (0..minimal.len()).collect(),
+            little: vec![Vec::new(); dev.n_little],
+            estimated_ms: 1.0,
+        };
+        let store = ArtifactStore::open(&dir).unwrap();
+        let doc = Json::obj(vec![
+            ("fingerprint", Json::from(format!("{key:016x}"))),
+            ("plan", stale.to_json(&g)),
+        ]);
+        store.put(Namespace::Plan, key, doc.to_pretty().as_bytes()).unwrap();
+
+        let a = PlanCache::persistent(&dir).unwrap();
+        let s = a.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!(
+            (a.misses(), a.disk_hits()),
+            (1, 0),
+            "pre-canonical artifact must be a structural miss"
+        );
+        s.plan.validate(&s.set).unwrap();
+
+        // The rewrite healed the entry: a fresh process loads from disk.
+        let b = PlanCache::persistent(&dir).unwrap();
+        let loaded = b.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!((b.misses(), b.disk_hits()), (0, 1));
+        assert_eq!(
+            loaded.schedule.makespan.to_bits(),
+            s.schedule.makespan.to_bits()
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -205,13 +205,11 @@ mod tests {
                     let r = set.read_of[layer].unwrap();
                     assert_eq!(p.price(&set.ops[r], UnitId::Gang).to_bits(), c.read_g.to_bits());
                     assert_eq!(p.price(&set.ops[r], UnitId::Little(0)).to_bits(), c.read_l.to_bits());
-                    if let Some(w) = set.transform_of[layer] {
-                        assert_eq!(p.price(&set.ops[w], UnitId::Gang).to_bits(), c.tf_g.to_bits());
-                        assert_eq!(p.price(&set.ops[w], UnitId::Little(0)).to_bits(), c.tf_l.to_bits());
-                    } else {
-                        assert_eq!(c.tf_g, 0.0);
-                        assert_eq!(c.tf_l, 0.0);
-                    }
+                    // Canonical sets always carry the transform op; for a
+                    // bypassing candidate both sides must be exactly 0.
+                    let w = set.transform_of[layer].expect("canonical transform op");
+                    assert_eq!(p.price(&set.ops[w], UnitId::Gang).to_bits(), c.tf_g.to_bits());
+                    assert_eq!(p.price(&set.ops[w], UnitId::Little(0)).to_bits(), c.tf_l.to_bits());
                     let e = set.exec_of[layer].unwrap();
                     assert_eq!(p.price(&set.ops[e], UnitId::Gang).to_bits(), c.exec_g.to_bits());
                     assert_eq!(p.price(&set.ops[e], UnitId::Little(0)).to_bits(), c.exec_l.to_bits());

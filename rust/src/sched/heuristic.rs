@@ -18,16 +18,30 @@
 //! candidates (see [`super::filter`]); with 1–2 survivors per layer,
 //! greedy seeding + coordinate descent converges in a few passes.
 //!
-//! §Perf — the search runs incrementally. Each pass freezes the incumbent
-//! plan and screens every per-layer kernel swap with
-//! [`IncrementalEval::retime`] (prefix replay + suffix re-schedule) against
-//! the flat candidate price table built once by the Pareto filter — no
-//! per-trial `OpSet` rebuild, cost-model call, or choice-vector clone.
-//! Independent layer trials are evaluated in parallel
-//! ([`crate::util::parallel::par_map`]); accepted swaps mutate `pick` in
-//! place and are confirmed at pass end by one full Algorithm-1 rebuild,
-//! which is the only accept gate — the returned plan's makespan is always
-//! a full evaluation of a fully rebuilt plan, never a delta estimate.
+//! §Perf — the search runs incrementally, end to end. Canonical op sets
+//! ([`OpSet::build`]) make every kernel swap *structurally exact*: the
+//! set materializes read/transform/exec ops for every weighted layer
+//! (bypassed transforms price as 0), so the op-set structure never
+//! depends on the kernel choices and [`swap_prices`] is always a plain
+//! 3-entry price delta — no fold, no approximation. Each pass freezes
+//! the incumbent plan and screens every per-layer kernel swap with
+//! [`IncrementalEval::retime`] (prefix replay + suffix re-schedule)
+//! against the flat candidate price table built once by the Pareto
+//! filter — no per-trial `OpSet` rebuild, cost-model call, or
+//! choice-vector clone. Independent layer trials are evaluated in
+//! parallel ([`crate::util::parallel::par_map`]); accepted swaps mutate
+//! `pick` in place and rebase the evaluator's table. The pass-end
+//! confirm is incremental too ([`confirm_from_table`]): because the
+//! rebased table is bit-identical to a freshly priced one, the confirm
+//! re-runs only the Algorithm-1 queue assembly (bundle promotion +
+//! little-core balancing, O(layers × little cores)) plus one full
+//! evaluation — never an `OpSet`/`Pricer`/`PriceTable` reconstruction —
+//! and its table carries into the next pass. The confirm remains the
+//! only accept gate: the returned plan's makespan is always a full
+//! evaluation of a fully re-assembled plan, never a delta estimate.
+//! [`inner_schedule`] (the from-scratch rebuild) is retained as the
+//! oracle `tests/canonical_confirm.rs` proves the confirm bit-exact
+//! against.
 
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
@@ -104,6 +118,13 @@ pub struct Scheduled {
     pub set: OpSet,
 }
 
+/// Number of little-core (preparation) units the scheduler plans for on
+/// `dev` — a thin alias of [`DeviceProfile::prep_units`], the single
+/// source shared with [`Pricer::n_little_units`].
+pub fn prep_units(dev: &DeviceProfile) -> usize {
+    dev.prep_units()
+}
+
 /// Run the NNV12 scheduler for a model on a device.
 pub fn schedule(
     dev: &DeviceProfile,
@@ -134,7 +155,8 @@ pub fn schedule(
     // --- Seed: per-layer greedy pick ---
     // Preparation runs on ~n_little cores in parallel with execution, so a
     // bundle "costs" roughly prep/n_little against the gang's exec time.
-    let n_little = if dev.executes_on_gpu() { dev.n_cpu() } else { dev.n_little }.max(1);
+    let n_prep_units = prep_units(dev);
+    let n_little = n_prep_units.max(1);
     let mut pick: Vec<usize> = cands
         .iter()
         .map(|cs| {
@@ -166,13 +188,20 @@ pub fn schedule(
     };
 
     // --- Outer loop: incremental coordinate descent over combinations ---
-    let mut best = inner_schedule(dev, graph, &choices_of(&pick), cfg);
+    let (mut best, seed_table) = rebuild_with_table(dev, graph, &choices_of(&pick), cfg);
     if cfg.kernel_selection {
+        // The price table is priced exactly once (at the seed rebuild) and
+        // then carried between passes: accepted swaps rebase it through
+        // the delta evaluator, which keeps it bit-identical to a freshly
+        // priced table for the current `pick` (per-op prices depend only
+        // on the op's own layer's choice, and candidate prices match the
+        // Pricer bit-for-bit — asserted by
+        // `candidate_prices_match_pricer_exactly`).
+        let mut table = Some(seed_table);
         for _pass in 0..cfg.max_outer_passes {
             // Freeze the incumbent plan; build the delta evaluator over it.
-            let pricer = Pricer::new(dev, graph, &best.plan.choices, cfg.shader_cache);
-            let table = PriceTable::build(&best.set, &pricer);
-            let Ok(mut inc) = IncrementalEval::new(&best.set, &best.plan, table) else {
+            let carried = table.take().expect("price table carried between passes");
+            let Ok(mut inc) = IncrementalEval::new(&best.set, &best.plan, carried) else {
                 break;
             };
 
@@ -232,12 +261,18 @@ pub fn schedule(
                 break;
             }
 
-            // Confirm: one full Algorithm-1 rebuild under the new kernel
-            // mix (bundle balancing may shift). Accept only a real
-            // improvement of the fully evaluated makespan; otherwise the
-            // frozen-plan gains didn't survive the rebuild — converged.
-            let trial = inner_schedule(dev, graph, &choices_of(&pick), cfg);
+            // Confirm (incremental): re-run only the Algorithm-1 queue
+            // assembly under the new kernel mix (bundle balancing may
+            // shift) against the evaluator's rebased table — canonical op
+            // sets guarantee the set structure and table are already
+            // exact for `pick`, so no OpSet/Pricer/PriceTable rebuild.
+            // Accept only a real improvement of the fully evaluated
+            // makespan; otherwise the frozen-plan gains didn't survive
+            // the re-assembly — converged.
+            let trial =
+                confirm_from_table(&best.set, choices_of(&pick), inc.table(), cfg, n_prep_units);
             if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
+                table = Some(inc.into_table());
                 best = trial;
             } else {
                 pick = before_pick;
@@ -249,25 +284,23 @@ pub fn schedule(
 }
 
 /// Price deltas for re-evaluating `layer` as if it used `cand` — the dirty
-/// set handed to [`IncrementalEval::retime`]. When the current op set has
-/// no transform op for the layer (its incumbent choice bypasses
-/// transformation) while the candidate needs one, the candidate's
-/// transform cost is folded into its read price: read and transform are
-/// queue-adjacent on the same unit, so the fold is timing-equivalent for
-/// screening, and the confirming rebuild re-materializes the real op.
+/// set handed to [`IncrementalEval::retime`]. Canonical op sets
+/// materialize read/transform/exec ops for every weighted layer (a
+/// bypassing candidate's transform prices as 0), so the swap is
+/// *structurally exact*: exactly these three table entries change. The
+/// historical read+transform fold — used when the incumbent set lacked a
+/// transform op, and wrong whenever read and transform were not
+/// contention-adjacent — is gone.
 pub fn swap_prices(set: &OpSet, layer: usize, cand: &Candidate) -> Vec<PriceDelta> {
-    let mut dirty = Vec::with_capacity(3);
     let r = set.read_of[layer].expect("swap_prices: layer has no read op");
-    if let Some(w) = set.transform_of[layer] {
-        dirty.push((r, cand.read_g, cand.read_l));
-        dirty.push((w, cand.tf_g, cand.tf_l));
-    } else {
-        dirty.push((r, cand.read_g + cand.tf_g, cand.read_l + cand.tf_l));
-    }
-    if let Some(e) = set.exec_of[layer] {
-        dirty.push((e, cand.exec_g, cand.exec_l));
-    }
-    dirty
+    let w = set.transform_of[layer]
+        .expect("swap_prices: canonical op sets always carry a transform op");
+    let e = set.exec_of[layer].expect("swap_prices: layer has no exec op");
+    vec![
+        (r, cand.read_g, cand.read_l),
+        (w, cand.tf_g, cand.tf_l),
+        (e, cand.exec_g, cand.exec_l),
+    ]
 }
 
 /// §3.3 "NNV12 keeps calibrating the per-operation performance through
@@ -284,7 +317,7 @@ pub fn schedule_calibrated(
     registry: &Registry,
     cfg: &SchedulerConfig,
 ) -> (Scheduled, DeviceProfile) {
-    let full = if dev.executes_on_gpu() { dev.n_cpu() } else { dev.n_little };
+    let full = prep_units(dev);
     if full == 0 {
         // No preparation cores to tune: sequential-ish plan on the gang.
         let s = schedule(dev, graph, registry, cfg);
@@ -324,40 +357,95 @@ pub fn schedule_calibrated(
     (s, d)
 }
 
-/// Inner layer of Algorithm 1: schedule one kernel combination.
-fn inner_schedule(
+/// Inner layer of Algorithm 1: schedule one kernel combination from
+/// scratch — canonical op set, pricer, flat price table, queue assembly,
+/// evaluation. The production search runs this exactly once (to seed);
+/// pass-end confirms go through [`confirm_from_table`], which skips
+/// everything but the assembly. Kept `pub` as the full-rebuild oracle the
+/// property tests (`tests/canonical_confirm.rs`) compare the incremental
+/// confirm against — both paths share the private `assemble_plan` core,
+/// so agreement is bit-exact by construction *given* an exact table, and
+/// the tests pin the table-exactness half.
+pub fn inner_schedule(
     dev: &DeviceProfile,
     graph: &ModelGraph,
     choices: &[Option<KernelChoice>],
     cfg: &SchedulerConfig,
 ) -> Scheduled {
-    let gpu = dev.executes_on_gpu();
-    let set = OpSet::build(graph, choices, gpu);
+    rebuild_with_table(dev, graph, choices, cfg).0
+}
+
+/// [`inner_schedule`] that also returns the freshly priced table, so the
+/// outer search seeds its pass-carried table without pricing twice.
+fn rebuild_with_table(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    choices: &[Option<KernelChoice>],
+    cfg: &SchedulerConfig,
+) -> (Scheduled, PriceTable) {
+    let set = OpSet::build(graph, choices, dev.executes_on_gpu());
     let pricer = Pricer::new(dev, graph, choices, cfg.shader_cache);
     // Flat price table: the cost model runs once per op here; everything
     // below (bundle sizing, balancing, evaluation) is array lookups.
     let table = PriceTable::build(&set, &pricer);
-    let n_little = pricer.n_little_units();
+    let scheduled = assemble_plan(&set, choices.to_vec(), &table, cfg, pricer.n_little_units());
+    (scheduled, table)
+}
+
+/// The incremental pass-end confirm of the outer search: re-run only the
+/// Algorithm-1 queue assembly (bundle promotion + little-core balancing)
+/// and one full evaluation, against an op set and price table that are
+/// already exact for `choices`. Canonical op sets make this sound: a
+/// kernel swap never changes the op-set structure, and the delta
+/// evaluator's rebased table is bit-identical to the table a full rebuild
+/// would derive — so this skips the `OpSet`/`Pricer`/`PriceTable`
+/// reconstruction (every cost-model call) of [`inner_schedule`] and is
+/// bit-exact against it (property-tested in
+/// `tests/canonical_confirm.rs`).
+pub fn confirm_from_table(
+    set: &OpSet,
+    choices: Vec<Option<KernelChoice>>,
+    table: &PriceTable,
+    cfg: &SchedulerConfig,
+    n_little: usize,
+) -> Scheduled {
+    assemble_plan(set, choices, table, cfg, n_little)
+}
+
+/// Algorithm-1 queue assembly + evaluation over a prebuilt price table —
+/// the shared core of [`inner_schedule`] and [`confirm_from_table`]. No
+/// cost-model work happens here: bundle costs come from `table`, and the
+/// big-core promotion loop is O(layers × little cores) via precomputed
+/// round-robin suffix loads (the historical per-iteration re-summation
+/// was the search's last O(layers²) step).
+fn assemble_plan(
+    set: &OpSet,
+    choices: Vec<Option<KernelChoice>>,
+    table: &PriceTable,
+    cfg: &SchedulerConfig,
+    n_little: usize,
+) -> Scheduled {
+    let gpu = set.driver_init.is_some();
 
     if !cfg.pipeline || n_little == 0 {
         // Sequential cold inference: every op on the gang in id order
         // (reads, transforms, pipelines, execs interleaved per layer).
         let plan = Plan {
-            choices: choices.to_vec(),
+            choices,
             gang: (0..set.len()).collect(),
             little: vec![Vec::new(); n_little],
             estimated_ms: 0.0,
         };
-        let schedule = evaluate_with(&set, &plan, &table).expect("sequential plan valid");
+        let schedule = evaluate_with(set, &plan, table).expect("sequential plan valid");
         let estimated = schedule.makespan;
         return Scheduled {
             plan: Plan { estimated_ms: estimated, ..plan },
             schedule,
-            set,
+            set: set.clone(),
         };
     }
 
-    // Preparation bundles: per weighted layer, [read, transform?] and on
+    // Preparation bundles: per weighted layer, [read, transform] and on
     // GPU also the pipeline-creation op.
     let bundle_ops = |layer: usize| -> Vec<usize> {
         let mut v = set.prep_bundle(layer);
@@ -366,9 +454,9 @@ fn inner_schedule(
         }
         v
     };
-    // Perf: bundle costs are reused O(N^2) times by the balancing loops
-    // below (see EXPERIMENTS.md §Perf) — price each bundle exactly once.
-    let n_layers = graph.len();
+    // Perf: bundle costs are reused many times by the loops below — price
+    // each bundle exactly once from the table.
+    let n_layers = set.read_of.len();
     let mut b_gang_v = vec![0.0f64; n_layers];
     let mut b_little_v = vec![0.0f64; n_layers];
     for layer in 0..n_layers {
@@ -415,21 +503,37 @@ fn inner_schedule(
     // --- Big-core loop (Alg. 1 lines 6–11) ---
     // Balance T_Q0 against the round-robin little-core load; promote the
     // next bundle while the littles remain the bottleneck.
+    //
+    // §Perf: every candidate `s` needs the most-loaded little core after
+    // round-robining bundles `s..`. Dropping the leading bundle shifts
+    // each remaining bundle's core by one, so the suffix loads obey a
+    // rotation recurrence — suffix(s)[0] = b(l_s) + suffix(s+1)[n−1],
+    // suffix(s)[c] = suffix(s+1)[c−1] — and all of them precompute
+    // back-to-front in O(layers × n_little) pure additions, instead of
+    // the O(layers) re-summation per promotion step that made the
+    // assembly O(layers²).
+    let s0 = s;
+    let n_suffix = prep_layers.len() - s0;
+    let mut extra_loads = vec![0.0f64; n_little];
+    for (idx, &l) in extra_pipeline_layers.iter().enumerate() {
+        extra_loads[idx % n_little] += bundle_ms(l, false);
+    }
+    let mut suffix: Vec<Vec<f64>> = vec![vec![0.0f64; n_little]; n_suffix + 1];
+    for i in (0..n_suffix).rev() {
+        let b = bundle_ms(prep_layers[s0 + i], false);
+        let prev = suffix[i + 1].clone();
+        let row = &mut suffix[i];
+        row[0] = b + prev[n_little - 1];
+        row[1..n_little].copy_from_slice(&prev[..n_little - 1]);
+    }
+    let mut promoted_ms: Ms = prep_layers[..s].iter().map(|&l| bundle_ms(l, true)).sum();
     loop {
-        let t_q0: Ms = exec_total
-            + prep_layers[..s]
-                .iter()
-                .map(|&l| bundle_ms(l, true))
-                .sum::<f64>();
+        let t_q0: Ms = exec_total + promoted_ms;
         // Estimated little-core max load with bundles s.. round-robined.
-        let mut loads = vec![0.0f64; n_little];
-        for (idx, &l) in prep_layers[s..].iter().enumerate() {
-            loads[idx % n_little] += bundle_ms(l, false);
-        }
-        for (idx, &l) in extra_pipeline_layers.iter().enumerate() {
-            loads[idx % n_little] += bundle_ms(l, false);
-        }
-        let t_max = loads.iter().cloned().fold(0.0, f64::max);
+        let loads = &suffix[s - s0];
+        let t_max = (0..n_little)
+            .map(|c| loads[c] + extra_loads[c])
+            .fold(0.0, f64::max);
         if t_max <= t_q0 + cfg.epsilon_ms || s >= prep_layers.len() {
             break;
         }
@@ -437,6 +541,7 @@ fn inner_schedule(
         // ahead (big time added + little time removed < gap).
         let next = prep_layers[s];
         if bundle_ms(next, true) + bundle_ms(next, false) < t_max - t_q0 {
+            promoted_ms += bundle_ms(next, true);
             s += 1;
         } else {
             break;
@@ -506,17 +611,17 @@ fn inner_schedule(
         .collect();
 
     let plan = Plan {
-        choices: choices.to_vec(),
+        choices,
         gang,
         little,
         estimated_ms: 0.0,
     };
-    let schedule = evaluate_with(&set, &plan, &table).expect("heuristic plan valid");
+    let schedule = evaluate_with(set, &plan, table).expect("heuristic plan valid");
     let estimated = schedule.makespan;
     Scheduled {
         plan: Plan { estimated_ms: estimated, ..plan },
         schedule,
-        set,
+        set: set.clone(),
     }
 }
 

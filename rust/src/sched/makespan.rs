@@ -294,6 +294,17 @@ impl IncrementalEval {
         &self.table
     }
 
+    /// Consume the evaluator, returning its (possibly rebased) price
+    /// table. After the outer search's apply phase this is bit-identical
+    /// to a freshly priced table for the accepted kernel choices (per-op
+    /// prices depend only on the op's own layer's choice, and candidate
+    /// prices match the `Pricer` bit-for-bit), so the search carries it
+    /// into the next pass — and into the incremental pass-end confirm —
+    /// instead of re-running the cost model.
+    pub fn into_table(self) -> PriceTable {
+        self.table
+    }
+
     /// Makespan with the prices of the `dirty` ops replaced, every other op
     /// priced as in the baseline table. The baseline is not modified.
     pub fn retime(&self, set: &OpSet, dirty: &[PriceDelta]) -> Result<Ms, String> {

@@ -16,20 +16,33 @@
 //!   early-layer preparations onto the big gang when the gang would
 //!   otherwise idle.
 //!
-//! # The incremental plan-search engine
+//! # The exact incremental plan-search engine
 //!
 //! The outer kernel-combination search is the planner's hot path: it
-//! evaluates hundreds of single-layer kernel swaps per model. Three layers
-//! make each trial cheap:
+//! evaluates hundreds of single-layer kernel swaps per model. Four layers
+//! make every step cheap *and structurally exact*:
 //!
-//! 1. **Flat price tables** ([`price::PriceTable`], plus the per-stage
+//! 1. **Canonical op sets** ([`op::OpSet::build`]). Every weighted layer
+//!    materializes its full read → transform → exec chain; a choice that
+//!    bypasses transformation (cached post-transformed weights, or a
+//!    transform-free family) keeps a zero-priced transform op, which is
+//!    timing-neutral right after its read. The op-set *structure* is
+//!    therefore a function of the graph alone — a kernel swap never adds
+//!    or removes ops — so screening and confirming are pure price-table
+//!    updates with no approximation. (The historical fold of a
+//!    candidate's transform cost into its read price, which could
+//!    mis-rank candidates when read and transform were not
+//!    contention-adjacent, is gone; the pre-canonical structure survives
+//!    only as the [`op::OpSet::build_minimal`] test oracle.)
+//! 2. **Flat price tables** ([`price::PriceTable`], plus the per-stage
 //!    prices on [`filter::Candidate`]). Unit cost depends only on the unit
 //!    *class* (gang vs little — all little cores are identical), so a
 //!    table of two `Vec<f64>` lanes indexed by `OpId` replaces every
 //!    cost-model call after setup. Candidates are priced once at
-//!    Pareto-filter time; swapping a layer's kernel is a ≤3-entry table
-//!    update, never a `CostModel` re-derivation.
-//! 2. **Delta re-evaluation** ([`makespan::IncrementalEval`]). The
+//!    Pareto-filter time; swapping a layer's kernel is an exact 3-entry
+//!    table update ([`heuristic::swap_prices`]), never a `CostModel`
+//!    re-derivation.
+//! 3. **Delta re-evaluation** ([`makespan::IncrementalEval`]). The
 //!    baseline evaluation records its dispatch order; a trial replays the
 //!    unchanged schedule prefix (every dispatch before the first re-priced
 //!    op) from the recording and list-schedules only the affected suffix,
@@ -39,20 +52,32 @@
 //!    (property-tested in `tests/incremental_eval.rs` against
 //!    [`makespan::evaluate_reference`], the original evaluator kept as the
 //!    executable specification).
-//! 3. **Parallel coordinate descent** ([`heuristic::schedule`]). Each pass
-//!    freezes the incumbent plan, screens every layer's best alternative
-//!    kernel concurrently (`util::parallel::par_map`) against the frozen
-//!    baseline, applies surviving swaps to `pick` in place, and confirms
-//!    with one full Algorithm-1 rebuild — the only accept gate, so the
-//!    returned plan is always fully evaluated, never a delta estimate.
+//! 4. **Parallel coordinate descent with an incremental confirm**
+//!    ([`heuristic::schedule`]). Each pass freezes the incumbent plan,
+//!    screens every layer's best alternative kernel concurrently
+//!    (`util::parallel::par_map`) against the frozen baseline, and
+//!    applies surviving swaps to `pick` in place, rebasing the
+//!    evaluator's table. The pass-end confirm
+//!    ([`heuristic::confirm_from_table`]) re-runs only the Algorithm-1
+//!    queue assembly — bundle promotion via precomputed round-robin
+//!    suffix loads (O(layers × little cores), the last O(layers²) step
+//!    removed) plus little-core balancing — and one full evaluation over
+//!    the rebased table, which canonical sets keep bit-identical to a
+//!    freshly priced one. The table then carries into the next pass, so
+//!    the cost model runs exactly once per search. The confirm remains
+//!    the only accept gate: the returned plan is always fully evaluated,
+//!    never a delta estimate. [`heuristic::inner_schedule`] (the
+//!    from-scratch rebuild) survives as the oracle
+//!    `tests/canonical_confirm.rs` proves the confirm bit-exact against,
+//!    across randomized descent traces.
 //!
 //! Price-table invariants relied on throughout: `table.gang[op]` /
 //! `table.little[op]` equal `Pricer::price(op, Gang)` / `price(op,
 //! Little(_))` for the choices the table was built from; bypassed
-//! transforms price as 0 (so a kernel swap never restructures the op
-//! set); and a candidate's flat prices equal what a `Pricer` over that
-//! candidate's choice would produce (asserted by
-//! `candidate_prices_match_pricer_exactly`).
+//! transforms price as 0 on both lanes; and a candidate's flat prices
+//! equal what a `Pricer` over that candidate's choice would produce
+//! (asserted by `candidate_prices_match_pricer_exactly` — this is what
+//! makes the rebased table exact, and the incremental confirm sound).
 //!
 //! Repeat planning of an identical problem skips all of the above via the
 //! fingerprint-keyed [`cache::PlanCache`]; a cache opened with

@@ -1,5 +1,21 @@
 //! The operation set: per-layer read/transform/exec (+ GPU pipeline
 //! creation) with the dependency graph of §3.2.
+//!
+//! Op sets are **canonical**: [`OpSet::build`] materializes the full
+//! read → transform → exec chain for *every* weighted layer, even when
+//! the kernel choice bypasses transformation (cached post-transformed
+//! weights, or a transform-free family) — the bypassed transform op
+//! simply prices as 0 ([`crate::sched::price::Pricer`]). A zero-cost op
+//! queued directly after its read on the same unit is timing-neutral
+//! (`finish = read.finish + 0.0`), so canonical sets evaluate
+//! bit-identically to the historical minimal sets
+//! (`tests/canonical_confirm.rs`), while making the op-set *structure* a
+//! function of the graph alone: swapping a layer's kernel never adds or
+//! removes ops, so the outer search's screening
+//! ([`crate::sched::heuristic::swap_prices`]) and pass-end confirm
+//! ([`crate::sched::heuristic::confirm_from_table`]) are pure price-table
+//! updates. The pre-canonical structure survives as
+//! [`OpSet::build_minimal`], a test oracle only.
 
 use crate::graph::{LayerId, ModelGraph};
 use crate::sched::plan::KernelChoice;
@@ -67,11 +83,35 @@ pub struct OpSet {
 }
 
 impl OpSet {
-    /// Build the operation set for `graph` under `choices` (one optional
-    /// [`KernelChoice`] per layer; `None` for weightless layers). With
-    /// `gpu`, pipeline-creation ops and a driver-init op are added and
-    /// every exec op depends on its pipeline op (§3.4).
+    /// Build the canonical operation set for `graph` under `choices` (one
+    /// optional [`KernelChoice`] per layer; `None` for weightless layers).
+    /// Every weighted layer gets read, transform, and exec ops — a choice
+    /// that bypasses transformation keeps its transform op at zero price —
+    /// so the returned structure (op ids, stages, dependencies) is
+    /// identical for every choice vector over the same graph. With `gpu`,
+    /// pipeline-creation ops and a driver-init op are added and every exec
+    /// op depends on its pipeline op (§3.4).
     pub fn build(graph: &ModelGraph, choices: &[Option<KernelChoice>], gpu: bool) -> OpSet {
+        OpSet::build_impl(graph, choices, gpu, true)
+    }
+
+    /// The pre-canonical structure: a transform op exists only when the
+    /// choice actually transforms (`needs_transform() && !cache`), so
+    /// exec ops of bypassing layers depend directly on their read. Kept
+    /// solely as the test oracle that canonical sets are timing-neutral
+    /// (`tests/canonical_confirm.rs`) and to fabricate pre-canonical plan
+    /// artifacts in cache tests; production code always builds canonical
+    /// sets.
+    pub fn build_minimal(graph: &ModelGraph, choices: &[Option<KernelChoice>], gpu: bool) -> OpSet {
+        OpSet::build_impl(graph, choices, gpu, false)
+    }
+
+    fn build_impl(
+        graph: &ModelGraph,
+        choices: &[Option<KernelChoice>],
+        gpu: bool,
+        canonical: bool,
+    ) -> OpSet {
         assert_eq!(choices.len(), graph.len());
         let n = graph.len();
         let mut set = OpSet {
@@ -101,12 +141,17 @@ impl OpSet {
             if layer.op.has_weights() {
                 let r = push(i, OpStage::Read, vec![], &mut set.ops);
                 set.read_of[i] = Some(r);
-                // Transform unless bypassed by the cache or not needed.
-                if let Some(c) = choice {
-                    if c.kernel.family.needs_transform() && !c.cache {
-                        let w = push(i, OpStage::Transform, vec![r], &mut set.ops);
-                        set.transform_of[i] = Some(w);
-                    }
+                // Canonical: the transform op always exists; a bypassed
+                // one (cache read, or a transform-free family) prices as
+                // 0 and is timing-neutral right after its read. Minimal
+                // (oracle only): transform only when actually needed.
+                let transforms = matches!(
+                    choice,
+                    Some(c) if c.kernel.family.needs_transform() && !c.cache
+                );
+                if canonical || transforms {
+                    let w = push(i, OpStage::Transform, vec![r], &mut set.ops);
+                    set.transform_of[i] = Some(w);
                 }
             }
             // Pipeline creation per executed kernel (GPU only).
@@ -258,7 +303,7 @@ mod tests {
     }
 
     #[test]
-    fn cache_bypasses_transform() {
+    fn canonical_set_keeps_transform_ops_for_bypassing_choices() {
         let g = zoo::tiny_net();
         let mut choices = default_choices(&g, &Registry::full());
         for c in choices.iter_mut().flatten() {
@@ -267,13 +312,66 @@ mod tests {
             }
         }
         let set = OpSet::build(&g, &choices, false);
+        // Canonical: every weighted layer has the full read→transform
+        // chain even though every choice bypasses transformation; the
+        // bypass shows up as a zero *price*, not a missing op.
+        for l in g.layers() {
+            assert_eq!(
+                set.transform_of[l.id].is_some(),
+                l.op.has_weights(),
+                "layer {}",
+                l.id
+            );
+            if let (Some(w), Some(e)) = (set.transform_of[l.id], set.exec_of[l.id]) {
+                let r = set.read_of[l.id].unwrap();
+                assert_eq!(set.ops[w].deps, vec![r]);
+                assert!(set.ops[e].deps.contains(&w));
+                assert!(!set.ops[e].deps.contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_structure_is_choice_independent() {
+        let g = zoo::tiny_net();
+        let defaults = default_choices(&g, &Registry::full());
+        let mut cached = defaults.clone();
+        for c in cached.iter_mut().flatten() {
+            if c.kernel.family.needs_transform() {
+                c.cache = true;
+            }
+        }
+        for gpu in [false, true] {
+            let a = OpSet::build(&g, &defaults, gpu);
+            let b = OpSet::build(&g, &cached, gpu);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.ops.iter().zip(&b.ops) {
+                assert_eq!((x.id, x.layer, x.stage), (y.id, y.layer, y.stage));
+                assert_eq!(x.deps, y.deps);
+            }
+        }
+    }
+
+    #[test]
+    fn minimal_oracle_drops_bypassed_transforms() {
+        // The pre-canonical structure, kept as a test oracle: caching
+        // every transforming kernel removes every transform op and execs
+        // depend directly on reads.
+        let g = zoo::tiny_net();
+        let mut choices = default_choices(&g, &Registry::full());
+        for c in choices.iter_mut().flatten() {
+            if c.kernel.family.needs_transform() {
+                c.cache = true;
+            }
+        }
+        let set = OpSet::build_minimal(&g, &choices, false);
         assert!(set.transform_of.iter().all(Option::is_none));
-        // Exec then depends directly on read.
         for l in g.layers() {
             if let (Some(r), Some(e)) = (set.read_of[l.id], set.exec_of[l.id]) {
                 assert!(set.ops[e].deps.contains(&r));
             }
         }
+        assert!(set.len() < OpSet::build(&g, &choices, false).len());
     }
 
     #[test]

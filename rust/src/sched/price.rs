@@ -100,14 +100,12 @@ impl<'a> Pricer<'a> {
         self.cm.dev
     }
 
-    /// Number of little-core units available for preparations. On GPU
-    /// devices every CPU core is a preparation core.
+    /// Number of little-core units available for preparations — delegates
+    /// to [`DeviceProfile::prep_units`], the single source also used by
+    /// the scheduler's seed rebuild and incremental confirm (they must
+    /// agree, or confirm-vs-oracle bit-exactness silently breaks).
     pub fn n_little_units(&self) -> usize {
-        if self.dev().executes_on_gpu() {
-            self.dev().n_cpu()
-        } else {
-            self.dev().n_little
-        }
+        self.dev().prep_units()
     }
 
     /// Bytes the read op must fetch: raw weights, or the (larger)
@@ -131,10 +129,11 @@ impl<'a> Pricer<'a> {
                 self.cm.read_ms(self.read_bytes(op.layer), class, 1)
             }
             OpStage::Transform => {
-                // A transform op exists only when the choice needs one, but
-                // the delta evaluator also prices bypassed transforms (a
-                // cached or transform-free choice) as 0 so a kernel swap
-                // never has to restructure the op set.
+                // Canonical op sets materialize a transform op for every
+                // weighted layer; a bypassed one (cached weights, or a
+                // transform-free family) prices as 0. This is what lets a
+                // kernel swap be a pure 3-entry price delta — the op-set
+                // structure never changes with the choice.
                 let class = self.unit_class_io(unit);
                 match choice {
                     Some(c) if c.kernel.family.needs_transform() && !c.cache => {

@@ -222,14 +222,19 @@ pub fn simulate(
                     if load <= 1e-12 {
                         continue;
                     }
-                    // Head = first unclaimed ready op in v's queue.
+                    // Head = first unclaimed ready op in v's queue with
+                    // real work. Canonical op sets carry zero-priced
+                    // transform ops for bypassing kernels; "stealing" one
+                    // relieves no load and would only burn the idle
+                    // unit's slot for this event, so skip them.
                     let head = queues[v]
                         .1
                         .iter()
                         .copied()
                         .find(|&o| !claimed[o] && pending[o] == 0
                             && set.ops[o].stage != OpStage::Exec
-                            && set.ops[o].stage != OpStage::DriverInit);
+                            && set.ops[o].stage != OpStage::DriverInit
+                            && table.get(o, queues[v].0) > 0.0);
                     if let Some(op) = head {
                         match best {
                             Some((_, _, l)) if l >= load => {}

@@ -59,12 +59,19 @@
 //! payload+header bytes. After every write the store scans its directory
 //! and removes least-recently-used `.art` files (by modification time)
 //! until it fits the cap; a validated read re-stamps the artifact's
-//! header in place, refreshing its recency, so hot artifacts survive.
+//! (constant) magic bytes in place, refreshing its recency, so hot
+//! artifacts survive both the LRU sweep and age-based gc.
 //! The most recently written artifact is always kept, even when it alone
 //! exceeds the cap — a store too small for its newest artifact would
 //! otherwise evict everything and thrash. Evicting an artifact is always
 //! safe: the next consumer takes a miss and recomputes (observable as a
 //! cold re-plan or a re-transform), then re-stores.
+//!
+//! Uncapped stores have no size pressure, so unaddressed artifacts
+//! (plans/weights of updated models, whose new content hashes to new
+//! keys) would linger forever; [`ArtifactStore::gc`] — the `repro store
+//! gc --days N` subcommand — sweeps them by age instead, never removing
+//! a namespace's newest artifact.
 
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -292,11 +299,11 @@ impl ArtifactStore {
             return self.reject(path);
         }
         self.hits.fetch_add(1, Ordering::Relaxed);
-        // Recency only matters for LRU eviction; keep reads read-only on
-        // unbounded stores.
-        if self.cap_bytes.is_some() {
-            self.touch(path, ns, key, payload);
-        }
+        // Refresh recency on every validated read: LRU eviction (capped
+        // stores) and age-based gc (uncapped stores) both define "in use"
+        // through the file's mtime, so a daily-hit artifact must never
+        // look stale to either sweep.
+        self.touch(path);
         Some(payload.to_vec())
     }
 
@@ -306,16 +313,21 @@ impl ArtifactStore {
         None
     }
 
-    /// Refresh LRU recency: rewrite the (identical) header bytes in
-    /// place, which bumps the file's modification time portably.
-    /// Best-effort — a read-only store still serves hits, it just loses
-    /// recency tracking.
-    fn touch(&self, path: &Path, ns: Namespace, key: u64, payload: &[u8]) {
+    /// Refresh recency: rewrite the 8 magic bytes in place, which bumps
+    /// the file's modification time portably (a write updates mtime even
+    /// when the bytes are identical). Only the magic is touched — never
+    /// the key/len/checksum fields — because every valid artifact starts
+    /// with the same magic: if a concurrent writer just renamed a
+    /// *different* payload into place under this key (e.g. healing a
+    /// stale entry), stamping the constant prefix cannot corrupt it,
+    /// whereas re-writing the full header validated from the old payload
+    /// would. Best-effort — a read-only store still serves hits, it just
+    /// loses recency tracking.
+    fn touch(&self, path: &Path) {
         if let Ok(mut f) = std::fs::OpenOptions::new().write(true).open(path) {
-            let header = ArtifactStore::header(ns, key, payload);
             let _ = f
                 .seek(SeekFrom::Start(0))
-                .and_then(|_| f.write_all(&header));
+                .and_then(|_| f.write_all(&MAGIC));
         }
     }
 
@@ -472,7 +484,7 @@ impl ArtifactStore {
         let mut total: u64 = files.iter().map(|(_, b, _)| *b).sum();
         if total > cap {
             // Oldest modification time first = least recently used first
-            // (validated reads re-stamp the header, refreshing mtime).
+            // (validated reads re-stamp the magic, refreshing mtime).
             files.sort_by_key(|(_, _, mtime)| *mtime);
             let n = files.len();
             for (i, (path, bytes, _)) in files.into_iter().enumerate() {
@@ -489,6 +501,66 @@ impl ArtifactStore {
         self.approx_used.store(total, Ordering::Relaxed);
     }
 
+    /// Age-based garbage collection of unaddressed artifacts: remove
+    /// every artifact whose last touch (write *or* validated read — both
+    /// refresh the file's mtime) is older than `max_age`. Content-addressed keys mean
+    /// artifacts for updated models are never overwritten — they simply
+    /// stop being addressed — so *uncapped* stores accumulate them until
+    /// something sweeps; this is that sweep (the `repro store gc` path).
+    /// The newest artifact of each namespace is always kept, even when
+    /// stale — mirroring the size cap's newest-file guarantee, a gc that
+    /// could empty a live namespace would only force pointless
+    /// recomputes. Foreign `.art` files whose name matches no known
+    /// namespace are never touched.
+    pub fn gc(&self, max_age: std::time::Duration) -> GcResult {
+        let mut out = GcResult::default();
+        let Some(cutoff) = SystemTime::now().checked_sub(max_age) else {
+            out.kept = self.scan().len();
+            return out;
+        };
+        let files: Vec<(PathBuf, u64, SystemTime, Option<Namespace>)> = self
+            .scan()
+            .into_iter()
+            .map(|(path, bytes, mtime)| {
+                let ns = path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .and_then(namespace_of_file);
+                (path, bytes, mtime, ns)
+            })
+            .collect();
+        // Newest mtime per namespace; ties all count as newest (kept).
+        let mut newest: [Option<SystemTime>; 3] = [None; 3];
+        for (_, _, mtime, ns) in &files {
+            if let Some(ns) = ns {
+                let slot = &mut newest[ns.id() as usize];
+                match slot {
+                    Some(t) if *t >= *mtime => {}
+                    _ => *slot = Some(*mtime),
+                }
+            }
+        }
+        for (path, bytes, mtime, ns) in files {
+            let stale = mtime <= cutoff;
+            let is_newest = match ns {
+                Some(ns) => newest[ns.id() as usize] == Some(mtime),
+                None => true, // foreign file: never ours to delete
+            };
+            if stale && !is_newest && std::fs::remove_file(&path).is_ok() {
+                out.removed += 1;
+                out.bytes_freed += bytes;
+            } else {
+                out.kept += 1;
+            }
+        }
+        if out.removed > 0 {
+            // Keep a capped store's next-sweep trigger honest.
+            self.approx_used
+                .store(self.bytes_used(), Ordering::Relaxed);
+        }
+        out
+    }
+
     /// Counter snapshot (`bytes_used` is measured live from the
     /// directory, so it reflects other processes' writes and evictions).
     pub fn stats(&self) -> StoreStats {
@@ -501,6 +573,33 @@ impl ArtifactStore {
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Result of one [`ArtifactStore::gc`] sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcResult {
+    /// Artifacts removed.
+    pub removed: usize,
+    /// Total bytes of the removed artifacts.
+    pub bytes_freed: u64,
+    /// Artifacts kept (fresh, newest of their namespace, or foreign).
+    pub kept: usize,
+}
+
+/// Parse the namespace a store file belongs to from its name
+/// (`<ns>-<key>.art` or `<ns>~<scope>-<key>.art`). `None` for foreign
+/// files.
+fn namespace_of_file(name: &str) -> Option<Namespace> {
+    for ns in [Namespace::Plan, Namespace::CalibratedPlan, Namespace::Weights] {
+        let tag = ns.tag();
+        if name.len() > tag.len()
+            && name.starts_with(tag)
+            && matches!(name.as_bytes()[tag.len()], b'-' | b'~')
+        {
+            return Some(ns);
+        }
+    }
+    None
 }
 
 fn fnv1a_continue(mut h: u64, bytes: &[u8]) -> u64 {
@@ -641,6 +740,56 @@ mod tests {
         assert!(s.contains_scoped(Namespace::Weights, "net_a", 5));
         assert!(s.contains_scoped(Namespace::Weights, "net a", 5));
         assert!(s.contains_scoped(Namespace::Weights, "net-a-", 5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_drops_stale_artifacts_but_keeps_newest_per_namespace() {
+        let dir = temp_store("gc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![9u8; 48];
+        s.put(Namespace::Plan, 1, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        s.put(Namespace::Plan, 2, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        s.put_scoped(Namespace::Weights, "m", 1, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        s.put(Namespace::Plan, 3, &payload).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+
+        // A generous age: nothing qualifies, even in an uncapped store.
+        let r = s.gc(std::time::Duration::from_secs(24 * 3600));
+        assert_eq!((r.removed, r.bytes_freed, r.kept), (0, 0, 4), "{r:?}");
+
+        // Age zero: everything is "stale", but the newest artifact of
+        // each namespace survives — plan 3, and the sole weights entry
+        // (scoped files are namespace members too).
+        let r = s.gc(std::time::Duration::ZERO);
+        assert_eq!(r.removed, 2, "{r:?}");
+        assert_eq!(r.kept, 2, "{r:?}");
+        assert_eq!(r.bytes_freed, 2 * (HEADER_LEN + payload.len()) as u64);
+        assert!(!s.contains(Namespace::Plan, 1));
+        assert!(!s.contains(Namespace::Plan, 2));
+        assert!(s.contains(Namespace::Plan, 3), "newest plan must survive");
+        assert!(
+            s.contains_scoped(Namespace::Weights, "m", 1),
+            "the only weights artifact is its namespace's newest"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_touches_foreign_files() {
+        let dir = temp_store("gc-foreign");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        std::fs::write(dir.join("unrelated-0000000000000001.art"), b"not ours").unwrap();
+        s.put(Namespace::Plan, 1, b"p").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        let r = s.gc(std::time::Duration::ZERO);
+        assert_eq!(r.removed, 0, "{r:?}");
+        assert!(dir.join("unrelated-0000000000000001.art").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,184 @@
+//! Property tests for the exact incremental plan search: canonical op
+//! sets and the incremental Algorithm-1 confirm.
+//!
+//! Two contracts, both literal (`f64::to_bits` comparisons):
+//!
+//! 1. **The incremental confirm is bit-exact vs the full-rebuild
+//!    oracle.** `confirm_from_table` (the pass-end confirm: Algorithm-1
+//!    queue re-assembly + one evaluation over a table updated purely by
+//!    `swap_prices` deltas — exactly what `IncrementalEval::rebase` does
+//!    to the search's carried table) must produce the same queues, the
+//!    same makespan bits, and the same `estimated_ms` bits as
+//!    `inner_schedule`, which rebuilds the op set, the pricer, and the
+//!    price table from scratch. Randomized coordinate-descent traces
+//!    drive both paths.
+//!
+//! 2. **Canonical op sets reproduce the pre-canonical plans.** A plan
+//!    assembled over the canonical set (always-materialized zero-cost
+//!    transform ops) must evaluate bit-identically to — and place the
+//!    same bundles on the same units as — the assembly of the same
+//!    kernel choices over `OpSet::build_minimal`, the pre-refactor
+//!    structure retained as the oracle, across the model zoo and both
+//!    CPU and GPU devices.
+
+use nnv12::device::profiles;
+use nnv12::device::DeviceProfile;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::filter::{candidates, Candidate};
+use nnv12::sched::heuristic::{
+    confirm_from_table, inner_schedule, prep_units, schedule, swap_prices, SchedulerConfig,
+};
+use nnv12::sched::op::{OpSet, OpStage};
+use nnv12::sched::plan::default_choices;
+use nnv12::sched::price::{PriceTable, Pricer};
+use nnv12::util::prop;
+use nnv12::util::rng::Rng;
+
+fn fixtures() -> Vec<(DeviceProfile, &'static str)> {
+    vec![
+        (profiles::meizu_16t(), "resnet50"),
+        (profiles::meizu_16t(), "googlenet"),
+        (profiles::pixel_5(), "mobilenetv2"),
+        // GPU path: driver-init + pipeline ops in the set.
+        (profiles::jetson_tx2(), "resnet50"),
+    ]
+}
+
+#[test]
+fn incremental_confirm_bit_exact_vs_full_rebuild_across_descent_traces() {
+    for (dev, model) in fixtures() {
+        let g = zoo::by_name(model).unwrap();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let gpu = dev.executes_on_gpu();
+        let n_prep = prep_units(&dev);
+        let weighted = g.weighted_layers();
+        let cands: Vec<Vec<Candidate>> = weighted
+            .iter()
+            .map(|&l| candidates(&dev, g.layer(l), &reg, true))
+            .collect();
+        // Canonical structure is choice-independent: one set serves every
+        // trace, exactly as in the production search.
+        let seed_choices = default_choices(&g, &reg);
+        let set = OpSet::build(&g, &seed_choices, gpu);
+
+        prop::check(0xC0F1 ^ model.len() as u64, 10, |rng: &mut Rng| {
+            // A randomized descent trace: price the seed once, then apply
+            // a handful of accepted kernel swaps as pure 3-entry price
+            // deltas.
+            let mut choices = seed_choices.clone();
+            let mut table = {
+                let pricer = Pricer::new(&dev, &g, &choices, cfg.shader_cache);
+                PriceTable::build(&set, &pricer)
+            };
+            for _ in 0..rng.index(6) {
+                let wi = rng.index(weighted.len());
+                let cand = rng.choose(&cands[wi]);
+                for (op, gms, lms) in swap_prices(&set, weighted[wi], cand) {
+                    table.set_op(op, gms, lms);
+                }
+                choices[weighted[wi]] = Some(cand.choice.clone());
+            }
+
+            let fast = confirm_from_table(&set, choices.clone(), &table, &cfg, n_prep);
+            let oracle = inner_schedule(&dev, &g, &choices, &cfg);
+            if fast.plan.gang != oracle.plan.gang {
+                return Err(format!("{model}: gang queues differ"));
+            }
+            if fast.plan.little != oracle.plan.little {
+                return Err(format!("{model}: little queues differ"));
+            }
+            if fast.schedule.makespan.to_bits() != oracle.schedule.makespan.to_bits() {
+                return Err(format!(
+                    "{model}: confirm {:.17} != rebuild {:.17}",
+                    fast.schedule.makespan, oracle.schedule.makespan
+                ));
+            }
+            if fast.plan.estimated_ms.to_bits() != oracle.plan.estimated_ms.to_bits() {
+                return Err(format!("{model}: estimated_ms differs"));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn incremental_confirm_bit_exact_for_sequential_config() {
+    // The no-pipeline arm assembles a different (sequential) plan shape;
+    // the confirm must agree there too.
+    let dev = profiles::meizu_16t();
+    let g = zoo::squeezenet();
+    let reg = Registry::full();
+    let cfg = SchedulerConfig { pipeline: false, ..SchedulerConfig::kcp() };
+    let choices = default_choices(&g, &reg);
+    let set = OpSet::build(&g, &choices, false);
+    let pricer = Pricer::new(&dev, &g, &choices, cfg.shader_cache);
+    let table = PriceTable::build(&set, &pricer);
+    let fast = confirm_from_table(&set, choices.clone(), &table, &cfg, prep_units(&dev));
+    let oracle = inner_schedule(&dev, &g, &choices, &cfg);
+    assert_eq!(fast.plan.gang, oracle.plan.gang);
+    assert_eq!(
+        fast.schedule.makespan.to_bits(),
+        oracle.schedule.makespan.to_bits()
+    );
+}
+
+#[test]
+fn canonical_sets_reproduce_pre_canonical_plans_across_zoo() {
+    let cfg = SchedulerConfig::kcp();
+    for dev in [profiles::meizu_16t(), profiles::jetson_nano()] {
+        let gpu = dev.executes_on_gpu();
+        let n_prep = prep_units(&dev);
+        for model in ["squeezenet", "mobilenetv2", "resnet50", "googlenet"] {
+            let g = zoo::by_name(model).unwrap();
+            let s = schedule(&dev, &g, &Registry::full(), &cfg);
+            s.plan.validate(&s.set).unwrap();
+
+            // Assemble the SAME kernel choices over the pre-canonical
+            // (minimal) op set — the pre-refactor structure.
+            let min = OpSet::build_minimal(&g, &s.plan.choices, gpu);
+            let pricer = Pricer::new(&dev, &g, &s.plan.choices, cfg.shader_cache);
+            let table = PriceTable::build(&min, &pricer);
+            let pre = confirm_from_table(&min, s.plan.choices.clone(), &table, &cfg, n_prep);
+
+            // Zero-cost transforms are timing-neutral: identical makespan
+            // bits.
+            assert_eq!(
+                pre.schedule.makespan.to_bits(),
+                s.schedule.makespan.to_bits(),
+                "{model} on {}: canonical {} vs pre-canonical {}",
+                dev.name,
+                s.schedule.makespan,
+                pre.schedule.makespan
+            );
+
+            // And identical placement: the queues agree op-for-op once
+            // the canonical plan's bypassed-transform ops (the ops the
+            // minimal set does not materialize) are dropped.
+            let strip = |set: &OpSet, q: &[usize]| -> Vec<(usize, OpStage)> {
+                q.iter()
+                    .map(|&o| (set.ops[o].layer, set.ops[o].stage))
+                    .filter(|&(l, st)| {
+                        st != OpStage::Transform || min.transform_of[l].is_some()
+                    })
+                    .collect()
+            };
+            assert_eq!(
+                strip(&s.set, &s.plan.gang),
+                strip(&min, &pre.plan.gang),
+                "{model} on {}: gang placement differs",
+                dev.name
+            );
+            assert_eq!(s.plan.little.len(), pre.plan.little.len());
+            for (a, b) in s.plan.little.iter().zip(&pre.plan.little) {
+                assert_eq!(
+                    strip(&s.set, a),
+                    strip(&min, b),
+                    "{model} on {}: little placement differs",
+                    dev.name
+                );
+            }
+        }
+    }
+}
