@@ -104,6 +104,22 @@ fn main() {
         let s = nnv12::sched::heuristic::inner_schedule(&dev, &g, &sched.plan.choices, &kcp);
         assert!(s.schedule.makespan > 0.0);
     });
+    // Allocation note for the Arc-shared op set: every `Scheduled`
+    // (confirm results, plan-cache entries, engine sessions) used to
+    // carry its own clone of the canonical op set; it is now one shared
+    // `Arc<OpSet>` per search, so producing/cloning a `Scheduled` no
+    // longer copies the op vectors at all.
+    {
+        let ops_bytes = sched.set.ops.len()
+            * std::mem::size_of_val(sched.set.ops.first().expect("non-empty op set"));
+        println!(
+            "note: Scheduled::set is Arc-shared — before: each confirm/cache entry cloned \
+             the {}-op canonical set (~{} KiB of op records + per-layer index vectors); \
+             after: one allocation per search, clones are refcount bumps",
+            sched.set.ops.len(),
+            ops_bytes >> 10,
+        );
+    }
 
     b.case("schedule/resnet50", || {
         let s = engine.plan_fresh(&g);

@@ -1,0 +1,94 @@
+//! Bench: concurrent serving throughput through the sharded
+//! [`nnv12::serving::Router`].
+//!
+//! Drives one mixed-zoo request trace (Zipf-skewed popularity over six
+//! models, memory budget sized so the tail forces LRU evictions — the
+//! §1–2 multi-tenant thrash) through the same router at 1 and at 4
+//! serving threads. Cold requests *execute* through the contention-aware
+//! simulator (`RouterConfig::execute_cold`), so a cold request costs
+//! real, parallelizable work — exactly what the paper's pipelined cold
+//! path is for — while warm requests take the cheap ladder charge.
+//!
+//! Emits `BENCH_serving.json` with requests/sec per case
+//! (`items_per_sec`). CI ratchets `serve-4t/zoo` against `serve-1t/zoo`
+//! measured in the same run: if 4 serving threads do not beat 1 thread,
+//! the engine has grown a serialization point (a coarse lock on the
+//! request path) and the ratchet hard-fails on any hardware.
+use nnv12::device::profiles;
+use nnv12::graph::zoo;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("serving_throughput");
+    let dev = profiles::meizu_16t();
+
+    // A mixed zoo: small nets the Zipf head keeps warm, plus heavyweights
+    // whose residency footprint forces the LRU manager to evict.
+    let names = [
+        "squeezenet",
+        "shufflenetv2",
+        "mobilenetv2",
+        "googlenet",
+        "mobilenet",
+        "resnet50",
+    ];
+    let models: Vec<nnv12::graph::ModelGraph> =
+        names.iter().map(|m| zoo::by_name(m).unwrap()).collect();
+    // Engine residency footprint is weights + 25%; budget ~40% of the
+    // fleet total, so roughly two or three models fit and the request mix
+    // stays hot/cold (verified below — an all-warm bench would measure
+    // nothing but lock traffic).
+    let footprint: u64 = models
+        .iter()
+        .map(|g| g.weight_bytes() + g.weight_bytes() / 4)
+        .sum();
+    let budget = footprint * 2 / 5;
+
+    let router = Router::new(
+        &dev,
+        models,
+        RouterConfig {
+            memory_budget: budget,
+            execute_cold: true,
+            ..Default::default()
+        },
+    );
+    let model_names = router.model_names();
+    let reqs = generate(
+        &model_names,
+        &WorkloadSpec { n_requests: 256, zipf_s: 0.8, ..Default::default() },
+    );
+
+    // Same trace, same router, different serving-thread counts. Each
+    // iteration starts from an empty residency set so the cold/warm mix
+    // is comparable across cases (and across the 1t/4t ratchet pair).
+    let bench_case = |b: &mut Bench, label: &str, threads: usize| {
+        b.case_throughput(label, reqs.len(), || {
+            router.engine().evict_all();
+            let served = router.replay(&reqs, threads);
+            assert_eq!(served, reqs.len());
+        });
+    };
+    bench_case(&mut b, "serve-1t/zoo", 1);
+    bench_case(&mut b, "serve-4t/zoo", 4);
+
+    let cold = router.stats_cold();
+    let warm = router.stats_warm();
+    println!(
+        "workload mix over all iterations: {} cold, {} warm (budget {} MiB over {} models)",
+        cold,
+        warm,
+        budget >> 20,
+        model_names.len()
+    );
+    // Write the snapshot BEFORE the mix guard: a failed guard must still
+    // leave BENCH_serving.json behind for CI diagnosis (the workflow
+    // uploads snapshots before any hard-fail check).
+    b.finish_to("BENCH_serving.json");
+    assert_eq!(router.stats_exec_failed(), 0, "sim backend must never fail");
+    assert!(
+        cold > warm / 10,
+        "workload must thrash: {cold} cold vs {warm} warm — budget too large"
+    );
+}

@@ -7,6 +7,17 @@
 //! through PJRT (the `real-runtime` feature). [`ExecBackend`] is that
 //! seam: callers pick a backend once at
 //! [`crate::engine::EngineBuilder::backend`] and never change code.
+//!
+//! Backends must be `Send + Sync` (supertraits of [`ExecBackend`]): the
+//! engine is shared across serving threads and calls `run`/`warm_ladder`
+//! without any engine-level lock. [`SimBackend`] and [`BaselineBackend`]
+//! are stateless value types, trivially `Sync`. `RealBackend` owns a
+//! PJRT client that is *not* thread-safe (`Rc`/`RefCell` internals), so
+//! it is `Sync` by **thread confinement**: the client lives on a
+//! dedicated executor thread, lazily spawned, and `run` calls from any
+//! thread post a job over a channel and block on the reply — requests
+//! from N serving threads serialize at the one real device exactly like
+//! they would on real hardware.
 
 use crate::baselines;
 use crate::device::DeviceProfile;
@@ -51,7 +62,12 @@ pub struct ColdOutcome {
 /// How a planned model executes. Implementations must be deterministic in
 /// their inputs where they model latency (the plan store and the parity
 /// tests rely on it); a real backend reports measured wall time instead.
-pub trait ExecBackend {
+///
+/// `Send + Sync` is part of the contract: the engine invokes backends
+/// from arbitrary serving threads with no lock of its own. Backends with
+/// thread-bound resources must confine them internally (see
+/// `RealBackend`'s executor thread) rather than leak `!Sync` state.
+pub trait ExecBackend: Send + Sync {
     /// Backend name for logs and reports.
     fn name(&self) -> &'static str;
 
@@ -182,17 +198,39 @@ impl ExecBackend for BaselineBackend {
     }
 }
 
+/// One unit of real execution posted to the executor thread: everything
+/// it needs, owned (the thread outlives any one `run` call's borrows).
+#[cfg(feature = "real-runtime")]
+struct RealJob {
+    dir: std::path::PathBuf,
+    opts: crate::pipeline::RealRunOpts,
+    reply: std::sync::mpsc::Sender<Result<ColdOutcome, String>>,
+}
+
 /// The real-execution backend: cold inference over AOT HLO artifacts
 /// through the PJRT runtime and the pipelined executor
 /// ([`crate::runtime`] + [`crate::pipeline`]). Artifacts for a model
 /// named `m` are expected under `<artifacts_root>/m` (as produced by
 /// `make artifacts`). `plan_makespan` still reports the modelled
 /// estimate; [`ExecBackend::run`] reports measured wall time.
+///
+/// # Thread confinement
+///
+/// The PJRT [`crate::runtime::Runtime`] is deliberately single-threaded
+/// (`Rc`-cached executables, one device stream), so `RealBackend` never
+/// touches it from the caller's thread. Instead it lazily spawns one
+/// **executor thread** that owns the runtime for the backend's lifetime;
+/// [`ExecBackend::run`] posts a job over a channel and blocks on
+/// the reply. That makes the backend itself `Send + Sync` (asserted at
+/// compile time in `tests/real_mode.rs`) while keeping every PJRT call
+/// on one thread — concurrent serving threads queue at the single real
+/// device, as they would on hardware. Dropping the backend closes the
+/// channel and the executor thread exits.
 #[cfg(feature = "real-runtime")]
 pub struct RealBackend {
     pub artifacts_root: std::path::PathBuf,
     pub opts: crate::pipeline::RealRunOpts,
-    runtime: std::cell::RefCell<Option<crate::runtime::Runtime>>,
+    executor: std::sync::Mutex<Option<std::sync::mpsc::Sender<RealJob>>>,
 }
 
 #[cfg(feature = "real-runtime")]
@@ -204,34 +242,39 @@ impl RealBackend {
         RealBackend {
             artifacts_root: artifacts_root.into(),
             opts,
-            runtime: std::cell::RefCell::new(None),
+            executor: std::sync::Mutex::new(None),
         }
     }
-}
 
-#[cfg(feature = "real-runtime")]
-impl ExecBackend for RealBackend {
-    fn name(&self) -> &'static str {
-        "real"
+    /// The executor-thread body: owns the (lazily created) PJRT runtime
+    /// and serves jobs until the backend drops its channel sender.
+    fn executor_loop(rx: std::sync::mpsc::Receiver<RealJob>) {
+        use crate::runtime::Runtime;
+        let mut runtime: Option<Runtime> = None;
+        while let Ok(job) = rx.recv() {
+            let result = (|| -> Result<ColdOutcome, String> {
+                if runtime.is_none() {
+                    runtime = Some(Runtime::cpu().map_err(|e| format!("{e:#}"))?);
+                }
+                Self::execute(&job, runtime.as_ref().unwrap())
+            })();
+            // A dropped reply receiver means the caller gave up; the
+            // executor just moves on to the next job.
+            let _ = job.reply.send(result);
+        }
     }
 
-    fn plan_makespan(&self, _ctx: &BackendCtx, s: &Scheduled) -> Ms {
-        s.schedule.makespan
-    }
-
-    fn run(&self, ctx: &BackendCtx, _s: &Scheduled) -> Result<ColdOutcome, String> {
+    /// One real cold inference, on the executor thread.
+    fn execute(
+        job: &RealJob,
+        runtime: &crate::runtime::Runtime,
+    ) -> Result<ColdOutcome, String> {
         use crate::graph::manifest::Manifest;
         use crate::pipeline::run_cold;
-        use crate::runtime::Runtime;
         use crate::weights::read_f32;
 
-        let dir = self.artifacts_root.join(&ctx.graph.name);
-        let manifest = Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
-        let mut slot = self.runtime.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(Runtime::cpu().map_err(|e| format!("{e:#}"))?);
-        }
-        let runtime = slot.as_ref().unwrap();
+        let dir = &job.dir;
+        let manifest = Manifest::load(dir).map_err(|e| format!("{e:#}"))?;
         // Prefer the build-time fixture input; fall back to zeros shaped
         // like the first real layer's input (artifact 0 is the input
         // layer when present).
@@ -247,6 +290,27 @@ impl ExecBackend for RealBackend {
                 vec![0.0; n as usize]
             }
         };
+        let r = run_cold(&manifest, runtime, &input, &job.opts).map_err(|e| format!("{e:#}"))?;
+        Ok(ColdOutcome {
+            latency_ms: r.wall_ms,
+            energy_mj: 0.0,
+            steals: 0,
+            timings: Vec::new(),
+        })
+    }
+}
+
+#[cfg(feature = "real-runtime")]
+impl ExecBackend for RealBackend {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn plan_makespan(&self, _ctx: &BackendCtx, s: &Scheduled) -> Ms {
+        s.schedule.makespan
+    }
+
+    fn run(&self, ctx: &BackendCtx, _s: &Scheduled) -> Result<ColdOutcome, String> {
         // Route the weights cache through the engine's shared artifact
         // store (size cap + counters) unless the caller pinned one;
         // `cache_dir` remains the store-less fallback.
@@ -254,12 +318,45 @@ impl ExecBackend for RealBackend {
         if opts.store.is_none() {
             opts.store = ctx.store.cloned();
         }
-        let r = run_cold(&manifest, runtime, &input, &opts).map_err(|e| format!("{e:#}"))?;
-        Ok(ColdOutcome {
-            latency_ms: r.wall_ms,
-            energy_mj: 0.0,
-            steals: 0,
-            timings: Vec::new(),
-        })
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let job = RealJob {
+            dir: self.artifacts_root.join(&ctx.graph.name),
+            opts,
+            reply: reply_tx,
+        };
+        {
+            let mut slot = self.executor.lock().unwrap();
+            let mut job = job;
+            loop {
+                let fresh = slot.is_none();
+                let tx = slot.get_or_insert_with(|| {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    std::thread::Builder::new()
+                        .name("nnv12-real-executor".into())
+                        .spawn(move || RealBackend::executor_loop(rx))
+                        .expect("spawn real-backend executor thread");
+                    tx
+                });
+                match tx.send(job) {
+                    Ok(()) => break,
+                    // The cached executor died (a panic on an earlier job
+                    // dropped its receiver). Clear the stale sender so the
+                    // backend heals: retry once on a freshly spawned
+                    // executor instead of failing every future run.
+                    Err(std::sync::mpsc::SendError(returned)) => {
+                        *slot = None;
+                        if fresh {
+                            return Err(
+                                "real-backend executor thread died on spawn".to_string()
+                            );
+                        }
+                        job = returned;
+                    }
+                }
+            }
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| "real-backend executor dropped the reply".to_string())?
     }
 }

@@ -38,6 +38,32 @@
 //! [`BaselineBackend`] charges a vanilla engine's latencies for
 //! comparison arms, and `RealBackend` (behind the `real-runtime` cargo
 //! feature) executes AOT artifacts through PJRT.
+//!
+//! # Threading model
+//!
+//! The engine substrate is fully thread-safe: `Engine: Send + Sync` and
+//! `Session: Send + Sync` (compile-time asserted in
+//! `tests/concurrent_serving.rs`), so one engine can answer inference
+//! requests from any number of threads — the concurrent serving path the
+//! sharded [`crate::serving::Router`] builds on. The locking is
+//! fine-grained and never held across expensive work:
+//!
+//! * **Residency/LRU state** lives behind one short-critical-section
+//!   `Mutex` (the charge path does a resident-list scan + bump and
+//!   nothing else under it); session ids come from an atomic counter.
+//! * **Per-session state** (the lazily computed §3.5 warm-up ladder) is
+//!   owned by the session itself in a `OnceLock`, so concurrent first
+//!   inferences of *different* models never contend.
+//! * **Plan caches and the artifact store** were already `Sync`
+//!   ([`Engine::load_all`]'s planning fan-out relies on it); planning on
+//!   a cache miss happens outside every map lock.
+//! * **Backends** are required to be `Send + Sync`
+//!   ([`ExecBackend`]'s supertraits). [`SimBackend`] and
+//!   [`BaselineBackend`] are stateless value types; `RealBackend` is
+//!   `Sync` by *thread confinement* — its PJRT client lives on a
+//!   dedicated executor thread fed by a channel, because the underlying
+//!   runtime handle is deliberately single-threaded (see
+//!   `engine::backend`).
 
 mod backend;
 mod session;
@@ -47,10 +73,9 @@ pub use backend::{BackendCtx, BaselineBackend, ColdOutcome, ExecBackend, SimBack
 pub use backend::RealBackend;
 pub use session::{InferenceReport, Phase, Session};
 
-use std::cell::{Cell, RefCell};
 use std::path::PathBuf;
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
@@ -70,11 +95,12 @@ struct Residency {
     resident: Vec<(u64, u64, usize)>,
 }
 
-/// Shared engine internals ([`Engine`] and every [`Session`] hold an
-/// `Rc` of this — the engine/session pair is deliberately
-/// single-threaded, since backends may own thread-bound resources like a
-/// PJRT client; only the plan caches and the artifact store cross
-/// threads, in [`Engine::load_all`]'s planning fan-out).
+/// Shared engine internals. [`Engine`] and every [`Session`] hold an
+/// `Arc` of this; everything here is `Sync`, so engines and sessions can
+/// be driven from any number of threads. The one piece of cross-session
+/// mutable state — the LRU residency list — sits behind its own `Mutex`
+/// with scan-and-bump critical sections; the backend is a shared
+/// `Send + Sync` trait object and is never called under that lock.
 pub(crate) struct Inner {
     pub(crate) dev: DeviceProfile,
     pub(crate) registry: Registry,
@@ -86,13 +112,16 @@ pub(crate) struct Inner {
     pub(crate) calibrated_cache: Arc<CalibratedPlanCache>,
     pub(crate) store: Option<Arc<ArtifactStore>>,
     pub(crate) backend: Box<dyn ExecBackend>,
-    residency: RefCell<Residency>,
-    next_session: Cell<u64>,
+    residency: Mutex<Residency>,
+    next_session: AtomicU64,
 }
 
 impl Inner {
     /// Charge one inference for session `id`: warm-ladder latency when
-    /// resident, otherwise evict-until-fit and charge cold.
+    /// resident, otherwise evict-until-fit and charge cold. The whole
+    /// decision happens under the residency lock, so concurrent requests
+    /// observe a consistent LRU order (two racing requests for the same
+    /// evicted model produce exactly one cold charge).
     pub(crate) fn charge(
         &self,
         id: u64,
@@ -100,7 +129,7 @@ impl Inner {
         ladder: &[Ms],
         warm_ms: Ms,
     ) -> InferenceReport {
-        let mut r = self.residency.borrow_mut();
+        let mut r = self.residency.lock().unwrap();
         if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
             let (i, b, count) = r.resident.remove(pos);
             // Rung `count + 1` of the ladder; past the end the session is
@@ -136,7 +165,8 @@ impl Inner {
 
     pub(crate) fn is_resident(&self, id: u64) -> bool {
         self.residency
-            .borrow()
+            .lock()
+            .unwrap()
             .resident
             .iter()
             .any(|(i, _, _)| *i == id)
@@ -144,7 +174,7 @@ impl Inner {
 
     /// Drop a session's residency (called on [`Session`] drop).
     pub(crate) fn release(&self, id: u64) {
-        let mut r = self.residency.borrow_mut();
+        let mut r = self.residency.lock().unwrap();
         if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
             let (_, b, _) = r.resident.remove(pos);
             r.mem_used -= b;
@@ -153,11 +183,13 @@ impl Inner {
 }
 
 /// The engine: shared planning/execution substrate + session factory.
-/// Cheap to clone (all state is behind an `Rc`); clones and their
-/// sessions share the plan cache and the residency budget.
+/// Cheap to clone (all state is behind an `Arc`); clones and their
+/// sessions share the plan cache and the residency budget. `Engine` is
+/// `Send + Sync`: clone it into threads, or share one behind a
+/// reference — both work.
 #[derive(Clone)]
 pub struct Engine {
-    inner: Rc<Inner>,
+    inner: Arc<Inner>,
 }
 
 impl Engine {
@@ -183,9 +215,8 @@ impl Engine {
     pub fn load_all(&self, graphs: Vec<ModelGraph>) -> Vec<Session> {
         let inner = &self.inner;
         let sched_cfg = self.effective_sched();
-        // The closures capture only `Sync` pieces of the engine (never the
-        // backend, which is allowed to be single-threaded): only planning
-        // fans out across cores; warm-up ladders stay lazy per session.
+        // Only planning fans out across cores here; warm-up ladders stay
+        // lazy per session, so the (Sync) backend is not touched.
         let planned: Vec<(Arc<Scheduled>, DeviceProfile)> =
             if inner.calibrated && inner.backend.needs_plan() {
                 let (dev, registry, tag, cache) = (
@@ -281,15 +312,14 @@ impl Engine {
         let inner = &self.inner;
         // Resident-set size: weights + transformed layouts + workspace.
         let resident_bytes = graph.weight_bytes() + graph.weight_bytes() / 4;
-        let id = inner.next_session.get();
-        inner.next_session.set(id + 1);
+        let id = inner.next_session.fetch_add(1, Ordering::Relaxed);
         Session {
             engine: inner.clone(),
             id,
             graph,
             dev,
             scheduled,
-            ladder: std::cell::OnceCell::new(),
+            ladder: std::sync::OnceLock::new(),
             resident_bytes,
         }
     }
@@ -335,12 +365,12 @@ impl Engine {
 
     /// Bytes of the residency budget currently in use.
     pub fn mem_used(&self) -> u64 {
-        self.inner.residency.borrow().mem_used
+        self.inner.residency.lock().unwrap().mem_used
     }
 
     /// Evict every resident session (their next inference is cold).
     pub fn evict_all(&self) {
-        let mut r = self.inner.residency.borrow_mut();
+        let mut r = self.inner.residency.lock().unwrap();
         r.resident.clear();
         r.mem_used = 0;
     }
@@ -427,7 +457,9 @@ impl EngineBuilder {
         self
     }
 
-    /// Execution backend (default: [`SimBackend::nnv12`]).
+    /// Execution backend (default: [`SimBackend::nnv12`]). Backends are
+    /// `Send + Sync` by trait bound; see the module docs for what that
+    /// means per backend.
     pub fn backend(self, backend: impl ExecBackend + 'static) -> EngineBuilder {
         self.backend_box(Box::new(backend))
     }
@@ -532,7 +564,7 @@ impl EngineBuilder {
             "full"
         };
         Ok(Engine {
-            inner: Rc::new(Inner {
+            inner: Arc::new(Inner {
                 dev,
                 registry: self.registry,
                 registry_tag,
@@ -543,12 +575,12 @@ impl EngineBuilder {
                 calibrated_cache,
                 store,
                 backend: self.backend.unwrap_or_else(|| Box::new(SimBackend::nnv12())),
-                residency: RefCell::new(Residency {
+                residency: Mutex::new(Residency {
                     budget: self.memory_budget,
                     mem_used: 0,
                     resident: Vec::new(),
                 }),
-                next_session: Cell::new(0),
+                next_session: AtomicU64::new(0),
             }),
         })
     }
@@ -591,5 +623,30 @@ mod tests {
         assert!(engine.mem_used() > 0);
         drop(s);
         assert_eq!(engine.mem_used(), 0);
+    }
+
+    #[test]
+    fn sessions_infer_concurrently_from_many_threads() {
+        // The substrate contract the serving layer builds on: one engine,
+        // sessions driven from different threads, a consistent LRU
+        // outcome. With an unbounded budget each session is cold exactly
+        // once no matter the interleaving.
+        let engine = Engine::builder().device(profiles::meizu_16t()).build();
+        let sessions = engine.load_all(vec![zoo::tiny_net(), zoo::micro_mobilenet()]);
+        let colds = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for s in &sessions {
+                for _ in 0..2 {
+                    let colds = &colds;
+                    scope.spawn(move || {
+                        if s.infer().phase == Phase::Cold {
+                            colds.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            }
+        });
+        assert_eq!(colds.load(Ordering::Relaxed), sessions.len());
+        assert_eq!(engine.mem_used(), sessions.iter().map(|s| s.resident_bytes()).sum::<u64>());
     }
 }

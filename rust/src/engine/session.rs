@@ -1,8 +1,11 @@
 //! Per-model sessions: the explicit cold → warming → warm lifecycle.
+//!
+//! Sessions are `Send + Sync`: all shared mutable state (the engine's
+//! residency list) is behind the engine's lock, and the session's own
+//! lazily computed warm-up ladder sits in a `OnceLock`, so one session
+//! can serve `infer()` calls from many threads at once.
 
-use std::cell::OnceCell;
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::device::DeviceProfile;
 use crate::engine::backend::{BackendCtx, ColdOutcome};
@@ -41,9 +44,11 @@ pub struct InferenceReport {
 /// engine, so sessions of one engine share the residency budget — an
 /// inference on one session can evict another (the next inference on the
 /// evicted session is [`Phase::Cold`] again). Dropping a session releases
-/// its residency.
+/// its residency. Sessions are `Send + Sync` (wrap one in an `Arc` to
+/// serve it from several threads, as the sharded
+/// [`crate::serving::Router`] does).
 pub struct Session {
-    pub(crate) engine: Rc<Inner>,
+    pub(crate) engine: Arc<Inner>,
     pub(crate) id: u64,
     pub(crate) graph: ModelGraph,
     /// The device view this session was planned against (differs from the
@@ -52,8 +57,9 @@ pub struct Session {
     pub(crate) scheduled: Arc<Scheduled>,
     /// §3.5 warm-up ladder, computed through the backend on first use
     /// (plan-only consumers — `run_cold`, plan inspection — never pay for
-    /// it).
-    pub(crate) ladder: OnceCell<ContinuousReport>,
+    /// it). Per-session state owned by the session: concurrent first
+    /// inferences of different models never contend on a shared lock.
+    pub(crate) ladder: OnceLock<ContinuousReport>,
     pub(crate) resident_bytes: u64,
 }
 

@@ -42,6 +42,40 @@
 //! the `xla` crate) executes AOT HLO artifacts through PJRT. Everything
 //! above compiles and runs under `--no-default-features`.
 //!
+//! ## Concurrent serving
+//!
+//! The engine substrate is thread-safe (`Engine`/`Session` are
+//! `Send + Sync`; backends are `Send + Sync` by trait bound), and the
+//! serving [`serving::Router`] is a sharded concurrent front over it —
+//! [`serving::Router::request`] takes `&self`, so one router serves
+//! requests from any number of threads:
+//!
+//! ```
+//! use nnv12::device::profiles;
+//! use nnv12::graph::zoo;
+//! use nnv12::serving::{Router, RouterConfig};
+//!
+//! let router = Router::new(
+//!     &profiles::meizu_16t(),
+//!     vec![zoo::tiny_net(), zoo::micro_mobilenet()],
+//!     RouterConfig::default(),
+//! );
+//! std::thread::scope(|s| {
+//!     for _ in 0..2 {
+//!         let router = &router;
+//!         s.spawn(move || {
+//!             router.request("tinynet").unwrap();
+//!             router.request("micro-mobilenet").unwrap();
+//!         });
+//!     }
+//! });
+//! assert_eq!(router.stats_cold() + router.stats_warm(), 4);
+//! ```
+//!
+//! `repro serve --threads N` drives the same path from the CLI, and
+//! `benches/serving_throughput.rs` ratchets it in CI (4-thread
+//! throughput must beat 1-thread in the same run).
+//!
 //! ## Layers underneath
 //!
 //! * [`util`] — in-tree substrates for the offline build environment
@@ -71,10 +105,12 @@
 //! * [`pipeline`] (`real-runtime`) — real-thread pipelined executor over
 //!   the runtime.
 //! * [`engine`] — **the facade**: `Engine`/`Session` lifecycle over
-//!   pluggable backends and the persistent artifact store.
-//! * [`serving`] — multi-tenant serving front over the engine: request
-//!   router, workload generator (cold inferences are induced by
-//!   eviction).
+//!   pluggable backends and the persistent artifact store; fully
+//!   thread-safe (fine-grained residency locking, `Send + Sync`
+//!   backends).
+//! * [`serving`] — multi-tenant serving front over the engine: sharded
+//!   concurrent request router (`request()` is `&self`), workload
+//!   generator (cold inferences are induced by eviction).
 //! * [`warm`] — §3.5 kernel switching for subsequent warm inference (the
 //!   primitive behind session warm-up ladders).
 //! * [`metrics`] — timing, summaries, and the energy model.

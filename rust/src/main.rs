@@ -15,7 +15,7 @@
 //!   repro plan --model resnet50 --device meizu16t --store plans/
 //!   repro report fig8
 //!   repro cold --artifacts artifacts/tinynet --workers 2 --cache
-//!   repro serve --device meizu16t --requests 200 --budget-mb 48
+//!   repro serve --device meizu16t --requests 200 --budget-mb 48 --threads 4 --execute
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,7 +31,7 @@ use nnv12::util::cli::Args;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&raw, &["cache", "no-pipeline", "sequential", "verbose"]) {
+    let args = match Args::parse(&raw, &["cache", "no-pipeline", "sequential", "verbose", "execute"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -71,7 +71,7 @@ fn print_help() {
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
            report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
-           serve     --device D --requests N --budget-mb B  multi-tenant serving sim\n\
+           serve     --device D --requests N --budget-mb B [--threads T] [--execute]  multi-tenant serving sim\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
            store     gc --dir DIR [--days N]                drop artifacts untouched for N days\n\
            devices                                          list device profiles"
@@ -222,33 +222,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dev = device_of(args)?;
     let n = args.get_usize("requests", 200).map_err(|e| anyhow!(e))?;
     let budget_mb = args.get_usize("budget-mb", 48).map_err(|e| anyhow!(e))? as u64;
+    let threads = args.get_usize("threads", 1).map_err(|e| anyhow!(e))?.max(1);
     let models: Vec<nnv12::graph::ModelGraph> =
         ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
             .iter()
             .map(|m| zoo::by_name(m).unwrap())
             .collect();
     // The serving front is itself a thin layer over Engine/Session — it
-    // adds the request surface and per-model accounting used here.
-    let mut router = Router::new(
+    // adds the sharded request surface and per-model accounting used
+    // here. `--threads N` replays the trace across N serving threads
+    // (the router's request path is `&self` and thread-safe);
+    // `--execute` runs each cold request through the contention-aware
+    // simulator instead of charging the planner's estimate.
+    let router = Router::new(
         &dev,
         models,
-        RouterConfig { memory_budget: budget_mb << 20, ..Default::default() },
+        RouterConfig {
+            memory_budget: budget_mb << 20,
+            execute_cold: args.has("execute"),
+            ..Default::default()
+        },
     );
     let names = router.model_names();
     let reqs = generate(&names, &WorkloadSpec { n_requests: n, ..Default::default() });
-    for r in &reqs {
-        router.handle(&r.model);
-    }
+    let t = nnv12::metrics::Timer::start();
+    let served = router.replay(&reqs, threads);
+    let wall_ms = t.elapsed_ms();
     println!(
-        "served {} requests: {} cold, {} warm (budget {} MB on {})",
-        reqs.len(),
-        router.stats_cold,
-        router.stats_warm,
+        "served {} requests on {} thread(s) in {:.1} ms ({:.0} req/s): {} cold, {} warm (budget {} MB on {})",
+        served,
+        threads,
+        wall_ms,
+        served as f64 / (wall_ms / 1e3).max(1e-9),
+        router.stats_cold(),
+        router.stats_warm(),
         budget_mb,
         dev.name
     );
+    if router.stats_exec_failed() > 0 {
+        eprintln!(
+            "warning: {} cold request(s) fell back to the planner estimate \
+             (backend execution failed)",
+            router.stats_exec_failed()
+        );
+    }
     for label in ["cold", "warm"] {
-        let s = router.recorder.summary(label);
+        let s = router.summary(label);
         if s.n > 0 {
             println!(
                 "  {label:<5} n={:<4} mean={:.1} ms p50={:.1} p90={:.1} p99={:.1}",

@@ -138,7 +138,7 @@ fn revalidate(
     cfg: &SchedulerConfig,
 ) -> Option<Scheduled> {
     let plan = Plan::from_json(plan_json, graph, registry).ok()?;
-    let set = OpSet::build(graph, &plan.choices, dev.executes_on_gpu());
+    let set = Arc::new(OpSet::build(graph, &plan.choices, dev.executes_on_gpu()));
     let pricer = Pricer::new(dev, graph, &plan.choices, cfg.shader_cache);
     let schedule = evaluate(&set, &plan, &pricer).ok()?;
     // The planner guarantees `estimated_ms == makespan` bit-for-bit; a

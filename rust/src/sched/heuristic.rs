@@ -43,6 +43,8 @@
 //! oracle `tests/canonical_confirm.rs` proves the confirm bit-exact
 //! against.
 
+use std::sync::Arc;
+
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
@@ -115,7 +117,13 @@ pub struct Scheduled {
     pub plan: Plan,
     pub schedule: Schedule,
     /// The op set the plan refers to (needed to interpret queue entries).
-    pub set: OpSet,
+    /// Canonical op sets are structurally identical across a whole search
+    /// — and across every confirm and plan-cache entry of that search —
+    /// so the set is shared by `Arc` rather than cloned per result:
+    /// cloning a `Scheduled` (cache hits, confirm results) is
+    /// allocation-free on the set. `&scheduled.set` still derefs to
+    /// `&OpSet` everywhere it is consumed.
+    pub set: Arc<OpSet>,
 }
 
 /// Number of little-core (preparation) units the scheduler plans for on
@@ -383,7 +391,7 @@ fn rebuild_with_table(
     choices: &[Option<KernelChoice>],
     cfg: &SchedulerConfig,
 ) -> (Scheduled, PriceTable) {
-    let set = OpSet::build(graph, choices, dev.executes_on_gpu());
+    let set = Arc::new(OpSet::build(graph, choices, dev.executes_on_gpu()));
     let pricer = Pricer::new(dev, graph, choices, cfg.shader_cache);
     // Flat price table: the cost model runs once per op here; everything
     // below (bundle sizing, balancing, evaluation) is array lookups.
@@ -403,7 +411,7 @@ fn rebuild_with_table(
 /// bit-exact against it (property-tested in
 /// `tests/canonical_confirm.rs`).
 pub fn confirm_from_table(
-    set: &OpSet,
+    set: &Arc<OpSet>,
     choices: Vec<Option<KernelChoice>>,
     table: &PriceTable,
     cfg: &SchedulerConfig,
@@ -414,12 +422,14 @@ pub fn confirm_from_table(
 
 /// Algorithm-1 queue assembly + evaluation over a prebuilt price table —
 /// the shared core of [`inner_schedule`] and [`confirm_from_table`]. No
-/// cost-model work happens here: bundle costs come from `table`, and the
+/// cost-model work happens here: bundle costs come from `table`, the
 /// big-core promotion loop is O(layers × little cores) via precomputed
 /// round-robin suffix loads (the historical per-iteration re-summation
-/// was the search's last O(layers²) step).
+/// was the search's last O(layers²) step), and the little-core balancing
+/// loop carries per-queue load accumulators across moves, so it is
+/// O(moves × n_little) instead of re-summing every queue per iteration.
 fn assemble_plan(
-    set: &OpSet,
+    set: &Arc<OpSet>,
     choices: Vec<Option<KernelChoice>>,
     table: &PriceTable,
     cfg: &SchedulerConfig,
@@ -563,11 +573,18 @@ fn assemble_plan(
     }
 
     // --- Little-core balancing loop (Alg. 1 lines 13–20) ---
+    // §Perf: per-queue loads are summed once up front and then carried
+    // across moves as accumulators (`loads[j_max] -= b; loads[j_min] +=
+    // b`), so each iteration is an O(n_little) max/min scan plus the
+    // move itself — O(moves) total bundle-cost work, instead of
+    // re-summing every queue (O(prep layers)) per iteration. Both the
+    // full rebuild and the incremental confirm share this code, so the
+    // confirm's bit-exactness oracle is unaffected.
     let load_of = |layers: &[usize]| -> Ms {
         layers.iter().map(|&l| bundle_ms(l, false)).sum()
     };
+    let mut loads: Vec<Ms> = little_layers.iter().map(|q| load_of(q)).collect();
     for _ in 0..4 * n_little.max(1) {
-        let loads: Vec<Ms> = little_layers.iter().map(|q| load_of(q)).collect();
         let (j_max, &t_max) = loads
             .iter()
             .enumerate()
@@ -588,9 +605,12 @@ fn assemble_plan(
             bundle_ms(b, false).partial_cmp(&bundle_ms(a, false)).unwrap()
         });
         for l in order {
-            if bundle_ms(l, false) < (t_max - t_min) / 2.0 {
+            let b = bundle_ms(l, false);
+            if b < (t_max - t_min) / 2.0 {
                 little_layers[j_max].retain(|&x| x != l);
                 little_layers[j_min].push(l);
+                loads[j_max] -= b;
+                loads[j_min] += b;
                 moved = true;
                 break;
             }

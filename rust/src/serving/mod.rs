@@ -12,6 +12,14 @@
 //! for a vanilla engine), and resident models serve down the §3.5
 //! kernel-switching warm-up ladder. [`workload`] generates the
 //! Zipf-skewed request streams the serving experiments replay.
+//!
+//! The router is **concurrent**: it is `Send + Sync`, sessions live in a
+//! sharded map, [`Router::request`] takes `&self`, and
+//! [`Router::replay`] fans a request trace across N serving threads —
+//! the many-requests-at-once environment the ROADMAP's north star
+//! demands, measured by `benches/serving_throughput.rs` and ratcheted in
+//! CI (4-thread throughput must beat 1-thread in the same run). See
+//! [`router`]'s module docs for the locking design.
 
 pub mod router;
 pub mod workload;

@@ -1,20 +1,63 @@
-//! The request router: a thin serving front over the engine facade.
+//! The request router: a sharded, concurrent serving front over the
+//! engine facade.
 //!
 //! All planning, warm-up-ladder computation, and LRU residency live in
 //! [`crate::engine`]; the router contributes the per-model request
 //! surface, request statistics, and the engine-choice knob (NNV12 vs a
 //! vanilla baseline) used by the serving comparisons.
+//!
+//! # Threading model
+//!
+//! [`Router`] is `Send + Sync` and [`Router::request`] takes `&self`:
+//! share one router across N serving threads (an `Arc`, a scoped
+//! borrow — either works) and hammer it. Internally:
+//!
+//! * The model → session map is a **hand-rolled sharded hash map**
+//!   (`SHARDS` `Mutex<HashMap<String, Arc<Session>>>` buckets keyed by a
+//!   hash of the model name — the vendored crate set has no `DashMap`,
+//!   and doesn't need one). A request locks exactly one shard just long
+//!   enough to clone the session's `Arc`, then serves **outside** the
+//!   lock, so requests for different models never serialize on the map
+//!   and requests for the same model only serialize at the engine's
+//!   residency lock. Shards exist because the map is mutable at runtime
+//!   ([`Router::register`] / [`Router::remove`] add and retire models
+//!   while requests are in flight).
+//! * Request counters are atomics; the latency [`Recorder`] sits behind
+//!   its own small `Mutex` (label scan + push — never held across
+//!   inference work, and never exposed as a guard: [`Router::summary`]
+//!   and [`Router::recorded`] hand out snapshots).
+//! * Everything else (residency/LRU, plan caches, the artifact store,
+//!   backends) is the engine's thread-safe substrate.
+//!
+//! The multi-threaded request path is *deterministic in aggregate*:
+//! replaying the same trace with 1 or N threads produces the same
+//! cold/warm totals and bit-identical plans whenever residency outcomes
+//! don't depend on interleaving (proven in
+//! `tests/concurrent_serving.rs`; under an eviction-thrashing budget the
+//! totals still add up, but which request goes cold legitimately depends
+//! on arrival order, exactly as on a real device).
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::engine::{BaselineBackend, Engine, ExecBackend, Phase, Session, SimBackend};
 use crate::device::DeviceProfile;
 use crate::graph::ModelGraph;
 use crate::metrics::Recorder;
 use crate::sched::cache::PlanCache;
+use crate::serving::workload::Request;
 use crate::store::ArtifactStore;
 use crate::Ms;
+
+/// Number of session-map shards (power of two; max concurrent
+/// registrations/lookups that never contend, assuming a decent hash).
+const SHARDS: usize = 16;
+
+/// One bucket of the sharded session map.
+type Shard = Mutex<HashMap<String, Arc<Session>>>;
 
 /// Serving engine the router charges latencies from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +74,13 @@ pub struct RouterConfig {
     pub engine: ServeEngine,
     /// Length of the warm-up latency ladder computed per model.
     pub warmup_depth: usize,
+    /// Execute cold requests through the engine's backend (the
+    /// contention-aware simulator for [`ServeEngine::Nnv12`]) instead of
+    /// charging the planner's precomputed cold estimate. Costs real
+    /// (deterministic) compute per cold request — which is the point of
+    /// the throughput benchmark: cold work parallelizes across serving
+    /// threads. Default off, preserving the cheap charge-only semantics.
+    pub execute_cold: bool,
 }
 
 impl Default for RouterConfig {
@@ -39,6 +89,7 @@ impl Default for RouterConfig {
             memory_budget: 64 << 20,
             engine: ServeEngine::Nnv12,
             warmup_depth: 4,
+            execute_cold: false,
         }
     }
 }
@@ -51,13 +102,16 @@ pub struct Outcome {
     pub evictions: usize,
 }
 
-/// The router: named [`Session`]s over one shared [`Engine`].
+/// The router: named [`Session`]s over one shared [`Engine`], behind a
+/// sharded concurrent map. `Send + Sync`; [`Router::request`] is `&self`.
 pub struct Router {
     engine: Engine,
-    sessions: HashMap<String, Session>,
-    pub recorder: Recorder,
-    pub stats_cold: usize,
-    pub stats_warm: usize,
+    shards: Vec<Shard>,
+    recorder: Mutex<Recorder>,
+    stats_cold: AtomicUsize,
+    stats_warm: AtomicUsize,
+    stats_exec_failed: AtomicUsize,
+    execute_cold: bool,
 }
 
 impl Router {
@@ -80,7 +134,7 @@ impl Router {
         plan_cache: Arc<PlanCache>,
     ) -> Router {
         let builder = Router::builder_for(dev, &cfg).plan_cache(plan_cache);
-        Router::finish(builder.build(), models)
+        Router::finish(builder.build(), models, &cfg)
     }
 
     /// [`Router::new`] persisting plans through a shared content-addressed
@@ -94,7 +148,7 @@ impl Router {
         store: Arc<ArtifactStore>,
     ) -> Router {
         let builder = Router::builder_for(dev, &cfg).artifact_store_shared(store);
-        Router::finish(builder.build(), models)
+        Router::finish(builder.build(), models, &cfg)
     }
 
     fn builder_for(dev: &DeviceProfile, cfg: &RouterConfig) -> crate::engine::EngineBuilder {
@@ -109,46 +163,174 @@ impl Router {
             .backend_box(backend)
     }
 
-    fn finish(engine: Engine, models: Vec<ModelGraph>) -> Router {
-        let sessions = engine
-            .load_all(models)
-            .into_iter()
-            .map(|s| (s.name().to_string(), s))
-            .collect();
-        Router {
+    fn finish(engine: Engine, models: Vec<ModelGraph>, cfg: &RouterConfig) -> Router {
+        let router = Router {
             engine,
-            sessions,
-            recorder: Recorder::new(),
-            stats_cold: 0,
-            stats_warm: 0,
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            recorder: Mutex::new(Recorder::new()),
+            stats_cold: AtomicUsize::new(0),
+            stats_warm: AtomicUsize::new(0),
+            stats_exec_failed: AtomicUsize::new(0),
+            execute_cold: cfg.execute_cold,
+        };
+        for s in router.engine.load_all(models) {
+            router.insert(s);
         }
+        router
+    }
+
+    /// The shard index serving `model`.
+    fn shard_of(&self, model: &str) -> usize {
+        let mut h = DefaultHasher::new();
+        model.hash(&mut h);
+        (h.finish() as usize) & (SHARDS - 1)
+    }
+
+    fn insert(&self, session: Session) {
+        let name = session.name().to_string();
+        let shard = self.shard_of(&name);
+        self.shards[shard]
+            .lock()
+            .unwrap()
+            .insert(name, Arc::new(session));
+    }
+
+    /// Plan and add a model at runtime (`&self`: callable while other
+    /// threads serve requests — they contend only on this model's
+    /// shard). Replaces any existing session of the same name; its
+    /// residency is released when the last in-flight request drops the
+    /// old `Arc`.
+    pub fn register(&self, model: ModelGraph) {
+        self.insert(self.engine.load(model));
+    }
+
+    /// Retire a model. In-flight requests holding the session's `Arc`
+    /// finish normally; residency is released once they drop it.
+    pub fn remove(&self, model: &str) -> bool {
+        let shard = self.shard_of(model);
+        self.shards[shard].lock().unwrap().remove(model).is_some()
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.sessions.keys().cloned().collect();
+        let mut v: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect();
         v.sort();
         v
     }
 
     pub fn is_resident(&self, name: &str) -> bool {
-        self.sessions.get(name).map_or(false, |s| s.is_resident())
+        self.session(name).is_some_and(|s| s.is_resident())
     }
 
     /// Handle a request for `model`: one [`Session::infer`] plus request
-    /// accounting. `None` for unknown models.
-    pub fn handle(&mut self, model: &str) -> Option<Outcome> {
-        let session = self.sessions.get(model)?;
+    /// accounting, from any thread. `None` for unknown models.
+    ///
+    /// The shard lock covers only the `Arc` clone; inference (residency
+    /// charge, lazy ladder, and — with [`RouterConfig::execute_cold`] —
+    /// backend execution) runs outside it.
+    pub fn request(&self, model: &str) -> Option<Outcome> {
+        let session = self.session(model)?;
         let r = session.infer();
         let cold = r.phase == Phase::Cold;
+        let mut latency = r.latency_ms;
+        if cold && self.execute_cold {
+            // Execute the cold inference through the backend (the
+            // deterministic contention-aware simulation, or a real run);
+            // fall back to the charged estimate if the backend cannot —
+            // counted, so a silently broken backend is observable via
+            // [`Router::stats_exec_failed`].
+            match session.run_cold() {
+                Ok(out) => latency = out.latency_ms,
+                Err(_) => {
+                    self.stats_exec_failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
         let label = if cold { "cold" } else { "warm" };
         if cold {
-            self.stats_cold += 1;
+            self.stats_cold.fetch_add(1, Ordering::Relaxed);
         } else {
-            self.stats_warm += 1;
+            self.stats_warm.fetch_add(1, Ordering::Relaxed);
         }
-        self.recorder.record(label, r.latency_ms);
-        self.recorder.record(&format!("{model}:{label}"), r.latency_ms);
-        Some(Outcome { latency_ms: r.latency_ms, cold, evictions: r.evictions })
+        // The per-model label is formatted before taking the recorder
+        // lock: the critical section is two label-scan + push appends,
+        // never an allocation.
+        let model_label = format!("{model}:{label}");
+        {
+            let mut rec = self.recorder.lock().unwrap();
+            rec.record(label, latency);
+            rec.record(&model_label, latency);
+        }
+        Some(Outcome { latency_ms: latency, cold, evictions: r.evictions })
+    }
+
+    /// Replay a request trace across `threads` serving threads (request
+    /// `i` goes to thread `i % threads`, each thread serving its share
+    /// in trace order). Returns the number of requests served (requests
+    /// for unknown models are skipped). `threads <= 1` replays inline —
+    /// the single-threaded baseline the throughput ratchet compares
+    /// against.
+    pub fn replay(&self, reqs: &[Request], threads: usize) -> usize {
+        if threads <= 1 {
+            return reqs
+                .iter()
+                .filter(|r| self.request(&r.model).is_some())
+                .count();
+        }
+        let served = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let served = &served;
+                scope.spawn(move || {
+                    let n = reqs
+                        .iter()
+                        .skip(t)
+                        .step_by(threads)
+                        .filter(|r| self.request(&r.model).is_some())
+                        .count();
+                    served.fetch_add(n, Ordering::Relaxed);
+                });
+            }
+        });
+        served.into_inner()
+    }
+
+    /// Requests that hit the cold path so far.
+    pub fn stats_cold(&self) -> usize {
+        self.stats_cold.load(Ordering::Relaxed)
+    }
+
+    /// Requests served warm (resident) so far.
+    pub fn stats_warm(&self) -> usize {
+        self.stats_warm.load(Ordering::Relaxed)
+    }
+
+    /// Cold requests whose [`RouterConfig::execute_cold`] backend
+    /// execution failed and fell back to the charged estimate (always 0
+    /// when `execute_cold` is off). A nonzero value means reported cold
+    /// latencies are planner estimates, not executed ones.
+    pub fn stats_exec_failed(&self) -> usize {
+        self.stats_exec_failed.load(Ordering::Relaxed)
+    }
+
+    /// Latency summary for a recorder label (`"cold"`, `"warm"`, or a
+    /// per-model `"model:cold"`/`"model:warm"` key). Snapshot API on
+    /// purpose: the recorder lock is taken and released inside the call,
+    /// so callers can never hold it across another router call (a guard
+    /// held while calling [`Router::request`] on the same thread would
+    /// self-deadlock on the non-reentrant lock).
+    pub fn summary(&self, label: &str) -> crate::util::stats::Summary {
+        self.recorder.lock().unwrap().summary(label)
+    }
+
+    /// Snapshot of the raw latency observations recorded under `label`
+    /// (empty for unknown labels). Cloned out from under the recorder
+    /// lock — see [`Router::summary`] for why no guard is exposed.
+    pub fn recorded(&self, label: &str) -> Vec<f64> {
+        self.recorder.lock().unwrap().values(label).to_vec()
     }
 
     /// The underlying engine (residency, plan cache, device).
@@ -156,9 +338,11 @@ impl Router {
         &self.engine
     }
 
-    /// The session serving `model`.
-    pub fn session(&self, model: &str) -> Option<&Session> {
-        self.sessions.get(model)
+    /// The session serving `model` (an `Arc` clone — callers can infer
+    /// on it directly, concurrently with the router).
+    pub fn session(&self, model: &str) -> Option<Arc<Session>> {
+        let shard = self.shard_of(model);
+        self.shards[shard].lock().unwrap().get(model).cloned()
     }
 
     /// The shared plan cache.
@@ -185,23 +369,23 @@ mod tests {
 
     #[test]
     fn first_request_cold_second_warm() {
-        let mut r = router(1 << 30);
-        let a = r.handle("tinynet").unwrap();
+        let r = router(1 << 30);
+        let a = r.request("tinynet").unwrap();
         assert!(a.cold);
-        let b = r.handle("tinynet").unwrap();
+        let b = r.request("tinynet").unwrap();
         assert!(!b.cold);
         assert!(b.latency_ms <= a.latency_ms);
-        assert_eq!(r.stats_cold, 1);
-        assert_eq!(r.stats_warm, 1);
+        assert_eq!(r.stats_cold(), 1);
+        assert_eq!(r.stats_warm(), 1);
     }
 
     #[test]
     fn warm_ladder_descends_to_steady_state() {
-        let mut r = router(1 << 30);
-        let l1 = r.handle("squeezenet").unwrap().latency_ms;
-        let l2 = r.handle("squeezenet").unwrap().latency_ms;
-        let l3 = r.handle("squeezenet").unwrap().latency_ms;
-        let l4 = r.handle("squeezenet").unwrap().latency_ms;
+        let r = router(1 << 30);
+        let l1 = r.request("squeezenet").unwrap().latency_ms;
+        let l2 = r.request("squeezenet").unwrap().latency_ms;
+        let l3 = r.request("squeezenet").unwrap().latency_ms;
+        let l4 = r.request("squeezenet").unwrap().latency_ms;
         assert!(l1 > l2, "cold {l1} > 2nd {l2}");
         assert!(l2 >= l3, "2nd {l2} >= 3rd {l3}");
         assert_eq!(l3, l4, "steady state from 3rd inference");
@@ -210,14 +394,14 @@ mod tests {
     #[test]
     fn tight_budget_causes_evictions_and_recold() {
         // Budget fits roughly one model: alternating requests thrash.
-        let mut r = router(6 << 20);
-        r.handle("squeezenet").unwrap();
-        let out = r.handle("micro-mobilenet");
+        let r = router(6 << 20);
+        r.request("squeezenet").unwrap();
+        let out = r.request("micro-mobilenet");
         // squeezenet (~5MB resident +25%) + micro must exceed 6MB ⇒ evict.
         let out = out.unwrap();
         assert!(out.cold);
         assert!(out.evictions > 0 || r.mem_used() <= 6 << 20);
-        let back = r.handle("squeezenet").unwrap();
+        let back = r.request("squeezenet").unwrap();
         assert!(back.cold, "evicted model must cold-start again");
     }
 
@@ -234,11 +418,9 @@ mod tests {
         assert_eq!(cache.misses(), 2);
         assert_eq!(cache.hits(), 2);
         // And identical plans ⇒ identical cold latencies.
-        let mut a = a;
-        let mut b = b;
         assert_eq!(
-            a.handle("squeezenet").unwrap().latency_ms.to_bits(),
-            b.handle("squeezenet").unwrap().latency_ms.to_bits()
+            a.request("squeezenet").unwrap().latency_ms.to_bits(),
+            b.request("squeezenet").unwrap().latency_ms.to_bits()
         );
     }
 
@@ -259,16 +441,15 @@ mod tests {
         // A "restarted" router: fresh store handle over the same directory
         // (≈ a fresh process). Every plan comes from disk.
         let store2 = Arc::new(ArtifactStore::open(&dir).unwrap());
-        let mut b =
+        let b =
             Router::with_artifact_store(&dev, models(), RouterConfig::default(), store2);
         assert_eq!(b.plan_cache().misses(), 0, "restart must not re-plan");
         assert_eq!(b.plan_cache().disk_hits(), 2);
         let stats = b.engine().store_stats().unwrap();
         assert_eq!(stats.hits, 2);
-        let mut a = a;
         assert_eq!(
-            a.handle("squeezenet").unwrap().latency_ms.to_bits(),
-            b.handle("squeezenet").unwrap().latency_ms.to_bits(),
+            a.request("squeezenet").unwrap().latency_ms.to_bits(),
+            b.request("squeezenet").unwrap().latency_ms.to_bits(),
             "stored plans must reproduce identical serving latencies"
         );
         let _ = std::fs::remove_dir_all(&dir);
@@ -276,26 +457,60 @@ mod tests {
 
     #[test]
     fn unknown_model_is_none() {
-        let mut r = router(1 << 30);
-        assert!(r.handle("nope").is_none());
+        let r = router(1 << 30);
+        assert!(r.request("nope").is_none());
+    }
+
+    #[test]
+    fn register_and_remove_at_runtime() {
+        let r = router(1 << 30);
+        assert!(r.request("mobilenetv2").is_none());
+        r.register(zoo::mobilenet_v2());
+        let out = r.request("mobilenetv2").expect("registered model serves");
+        assert!(out.cold);
+        assert!(r.model_names().contains(&"mobilenetv2".to_string()));
+        assert!(r.remove("mobilenetv2"));
+        assert!(r.request("mobilenetv2").is_none());
+        assert!(!r.remove("mobilenetv2"), "second remove is a no-op");
     }
 
     #[test]
     fn nnv12_colder_starts_beat_ncnn() {
         let dev = profiles::meizu_16t();
         let models = vec![zoo::squeezenet()];
-        let mut nnv12 = Router::new(
+        let nnv12 = Router::new(
             &dev,
             models.clone(),
             RouterConfig { engine: ServeEngine::Nnv12, ..Default::default() },
         );
-        let mut ncnn = Router::new(
+        let ncnn = Router::new(
             &dev,
             models,
             RouterConfig { engine: ServeEngine::Ncnn, ..Default::default() },
         );
-        let a = nnv12.handle("squeezenet").unwrap().latency_ms;
-        let b = ncnn.handle("squeezenet").unwrap().latency_ms;
+        let a = nnv12.request("squeezenet").unwrap().latency_ms;
+        let b = ncnn.request("squeezenet").unwrap().latency_ms;
         assert!(a < b, "nnv12 cold {a} vs ncnn cold {b}");
+    }
+
+    #[test]
+    fn executed_cold_requests_match_the_simulator() {
+        // With `execute_cold`, a cold request's latency is the
+        // deterministic contention-aware simulation of the plan, not the
+        // planner's ladder estimate.
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::squeezenet()],
+            RouterConfig { execute_cold: true, ..Default::default() },
+        );
+        let out = r.request("squeezenet").unwrap();
+        assert!(out.cold);
+        let direct = r.session("squeezenet").unwrap().run_cold().unwrap();
+        assert_eq!(out.latency_ms.to_bits(), direct.latency_ms.to_bits());
+        // Warm requests still charge the ladder.
+        let warm = r.request("squeezenet").unwrap();
+        assert!(!warm.cold);
+        assert!(warm.latency_ms < out.latency_ms);
     }
 }

@@ -17,6 +17,10 @@ pub struct CaseResult {
     pub name: String,
     pub iters: usize,
     pub per_iter_ms: Summary,
+    /// For throughput cases ([`Bench::case_throughput`]): how many
+    /// logical items (e.g. serving requests) one iteration processes.
+    /// The JSON dump derives `items_per_sec` from it.
+    pub items_per_iter: Option<usize>,
 }
 
 /// Bench harness configuration + registered results.
@@ -53,10 +57,33 @@ impl Bench {
     }
 
     /// Measure `f`, which performs one logical iteration per call.
-    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) {
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.measure(name, None, f);
+    }
+
+    /// [`Bench::case`] for throughput suites: one iteration of `f`
+    /// processes `items` logical items (e.g. requests of a serving
+    /// trace). The result additionally reports items/second — printed
+    /// here and emitted as `items_per_iter` / `items_per_sec` in the
+    /// JSON dump, so requests/sec is a first-class tracked quantity.
+    pub fn case_throughput<F: FnMut()>(&mut self, name: &str, items: usize, f: F) {
+        if self.measure(name, Some(items), f) {
+            if let Some(r) = self.results.last() {
+                println!(
+                    "{:<48} {:>12.0} items/s",
+                    format!("{}/{}", self.suite, r.name),
+                    items_per_sec(items, r.per_iter_ms.mean),
+                );
+            }
+        }
+    }
+
+    /// Shared measurement core; returns whether the case ran (false when
+    /// filtered out).
+    fn measure<F: FnMut()>(&mut self, name: &str, items_per_iter: Option<usize>, mut f: F) -> bool {
         if let Some(filter) = &self.filter {
             if !name.contains(filter.as_str()) && !self.suite.contains(filter.as_str()) {
-                return;
+                return false;
             }
         }
         for _ in 0..self.warmup_iters {
@@ -91,7 +118,9 @@ impl Bench {
             name: name.to_string(),
             iters: iters_per_sample * self.samples,
             per_iter_ms: summary,
+            items_per_iter,
         });
+        true
     }
 
     /// Print the suite footer; returns results for further reporting.
@@ -120,8 +149,17 @@ impl Bench {
     }
 }
 
+/// Items/second of a throughput case — the one formula behind both the
+/// console print and the JSON `items_per_sec` field the CI ratchet
+/// consumes, so they can never drift apart.
+fn items_per_sec(items: usize, mean_ms: f64) -> f64 {
+    items as f64 / (mean_ms / 1e3).max(1e-12)
+}
+
 /// JSON shape: `{"suite": .., "cases": [{"name", "iters", "mean_ms",
-/// "std_ms", "min_ms", "p50_ms", "max_ms"}, ..]}`.
+/// "std_ms", "min_ms", "p50_ms", "max_ms"}, ..]}`. Throughput cases
+/// ([`Bench::case_throughput`]) additionally carry `items_per_iter` and
+/// the derived `items_per_sec` (requests/sec for the serving suite).
 pub fn results_json(suite: &str, results: &[CaseResult]) -> Json {
     Json::obj(vec![
         ("suite", Json::from(suite)),
@@ -131,7 +169,7 @@ pub fn results_json(suite: &str, results: &[CaseResult]) -> Json {
                 results
                     .iter()
                     .map(|r| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("name", Json::from(r.name.as_str())),
                             ("iters", Json::from(r.iters)),
                             ("mean_ms", Json::from(r.per_iter_ms.mean)),
@@ -139,7 +177,15 @@ pub fn results_json(suite: &str, results: &[CaseResult]) -> Json {
                             ("min_ms", Json::from(r.per_iter_ms.min)),
                             ("p50_ms", Json::from(r.per_iter_ms.p50)),
                             ("max_ms", Json::from(r.per_iter_ms.max)),
-                        ])
+                        ];
+                        if let Some(items) = r.items_per_iter {
+                            fields.push(("items_per_iter", Json::from(items)));
+                            fields.push((
+                                "items_per_sec",
+                                Json::from(items_per_sec(items, r.per_iter_ms.mean)),
+                            ));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -163,6 +209,19 @@ mod tests {
         assert_eq!(rs.len(), 1);
         assert!(rs[0].per_iter_ms.mean >= 0.0);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn throughput_case_reports_items_per_sec() {
+        std::env::set_var("NNV12_BENCH_FAST", "1");
+        let mut b = Bench::new("unit-tp");
+        b.case_throughput("noop", 128, || {});
+        let rs = b.finish();
+        assert_eq!(rs[0].items_per_iter, Some(128));
+        let json = results_json("unit-tp", &rs);
+        let case = &json.get("cases").as_arr().unwrap()[0];
+        assert_eq!(case.get("items_per_iter").as_usize(), Some(128));
+        assert!(case.get("items_per_sec").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! This module is the *primitive*; callers get the ladder through the
 //! facade ([`crate::engine::Engine::load`] →
 //! [`crate::engine::Session::ladder`]), whose backends call
-//! [`continuous_from`] with the cached plan.
+//! [`continuous_from`] with the cached plan. [`continuous_from`] is a
+//! pure function of its inputs and [`ContinuousReport`] is plain `Send +
+//! Sync` data, so the facade can compute ladders lazily from any serving
+//! thread (each session memoizes its report in a `OnceLock`).
 
 use crate::cost::CostModel;
 use crate::device::{CoreClass, DeviceProfile};

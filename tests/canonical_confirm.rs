@@ -59,9 +59,10 @@ fn incremental_confirm_bit_exact_vs_full_rebuild_across_descent_traces() {
             .map(|&l| candidates(&dev, g.layer(l), &reg, true))
             .collect();
         // Canonical structure is choice-independent: one set serves every
-        // trace, exactly as in the production search.
+        // trace, exactly as in the production search (Arc-shared, as
+        // `Scheduled::set` now is).
         let seed_choices = default_choices(&g, &reg);
-        let set = OpSet::build(&g, &seed_choices, gpu);
+        let set = std::sync::Arc::new(OpSet::build(&g, &seed_choices, gpu));
 
         prop::check(0xC0F1 ^ model.len() as u64, 10, |rng: &mut Rng| {
             // A randomized descent trace: price the seed once, then apply
@@ -112,7 +113,7 @@ fn incremental_confirm_bit_exact_for_sequential_config() {
     let reg = Registry::full();
     let cfg = SchedulerConfig { pipeline: false, ..SchedulerConfig::kcp() };
     let choices = default_choices(&g, &reg);
-    let set = OpSet::build(&g, &choices, false);
+    let set = std::sync::Arc::new(OpSet::build(&g, &choices, false));
     let pricer = Pricer::new(&dev, &g, &choices, cfg.shader_cache);
     let table = PriceTable::build(&set, &pricer);
     let fast = confirm_from_table(&set, choices.clone(), &table, &cfg, prep_units(&dev));
@@ -137,7 +138,7 @@ fn canonical_sets_reproduce_pre_canonical_plans_across_zoo() {
 
             // Assemble the SAME kernel choices over the pre-canonical
             // (minimal) op set — the pre-refactor structure.
-            let min = OpSet::build_minimal(&g, &s.plan.choices, gpu);
+            let min = std::sync::Arc::new(OpSet::build_minimal(&g, &s.plan.choices, gpu));
             let pricer = Pricer::new(&dev, &g, &s.plan.choices, cfg.shader_cache);
             let table = PriceTable::build(&min, &pricer);
             let pre = confirm_from_table(&min, s.plan.choices.clone(), &table, &cfg, n_prep);

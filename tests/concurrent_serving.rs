@@ -1,0 +1,177 @@
+//! Concurrent serving integration: compile-time `Send`/`Sync` contracts
+//! for the engine substrate, multi- vs single-threaded replay parity over
+//! the sharded router, and eviction-thrash stress under concurrency.
+//!
+//! The parity contract (ISSUE 5): N threads hammering the sharded router
+//! must produce the same aggregate cold/warm counts — and bit-identical
+//! plans — as the same request trace replayed single-threaded. With an
+//! unbounded residency budget the outcome is interleaving-independent
+//! (each model is cold exactly once, then walks its deterministic
+//! warm-up ladder), so even the per-model latency *multisets* must
+//! match bit-for-bit.
+
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::engine::{BaselineBackend, Engine, ExecBackend, Session, SimBackend};
+use nnv12::graph::zoo;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+
+fn assert_send<T: Send>() {}
+fn assert_sync<T: Sync>() {}
+
+#[test]
+fn engine_and_serving_types_are_send_and_sync() {
+    // Compile-time assertions: a regression back to `Rc`/`RefCell`
+    // internals (non-Send sessions, non-Sync engines or routers) fails
+    // `cargo test` at this very line instead of surfacing as a distant
+    // "cannot be sent between threads" error in some consumer.
+    assert_send::<Engine>();
+    assert_sync::<Engine>();
+    assert_send::<Session>();
+    assert_sync::<Session>();
+    assert_send::<Router>();
+    assert_sync::<Router>();
+    assert_send::<SimBackend>();
+    assert_sync::<SimBackend>();
+    assert_send::<BaselineBackend>();
+    assert_sync::<BaselineBackend>();
+    // The backend seam itself guarantees thread-safety by trait bound.
+    assert_send::<Box<dyn ExecBackend>>();
+    assert_sync::<Box<dyn ExecBackend>>();
+    assert_send::<Arc<nnv12::sched::cache::PlanCache>>();
+    assert_sync::<Arc<nnv12::sched::cache::PlanCache>>();
+    assert_send::<Arc<nnv12::store::ArtifactStore>>();
+    assert_sync::<Arc<nnv12::store::ArtifactStore>>();
+}
+
+fn models() -> Vec<nnv12::graph::ModelGraph> {
+    ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
+        .iter()
+        .map(|m| zoo::by_name(m).unwrap())
+        .collect()
+}
+
+#[test]
+fn threaded_replay_matches_single_threaded_aggregates_and_plan_bits() {
+    let dev = profiles::meizu_16t();
+    let cfg = RouterConfig {
+        memory_budget: u64::MAX,
+        execute_cold: true,
+        ..Default::default()
+    };
+    let single = Router::new(&dev, models(), cfg.clone());
+    let threaded = Router::new(&dev, models(), cfg);
+    let names = single.model_names();
+    let reqs = generate(&names, &WorkloadSpec { n_requests: 120, ..Default::default() });
+
+    assert_eq!(single.replay(&reqs, 1), reqs.len());
+    assert_eq!(threaded.replay(&reqs, 4), reqs.len());
+
+    // Aggregate stats agree: each requested model cold exactly once,
+    // ever.
+    let requested: std::collections::HashSet<&str> =
+        reqs.iter().map(|r| r.model.as_str()).collect();
+    assert_eq!(single.stats_cold(), requested.len());
+    assert_eq!(threaded.stats_cold(), single.stats_cold());
+    assert_eq!(threaded.stats_warm(), single.stats_warm());
+
+    // Bit-identical plans: threading never touches planning.
+    for m in &names {
+        let a = single.session(m).unwrap();
+        let b = threaded.session(m).unwrap();
+        assert_eq!(
+            a.plan().to_json(a.graph()).to_compact(),
+            b.plan().to_json(b.graph()).to_compact(),
+            "{m}: plan bits differ across thread counts"
+        );
+        assert_eq!(a.cold_ms().to_bits(), b.cold_ms().to_bits());
+    }
+
+    // With an unbounded budget, each model's rung sequence is a function
+    // of its request count alone — so the per-model latency multisets
+    // (cold simulation + warm-up ladder) match bit-for-bit across
+    // interleavings.
+    assert_eq!(single.stats_exec_failed(), 0);
+    assert_eq!(threaded.stats_exec_failed(), 0);
+    for m in &names {
+        for label in ["cold", "warm"] {
+            let key = format!("{m}:{label}");
+            let mut a: Vec<u64> = single.recorded(&key).iter().map(|v| v.to_bits()).collect();
+            let mut b: Vec<u64> =
+                threaded.recorded(&key).iter().map(|v| v.to_bits()).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "{key}: latency multiset differs across thread counts");
+        }
+    }
+}
+
+#[test]
+fn eviction_thrash_under_concurrency_stays_consistent() {
+    // Under a thrashing budget, *which* request goes cold legitimately
+    // depends on arrival interleaving — but the accounting must stay
+    // exact: every request is either cold or warm, recorder and atomic
+    // counters agree, and the LRU invariant (within budget unless a
+    // single oversized model overcommits) holds at the end.
+    let dev = profiles::meizu_16t();
+    let fleet = models();
+    let budget: u64 = fleet
+        .iter()
+        .map(|g| g.weight_bytes() + g.weight_bytes() / 4)
+        .sum::<u64>()
+        / 3;
+    let r = Router::new(
+        &dev,
+        fleet,
+        RouterConfig { memory_budget: budget, ..Default::default() },
+    );
+    let names = r.model_names();
+    let reqs = generate(
+        &names,
+        &WorkloadSpec { n_requests: 400, zipf_s: 0.7, ..Default::default() },
+    );
+    assert_eq!(r.replay(&reqs, 8), reqs.len());
+    assert_eq!(r.stats_cold() + r.stats_warm(), reqs.len());
+    assert!(
+        r.stats_cold() > names.len(),
+        "budget must thrash: only {} colds over {} models",
+        r.stats_cold(),
+        names.len()
+    );
+    assert_eq!(r.recorded("cold").len(), r.stats_cold());
+    assert_eq!(r.recorded("warm").len(), r.stats_warm());
+    let residents = names.iter().filter(|n| r.is_resident(n)).count();
+    assert!(
+        r.mem_used() <= budget || residents == 1,
+        "mem {} over budget {budget} with {residents} residents",
+        r.mem_used()
+    );
+    r.engine().evict_all();
+    assert_eq!(r.mem_used(), 0);
+}
+
+#[test]
+fn register_and_serve_concurrently() {
+    // The sharded map is mutable while requests are in flight: one
+    // thread registers a new model and serves it while another hammers
+    // an existing one.
+    let dev = profiles::meizu_16t();
+    let r = Router::new(&dev, vec![zoo::tiny_net()], RouterConfig::default());
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for _ in 0..50 {
+                r.request("tinynet").unwrap();
+            }
+        });
+        s.spawn(|| {
+            r.register(zoo::micro_mobilenet());
+            for _ in 0..50 {
+                r.request("micro-mobilenet").unwrap();
+            }
+        });
+    });
+    assert_eq!(r.stats_cold() + r.stats_warm(), 100);
+    assert_eq!(r.stats_cold(), 2, "each model cold-starts exactly once");
+    assert_eq!(r.model_names().len(), 2);
+}

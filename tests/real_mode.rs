@@ -50,6 +50,42 @@ fn opts(variant: VariantPref, cache: bool, pipelined: bool) -> RealRunOpts {
 }
 
 #[test]
+fn real_backend_is_send_sync_via_thread_confinement() {
+    // Compile-time: the PJRT client itself is thread-bound
+    // (`Rc`-cached executables), but `RealBackend` confines it to a
+    // dedicated executor thread, so the backend — and any engine built
+    // over it — is `Send + Sync`. A regression that moves the runtime
+    // back into the backend's own fields fails right here.
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<nnv12::engine::RealBackend>();
+}
+
+#[test]
+fn real_backend_serves_concurrent_cold_runs_via_executor_thread() {
+    // Behavioral half of the confinement contract: two threads issuing
+    // cold runs through one engine serialize at the executor thread and
+    // both succeed (no artifacts ⇒ skip, like the other real-mode tests).
+    let Some(_) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use nnv12::engine::{Engine, RealBackend};
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::builder()
+        .device(nnv12::device::profiles::meizu_16t())
+        .backend(RealBackend::new(root, opts(VariantPref::Auto, false, true)))
+        .build();
+    let session = engine.load(zoo::tiny_net());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2).map(|_| s.spawn(|| session.run_cold())).collect();
+        for h in handles {
+            let r = h.join().unwrap().expect("concurrent real cold run");
+            assert!(r.latency_ms > 0.0);
+        }
+    });
+}
+
+#[test]
 fn manifest_matches_rust_zoo() {
     for (name, builder) in [("tinynet", zoo::tiny_net as fn() -> _), ("micro-mobilenet", zoo::micro_mobilenet)] {
         let Some(dir) = artifacts(name) else {

@@ -20,18 +20,18 @@ fn models() -> Vec<nnv12::graph::ModelGraph> {
 #[test]
 fn infinite_memory_means_one_cold_start_per_model() {
     let dev = profiles::meizu_16t();
-    let mut r = Router::new(&dev, models(), RouterConfig {
+    let r = Router::new(&dev, models(), RouterConfig {
         memory_budget: u64::MAX,
         ..Default::default()
     });
     let names = r.model_names();
     let reqs = generate(&names, &WorkloadSpec { n_requests: 300, ..Default::default() });
     for q in &reqs {
-        r.handle(&q.model).unwrap();
+        r.request(&q.model).unwrap();
     }
     // Each model goes cold exactly once, ever.
-    assert_eq!(r.stats_cold, names.len().min(300));
-    assert_eq!(r.stats_warm, reqs.len() - r.stats_cold);
+    assert_eq!(r.stats_cold(), names.len().min(300));
+    assert_eq!(r.stats_warm(), reqs.len() - r.stats_cold());
 }
 
 #[test]
@@ -41,14 +41,14 @@ fn tighter_budgets_mean_more_cold_starts() {
     let reqs = generate(&names, &WorkloadSpec { n_requests: 400, zipf_s: 0.7, ..Default::default() });
     let mut colds = Vec::new();
     for budget_mb in [8u64, 32, 512] {
-        let mut r = Router::new(&dev, models(), RouterConfig {
+        let r = Router::new(&dev, models(), RouterConfig {
             memory_budget: budget_mb << 20,
             ..Default::default()
         });
         for q in &reqs {
-            r.handle(&q.model).unwrap();
+            r.request(&q.model).unwrap();
         }
-        colds.push(r.stats_cold);
+        colds.push(r.stats_cold());
     }
     assert!(colds[0] >= colds[1], "{colds:?}");
     assert!(colds[1] >= colds[2], "{colds:?}");
@@ -64,16 +64,16 @@ fn nnv12_total_latency_beats_ncnn_under_thrash() {
     let names: Vec<String> = models().iter().map(|g| g.name.clone()).collect();
     let reqs = generate(&names, &WorkloadSpec { n_requests: 300, zipf_s: 0.5, ..Default::default() });
     let total = |engine| -> f64 {
-        let mut r = Router::new(&dev, models(), RouterConfig {
+        let r = Router::new(&dev, models(), RouterConfig {
             memory_budget: 24 << 20, // thrashes
             engine,
             ..Default::default()
         });
         let mut sum = 0.0;
         for q in &reqs {
-            sum += r.handle(&q.model).unwrap().latency_ms;
+            sum += r.request(&q.model).unwrap().latency_ms;
         }
-        assert!(r.stats_cold > 30, "workload must thrash ({} colds)", r.stats_cold);
+        assert!(r.stats_cold() > 30, "workload must thrash ({} colds)", r.stats_cold());
         sum
     };
     let nnv12 = total(ServeEngine::Nnv12);
@@ -92,14 +92,14 @@ fn prop_lru_never_exceeds_budget_after_settling() {
     let dev = profiles::meizu_16t();
     prop::check(0x5E12, 20, |rng: &mut Rng| {
         let budget = rng.range(4, 200) << 20;
-        let mut r = Router::new(&dev, models(), RouterConfig {
+        let r = Router::new(&dev, models(), RouterConfig {
             memory_budget: budget,
             ..Default::default()
         });
         let names = r.model_names();
         for _ in 0..rng.range(10, 120) {
             let m = rng.choose(&names).clone();
-            let Outcome { latency_ms, .. } = r.handle(&m).unwrap();
+            let Outcome { latency_ms, .. } = r.request(&m).unwrap();
             if latency_ms <= 0.0 {
                 return Err(format!("non-positive latency for {m}"));
             }
@@ -125,7 +125,7 @@ fn prop_lru_never_exceeds_budget_after_settling() {
 fn prop_warm_requests_never_slower_than_cold() {
     let dev = profiles::pixel_5();
     prop::check(0xAB1E, 10, |rng: &mut Rng| {
-        let mut r = Router::new(&dev, models(), RouterConfig {
+        let r = Router::new(&dev, models(), RouterConfig {
             memory_budget: u64::MAX,
             ..Default::default()
         });
@@ -133,7 +133,7 @@ fn prop_warm_requests_never_slower_than_cold() {
         let mut cold_of: std::collections::HashMap<String, f64> = Default::default();
         for _ in 0..80 {
             let m = rng.choose(&names).clone();
-            let o = r.handle(&m).unwrap();
+            let o = r.request(&m).unwrap();
             if o.cold {
                 cold_of.insert(m.clone(), o.latency_ms);
             } else if let Some(&c) = cold_of.get(&m) {
