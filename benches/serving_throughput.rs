@@ -82,10 +82,31 @@ fn main() {
         budget >> 20,
         model_names.len()
     );
-    // Write the snapshot BEFORE the mix guard: a failed guard must still
+
+    // Open-loop pass (not a ratcheted case): requests fire at their
+    // Poisson arrival times, accelerated 2000x, and the wall-clock
+    // sojourn (completion - scheduled arrival) gives the latency-under-
+    // load percentiles the throughput cases cannot see.
+    router.engine().evict_all();
+    let done = router.replay_open_loop(&reqs, 4, 2000.0);
+    assert_eq!(done, reqs.len());
+    let soj = router.latency_summary("sojourn");
+    println!(
+        "open-loop sojourn over {} requests (accel 2000x): p50 {:.3} ms, p90 {:.3} ms, p99 {:.3} ms",
+        soj.n, soj.p50, soj.p90, soj.p99
+    );
+
+    // Write the snapshot BEFORE the guards: a failed guard must still
     // leave BENCH_serving.json behind for CI diagnosis (the workflow
     // uploads snapshots before any hard-fail check).
     b.finish_to("BENCH_serving.json");
+    // No-fault guard: with no deadlines, no admission bound, and no fault
+    // plan, every robustness gate must be pass-through — a nonzero count
+    // here means a gate leaks into the happy path.
+    let s = router.summary();
+    assert!(s.conserves(), "request accounting must conserve: {s:?}");
+    assert_eq!(s.shed, 0, "no admission bound ⇒ nothing shed: {s:?}");
+    assert_eq!(s.degraded, 0, "no deadlines, no faults ⇒ nothing degraded: {s:?}");
     assert_eq!(router.stats_exec_failed(), 0, "sim backend must never fail");
     assert!(
         cold > warm / 10,

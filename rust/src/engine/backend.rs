@@ -19,8 +19,11 @@
 //! from N serving threads serialize at the one real device exactly like
 //! they would on real hardware.
 
+use std::sync::Arc;
+
 use crate::baselines;
 use crate::device::DeviceProfile;
+use crate::faults::FaultPlan;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::heuristic::{Scheduled, SchedulerConfig};
@@ -104,18 +107,27 @@ pub trait ExecBackend: Send + Sync {
 #[derive(Debug, Clone)]
 pub struct SimBackend {
     pub cfg: SimConfig,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl SimBackend {
     /// NNV12 runtime defaults: stealing on, contention on.
     pub fn nnv12() -> SimBackend {
-        SimBackend { cfg: SimConfig::nnv12() }
+        SimBackend { cfg: SimConfig::nnv12(), faults: None }
     }
 
     /// A simulator backend with explicit knobs (ablations, background
     /// load experiments).
     pub fn with(cfg: SimConfig) -> SimBackend {
-        SimBackend { cfg }
+        SimBackend { cfg, faults: None }
+    }
+
+    /// Inject a deterministic fault plan: every [`ExecBackend::run`]
+    /// consults it and may fail or panic on cue (chaos tests). Zero cost
+    /// when unset.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> SimBackend {
+        self.faults = Some(plan);
+        self
     }
 }
 
@@ -135,6 +147,9 @@ impl ExecBackend for SimBackend {
     }
 
     fn run(&self, ctx: &BackendCtx, s: &Scheduled) -> Result<ColdOutcome, String> {
+        if let Some(f) = &self.faults {
+            f.exec_check()?;
+        }
         let pricer = Pricer::new(ctx.dev, ctx.graph, &s.plan.choices, ctx.sched.shader_cache);
         let r = simulate(ctx.dev, &s.set, &s.plan, &pricer, &self.cfg);
         Ok(ColdOutcome {
@@ -150,18 +165,25 @@ impl ExecBackend for SimBackend {
 /// (ncnn, TFLite, …) from [`crate::baselines`]. It ignores the NNV12
 /// plan: the point is serving the same workload through a baseline for
 /// side-by-side numbers (Fig. 8/10, the serving comparisons).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BaselineBackend {
     pub engine: baselines::Engine,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl BaselineBackend {
     pub fn new(engine: baselines::Engine) -> BaselineBackend {
-        BaselineBackend { engine }
+        BaselineBackend { engine, faults: None }
     }
 
     pub fn ncnn() -> BaselineBackend {
         BaselineBackend::new(baselines::Engine::Ncnn)
+    }
+
+    /// Inject a deterministic fault plan (see [`SimBackend::with_faults`]).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> BaselineBackend {
+        self.faults = Some(plan);
+        self
     }
 }
 
@@ -179,6 +201,9 @@ impl ExecBackend for BaselineBackend {
     }
 
     fn run(&self, ctx: &BackendCtx, s: &Scheduled) -> Result<ColdOutcome, String> {
+        if let Some(f) = &self.faults {
+            f.exec_check()?;
+        }
         Ok(ColdOutcome {
             latency_ms: self.plan_makespan(ctx, s),
             energy_mj: 0.0,
@@ -204,6 +229,7 @@ impl ExecBackend for BaselineBackend {
 struct RealJob {
     dir: std::path::PathBuf,
     opts: crate::pipeline::RealRunOpts,
+    faults: Option<Arc<FaultPlan>>,
     reply: std::sync::mpsc::Sender<Result<ColdOutcome, String>>,
 }
 
@@ -230,6 +256,7 @@ struct RealJob {
 pub struct RealBackend {
     pub artifacts_root: std::path::PathBuf,
     pub opts: crate::pipeline::RealRunOpts,
+    faults: Option<Arc<FaultPlan>>,
     executor: std::sync::Mutex<Option<std::sync::mpsc::Sender<RealJob>>>,
 }
 
@@ -242,8 +269,18 @@ impl RealBackend {
         RealBackend {
             artifacts_root: artifacts_root.into(),
             opts,
+            faults: None,
             executor: std::sync::Mutex::new(None),
         }
+    }
+
+    /// Inject a deterministic fault plan. The check runs *on the executor
+    /// thread*, so an injected [`crate::faults::FaultKind::ExecPanic`]
+    /// kills that thread exactly like a PJRT panic would — the respawn
+    /// test drives the PR 5 healing path through this hook.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> RealBackend {
+        self.faults = Some(plan);
+        self
     }
 
     /// The executor-thread body: owns the (lazily created) PJRT runtime
@@ -253,6 +290,12 @@ impl RealBackend {
         let mut runtime: Option<Runtime> = None;
         while let Ok(job) = rx.recv() {
             let result = (|| -> Result<ColdOutcome, String> {
+                if let Some(f) = &job.faults {
+                    // May return Err (transient) or panic — a panic
+                    // unwinds this thread and drops `rx`, exercising the
+                    // caller-side respawn path.
+                    f.exec_check()?;
+                }
                 if runtime.is_none() {
                     runtime = Some(Runtime::cpu().map_err(|e| format!("{e:#}"))?);
                 }
@@ -322,6 +365,7 @@ impl ExecBackend for RealBackend {
         let job = RealJob {
             dir: self.artifacts_root.join(&ctx.graph.name),
             opts,
+            faults: self.faults.clone(),
             reply: reply_tx,
         };
         {

@@ -130,20 +130,8 @@ impl Inner {
         warm_ms: Ms,
     ) -> InferenceReport {
         let mut r = self.residency.lock().unwrap();
-        if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
-            let (i, b, count) = r.resident.remove(pos);
-            // Rung `count + 1` of the ladder; past the end the session is
-            // at steady state (so a depth-1 ladder never re-bills its cold
-            // rung to warm inferences).
-            let idx = count + 1;
-            let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
-            r.resident.push((i, b, count + 1));
-            let phase = if latency.to_bits() == warm_ms.to_bits() {
-                Phase::Warm
-            } else {
-                Phase::Warming { n: idx }
-            };
-            return InferenceReport { latency_ms: latency, phase, evictions: 0 };
+        if let Some(report) = Self::warm_hit(&mut r, id, ladder, warm_ms) {
+            return report;
         }
         // Cold path: evict LRU sessions until this one fits (a model
         // larger than the whole budget still runs, transiently
@@ -161,6 +149,47 @@ impl Inner {
         // panicking inside the residency manager.
         let latency = ladder.first().copied().unwrap_or(warm_ms);
         InferenceReport { latency_ms: latency, phase: Phase::Cold, evictions }
+    }
+
+    /// The warm half of [`Inner::charge`], shared with the opportunistic
+    /// warm fast path: if `id` is resident, bump it in LRU order and
+    /// charge the next warm-ladder rung. Rung `count + 1` of the ladder;
+    /// past the end the session is at steady state (so a depth-1 ladder
+    /// never re-bills its cold rung to warm inferences).
+    fn warm_hit(
+        r: &mut Residency,
+        id: u64,
+        ladder: &[Ms],
+        warm_ms: Ms,
+    ) -> Option<InferenceReport> {
+        let pos = r.resident.iter().position(|(i, _, _)| *i == id)?;
+        let (i, b, count) = r.resident.remove(pos);
+        let idx = count + 1;
+        let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
+        r.resident.push((i, b, count + 1));
+        let phase = if latency.to_bits() == warm_ms.to_bits() {
+            Phase::Warm
+        } else {
+            Phase::Warming { n: idx }
+        };
+        Some(InferenceReport { latency_ms: latency, phase, evictions: 0 })
+    }
+
+    /// Charge a warm inference *only if* the session is resident; `None`
+    /// means a cold start is due and the caller should run the cold path
+    /// (retries, degradation policy, …) before calling [`Inner::charge`],
+    /// which stays the single atomic residency decision. Two requests
+    /// racing an eviction both see `None` here; `charge` then resolves
+    /// them to exactly one cold + one warm, preserving the
+    /// cold-exactly-once parity contract.
+    pub(crate) fn charge_warm(
+        &self,
+        id: u64,
+        ladder: &[Ms],
+        warm_ms: Ms,
+    ) -> Option<InferenceReport> {
+        let mut r = self.residency.lock().unwrap();
+        Self::warm_hit(&mut r, id, ladder, warm_ms)
     }
 
     pub(crate) fn is_resident(&self, id: u64) -> bool {
@@ -320,6 +349,7 @@ impl Engine {
             dev,
             scheduled,
             ladder: std::sync::OnceLock::new(),
+            degraded: std::sync::OnceLock::new(),
             resident_bytes,
         }
     }

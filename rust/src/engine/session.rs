@@ -11,7 +11,7 @@ use crate::device::DeviceProfile;
 use crate::engine::backend::{BackendCtx, ColdOutcome};
 use crate::engine::Inner;
 use crate::graph::ModelGraph;
-use crate::sched::heuristic::Scheduled;
+use crate::sched::heuristic::{schedule, Scheduled, SchedulerConfig};
 use crate::sched::plan::Plan;
 use crate::warm::ContinuousReport;
 use crate::Ms;
@@ -60,6 +60,10 @@ pub struct Session {
     /// it). Per-session state owned by the session: concurrent first
     /// inferences of different models never contend on a shared lock.
     pub(crate) ladder: OnceLock<ContinuousReport>,
+    /// Search-free fallback plan + its cold-makespan estimate, for the
+    /// serving layer's degraded path (deadline misses, open breakers).
+    /// Lazy: sessions that never degrade never pay for it.
+    pub(crate) degraded: OnceLock<(Arc<Scheduled>, Ms)>,
     pub(crate) resident_bytes: u64,
 }
 
@@ -87,6 +91,18 @@ impl Session {
         let ladder = self.ladder_report();
         self.engine
             .charge(self.id, self.resident_bytes, &ladder.latencies, ladder.warm_ms)
+    }
+
+    /// Warm-only fast path: charge a warm-ladder inference if the model
+    /// is currently resident, or return `None` without touching residency
+    /// (a cold start is due). Serving uses this to run its cold-path
+    /// policy — deadline check, admission, retries — *before* committing
+    /// the residency charge via [`Session::infer`], which remains the
+    /// single atomic cold/warm decision under races.
+    pub fn infer_warm(&self) -> Option<InferenceReport> {
+        let ladder = self.ladder_report();
+        self.engine
+            .charge_warm(self.id, &ladder.latencies, ladder.warm_ms)
     }
 
     /// Execute one full cold inference through the engine's backend
@@ -145,6 +161,43 @@ impl Session {
     /// Steady-state warm latency.
     pub fn warm_ms(&self) -> Ms {
         self.ladder_report().warm_ms
+    }
+
+    /// The degraded fallback: a search-free warm-default plan (the same
+    /// shape baseline arms get) and its cold-makespan estimate under this
+    /// session's backend. Computed once, on first degradation — skipping
+    /// the kernel-combination search is the whole point of the path.
+    fn degraded_plan(&self) -> &(Arc<Scheduled>, Ms) {
+        self.degraded.get_or_init(|| {
+            let cfg = SchedulerConfig {
+                kernel_selection: false,
+                weight_cache: false,
+                pipeline: false,
+                max_outer_passes: 0,
+                ..self.engine.sched.clone()
+            };
+            let s = Arc::new(schedule(
+                &self.dev,
+                &self.graph,
+                &self.engine.registry,
+                &cfg,
+            ));
+            let ctx = BackendCtx {
+                dev: &self.dev,
+                graph: &self.graph,
+                registry: &self.engine.registry,
+                sched: &self.engine.sched,
+                store: self.engine.store.as_ref(),
+            };
+            let ms = self.engine.backend.plan_makespan(&ctx, &s);
+            (s, ms)
+        })
+    }
+
+    /// Cold-latency estimate of the degraded (search-free) plan —
+    /// what a request pays when served off the fallback path.
+    pub fn degraded_cold_ms(&self) -> Ms {
+        self.degraded_plan().1
     }
 
     /// Layers whose kernel is switched after cold inference (§3.5).

@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Edge deployments fail in mundane ways — a flaky flash read, a torn
+//! write on power loss, a transient backend error, a crashed executor —
+//! and the cold path is where those failures concentrate, because that is
+//! where the bytes move. This module provides a seeded, replayable fault
+//! source that threads into the [`crate::store::ArtifactStore`] and the
+//! engine's execution backends so `tests/chaos_serving.rs` can replay the
+//! serving workload under randomized fault schedules and assert the
+//! survival invariants (no escaped panic, conserved request accounting,
+//! healed corruption).
+//!
+//! # Determinism
+//!
+//! A [`FaultPlan`] decides faults as a pure function of `(seed, site,
+//! call index, rule index)`: each instrumented site keeps an atomic call
+//! counter, and probabilistic triggers hash those four values rather than
+//! consulting a global RNG. Two plans built with the same seed and rules
+//! inject the identical fault sequence, so a single-threaded chaos replay
+//! is bit-reproducible. Under multi-threaded replay *which request*
+//! observes call index `n` depends on interleaving, but the multiset of
+//! injected faults per site does not — which is exactly what the
+//! conservation invariants need.
+//!
+//! # Zero-cost default
+//!
+//! Instrumented sites hold an `Option`/`OnceLock` of an `Arc<FaultPlan>`
+//! that is `None` unless a test or `repro serve --faults SEED` armed it;
+//! the production path pays one pointer check per site and nothing else,
+//! and with no plan armed behavior is bit-identical to an uninstrumented
+//! build (asserted by the chaos suite's no-fault parity test).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// An instrumented code site a fault can be injected at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// [`crate::store::ArtifactStore`] artifact reads (`get`/`get_scoped`).
+    StoreRead,
+    /// [`crate::store::ArtifactStore`] artifact writes (`put`/`put_scoped`).
+    StoreWrite,
+    /// One [`crate::engine::ExecBackend::run`] cold execution attempt.
+    ExecRun,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 3] =
+        [FaultSite::StoreRead, FaultSite::StoreWrite, FaultSite::ExecRun];
+
+    fn idx(self) -> usize {
+        match self {
+            FaultSite::StoreRead => 0,
+            FaultSite::StoreWrite => 1,
+            FaultSite::ExecRun => 2,
+        }
+    }
+}
+
+/// What goes wrong when a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// A transient I/O error: a read reports failure without touching the
+    /// bytes on disk (the store must treat it as a miss, not corruption);
+    /// a write returns an `io::Error` before anything lands.
+    IoError,
+    /// Bit rot: one payload byte of the on-disk artifact is flipped in
+    /// place before the read validates it (the store must reject + heal).
+    CorruptBytes,
+    /// A torn write: the header claims the full payload but only half of
+    /// it lands — the next reader must reject + heal.
+    TornWrite,
+    /// A transient execution failure: the backend returns `Err` for this
+    /// attempt (retryable).
+    ExecFail,
+    /// The executor panics mid-run (the router must contain it; the real
+    /// backend's executor thread dies and must respawn).
+    ExecPanic,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::IoError,
+        FaultKind::CorruptBytes,
+        FaultKind::TornWrite,
+        FaultKind::ExecFail,
+        FaultKind::ExecPanic,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            FaultKind::IoError => 0,
+            FaultKind::CorruptBytes => 1,
+            FaultKind::TornWrite => 2,
+            FaultKind::ExecFail => 3,
+            FaultKind::ExecPanic => 4,
+        }
+    }
+}
+
+/// When a rule fires, in terms of the site's call counter (0-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Exactly at call `n` of the rule's site.
+    At(usize),
+    /// Every `period`-th call starting at `offset` (`period == 0` never
+    /// fires).
+    Every { period: usize, offset: usize },
+    /// Independently at each call with probability `p`, decided by a hash
+    /// of `(seed, site, call index, rule index)` — deterministic per
+    /// seed, no shared RNG state.
+    Prob(f64),
+}
+
+/// One injection rule: at `site`, inject `kind` whenever `trigger` says.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub trigger: Trigger,
+}
+
+/// A seeded fault schedule plus its bookkeeping: per-site call counters
+/// (the clock every trigger reads) and per-kind injected counters (what
+/// the chaos assertions reconcile against the router's failure taxonomy).
+/// Cheap to share as an `Arc` across a store handle and a backend; all
+/// state is atomic.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    calls: [AtomicUsize; 3],
+    injected: [AtomicUsize; 5],
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing) with the given seed; add rules
+    /// with [`FaultPlan::with_rule`].
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..Default::default() }
+    }
+
+    /// Builder-style: append one rule. Rules are consulted in insertion
+    /// order; the first rule that fires on a call wins.
+    pub fn with_rule(mut self, site: FaultSite, kind: FaultKind, trigger: Trigger) -> FaultPlan {
+        self.rules.push(FaultRule { site, kind, trigger });
+        self
+    }
+
+    /// The standard randomized chaos mix used by the chaos test suite and
+    /// `repro serve --faults SEED`: a moderate rate of every fault kind
+    /// at its natural site. Frequent enough that a few hundred requests
+    /// exercise every path, rare enough that most requests still succeed.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed)
+            .with_rule(FaultSite::StoreRead, FaultKind::IoError, Trigger::Prob(0.10))
+            .with_rule(FaultSite::StoreRead, FaultKind::CorruptBytes, Trigger::Prob(0.08))
+            .with_rule(FaultSite::StoreWrite, FaultKind::TornWrite, Trigger::Prob(0.08))
+            .with_rule(FaultSite::StoreWrite, FaultKind::IoError, Trigger::Prob(0.05))
+            .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::Prob(0.12))
+            .with_rule(FaultSite::ExecRun, FaultKind::ExecPanic, Trigger::Prob(0.03))
+    }
+
+    /// The seed this plan hashes probabilistic triggers with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One tick of `site`'s clock: advance the call counter and decide
+    /// whether (and which) fault to inject at this call. Instrumented
+    /// sites call this exactly once per operation. `None` = run clean.
+    pub fn draw(&self, site: FaultSite) -> Option<FaultKind> {
+        let n = self.calls[site.idx()].fetch_add(1, Ordering::Relaxed);
+        for (ri, rule) in self.rules.iter().enumerate() {
+            if rule.site != site {
+                continue;
+            }
+            let fire = match rule.trigger {
+                Trigger::At(k) => n == k,
+                Trigger::Every { period, offset } => {
+                    period > 0 && n >= offset && (n - offset) % period == 0
+                }
+                Trigger::Prob(p) => unit_f64(mix64(
+                    self.seed
+                        ^ (site.idx() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (n as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+                        ^ (ri as u64).wrapping_mul(0x94D0_49BB_1331_11EB),
+                )) < p,
+            };
+            if fire {
+                self.injected[rule.kind.idx()].fetch_add(1, Ordering::Relaxed);
+                return Some(rule.kind);
+            }
+        }
+        None
+    }
+
+    /// Convenience for execution backends: draw at [`FaultSite::ExecRun`]
+    /// and enact the result — `Err` for a transient failure, `panic!` for
+    /// an injected executor crash (the caller's containment is the thing
+    /// under test), `Ok(())` for a clean run or a kind that does not
+    /// apply to execution.
+    pub fn exec_check(&self) -> Result<(), String> {
+        match self.draw(FaultSite::ExecRun) {
+            Some(FaultKind::ExecFail) => Err("injected transient exec failure".to_string()),
+            Some(FaultKind::ExecPanic) => panic!("injected executor panic"),
+            _ => Ok(()),
+        }
+    }
+
+    /// How many faults of `kind` this plan has injected so far.
+    pub fn injected(&self, kind: FaultKind) -> usize {
+        self.injected[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across all kinds.
+    pub fn injected_total(&self) -> usize {
+        FaultKind::ALL.iter().map(|k| self.injected(*k)).sum()
+    }
+
+    /// How many calls `site` has seen (each call = one `draw`).
+    pub fn calls(&self, site: FaultSite) -> usize {
+        self.calls[site.idx()].load(Ordering::Relaxed)
+    }
+}
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mix, the deterministic
+/// hash behind [`Trigger::Prob`] decisions and the router's seeded retry
+/// jitter.
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a 64-bit hash to a uniform f64 in `[0, 1)`.
+pub fn unit_f64(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let p = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert_eq!(p.draw(FaultSite::StoreRead), None);
+            assert!(p.exec_check().is_ok());
+        }
+        assert_eq!(p.injected_total(), 0);
+        assert_eq!(p.calls(FaultSite::StoreRead), 100);
+        assert_eq!(p.calls(FaultSite::ExecRun), 100);
+        assert_eq!(p.calls(FaultSite::StoreWrite), 0);
+    }
+
+    #[test]
+    fn at_and_every_triggers_fire_by_call_count() {
+        let p = FaultPlan::new(1)
+            .with_rule(FaultSite::StoreRead, FaultKind::IoError, Trigger::At(2))
+            .with_rule(
+                FaultSite::StoreWrite,
+                FaultKind::TornWrite,
+                Trigger::Every { period: 3, offset: 1 },
+            );
+        let reads: Vec<Option<FaultKind>> =
+            (0..5).map(|_| p.draw(FaultSite::StoreRead)).collect();
+        assert_eq!(
+            reads,
+            vec![None, None, Some(FaultKind::IoError), None, None]
+        );
+        let writes: Vec<bool> = (0..8)
+            .map(|_| p.draw(FaultSite::StoreWrite) == Some(FaultKind::TornWrite))
+            .collect();
+        assert_eq!(
+            writes,
+            vec![false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(p.injected(FaultKind::IoError), 1);
+        assert_eq!(p.injected(FaultKind::TornWrite), 3);
+    }
+
+    #[test]
+    fn prob_triggers_are_deterministic_per_seed_and_roughly_calibrated() {
+        let draws = |seed: u64| -> Vec<Option<FaultKind>> {
+            let p = FaultPlan::new(seed)
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::Prob(0.25));
+            (0..2000).map(|_| p.draw(FaultSite::ExecRun)).collect()
+        };
+        let a = draws(0xC0FFEE);
+        let b = draws(0xC0FFEE);
+        assert_eq!(a, b, "same seed must replay the same fault sequence");
+        let hits = a.iter().filter(|d| d.is_some()).count();
+        assert!(
+            (300..700).contains(&hits),
+            "p=0.25 over 2000 draws gave {hits} hits"
+        );
+        let c = draws(0xBEEF);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let p = FaultPlan::new(3)
+            .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::Every { period: 1, offset: 0 })
+            .with_rule(FaultSite::ExecRun, FaultKind::ExecPanic, Trigger::Every { period: 1, offset: 0 });
+        for _ in 0..10 {
+            assert_eq!(p.draw(FaultSite::ExecRun), Some(FaultKind::ExecFail));
+        }
+        assert_eq!(p.injected(FaultKind::ExecPanic), 0);
+    }
+
+    #[test]
+    fn exec_check_panics_on_injected_panic() {
+        let p = FaultPlan::new(4).with_rule(
+            FaultSite::ExecRun,
+            FaultKind::ExecPanic,
+            Trigger::At(0),
+        );
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.exec_check()));
+        assert!(r.is_err(), "injected panic must unwind");
+        assert!(p.exec_check().is_ok(), "only call 0 was scheduled");
+        assert_eq!(p.injected(FaultKind::ExecPanic), 1);
+    }
+
+    #[test]
+    fn chaos_mix_touches_every_site() {
+        let p = FaultPlan::chaos(0x5EED);
+        for _ in 0..400 {
+            let _ = p.draw(FaultSite::StoreRead);
+            let _ = p.draw(FaultSite::StoreWrite);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.exec_check()));
+        }
+        assert!(p.injected(FaultKind::IoError) > 0);
+        assert!(p.injected(FaultKind::CorruptBytes) > 0);
+        assert!(p.injected(FaultKind::TornWrite) > 0);
+        assert!(p.injected(FaultKind::ExecFail) > 0);
+        assert!(p.injected(FaultKind::ExecPanic) > 0);
+    }
+}

@@ -42,7 +42,7 @@
 //! the `xla` crate) executes AOT HLO artifacts through PJRT. Everything
 //! above compiles and runs under `--no-default-features`.
 //!
-//! ## Concurrent serving
+//! ## Concurrent serving and the failure model
 //!
 //! The engine substrate is thread-safe (`Engine`/`Session` are
 //! `Send + Sync`; backends are `Send + Sync` by trait bound), and the
@@ -70,11 +70,41 @@
 //!     }
 //! });
 //! assert_eq!(router.stats_cold() + router.stats_warm(), 4);
+//!
+//! // On the happy path the failure taxonomy stays all-zero, and the
+//! // conservation invariant always holds:
+//! //   cold + warm + degraded + shed + failed == issued.
+//! let s = router.summary();
+//! assert_eq!(s.degraded + s.shed + s.failed, 0);
+//! assert!(s.conserves());
 //! ```
 //!
-//! `repro serve --threads N` drives the same path from the CLI, and
+//! The router **survives** the failure modes that concentrate on the cold
+//! path (ISSUE 6). Every request resolves to exactly one of five
+//! outcomes — the conservation invariant above is asserted by the chaos
+//! suite under injected faults:
+//!
+//! * **Cold / Warm** — the normal lifecycle: plan + execute on a miss,
+//!   then walk the §3.5 warm-up ladder.
+//! * **Degraded** — the request is served from the baseline-engine plan
+//!   (no plan search, no residency charge) because either (a) its
+//!   deadline is tighter than the §3.5 ladder's cold estimate, or (b) the
+//!   model's circuit breaker is open after repeated backend failures.
+//! * **Shed** — the per-shard admission budget of in-flight cold starts
+//!   is exhausted; the router refuses explicitly instead of queueing
+//!   unboundedly.
+//! * **Failed** — a cold execution kept failing after bounded
+//!   exponential-backoff retries (deterministic, seeded jitter; charged
+//!   to modeled latency, never slept).
+//!
+//! Transient failures trip a per-model circuit breaker
+//! (closed → open → half-open probe), and [`faults::FaultPlan`] injects
+//! deterministic store/backend faults for `tests/chaos_serving.rs`.
+//! `repro serve --threads N --deadline-ms D --admission K --faults SEED`
+//! drives the same path from the CLI, and
 //! `benches/serving_throughput.rs` ratchets it in CI (4-thread
-//! throughput must beat 1-thread in the same run).
+//! throughput must beat 1-thread in the same run, with shed == 0 and
+//! degraded == 0 on the fault-free trace).
 //!
 //! ## Layers underneath
 //!
@@ -93,6 +123,10 @@
 //! * [`store`] — the content-addressed artifact store: one persistence
 //!   layer (typed namespaces, version+checksum headers, atomic writes,
 //!   LRU size cap) for plans, calibrated plans, and transformed weights.
+//! * [`faults`] — deterministic fault injection: seeded
+//!   trigger-by-call-count rules (I/O error, corrupt bytes, torn write,
+//!   transient exec failure, executor panic) threaded into the store and
+//!   the backends behind a zero-cost default.
 //! * [`baselines`] — ncnn / TFLite / AsyMo / TensorFlow-GPU engine models.
 //! * [`sim`] — discrete-event simulator of the device executing a plan,
 //!   with bandwidth contention, background load, and workload stealing.
@@ -109,8 +143,10 @@
 //!   thread-safe (fine-grained residency locking, `Send + Sync`
 //!   backends).
 //! * [`serving`] — multi-tenant serving front over the engine: sharded
-//!   concurrent request router (`request()` is `&self`), workload
-//!   generator (cold inferences are induced by eviction).
+//!   concurrent request router (`request()` is `&self`) with
+//!   deadline-aware degradation, bounded admission, retries and a
+//!   per-model circuit breaker; open-loop Poisson workload generator
+//!   (cold inferences are induced by eviction).
 //! * [`warm`] — §3.5 kernel switching for subsequent warm inference (the
 //!   primitive behind session warm-up ladders).
 //! * [`metrics`] — timing, summaries, and the energy model.
@@ -124,6 +160,7 @@ pub mod device;
 pub mod cost;
 pub mod sched;
 pub mod store;
+pub mod faults;
 pub mod baselines;
 pub mod sim;
 pub mod transform;

@@ -71,7 +71,8 @@ fn print_help() {
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
            report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
-           serve     --device D --requests N --budget-mb B [--threads T] [--execute]  multi-tenant serving sim\n\
+           serve     --device D --requests N --budget-mb B [--threads T] [--execute]\n\
+                     [--deadline-ms D] [--admission N] [--faults SEED]   multi-tenant serving sim\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
            store     gc --dir DIR [--days N]                drop artifacts untouched for N days\n\
            devices                                          list device profiles"
@@ -223,54 +224,97 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 200).map_err(|e| anyhow!(e))?;
     let budget_mb = args.get_usize("budget-mb", 48).map_err(|e| anyhow!(e))? as u64;
     let threads = args.get_usize("threads", 1).map_err(|e| anyhow!(e))?.max(1);
+    // Robustness knobs (ISSUE 6): `--deadline-ms D` stamps a latency
+    // budget on every request (0 = none) so cold starts that cannot meet
+    // it serve degraded; `--admission N` bounds in-flight cold starts per
+    // shard (0 = unbounded), shedding the rest; `--faults SEED` injects
+    // the deterministic chaos fault mix into the backend — the same
+    // schedule `tests/chaos_serving.rs` replays, reproducible from the
+    // command line.
+    let deadline = args.get_f64("deadline-ms", 0.0).map_err(|e| anyhow!(e))?;
+    if deadline < 0.0 || !deadline.is_finite() {
+        bail!("--deadline-ms expects a non-negative number");
+    }
+    let admission = args.get_usize("admission", 0).map_err(|e| anyhow!(e))?;
+    let faults = match args.get("faults") {
+        Some(seed) => {
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| anyhow!("--faults expects an integer seed"))?;
+            Some(std::sync::Arc::new(nnv12::faults::FaultPlan::chaos(seed)))
+        }
+        None => None,
+    };
     let models: Vec<nnv12::graph::ModelGraph> =
         ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
             .iter()
             .map(|m| zoo::by_name(m).unwrap())
             .collect();
     // The serving front is itself a thin layer over Engine/Session — it
-    // adds the sharded request surface and per-model accounting used
-    // here. `--threads N` replays the trace across N serving threads
-    // (the router's request path is `&self` and thread-safe);
-    // `--execute` runs each cold request through the contention-aware
-    // simulator instead of charging the planner's estimate.
+    // adds the sharded request surface, the failure policy, and the
+    // per-model accounting used here. `--threads N` replays the trace
+    // across N serving threads (the router's request path is `&self` and
+    // thread-safe); `--execute` runs each cold request through the
+    // contention-aware simulator instead of charging the planner's
+    // estimate.
     let router = Router::new(
         &dev,
         models,
         RouterConfig {
             memory_budget: budget_mb << 20,
             execute_cold: args.has("execute"),
+            admission: (admission > 0).then_some(admission),
+            faults,
             ..Default::default()
         },
     );
     let names = router.model_names();
-    let reqs = generate(&names, &WorkloadSpec { n_requests: n, ..Default::default() });
+    let reqs = generate(
+        &names,
+        &WorkloadSpec {
+            n_requests: n,
+            deadline_ms: (deadline > 0.0).then_some(deadline),
+            ..Default::default()
+        },
+    );
     let t = nnv12::metrics::Timer::start();
     let served = router.replay(&reqs, threads);
     let wall_ms = t.elapsed_ms();
+    let s = router.summary();
     println!(
-        "served {} requests on {} thread(s) in {:.1} ms ({:.0} req/s): {} cold, {} warm (budget {} MB on {})",
+        "served {} requests on {} thread(s) in {:.1} ms ({:.0} req/s): {} cold, {} warm, \
+         {} degraded, {} shed, {} failed (budget {} MB on {})",
         served,
         threads,
         wall_ms,
         served as f64 / (wall_ms / 1e3).max(1e-9),
-        router.stats_cold(),
-        router.stats_warm(),
+        s.cold,
+        s.warm,
+        s.degraded,
+        s.shed,
+        s.failed,
         budget_mb,
         dev.name
     );
-    if router.stats_exec_failed() > 0 {
-        eprintln!(
-            "warning: {} cold request(s) fell back to the planner estimate \
-             (backend execution failed)",
-            router.stats_exec_failed()
+    assert!(s.conserves(), "request accounting must conserve: {s:?}");
+    if s.degraded + s.failed + s.exec_failures + s.breaker_opens > 0 {
+        println!(
+            "  faults: {} exec failure(s) ({} panic(s)), {} retried; degraded = {} deadline + \
+             {} breaker; breaker opened {}x, probed {}x",
+            s.exec_failures,
+            s.exec_panics,
+            s.retries,
+            s.degraded_deadline,
+            s.degraded_breaker,
+            s.breaker_opens,
+            s.breaker_probes
         );
     }
-    for label in ["cold", "warm"] {
-        let s = router.summary(label);
+    for label in ["cold", "warm", "degraded"] {
+        let s = router.latency_summary(label);
         if s.n > 0 {
             println!(
-                "  {label:<5} n={:<4} mean={:.1} ms p50={:.1} p90={:.1} p99={:.1}",
+                "  {label:<8} n={:<4} mean={:.1} ms p50={:.1} p90={:.1} p99={:.1}",
                 s.n, s.mean, s.p50, s.p90, s.p99
             );
         }

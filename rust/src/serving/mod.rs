@@ -1,4 +1,5 @@
-//! Multi-tenant serving front over the engine facade.
+//! Multi-tenant serving front over the engine facade — concurrent,
+//! deadline-aware, and survivable.
 //!
 //! The paper's motivation (§1–2): edge devices host many DNNs; memory
 //! pressure means models cannot all stay resident, so inferences are cold
@@ -11,18 +12,56 @@
 //! [`crate::engine::SimBackend`], or [`crate::engine::BaselineBackend`]
 //! for a vanilla engine), and resident models serve down the §3.5
 //! kernel-switching warm-up ladder. [`workload`] generates the
-//! Zipf-skewed request streams the serving experiments replay.
+//! Zipf-skewed, open-loop Poisson request streams the serving
+//! experiments replay, with optional per-request deadlines.
 //!
-//! The router is **concurrent**: it is `Send + Sync`, sessions live in a
-//! sharded map, [`Router::request`] takes `&self`, and
-//! [`Router::replay`] fans a request trace across N serving threads —
-//! the many-requests-at-once environment the ROADMAP's north star
-//! demands, measured by `benches/serving_throughput.rs` and ratcheted in
-//! CI (4-thread throughput must beat 1-thread in the same run). See
-//! [`router`]'s module docs for the locking design.
+//! # The failure model: degrade → shed → fail
+//!
+//! Cold starts are where serving failures concentrate, so the cold path
+//! is policy-gated (ISSUE 6). Every request resolves to exactly one
+//! [`Outcome`], and the counters in [`RouterStats`] conserve:
+//! `cold + warm + degraded + shed + failed == issued`.
+//!
+//! * **Served / [`ServeClass::Warm`]** — resident model, ladder rung.
+//!   Never gated.
+//! * **Served / [`ServeClass::Cold`]** — a cold start that passed every
+//!   gate; executed with bounded, seeded-backoff retries when
+//!   [`RouterConfig::execute_cold`] is on.
+//! * **Served / [`ServeClass::Degraded`]** — the request's deadline was
+//!   tighter than the §3.5 cold estimate, or the model's circuit breaker
+//!   is open: serve the search-free baseline-shaped plan instead, without
+//!   touching residency. `degraded == degraded_deadline +
+//!   degraded_breaker` in the stats.
+//! * **[`Outcome::Shed`]** — the per-shard budget of in-flight cold
+//!   starts ([`RouterConfig::admission`]) was exhausted: explicit
+//!   backpressure instead of unbounded queueing.
+//! * **[`Outcome::Failed`]** — every retry failed (backend panics are
+//!   caught at the router boundary and counted in `exec_panics`).
+//!
+//! The per-model **circuit breaker** walks Closed → Open (after
+//! [`BreakerPolicy::threshold`] consecutive attempt failures) → HalfOpen
+//! (after a [`BreakerPolicy::cooldown`]-request count-based cooldown) and
+//! back: a successful half-open probe closes it, a failed probe reopens
+//! it. Open means requests short-circuit to the degraded path — the
+//! router keeps serving while the backend is sick.
+//!
+//! The router is **concurrent**: it is `Send + Sync`, entries live in a
+//! sharded map, [`Router::request`] takes `&self`, [`Router::replay`]
+//! fans a trace across N serving threads, and
+//! [`Router::replay_open_loop`] fires requests at their trace arrival
+//! times to measure sojourn percentiles under load. Chaos coverage lives
+//! in `tests/chaos_serving.rs`, driven by [`crate::faults::FaultPlan`];
+//! the happy path is benchmarked by `benches/serving_throughput.rs` and
+//! ratcheted in CI (4-thread throughput must beat 1-thread in the same
+//! run, with zero shed/degraded on the fault-free trace). See
+//! [`router`]'s module docs for the locking design and the full
+//! taxonomy.
 
 pub mod router;
 pub mod workload;
 
-pub use router::{Outcome, Router, RouterConfig, ServeEngine};
+pub use router::{
+    BreakerPolicy, Outcome, RetryPolicy, Router, RouterConfig, RouterStats, ServeClass,
+    ServeEngine, Served,
+};
 pub use workload::{generate, Request, WorkloadSpec};

@@ -1,10 +1,52 @@
-//! The request router: a sharded, concurrent serving front over the
-//! engine facade.
+//! The request router: a sharded, concurrent, *survivable* serving front
+//! over the engine facade.
 //!
 //! All planning, warm-up-ladder computation, and LRU residency live in
 //! [`crate::engine`]; the router contributes the per-model request
-//! surface, request statistics, and the engine-choice knob (NNV12 vs a
-//! vanilla baseline) used by the serving comparisons.
+//! surface, the failure-handling policy, request statistics, and the
+//! engine-choice knob (NNV12 vs a vanilla baseline) used by the serving
+//! comparisons.
+//!
+//! # Failure model (ISSUE 6)
+//!
+//! Cold starts are where serving failures concentrate — slow or corrupt
+//! artifact reads, transient backend errors, overload from eviction
+//! storms — so the cold path is policy-gated. Every request resolves to
+//! exactly one of five outcomes, and the **conservation invariant**
+//!
+//! ```text
+//! cold + warm + degraded + shed + failed == issued
+//! ```
+//!
+//! holds at all times ([`RouterStats::conserves`], asserted under
+//! injected faults by `tests/chaos_serving.rs`):
+//!
+//! * **Warm** — the model was resident; charge the next §3.5 warm-up
+//!   ladder rung. Never gated: warm service stays cheap and infallible.
+//! * **Cold** — a cold start that passed every gate. With
+//!   [`RouterConfig::execute_cold`] the backend executes it, with bounded
+//!   exponential-backoff retries on transient failure (deterministic,
+//!   seeded jitter; backoff is charged to the reported latency, never
+//!   slept).
+//! * **Degraded** — served off the session's search-free baseline plan,
+//!   without touching residency, because (a) the request's deadline is
+//!   tighter than the ladder's cold estimate, or (b) the model's circuit
+//!   breaker is open. Deliberately cheap: no plan search, no backend
+//!   execution, no retries.
+//! * **Shed** — the per-shard admission budget of in-flight cold starts
+//!   ([`RouterConfig::admission`]) was exhausted; refuse explicitly
+//!   rather than queueing unboundedly.
+//! * **Failed** — every retry of a cold execution failed. The error
+//!   string of the last attempt is reported; a backend *panic* is caught
+//!   at the router boundary and counted like a failure (no panic ever
+//!   escapes [`Router::request`]).
+//!
+//! Per-model **circuit breaker**: after
+//! [`BreakerPolicy::threshold`] consecutive cold-execution failures the
+//! breaker opens and requests short-circuit to the degraded path for
+//! [`BreakerPolicy::cooldown`] requests (a count-based cooldown keeps
+//! replays deterministic); the next request after cooldown runs as a
+//! half-open probe — success closes the breaker, failure reopens it.
 //!
 //! # Threading model
 //!
@@ -12,30 +54,30 @@
 //! share one router across N serving threads (an `Arc`, a scoped
 //! borrow — either works) and hammer it. Internally:
 //!
-//! * The model → session map is a **hand-rolled sharded hash map**
-//!   (`SHARDS` `Mutex<HashMap<String, Arc<Session>>>` buckets keyed by a
-//!   hash of the model name — the vendored crate set has no `DashMap`,
-//!   and doesn't need one). A request locks exactly one shard just long
-//!   enough to clone the session's `Arc`, then serves **outside** the
-//!   lock, so requests for different models never serialize on the map
-//!   and requests for the same model only serialize at the engine's
-//!   residency lock. Shards exist because the map is mutable at runtime
-//!   ([`Router::register`] / [`Router::remove`] add and retire models
-//!   while requests are in flight).
+//! * The model → entry map is a **hand-rolled sharded hash map**
+//!   (`SHARDS` `Mutex<HashMap<..>>` buckets keyed by a hash of the model
+//!   name — the vendored crate set has no `DashMap`, and doesn't need
+//!   one). A request locks exactly one shard just long enough to clone
+//!   the entry's `Arc`, then serves **outside** the lock. Shards exist
+//!   because the map is mutable at runtime ([`Router::register`] /
+//!   [`Router::remove`] add and retire models while requests are in
+//!   flight), and the admission budget is tracked per shard.
 //! * Request counters are atomics; the latency [`Recorder`] sits behind
 //!   its own small `Mutex` (label scan + push — never held across
-//!   inference work, and never exposed as a guard: [`Router::summary`]
-//!   and [`Router::recorded`] hand out snapshots).
-//! * Everything else (residency/LRU, plan caches, the artifact store,
-//!   backends) is the engine's thread-safe substrate.
+//!   inference work, and never exposed as a guard:
+//!   [`Router::latency_summary`] and [`Router::recorded`] hand out
+//!   snapshots). Breaker state is a tiny per-model `Mutex`.
+//! * The cold/warm decision is race-free: the warm fast path
+//!   ([`crate::engine::Session::infer_warm`]) only *charges* an
+//!   already-resident model, and the residency commit after the policy
+//!   gates ([`crate::engine::Session::infer`]) is the engine's single
+//!   atomic decision — two requests racing an eviction resolve to
+//!   exactly one cold and one warm, exactly as before this layer existed.
 //!
-//! The multi-threaded request path is *deterministic in aggregate*:
-//! replaying the same trace with 1 or N threads produces the same
-//! cold/warm totals and bit-identical plans whenever residency outcomes
-//! don't depend on interleaving (proven in
-//! `tests/concurrent_serving.rs`; under an eviction-thrashing budget the
-//! totals still add up, but which request goes cold legitimately depends
-//! on arrival order, exactly as on a real device).
+//! With no deadline, no admission bound, and no injected faults, every
+//! gate is pass-through and the request path is *bit-identical* to the
+//! pre-robustness router (`tests/concurrent_serving.rs` proves the
+//! parity; the serving bench asserts shed == 0 and degraded == 0).
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -45,6 +87,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::engine::{BaselineBackend, Engine, ExecBackend, Phase, Session, SimBackend};
 use crate::device::DeviceProfile;
+use crate::faults::{mix64, unit_f64, FaultPlan};
 use crate::graph::ModelGraph;
 use crate::metrics::Recorder;
 use crate::sched::cache::PlanCache;
@@ -56,14 +99,65 @@ use crate::Ms;
 /// registrations/lookups that never contend, assuming a decent hash).
 const SHARDS: usize = 16;
 
-/// One bucket of the sharded session map.
-type Shard = Mutex<HashMap<String, Arc<Session>>>;
+/// One serving entry: the session plus its circuit-breaker state.
+struct ModelEntry {
+    session: Arc<Session>,
+    breaker: Breaker,
+}
+
+/// One bucket of the sharded entry map.
+type Shard = Mutex<HashMap<String, Arc<ModelEntry>>>;
 
 /// Serving engine the router charges latencies from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServeEngine {
     Nnv12,
     Ncnn,
+}
+
+/// Retry policy for transient cold-execution failures. Backoff is
+/// deterministic — jitter comes from `(seed, model, attempt)` — and is
+/// *charged to the request's reported latency*, never slept, so replays
+/// stay reproducible and fast.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 disables retrying).
+    pub max_retries: usize,
+    /// Backoff before retry `k` is `min(cap, base·2^(k-1))`, scaled by a
+    /// seeded jitter factor in `[0.5, 1.0)`.
+    pub backoff_base_ms: Ms,
+    pub backoff_cap_ms: Ms,
+    /// Jitter seed (same seed ⇒ same charged backoff, bit for bit).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 2,
+            backoff_base_ms: 5.0,
+            backoff_cap_ms: 80.0,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Circuit-breaker policy, per model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    /// Consecutive cold-execution failures (counted per attempt) that
+    /// open the breaker.
+    pub threshold: usize,
+    /// Requests short-circuited to the degraded path while open before
+    /// the next one runs as a half-open probe. Counted in requests, not
+    /// wall time, so chaos replays are deterministic.
+    pub cooldown: usize,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> BreakerPolicy {
+        BreakerPolicy { threshold: 5, cooldown: 16 }
+    }
 }
 
 /// Router configuration.
@@ -81,6 +175,16 @@ pub struct RouterConfig {
     /// the throughput benchmark: cold work parallelizes across serving
     /// threads. Default off, preserving the cheap charge-only semantics.
     pub execute_cold: bool,
+    /// Max in-flight cold starts per shard; excess cold-due requests are
+    /// shed ([`Outcome::Shed`]). `None` (default) admits everything.
+    pub admission: Option<usize>,
+    pub retry: RetryPolicy,
+    pub breaker: BreakerPolicy,
+    /// Deterministic fault plan threaded into the execution backend
+    /// (chaos testing). `None` (default) is zero-cost. Store faults are
+    /// injected separately via
+    /// [`crate::store::ArtifactStore::inject_faults`] on a shared store.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for RouterConfig {
@@ -90,28 +194,279 @@ impl Default for RouterConfig {
             engine: ServeEngine::Nnv12,
             warmup_depth: 4,
             execute_cold: false,
+            admission: None,
+            retry: RetryPolicy::default(),
+            breaker: BreakerPolicy::default(),
+            faults: None,
         }
     }
 }
 
-/// Outcome of one routed request.
+/// How a served (non-shed, non-failed) request was priced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeClass {
+    /// Full cold start (planned path; executed when
+    /// [`RouterConfig::execute_cold`]).
+    Cold,
+    /// Resident model, warm-up ladder rung.
+    Warm,
+    /// Served off the search-free baseline plan (deadline miss or open
+    /// breaker); residency untouched.
+    Degraded,
+}
+
+/// A successfully served request.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Outcome {
+pub struct Served {
+    /// Reported latency: executed/charged latency plus any retry backoff.
     pub latency_ms: Ms,
-    pub cold: bool,
+    pub class: ServeClass,
+    /// Sessions evicted from residency to make room for this one.
     pub evictions: usize,
+    /// Transient-failure retries this request absorbed.
+    pub retries: usize,
+}
+
+/// Outcome of one routed request — exactly one of served / shed / failed
+/// (see the module docs for the taxonomy and conservation invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    Served(Served),
+    /// Refused at admission: the shard's in-flight cold-start budget was
+    /// exhausted.
+    Shed,
+    /// Cold execution failed every attempt; `error` is the last failure
+    /// (a caught backend panic is reported here too).
+    Failed { attempts: usize, error: String },
+}
+
+impl Outcome {
+    /// The served payload, if this request was served at all.
+    pub fn served(&self) -> Option<&Served> {
+        match self {
+            Outcome::Served(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_cold(&self) -> bool {
+        matches!(self.served(), Some(s) if s.class == ServeClass::Cold)
+    }
+
+    pub fn is_warm(&self) -> bool {
+        matches!(self.served(), Some(s) if s.class == ServeClass::Warm)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self.served(), Some(s) if s.class == ServeClass::Degraded)
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Shed)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, Outcome::Failed { .. })
+    }
+}
+
+/// Snapshot of the router's full failure-taxonomy counter set
+/// ([`Router::summary`]). All counters are monotonic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests issued against known models.
+    pub issued: usize,
+    pub cold: usize,
+    pub warm: usize,
+    /// Requests served off the degraded path
+    /// (`== degraded_deadline + degraded_breaker`).
+    pub degraded: usize,
+    pub shed: usize,
+    pub failed: usize,
+    /// Degradations caused by a deadline tighter than the cold estimate.
+    pub degraded_deadline: usize,
+    /// Degradations caused by an open circuit breaker.
+    pub degraded_breaker: usize,
+    /// Individual cold-execution attempt failures (includes panics).
+    pub exec_failures: usize,
+    /// Backend panics caught at the router boundary.
+    pub exec_panics: usize,
+    /// Retry attempts issued (each also charged seeded backoff).
+    pub retries: usize,
+    /// Breaker open transitions (threshold trips and failed probes).
+    pub breaker_opens: usize,
+    /// Half-open probes admitted.
+    pub breaker_probes: usize,
+}
+
+impl RouterStats {
+    /// The conservation invariant: every issued request resolved to
+    /// exactly one outcome.
+    pub fn conserves(&self) -> bool {
+        self.cold + self.warm + self.degraded + self.shed + self.failed == self.issued
+    }
+}
+
+/// Monotonic request counters (atomics; snapshot via
+/// [`Router::summary`]).
+#[derive(Default)]
+struct Counters {
+    issued: AtomicUsize,
+    cold: AtomicUsize,
+    warm: AtomicUsize,
+    degraded: AtomicUsize,
+    shed: AtomicUsize,
+    failed: AtomicUsize,
+    degraded_deadline: AtomicUsize,
+    degraded_breaker: AtomicUsize,
+    exec_failures: AtomicUsize,
+    exec_panics: AtomicUsize,
+    retries: AtomicUsize,
+    breaker_opens: AtomicUsize,
+    breaker_probes: AtomicUsize,
+}
+
+/// Circuit-breaker state machine: Closed → Open{countdown} →
+/// HalfOpen{probe} → Closed/Open. Count-based cooldown keeps replays
+/// deterministic (no wall clock anywhere in the serving path).
+struct Breaker {
+    policy: BreakerPolicy,
+    state: Mutex<BreakerState>,
+}
+
+struct BreakerState {
+    consecutive: usize,
+    mode: BreakerMode,
+}
+
+enum BreakerMode {
+    Closed,
+    Open { remaining: usize },
+    HalfOpen { probing: bool },
+}
+
+/// What the breaker says about admitting one cold start.
+enum Admit {
+    Through,
+    Probe,
+    ShortCircuit,
+}
+
+impl Breaker {
+    fn new(policy: BreakerPolicy) -> Breaker {
+        Breaker {
+            policy,
+            state: Mutex::new(BreakerState {
+                consecutive: 0,
+                mode: BreakerMode::Closed,
+            }),
+        }
+    }
+
+    fn admit(&self) -> Admit {
+        let mut s = self.state.lock().unwrap();
+        match s.mode {
+            BreakerMode::Closed => Admit::Through,
+            BreakerMode::Open { remaining } if remaining > 0 => {
+                s.mode = BreakerMode::Open { remaining: remaining - 1 };
+                Admit::ShortCircuit
+            }
+            BreakerMode::Open { .. } => {
+                s.mode = BreakerMode::HalfOpen { probing: true };
+                Admit::Probe
+            }
+            BreakerMode::HalfOpen { probing: false } => {
+                s.mode = BreakerMode::HalfOpen { probing: true };
+                Admit::Probe
+            }
+            // Another request already holds the probe slot.
+            BreakerMode::HalfOpen { probing: true } => Admit::ShortCircuit,
+        }
+    }
+
+    /// One failed (non-probe) attempt. Returns true when this failure
+    /// just opened the breaker.
+    fn on_failure(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive += 1;
+        if s.consecutive >= self.policy.threshold {
+            s.consecutive = 0;
+            s.mode = BreakerMode::Open { remaining: self.policy.cooldown };
+            return true;
+        }
+        false
+    }
+
+    fn on_success(&self) {
+        self.state.lock().unwrap().consecutive = 0;
+    }
+
+    fn probe_succeeded(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive = 0;
+        s.mode = BreakerMode::Closed;
+    }
+
+    fn probe_failed(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.consecutive = 0;
+        s.mode = BreakerMode::Open { remaining: self.policy.cooldown };
+    }
+
+    /// The probe never ran (its cold start was shed): release the probe
+    /// slot for the next request.
+    fn probe_aborted(&self) {
+        let mut s = self.state.lock().unwrap();
+        if let BreakerMode::HalfOpen { probing } = &mut s.mode {
+            *probing = false;
+        }
+    }
+}
+
+/// RAII decrement of a shard's in-flight cold-start gauge.
+struct ColdGuard<'a> {
+    slot: &'a AtomicUsize,
+}
+
+impl Drop for ColdGuard<'_> {
+    fn drop(&mut self) {
+        self.slot.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "backend panicked".to_string()
+    }
 }
 
 /// The router: named [`Session`]s over one shared [`Engine`], behind a
-/// sharded concurrent map. `Send + Sync`; [`Router::request`] is `&self`.
+/// sharded concurrent map, gated by the failure policy described in the
+/// module docs. `Send + Sync`; [`Router::request`] is `&self`.
 pub struct Router {
     engine: Engine,
     shards: Vec<Shard>,
+    /// In-flight cold starts, per shard (the admission gauge).
+    cold_inflight: Vec<AtomicUsize>,
     recorder: Mutex<Recorder>,
-    stats_cold: AtomicUsize,
-    stats_warm: AtomicUsize,
-    stats_exec_failed: AtomicUsize,
+    counters: Counters,
     execute_cold: bool,
+    admission: Option<usize>,
+    retry: RetryPolicy,
+    breaker_policy: BreakerPolicy,
 }
 
 impl Router {
@@ -152,9 +507,15 @@ impl Router {
     }
 
     fn builder_for(dev: &DeviceProfile, cfg: &RouterConfig) -> crate::engine::EngineBuilder {
-        let backend: Box<dyn ExecBackend> = match cfg.engine {
-            ServeEngine::Nnv12 => Box::new(SimBackend::nnv12()),
-            ServeEngine::Ncnn => Box::new(BaselineBackend::ncnn()),
+        let backend: Box<dyn ExecBackend> = match (cfg.engine, &cfg.faults) {
+            (ServeEngine::Nnv12, None) => Box::new(SimBackend::nnv12()),
+            (ServeEngine::Nnv12, Some(f)) => {
+                Box::new(SimBackend::nnv12().with_faults(f.clone()))
+            }
+            (ServeEngine::Ncnn, None) => Box::new(BaselineBackend::ncnn()),
+            (ServeEngine::Ncnn, Some(f)) => {
+                Box::new(BaselineBackend::ncnn().with_faults(f.clone()))
+            }
         };
         Engine::builder()
             .device(dev.clone())
@@ -167,11 +528,13 @@ impl Router {
         let router = Router {
             engine,
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            cold_inflight: (0..SHARDS).map(|_| AtomicUsize::new(0)).collect(),
             recorder: Mutex::new(Recorder::new()),
-            stats_cold: AtomicUsize::new(0),
-            stats_warm: AtomicUsize::new(0),
-            stats_exec_failed: AtomicUsize::new(0),
+            counters: Counters::default(),
             execute_cold: cfg.execute_cold,
+            admission: cfg.admission,
+            retry: cfg.retry,
+            breaker_policy: cfg.breaker,
         };
         for s in router.engine.load_all(models) {
             router.insert(s);
@@ -189,22 +552,26 @@ impl Router {
     fn insert(&self, session: Session) {
         let name = session.name().to_string();
         let shard = self.shard_of(&name);
+        let entry = ModelEntry {
+            session: Arc::new(session),
+            breaker: Breaker::new(self.breaker_policy),
+        };
         self.shards[shard]
             .lock()
             .unwrap()
-            .insert(name, Arc::new(session));
+            .insert(name, Arc::new(entry));
     }
 
     /// Plan and add a model at runtime (`&self`: callable while other
     /// threads serve requests — they contend only on this model's
-    /// shard). Replaces any existing session of the same name; its
-    /// residency is released when the last in-flight request drops the
-    /// old `Arc`.
+    /// shard). Replaces any existing session of the same name (with a
+    /// fresh, closed breaker); its residency is released when the last
+    /// in-flight request drops the old `Arc`.
     pub fn register(&self, model: ModelGraph) {
         self.insert(self.engine.load(model));
     }
 
-    /// Retire a model. In-flight requests holding the session's `Arc`
+    /// Retire a model. In-flight requests holding the entry's `Arc`
     /// finish normally; residency is released once they drop it.
     pub fn remove(&self, model: &str) -> bool {
         let shard = self.shard_of(model);
@@ -225,59 +592,225 @@ impl Router {
         self.session(name).is_some_and(|s| s.is_resident())
     }
 
-    /// Handle a request for `model`: one [`Session::infer`] plus request
-    /// accounting, from any thread. `None` for unknown models.
-    ///
-    /// The shard lock covers only the `Arc` clone; inference (residency
-    /// charge, lazy ladder, and — with [`RouterConfig::execute_cold`] —
-    /// backend execution) runs outside it.
+    /// Handle a request for `model` with no deadline. `None` for unknown
+    /// models; see [`Router::request_with`] for the full policy.
     pub fn request(&self, model: &str) -> Option<Outcome> {
-        let session = self.session(model)?;
-        let r = session.infer();
-        let cold = r.phase == Phase::Cold;
-        let mut latency = r.latency_ms;
-        if cold && self.execute_cold {
-            // Execute the cold inference through the backend (the
-            // deterministic contention-aware simulation, or a real run);
-            // fall back to the charged estimate if the backend cannot —
-            // counted, so a silently broken backend is observable via
-            // [`Router::stats_exec_failed`].
-            match session.run_cold() {
-                Ok(out) => latency = out.latency_ms,
-                Err(_) => {
-                    self.stats_exec_failed.fetch_add(1, Ordering::Relaxed);
-                }
+        self.request_with(model, None)
+    }
+
+    /// Handle a request for `model`, from any thread. `None` for unknown
+    /// models; every known-model request resolves to exactly one
+    /// [`Outcome`] (the conservation invariant).
+    ///
+    /// The policy pipeline, in order (see the module docs): warm fast
+    /// path → deadline check against the cold estimate → circuit breaker
+    /// → per-shard admission → (optionally executed) cold start with
+    /// retries → residency commit. The shard lock covers only the entry
+    /// `Arc` clone; everything else runs outside it. No panic escapes:
+    /// backend panics are caught, counted, and reported as failures.
+    pub fn request_with(&self, model: &str, deadline_ms: Option<Ms>) -> Option<Outcome> {
+        let entry = {
+            let shard = self.shard_of(model);
+            self.shards[shard].lock().unwrap().get(model).cloned()?
+        };
+        self.counters.issued.fetch_add(1, Ordering::Relaxed);
+
+        // Warm fast path: a resident model serves its ladder rung with no
+        // gating at all (warm service cannot fail and must stay cheap).
+        if let Some(r) = entry.session.infer_warm() {
+            self.counters.warm.fetch_add(1, Ordering::Relaxed);
+            self.record(model, "warm", r.latency_ms);
+            return Some(Outcome::Served(Served {
+                latency_ms: r.latency_ms,
+                class: ServeClass::Warm,
+                evictions: 0,
+                retries: 0,
+            }));
+        }
+
+        // A cold start is due. Gate 1: can it meet the deadline? The
+        // §3.5 ladder's first rung is the planner's cold estimate.
+        if let Some(d) = deadline_ms {
+            if entry.session.cold_ms() > d {
+                self.counters.degraded_deadline.fetch_add(1, Ordering::Relaxed);
+                return Some(self.serve_degraded(&entry, model));
             }
         }
-        let label = if cold { "cold" } else { "warm" };
-        if cold {
-            self.stats_cold.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.stats_warm.fetch_add(1, Ordering::Relaxed);
+
+        // Gate 2: circuit breaker.
+        let probing = match entry.breaker.admit() {
+            Admit::ShortCircuit => {
+                self.counters.degraded_breaker.fetch_add(1, Ordering::Relaxed);
+                return Some(self.serve_degraded(&entry, model));
+            }
+            Admit::Probe => {
+                self.counters.breaker_probes.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Admit::Through => false,
+        };
+
+        // Gate 3: bounded admission of in-flight cold starts, per shard.
+        let slot = &self.cold_inflight[self.shard_of(model)];
+        let prev = slot.fetch_add(1, Ordering::Relaxed);
+        if self.admission.is_some_and(|limit| prev >= limit) {
+            slot.fetch_sub(1, Ordering::Relaxed);
+            if probing {
+                entry.breaker.probe_aborted();
+            }
+            self.counters.shed.fetch_add(1, Ordering::Relaxed);
+            return Some(Outcome::Shed);
         }
+        let _guard = ColdGuard { slot };
+
+        // The cold start proper, with retries. Backoff is charged to the
+        // reported latency (deterministic seeded jitter), never slept.
+        let mut exec_latency: Option<Ms> = None;
+        let mut penalty_ms: Ms = 0.0;
+        let mut attempts = 0usize;
+        let mut retries = 0usize;
+        let mut last_err = String::new();
+        if self.execute_cold {
+            // A half-open probe gets exactly one attempt: its job is to
+            // answer "has the backend recovered?", not to mask the answer
+            // behind retries.
+            let max_attempts = if probing { 1 } else { self.retry.max_retries + 1 };
+            while attempts < max_attempts {
+                attempts += 1;
+                if attempts > 1 {
+                    retries += 1;
+                    self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    penalty_ms += self.backoff_ms(model, attempts - 1);
+                }
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    entry.session.run_cold()
+                }));
+                match run {
+                    Ok(Ok(out)) => {
+                        exec_latency = Some(out.latency_ms);
+                        break;
+                    }
+                    Ok(Err(e)) => {
+                        self.counters.exec_failures.fetch_add(1, Ordering::Relaxed);
+                        last_err = e;
+                    }
+                    Err(p) => {
+                        self.counters.exec_failures.fetch_add(1, Ordering::Relaxed);
+                        self.counters.exec_panics.fetch_add(1, Ordering::Relaxed);
+                        last_err = panic_message(p.as_ref());
+                    }
+                }
+                if probing {
+                    entry.breaker.probe_failed();
+                    self.counters.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                if entry.breaker.on_failure() {
+                    // This failure tripped the breaker: this request (and
+                    // the cooldown's worth behind it) rides the degraded
+                    // path rather than burning more attempts.
+                    self.counters.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                    self.counters.degraded_breaker.fetch_add(1, Ordering::Relaxed);
+                    return Some(self.serve_degraded(&entry, model));
+                }
+            }
+            match exec_latency {
+                None => {
+                    self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                    return Some(Outcome::Failed { attempts, error: last_err });
+                }
+                Some(_) => {
+                    if probing {
+                        entry.breaker.probe_succeeded();
+                    } else {
+                        entry.breaker.on_success();
+                    }
+                }
+            }
+        } else if probing {
+            // Charge-only serving never executes, so nothing can fail:
+            // the probe trivially succeeds and the breaker closes.
+            entry.breaker.probe_succeeded();
+        }
+
+        // Commit the residency charge — the engine's single atomic
+        // cold/warm decision (another thread may have won the race while
+        // we executed; then we're the raced-warm request).
+        let r = entry.session.infer();
+        if r.phase == Phase::Cold {
+            let latency = exec_latency.unwrap_or(r.latency_ms) + penalty_ms;
+            self.counters.cold.fetch_add(1, Ordering::Relaxed);
+            self.record(model, "cold", latency);
+            Some(Outcome::Served(Served {
+                latency_ms: latency,
+                class: ServeClass::Cold,
+                evictions: r.evictions,
+                retries,
+            }))
+        } else {
+            self.counters.warm.fetch_add(1, Ordering::Relaxed);
+            self.record(model, "warm", r.latency_ms);
+            Some(Outcome::Served(Served {
+                latency_ms: r.latency_ms,
+                class: ServeClass::Warm,
+                evictions: r.evictions,
+                retries,
+            }))
+        }
+    }
+
+    /// Serve off the degraded path: the session's search-free baseline
+    /// plan estimate, residency untouched (the next undegraded request
+    /// still pays its cold start — degradation trades latency *now* for
+    /// no residency/planning work).
+    fn serve_degraded(&self, entry: &ModelEntry, model: &str) -> Outcome {
+        let latency = entry.session.degraded_cold_ms();
+        self.counters.degraded.fetch_add(1, Ordering::Relaxed);
+        self.record(model, "degraded", latency);
+        Outcome::Served(Served {
+            latency_ms: latency,
+            class: ServeClass::Degraded,
+            evictions: 0,
+            retries: 0,
+        })
+    }
+
+    /// Charged retry backoff before retry `k` (1-based):
+    /// `min(cap, base·2^(k-1))` scaled by seeded jitter in `[0.5, 1.0)`.
+    fn backoff_ms(&self, model: &str, k: usize) -> Ms {
+        let exp = (k - 1).min(20) as u32;
+        let raw = self.retry.backoff_base_ms * (1u64 << exp) as f64;
+        let capped = raw.min(self.retry.backoff_cap_ms);
+        let h = mix64(
+            self.retry.seed
+                ^ fnv1a(model.as_bytes())
+                ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        capped * (0.5 + 0.5 * unit_f64(h))
+    }
+
+    fn record(&self, model: &str, label: &str, latency: Ms) {
         // The per-model label is formatted before taking the recorder
         // lock: the critical section is two label-scan + push appends,
         // never an allocation.
         let model_label = format!("{model}:{label}");
-        {
-            let mut rec = self.recorder.lock().unwrap();
-            rec.record(label, latency);
-            rec.record(&model_label, latency);
-        }
-        Some(Outcome { latency_ms: latency, cold, evictions: r.evictions })
+        let mut rec = self.recorder.lock().unwrap();
+        rec.record(label, latency);
+        rec.record(&model_label, latency);
     }
 
     /// Replay a request trace across `threads` serving threads (request
     /// `i` goes to thread `i % threads`, each thread serving its share
-    /// in trace order). Returns the number of requests served (requests
-    /// for unknown models are skipped). `threads <= 1` replays inline —
-    /// the single-threaded baseline the throughput ratchet compares
-    /// against.
+    /// in trace order, honoring per-request deadlines). Returns the
+    /// number of requests processed (requests for unknown models are
+    /// skipped; shed and failed requests count as processed — they *are*
+    /// outcomes). `threads <= 1` replays inline — the single-threaded
+    /// baseline the throughput ratchet compares against.
     pub fn replay(&self, reqs: &[Request], threads: usize) -> usize {
         if threads <= 1 {
             return reqs
                 .iter()
-                .filter(|r| self.request(&r.model).is_some())
+                .filter(|r| self.request_with(&r.model, r.deadline_ms).is_some())
                 .count();
         }
         let served = AtomicUsize::new(0);
@@ -289,7 +822,7 @@ impl Router {
                         .iter()
                         .skip(t)
                         .step_by(threads)
-                        .filter(|r| self.request(&r.model).is_some())
+                        .filter(|r| self.request_with(&r.model, r.deadline_ms).is_some())
                         .count();
                     served.fetch_add(n, Ordering::Relaxed);
                 });
@@ -298,37 +831,104 @@ impl Router {
         served.into_inner()
     }
 
+    /// Open-loop replay: requests fire at their trace arrival times
+    /// (`Request::at_ms`, divided by `accel`), regardless of whether
+    /// earlier requests finished — the load model that makes latency
+    /// *percentiles under load* meaningful. `threads` workers pull from a
+    /// shared cursor; each sleeps until its request's arrival, serves it,
+    /// and records the wall-clock **sojourn** (completion − scheduled
+    /// arrival, ms) under the `"sojourn"` recorder label
+    /// ([`Router::latency_summary`]`("sojourn")` for percentiles).
+    /// Returns the number of requests processed.
+    pub fn replay_open_loop(&self, reqs: &[Request], threads: usize, accel: f64) -> usize {
+        let accel = if accel > 0.0 { accel } else { 1.0 };
+        let served = AtomicUsize::new(0);
+        let cursor = AtomicUsize::new(0);
+        let start = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..threads.max(1) {
+                let (served, cursor) = (&served, &cursor);
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(req) = reqs.get(i) else { break };
+                    let due =
+                        std::time::Duration::from_secs_f64((req.at_ms / accel / 1e3).max(0.0));
+                    loop {
+                        let elapsed = start.elapsed();
+                        if elapsed >= due {
+                            break;
+                        }
+                        std::thread::sleep(due - elapsed);
+                    }
+                    if self.request_with(&req.model, req.deadline_ms).is_some() {
+                        let sojourn =
+                            start.elapsed().saturating_sub(due).as_secs_f64() * 1e3;
+                        self.recorder.lock().unwrap().record("sojourn", sojourn);
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        served.into_inner()
+    }
+
+    /// Snapshot of the full failure-taxonomy counter set. Counters are
+    /// read individually (`Relaxed`); quiesce serving threads before
+    /// asserting exact cross-counter identities.
+    pub fn summary(&self) -> RouterStats {
+        let c = &self.counters;
+        let load = |a: &AtomicUsize| a.load(Ordering::Relaxed);
+        RouterStats {
+            issued: load(&c.issued),
+            cold: load(&c.cold),
+            warm: load(&c.warm),
+            degraded: load(&c.degraded),
+            shed: load(&c.shed),
+            failed: load(&c.failed),
+            degraded_deadline: load(&c.degraded_deadline),
+            degraded_breaker: load(&c.degraded_breaker),
+            exec_failures: load(&c.exec_failures),
+            exec_panics: load(&c.exec_panics),
+            retries: load(&c.retries),
+            breaker_opens: load(&c.breaker_opens),
+            breaker_probes: load(&c.breaker_probes),
+        }
+    }
+
     /// Requests that hit the cold path so far.
     pub fn stats_cold(&self) -> usize {
-        self.stats_cold.load(Ordering::Relaxed)
+        self.counters.cold.load(Ordering::Relaxed)
     }
 
     /// Requests served warm (resident) so far.
     pub fn stats_warm(&self) -> usize {
-        self.stats_warm.load(Ordering::Relaxed)
+        self.counters.warm.load(Ordering::Relaxed)
     }
 
-    /// Cold requests whose [`RouterConfig::execute_cold`] backend
-    /// execution failed and fell back to the charged estimate (always 0
-    /// when `execute_cold` is off). A nonzero value means reported cold
-    /// latencies are planner estimates, not executed ones.
+    /// Individual cold-execution attempt failures (always 0 when
+    /// [`RouterConfig::execute_cold`] is off or no faults are injected —
+    /// the sim and baseline backends are infallible by construction).
+    /// Superseded by [`Router::summary`]`.exec_failures`; kept as the
+    /// stable spelling benches and older tests assert on.
     pub fn stats_exec_failed(&self) -> usize {
-        self.stats_exec_failed.load(Ordering::Relaxed)
+        self.counters.exec_failures.load(Ordering::Relaxed)
     }
 
-    /// Latency summary for a recorder label (`"cold"`, `"warm"`, or a
-    /// per-model `"model:cold"`/`"model:warm"` key). Snapshot API on
-    /// purpose: the recorder lock is taken and released inside the call,
-    /// so callers can never hold it across another router call (a guard
-    /// held while calling [`Router::request`] on the same thread would
-    /// self-deadlock on the non-reentrant lock).
-    pub fn summary(&self, label: &str) -> crate::util::stats::Summary {
+    /// Latency summary for a recorder label (`"cold"`, `"warm"`,
+    /// `"degraded"`, `"sojourn"`, or a per-model
+    /// `"model:cold"`/`"model:warm"`/`"model:degraded"` key). Snapshot
+    /// API on purpose: the recorder lock is taken and released inside
+    /// the call, so callers can never hold it across another router call
+    /// (a guard held while calling [`Router::request`] on the same
+    /// thread would self-deadlock on the non-reentrant lock).
+    pub fn latency_summary(&self, label: &str) -> crate::util::stats::Summary {
         self.recorder.lock().unwrap().summary(label)
     }
 
     /// Snapshot of the raw latency observations recorded under `label`
     /// (empty for unknown labels). Cloned out from under the recorder
-    /// lock — see [`Router::summary`] for why no guard is exposed.
+    /// lock — see [`Router::latency_summary`] for why no guard is
+    /// exposed.
     pub fn recorded(&self, label: &str) -> Vec<f64> {
         self.recorder.lock().unwrap().values(label).to_vec()
     }
@@ -342,7 +942,11 @@ impl Router {
     /// on it directly, concurrently with the router).
     pub fn session(&self, model: &str) -> Option<Arc<Session>> {
         let shard = self.shard_of(model);
-        self.shards[shard].lock().unwrap().get(model).cloned()
+        self.shards[shard]
+            .lock()
+            .unwrap()
+            .get(model)
+            .map(|e| e.session.clone())
     }
 
     /// The shared plan cache.
@@ -359,6 +963,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::device::profiles;
+    use crate::faults::{FaultKind, FaultSite, Trigger};
     use crate::graph::zoo;
 
     fn router(budget: u64) -> Router {
@@ -367,25 +972,30 @@ mod tests {
         Router::new(&dev, models, RouterConfig { memory_budget: budget, ..Default::default() })
     }
 
+    fn latency(o: &Outcome) -> Ms {
+        o.served().expect("request was served").latency_ms
+    }
+
     #[test]
     fn first_request_cold_second_warm() {
         let r = router(1 << 30);
         let a = r.request("tinynet").unwrap();
-        assert!(a.cold);
+        assert!(a.is_cold());
         let b = r.request("tinynet").unwrap();
-        assert!(!b.cold);
-        assert!(b.latency_ms <= a.latency_ms);
+        assert!(b.is_warm());
+        assert!(latency(&b) <= latency(&a));
         assert_eq!(r.stats_cold(), 1);
         assert_eq!(r.stats_warm(), 1);
+        assert!(r.summary().conserves());
     }
 
     #[test]
     fn warm_ladder_descends_to_steady_state() {
         let r = router(1 << 30);
-        let l1 = r.request("squeezenet").unwrap().latency_ms;
-        let l2 = r.request("squeezenet").unwrap().latency_ms;
-        let l3 = r.request("squeezenet").unwrap().latency_ms;
-        let l4 = r.request("squeezenet").unwrap().latency_ms;
+        let l1 = latency(&r.request("squeezenet").unwrap());
+        let l2 = latency(&r.request("squeezenet").unwrap());
+        let l3 = latency(&r.request("squeezenet").unwrap());
+        let l4 = latency(&r.request("squeezenet").unwrap());
         assert!(l1 > l2, "cold {l1} > 2nd {l2}");
         assert!(l2 >= l3, "2nd {l2} >= 3rd {l3}");
         assert_eq!(l3, l4, "steady state from 3rd inference");
@@ -396,13 +1006,12 @@ mod tests {
         // Budget fits roughly one model: alternating requests thrash.
         let r = router(6 << 20);
         r.request("squeezenet").unwrap();
-        let out = r.request("micro-mobilenet");
+        let out = r.request("micro-mobilenet").unwrap();
         // squeezenet (~5MB resident +25%) + micro must exceed 6MB ⇒ evict.
-        let out = out.unwrap();
-        assert!(out.cold);
-        assert!(out.evictions > 0 || r.mem_used() <= 6 << 20);
+        assert!(out.is_cold());
+        assert!(out.served().unwrap().evictions > 0 || r.mem_used() <= 6 << 20);
         let back = r.request("squeezenet").unwrap();
-        assert!(back.cold, "evicted model must cold-start again");
+        assert!(back.is_cold(), "evicted model must cold-start again");
     }
 
     #[test]
@@ -419,8 +1028,8 @@ mod tests {
         assert_eq!(cache.hits(), 2);
         // And identical plans ⇒ identical cold latencies.
         assert_eq!(
-            a.request("squeezenet").unwrap().latency_ms.to_bits(),
-            b.request("squeezenet").unwrap().latency_ms.to_bits()
+            latency(&a.request("squeezenet").unwrap()).to_bits(),
+            latency(&b.request("squeezenet").unwrap()).to_bits()
         );
     }
 
@@ -448,8 +1057,8 @@ mod tests {
         let stats = b.engine().store_stats().unwrap();
         assert_eq!(stats.hits, 2);
         assert_eq!(
-            a.request("squeezenet").unwrap().latency_ms.to_bits(),
-            b.request("squeezenet").unwrap().latency_ms.to_bits(),
+            latency(&a.request("squeezenet").unwrap()).to_bits(),
+            latency(&b.request("squeezenet").unwrap()).to_bits(),
             "stored plans must reproduce identical serving latencies"
         );
         let _ = std::fs::remove_dir_all(&dir);
@@ -467,7 +1076,7 @@ mod tests {
         assert!(r.request("mobilenetv2").is_none());
         r.register(zoo::mobilenet_v2());
         let out = r.request("mobilenetv2").expect("registered model serves");
-        assert!(out.cold);
+        assert!(out.is_cold());
         assert!(r.model_names().contains(&"mobilenetv2".to_string()));
         assert!(r.remove("mobilenetv2"));
         assert!(r.request("mobilenetv2").is_none());
@@ -488,8 +1097,8 @@ mod tests {
             models,
             RouterConfig { engine: ServeEngine::Ncnn, ..Default::default() },
         );
-        let a = nnv12.request("squeezenet").unwrap().latency_ms;
-        let b = ncnn.request("squeezenet").unwrap().latency_ms;
+        let a = latency(&nnv12.request("squeezenet").unwrap());
+        let b = latency(&ncnn.request("squeezenet").unwrap());
         assert!(a < b, "nnv12 cold {a} vs ncnn cold {b}");
     }
 
@@ -505,12 +1114,205 @@ mod tests {
             RouterConfig { execute_cold: true, ..Default::default() },
         );
         let out = r.request("squeezenet").unwrap();
-        assert!(out.cold);
+        assert!(out.is_cold());
         let direct = r.session("squeezenet").unwrap().run_cold().unwrap();
-        assert_eq!(out.latency_ms.to_bits(), direct.latency_ms.to_bits());
+        assert_eq!(latency(&out).to_bits(), direct.latency_ms.to_bits());
         // Warm requests still charge the ladder.
         let warm = r.request("squeezenet").unwrap();
-        assert!(!warm.cold);
-        assert!(warm.latency_ms < out.latency_ms);
+        assert!(warm.is_warm());
+        assert!(latency(&warm) < latency(&out));
+    }
+
+    #[test]
+    fn impossible_deadline_degrades_every_request() {
+        let r = router(1 << 30);
+        for _ in 0..10 {
+            let o = r.request_with("tinynet", Some(0.0)).unwrap();
+            assert!(o.is_degraded());
+            assert!(latency(&o) > 0.0);
+        }
+        let s = r.summary();
+        assert_eq!(s.degraded, 10);
+        assert_eq!(s.degraded_deadline, 10);
+        // Degradation never touches residency: the model stayed cold-due.
+        assert_eq!((s.cold, s.warm), (0, 0));
+        assert!(s.conserves());
+        assert_eq!(r.recorded("degraded").len(), 10);
+    }
+
+    #[test]
+    fn generous_deadline_serves_normally() {
+        let r = router(1 << 30);
+        let o = r.request_with("tinynet", Some(1e12)).unwrap();
+        assert!(o.is_cold());
+        assert_eq!(r.summary().degraded, 0);
+    }
+
+    #[test]
+    fn degraded_latency_is_the_searchfree_estimate() {
+        // The degraded path charges the baseline-shaped (search-free)
+        // plan: pricier than the NNV12 cold start it replaces would have
+        // been — degradation trades latency for skipping planned work,
+        // not a free lunch.
+        let r = router(1 << 30);
+        let degraded = latency(&r.request_with("squeezenet", Some(0.0)).unwrap());
+        let cold = latency(&r.request("squeezenet").unwrap());
+        assert!(
+            degraded >= cold,
+            "degraded {degraded} must not beat the planned cold start {cold}"
+        );
+    }
+
+    #[test]
+    fn zero_admission_sheds_every_cold_start() {
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::tiny_net()],
+            RouterConfig { admission: Some(0), ..Default::default() },
+        );
+        for _ in 0..5 {
+            assert!(r.request("tinynet").unwrap().is_shed());
+        }
+        let s = r.summary();
+        assert_eq!((s.issued, s.shed, s.cold, s.warm), (5, 5, 0, 0));
+        assert!(s.conserves());
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_probes_closed() {
+        // Deterministic end-to-end breaker walk: 5 injected transient
+        // exec failures (call counts 0..4), threshold 5, cooldown 16,
+        // 2 retries per request.
+        //
+        //   req 1: 3 attempts, all fail              → Failed
+        //   req 2: 2 attempts fail, 5th trips breaker → Degraded (opens)
+        //   req 3–18: short-circuit through cooldown  → 16 × Degraded
+        //   req 19: half-open probe, exec succeeds    → Cold (closes)
+        //   req 20: resident                          → Warm
+        let plan = Arc::new(
+            FaultPlan::new(1)
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::At(0))
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::At(1))
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::At(2))
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::At(3))
+                .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::At(4)),
+        );
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::tiny_net()],
+            RouterConfig {
+                execute_cold: true,
+                faults: Some(plan),
+                breaker: BreakerPolicy { threshold: 5, cooldown: 16 },
+                retry: RetryPolicy { max_retries: 2, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let outcomes: Vec<Outcome> =
+            (0..20).map(|_| r.request("tinynet").unwrap()).collect();
+        assert!(outcomes[0].is_failed());
+        if let Outcome::Failed { attempts, error } = &outcomes[0] {
+            assert_eq!(*attempts, 3);
+            assert!(error.contains("injected"), "{error}");
+        }
+        for (i, o) in outcomes.iter().enumerate().take(18).skip(1) {
+            assert!(o.is_degraded(), "request {i} should short-circuit: {o:?}");
+        }
+        assert!(outcomes[18].is_cold(), "probe request serves cold: {:?}", outcomes[18]);
+        assert!(outcomes[19].is_warm());
+
+        let s = r.summary();
+        assert_eq!(s.issued, 20);
+        assert_eq!((s.cold, s.warm), (1, 1));
+        assert_eq!(s.degraded, 17);
+        assert_eq!(s.degraded_breaker, 17);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.exec_failures, 5);
+        assert_eq!(s.exec_panics, 0);
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_probes, 1);
+        assert!(s.conserves());
+    }
+
+    #[test]
+    fn retried_cold_start_charges_backoff() {
+        // One transient failure then success: the request serves cold
+        // with exactly the executed latency plus one seeded backoff.
+        let plan = Arc::new(FaultPlan::new(7).with_rule(
+            FaultSite::ExecRun,
+            FaultKind::ExecFail,
+            Trigger::At(0),
+        ));
+        let dev = profiles::meizu_16t();
+        let mk = |faults| {
+            Router::new(
+                &dev,
+                vec![zoo::tiny_net()],
+                RouterConfig { execute_cold: true, faults, ..Default::default() },
+            )
+        };
+        let faulty = mk(Some(plan));
+        let clean = mk(None);
+        let o = faulty.request("tinynet").unwrap();
+        assert!(o.is_cold());
+        assert_eq!(o.served().unwrap().retries, 1);
+        let baseline = clean.request("tinynet").unwrap();
+        let penalty = latency(&o) - latency(&baseline);
+        assert!(
+            penalty > 2.4 && penalty < 5.1,
+            "one base-5ms backoff with jitter in [0.5,1.0): {penalty}"
+        );
+        let s = faulty.summary();
+        assert_eq!((s.exec_failures, s.retries, s.failed), (1, 1, 0));
+        // And the same seed reproduces the same charged backoff.
+        let again = mk(Some(Arc::new(FaultPlan::new(7).with_rule(
+            FaultSite::ExecRun,
+            FaultKind::ExecFail,
+            Trigger::At(0),
+        ))));
+        assert_eq!(
+            latency(&again.request("tinynet").unwrap()).to_bits(),
+            latency(&o).to_bits()
+        );
+    }
+
+    #[test]
+    fn injected_panic_is_caught_and_counted() {
+        let plan = Arc::new(FaultPlan::new(9).with_rule(
+            FaultSite::ExecRun,
+            FaultKind::ExecPanic,
+            Trigger::At(0),
+        ));
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::tiny_net()],
+            RouterConfig { execute_cold: true, faults: Some(plan), ..Default::default() },
+        );
+        // The panic is absorbed by the retry loop; the retry succeeds.
+        let o = r.request("tinynet").unwrap();
+        assert!(o.is_cold());
+        let s = r.summary();
+        assert_eq!((s.exec_panics, s.exec_failures, s.retries), (1, 1, 1));
+        assert!(s.conserves());
+    }
+
+    #[test]
+    fn taxonomy_is_all_zero_without_faults() {
+        let r = router(24 << 20);
+        for m in ["tinynet", "micro-mobilenet", "squeezenet", "tinynet"] {
+            assert!(r.request(m).unwrap().served().is_some());
+        }
+        let s = r.summary();
+        assert_eq!(s.degraded + s.shed + s.failed, 0);
+        assert_eq!(
+            (s.exec_failures, s.retries, s.breaker_opens, s.breaker_probes),
+            (0, 0, 0, 0)
+        );
+        assert!(s.conserves());
     }
 }

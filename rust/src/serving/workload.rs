@@ -1,18 +1,31 @@
-//! Multi-tenant workload generation: Poisson arrivals, Zipf popularity.
+//! Multi-tenant workload generation: open-loop Poisson arrivals, Zipf
+//! popularity, optional per-request deadlines.
 //!
 //! Models the paper's motivating environment — many DNN-backed app features
 //! invoked at different rates (voice assistant, OCR, camera filters…) on
 //! one device. Popularity skew is what makes cold inference frequent: the
 //! long tail gets evicted between invocations.
+//!
+//! Arrivals are **open-loop**: [`Request::at_ms`] is when the request
+//! fires regardless of whether earlier ones finished.
+//! [`crate::serving::Router::replay`] ignores arrival times (throughput
+//! mode); [`crate::serving::Router::replay_open_loop`] honors them, which
+//! is what makes latency percentiles under load meaningful. A request's
+//! [`Request::deadline_ms`] feeds the router's degradation policy: a cold
+//! start whose §3.5 estimate exceeds the deadline is served degraded.
 
 use crate::util::rng::Rng;
+use crate::Ms;
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
-    /// Arrival time, ms since session start.
+    /// Arrival time, ms since session start (open-loop).
     pub at_ms: f64,
     pub model: String,
+    /// Latency budget for this request, if any: the router degrades a
+    /// cold start that cannot meet it. `None` = no deadline.
+    pub deadline_ms: Option<Ms>,
 }
 
 /// Workload parameters.
@@ -24,6 +37,9 @@ pub struct WorkloadSpec {
     pub zipf_s: f64,
     pub n_requests: usize,
     pub seed: u64,
+    /// Deadline stamped on every generated request (`None` = no
+    /// deadlines, the default).
+    pub deadline_ms: Option<Ms>,
 }
 
 impl Default for WorkloadSpec {
@@ -33,6 +49,7 @@ impl Default for WorkloadSpec {
             zipf_s: 0.9,
             n_requests: 200,
             seed: 42,
+            deadline_ms: None,
         }
     }
 }
@@ -59,7 +76,11 @@ pub fn generate(models: &[String], spec: &WorkloadSpec) -> Vec<Request> {
         t += rng.exponential(spec.mean_interarrival_ms);
         let u = rng.f64();
         let idx = cdf.iter().position(|&c| u <= c).unwrap_or(models.len() - 1);
-        out.push(Request { at_ms: t, model: models[idx].clone() });
+        out.push(Request {
+            at_ms: t,
+            model: models[idx].clone(),
+            deadline_ms: spec.deadline_ms,
+        });
     }
     out
 }
@@ -91,6 +112,17 @@ mod tests {
         let w = generate(&names(), &spec);
         let count = |m: &str| w.iter().filter(|r| r.model == m).count();
         assert!(count("a") > count("d") * 2, "a={} d={}", count("a"), count("d"));
+    }
+
+    #[test]
+    fn deadlines_stamp_every_request() {
+        let spec = WorkloadSpec { deadline_ms: Some(12.5), ..Default::default() };
+        assert!(generate(&names(), &spec)
+            .iter()
+            .all(|r| r.deadline_ms == Some(12.5)));
+        assert!(generate(&names(), &WorkloadSpec::default())
+            .iter()
+            .all(|r| r.deadline_ms.is_none()));
     }
 
     #[test]

@@ -76,7 +76,10 @@
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::SystemTime;
+
+use crate::faults::{FaultKind, FaultPlan, FaultSite};
 
 const MAGIC: [u8; 8] = *b"NNV12ART";
 const FORMAT_VERSION: u32 = 1;
@@ -160,6 +163,10 @@ pub struct ArtifactStore {
     /// self-corrects). Keeps `put` O(1) instead of a directory walk.
     approx_used: AtomicU64,
     next_tmp: AtomicUsize,
+    /// Armed fault-injection plan ([`ArtifactStore::inject_faults`]).
+    /// Empty in production: reads/writes pay one pointer check and behave
+    /// bit-identically to an uninstrumented store.
+    faults: OnceLock<Arc<FaultPlan>>,
 }
 
 impl ArtifactStore {
@@ -195,7 +202,18 @@ impl ArtifactStore {
             bytes_written: AtomicU64::new(0),
             approx_used: AtomicU64::new(0),
             next_tmp: AtomicUsize::new(0),
+            faults: OnceLock::new(),
         }
+    }
+
+    /// Arm deterministic fault injection on this handle (chaos tests and
+    /// `repro serve --faults SEED`): subsequent reads consult `plan` for
+    /// injected I/O errors and in-place corruption, writes for injected
+    /// errors and torn writes. One-shot — a second call is ignored. A
+    /// store that never calls this behaves bit-identically to before the
+    /// hook existed.
+    pub fn inject_faults(&self, plan: Arc<FaultPlan>) {
+        let _ = self.faults.set(plan);
     }
 
     /// The backing directory.
@@ -263,6 +281,18 @@ impl ArtifactStore {
     }
 
     fn get_at(&self, path: &Path, ns: Namespace, key: u64) -> Option<Vec<u8>> {
+        match self.faults.get().and_then(|f| f.draw(FaultSite::StoreRead)) {
+            // Injected transient read error: by contract a miss, never a
+            // deletion — the bytes on disk may be perfectly valid.
+            Some(FaultKind::IoError) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            // Injected bit rot: flip one byte of the on-disk artifact and
+            // fall through — validation below must reject and heal.
+            Some(FaultKind::CorruptBytes) => corrupt_in_place(path),
+            _ => {}
+        }
         let mut file = match std::fs::File::open(path) {
             Ok(f) => f,
             Err(_) => {
@@ -280,31 +310,17 @@ impl ArtifactStore {
             return None;
         }
         drop(file);
-        if bytes.len() < HEADER_LEN {
+        let Some(payload) = validate_bytes(&bytes, ns, key) else {
             return self.reject(path);
-        }
-        let (header, payload) = bytes.split_at(HEADER_LEN);
-        let field = |a: usize, b: usize| -> u64 {
-            let mut buf = [0u8; 8];
-            buf[..b - a].copy_from_slice(&header[a..b]);
-            u64::from_le_bytes(buf)
         };
-        let ok = header[0..8] == MAGIC
-            && field(8, 12) as u32 == FORMAT_VERSION
-            && field(12, 16) as u32 == ns.id()
-            && field(16, 24) == key
-            && field(24, 32) == payload.len() as u64
-            && field(32, 40) == fnv1a(payload);
-        if !ok {
-            return self.reject(path);
-        }
+        let payload = payload.to_vec();
         self.hits.fetch_add(1, Ordering::Relaxed);
         // Refresh recency on every validated read: LRU eviction (capped
         // stores) and age-based gc (uncapped stores) both define "in use"
         // through the file's mtime, so a daily-hit artifact must never
         // look stale to either sweep.
         self.touch(path);
-        Some(payload.to_vec())
+        Some(payload)
     }
 
     fn reject(&self, path: &Path) -> Option<Vec<u8>> {
@@ -369,10 +385,28 @@ impl ArtifactStore {
             self.next_tmp.fetch_add(1, Ordering::Relaxed)
         ));
         let header = ArtifactStore::header(ns, key, payload);
+        let mut torn: Option<&[u8]> = None;
+        match self.faults.get().and_then(|f| f.draw(FaultSite::StoreWrite)) {
+            // Injected write failure: surface it before anything lands —
+            // callers already treat a failed put as "artifact not cached".
+            Some(FaultKind::IoError) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected store write failure",
+                ));
+            }
+            // Injected torn write: the header (already built) claims the
+            // full payload, but only the first half lands — the file
+            // renames into place looking complete and must be caught by
+            // the next read's checksum validation.
+            Some(FaultKind::TornWrite) => torn = Some(&payload[..payload.len() / 2]),
+            _ => {}
+        }
+        let body: &[u8] = torn.unwrap_or(payload);
         let write = || -> std::io::Result<()> {
             let mut f = std::fs::File::create(&tmp)?;
             f.write_all(&header)?;
-            f.write_all(payload)?;
+            f.write_all(body)?;
             Ok(())
         };
         if let Err(e) = write().and_then(|_| std::fs::rename(&tmp, &path)) {
@@ -381,7 +415,7 @@ impl ArtifactStore {
             let _ = std::fs::remove_file(&tmp);
             return Err(e);
         }
-        let entry_bytes = (HEADER_LEN + payload.len()) as u64;
+        let entry_bytes = (HEADER_LEN + body.len()) as u64;
         self.bytes_written.fetch_add(entry_bytes, Ordering::Relaxed);
         let estimated = self.approx_used.fetch_add(entry_bytes, Ordering::Relaxed) + entry_bytes;
         if self.cap_bytes.is_some_and(|cap| estimated > cap) {
@@ -561,6 +595,41 @@ impl ArtifactStore {
         out
     }
 
+    /// Read-only integrity audit of every artifact file in the directory:
+    /// parse each file name, re-run the full header + checksum validation,
+    /// and report the tally. Unlike [`ArtifactStore::get`], `fsck` never
+    /// deletes, never touches mtimes, never moves counters, and bypasses
+    /// any armed fault injection — it is the chaos suite's ground truth
+    /// that no injected corruption survived a run (`corrupt == 0` after
+    /// healing). Files whose name matches no known namespace are counted
+    /// `foreign` and otherwise ignored, like everywhere else in the store.
+    pub fn fsck(&self) -> FsckReport {
+        let mut out = FsckReport::default();
+        for (path, _, _) in self.scan() {
+            out.scanned += 1;
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let parsed = namespace_of_file(name).zip(
+                name.strip_suffix(".art")
+                    .and_then(|stem| stem.rsplit('-').next())
+                    .and_then(|hex| u64::from_str_radix(hex, 16).ok()),
+            );
+            let Some((ns, key)) = parsed else {
+                out.foreign += 1;
+                continue;
+            };
+            let valid = std::fs::read(&path)
+                .ok()
+                .and_then(|bytes| validate_bytes(&bytes, ns, key).map(|_| ()))
+                .is_some();
+            if valid {
+                out.valid += 1;
+            } else {
+                out.corrupt += 1;
+            }
+        }
+        out
+    }
+
     /// Counter snapshot (`bytes_used` is measured live from the
     /// directory, so it reflects other processes' writes and evictions).
     pub fn stats(&self) -> StoreStats {
@@ -572,6 +641,65 @@ impl ArtifactStore {
             bytes_used: self.bytes_used(),
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// Result of one [`ArtifactStore::fsck`] audit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FsckReport {
+    /// `.art` files examined.
+    pub scanned: usize,
+    /// Files that passed full header + checksum validation.
+    pub valid: usize,
+    /// Files that failed validation (torn, bit-rotted, truncated).
+    pub corrupt: usize,
+    /// Files whose name matches no known namespace (never ours to judge).
+    pub foreign: usize,
+}
+
+/// Validate one artifact image (header + payload) against its expected
+/// namespace and key; returns the payload slice when every check passes.
+/// Shared by the read path (which then deletes on failure) and
+/// [`ArtifactStore::fsck`] (which only tallies).
+fn validate_bytes(bytes: &[u8], ns: Namespace, key: u64) -> Option<&[u8]> {
+    if bytes.len() < HEADER_LEN {
+        return None;
+    }
+    let (header, payload) = bytes.split_at(HEADER_LEN);
+    let field = |a: usize, b: usize| -> u64 {
+        let mut buf = [0u8; 8];
+        buf[..b - a].copy_from_slice(&header[a..b]);
+        u64::from_le_bytes(buf)
+    };
+    let ok = header[0..8] == MAGIC
+        && field(8, 12) as u32 == FORMAT_VERSION
+        && field(12, 16) as u32 == ns.id()
+        && field(16, 24) == key
+        && field(24, 32) == payload.len() as u64
+        && field(32, 40) == fnv1a(payload);
+    ok.then_some(payload)
+}
+
+/// Injected bit rot: flip the last byte of the file in place (payload
+/// when one exists, else the checksum field) so the next validation must
+/// reject it. Best-effort — a missing file corrupts nothing.
+fn corrupt_in_place(path: &Path) {
+    let Ok(mut f) = std::fs::OpenOptions::new().read(true).write(true).open(path) else {
+        return;
+    };
+    let Ok(len) = f.metadata().map(|m| m.len()) else {
+        return;
+    };
+    if len == 0 {
+        return;
+    }
+    let pos = len - 1;
+    let mut b = [0u8; 1];
+    if f.seek(SeekFrom::Start(pos)).is_ok() && f.read_exact(&mut b).is_ok() {
+        b[0] ^= 0x01;
+        let _ = f
+            .seek(SeekFrom::Start(pos))
+            .and_then(|_| f.write_all(&b));
     }
 }
 
@@ -849,6 +977,115 @@ mod tests {
         let b = ArtifactStore::open(&dir).unwrap();
         assert_eq!(b.get(Namespace::CalibratedPlan, 42).unwrap(), payload);
         assert_eq!(b.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsck_tallies_valid_corrupt_and_foreign_without_touching_them() {
+        let dir = temp_store("fsck");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![3u8; 64];
+        s.put(Namespace::Plan, 1, &payload).unwrap();
+        s.put_scoped(Namespace::Weights, "m", 2, &payload).unwrap();
+        // Hand-corrupt one artifact and drop one foreign file.
+        s.put(Namespace::Plan, 9, &payload).unwrap();
+        let bad = s.path_of(Namespace::Plan, 9);
+        let mut bytes = std::fs::read(&bad).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&bad, &bytes).unwrap();
+        std::fs::write(dir.join("unrelated-0000000000000001.art"), b"not ours").unwrap();
+
+        let r = s.fsck();
+        assert_eq!(
+            (r.scanned, r.valid, r.corrupt, r.foreign),
+            (4, 2, 1, 1),
+            "{r:?}"
+        );
+        // fsck is read-only: the corrupt file survives, counters are
+        // untouched, and a real read still rejects + heals it.
+        assert!(bad.exists(), "fsck must never delete");
+        assert_eq!(s.stats().rejected, 0);
+        assert!(s.get(Namespace::Plan, 9).is_none());
+        assert_eq!(s.stats().rejected, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_torn_write_is_rejected_then_healed() {
+        use crate::faults::{FaultKind, FaultPlan, FaultSite, Trigger};
+        let dir = temp_store("torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        s.inject_faults(std::sync::Arc::new(FaultPlan::new(2).with_rule(
+            FaultSite::StoreWrite,
+            FaultKind::TornWrite,
+            Trigger::At(0),
+        )));
+        let payload: Vec<u8> = (0u8..=255).collect();
+        // The torn write "succeeds" and renames into place...
+        s.put(Namespace::Plan, 5, &payload).unwrap();
+        assert!(s.contains(Namespace::Plan, 5));
+        assert_eq!(s.fsck().corrupt, 1, "torn file must fail validation");
+        // ...but the next read catches it, deletes it, and the re-put
+        // (fault schedule exhausted) heals the store.
+        assert!(s.get(Namespace::Plan, 5).is_none());
+        assert_eq!(s.stats().rejected, 1);
+        s.put(Namespace::Plan, 5, &payload).unwrap();
+        assert_eq!(s.get(Namespace::Plan, 5).unwrap(), payload);
+        assert_eq!(s.fsck().corrupt, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_read_io_error_is_a_miss_not_a_rejection() {
+        // The PR-3 contract, now directly testable: a *transient* read
+        // failure (EIO, a vanished mount) is a cache miss — the caller
+        // recomputes — and must not delete the artifact, which is intact
+        // and serves once the transient clears.
+        use crate::faults::{FaultKind, FaultPlan, FaultSite, Trigger};
+        let dir = temp_store("eio");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![5u8; 80];
+        s.put(Namespace::Plan, 4, &payload).unwrap();
+        s.inject_faults(std::sync::Arc::new(FaultPlan::new(1).with_rule(
+            FaultSite::StoreRead,
+            FaultKind::IoError,
+            Trigger::At(0),
+        )));
+        assert!(s.get(Namespace::Plan, 4).is_none(), "transient error is a miss");
+        assert_eq!(s.stats().rejected, 0, "a transient error is not corruption");
+        assert!(s.contains(Namespace::Plan, 4), "the artifact must survive");
+        // The transient cleared (fault schedule exhausted): same handle,
+        // same key, served intact.
+        assert_eq!(s.get(Namespace::Plan, 4).unwrap(), payload);
+        assert_eq!(s.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_corruption_on_read_rejects_and_heals() {
+        use crate::faults::{FaultKind, FaultPlan, FaultSite, Trigger};
+        let dir = temp_store("bitrot");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![7u8; 100];
+        s.put(Namespace::Weights, 8, &payload).unwrap();
+        s.inject_faults(std::sync::Arc::new(FaultPlan::new(3).with_rule(
+            FaultSite::StoreRead,
+            FaultKind::CorruptBytes,
+            Trigger::At(0),
+        )));
+        // Read 0: the injector flips a payload byte on disk; validation
+        // must reject + delete rather than serve rotten bytes.
+        assert!(s.get(Namespace::Weights, 8).is_none());
+        assert_eq!(s.stats().rejected, 1);
+        assert!(!s.contains(Namespace::Weights, 8));
+        // Recompute-and-put heals; the next (clean) read serves.
+        s.put(Namespace::Weights, 8, &payload).unwrap();
+        assert_eq!(s.get(Namespace::Weights, 8).unwrap(), payload);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

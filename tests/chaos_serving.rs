@@ -1,0 +1,218 @@
+//! Chaos suite for the survivable serving layer (ISSUE 6): replay the
+//! Zipf serving trace under randomized-but-deterministic fault schedules
+//! across many seeds and assert the robustness invariants:
+//!
+//! * **No panic escapes the router.** Injected executor panics
+//!   (`FaultKind::ExecPanic`) are caught at the router boundary; a panic
+//!   that escaped would unwind a serving thread and fail the
+//!   `thread::scope` join inside [`Router::replay`] — i.e. fail the test.
+//! * **Accounting conserves.** `cold + warm + degraded + shed + failed
+//!   == issued` after every chaotic replay, and each sub-taxonomy agrees
+//!   with the fault injector's own counters.
+//! * **The store heals.** Every injected corruption (torn writes, bit
+//!   rot) is rejected and repaired by a later clean pass: `fsck` reports
+//!   zero corrupt artifacts at the end.
+//! * **Faults are deterministic and default-neutral.** The same seed
+//!   replays to bit-identical stats and latencies; an empty fault plan is
+//!   bit-identical to no fault plan at all (the zero-cost default —
+//!   `tests/concurrent_serving.rs` separately pins the no-fault parity
+//!   across 1 and 4 threads).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::faults::{FaultKind, FaultPlan};
+use nnv12::graph::zoo;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+use nnv12::store::ArtifactStore;
+
+fn store_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "nnv12-chaos-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn models() -> Vec<nnv12::graph::ModelGraph> {
+    vec![zoo::tiny_net(), zoo::micro_mobilenet(), zoo::squeezenet()]
+}
+
+/// Injected `ExecPanic` faults panic on purpose; the router catches them,
+/// but the default panic hook would still spray a backtrace per injection
+/// into the test output. Filter exactly those — every other panic (a real
+/// bug, a failed assertion) keeps the default reporting.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .is_some_and(|s| s.contains("injected executor panic"));
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+/// One chaotic lifetime per seed: build a faulted router over a faulted
+/// store, hammer it from 4 threads, check every accounting invariant,
+/// then prove a clean restart heals the store.
+#[test]
+fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
+    quiet_injected_panics();
+    let dev = profiles::meizu_16t();
+    let mut injected_total = 0usize;
+
+    for seed in [1u64, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233] {
+        let dir = store_dir(&format!("replay-{seed}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan = Arc::new(FaultPlan::chaos(seed));
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        store.inject_faults(plan.clone());
+        let router = Router::with_artifact_store(
+            &dev,
+            models(),
+            RouterConfig {
+                memory_budget: 6 << 20, // thrashes: cold starts stay frequent
+                execute_cold: true,
+                admission: Some(2),
+                faults: Some(plan.clone()),
+                ..Default::default()
+            },
+            store.clone(),
+        );
+
+        // Deadline between the fleet's cold estimates: the heavier models
+        // degrade when cold-due, the lighter ones run the gauntlet.
+        let names = router.model_names();
+        let colds: Vec<f64> = names
+            .iter()
+            .map(|m| router.session(m).unwrap().cold_ms())
+            .collect();
+        let deadline = colds.iter().fold(f64::MIN, |a, &b| a.max(b)) / 2.0;
+        let reqs = generate(&names, &WorkloadSpec {
+            n_requests: 96,
+            zipf_s: 0.8,
+            seed,
+            deadline_ms: Some(deadline),
+            ..Default::default()
+        });
+
+        // 4 serving threads; a panic escaping Router::request would fail
+        // the scope join inside replay. Every request resolves.
+        let served = router.replay(&reqs, 4);
+        assert_eq!(served, reqs.len(), "seed {seed}: every request must resolve");
+
+        let s = router.summary();
+        assert!(s.conserves(), "seed {seed}: accounting must conserve: {s:?}");
+        assert_eq!(s.issued, reqs.len(), "seed {seed}");
+        assert_eq!(
+            s.degraded,
+            s.degraded_deadline + s.degraded_breaker,
+            "seed {seed}: {s:?}"
+        );
+        // The router is the only caller of the execution backend, so its
+        // failure taxonomy must agree exactly with the injector's tally.
+        assert_eq!(
+            s.exec_failures,
+            plan.injected(FaultKind::ExecFail) + plan.injected(FaultKind::ExecPanic),
+            "seed {seed}: every injected exec fault is one counted attempt failure"
+        );
+        assert_eq!(
+            s.exec_panics,
+            plan.injected(FaultKind::ExecPanic),
+            "seed {seed}: every injected panic is caught and counted"
+        );
+        // The latency recorder and the atomic counters must agree.
+        assert_eq!(router.recorded("cold").len(), s.cold, "seed {seed}");
+        assert_eq!(router.recorded("warm").len(), s.warm, "seed {seed}");
+        assert_eq!(router.recorded("degraded").len(), s.degraded, "seed {seed}");
+        injected_total += plan.injected_total();
+        drop(router);
+
+        // Healing pass: a clean restart over the same directory re-reads
+        // every plan; corrupt ones are rejected + re-planned + re-put, so
+        // a final fsck finds zero corruption — injected or residual.
+        let clean = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let healed = Router::with_artifact_store(
+            &dev,
+            models(),
+            RouterConfig { memory_budget: 6 << 20, ..Default::default() },
+            clean.clone(),
+        );
+        drop(healed);
+        let r = clean.fsck();
+        assert_eq!(r.corrupt, 0, "seed {seed}: store must heal, got {r:?}");
+        assert!(r.valid >= models().len(), "seed {seed}: every plan persisted: {r:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert!(
+        injected_total > 0,
+        "the chaos schedule must actually inject faults across the seed sweep"
+    );
+}
+
+#[test]
+fn same_seed_replays_bit_identically() {
+    quiet_injected_panics();
+    let dev = profiles::meizu_16t();
+    let run = || {
+        let plan = Arc::new(FaultPlan::chaos(0xC1A05));
+        let router = Router::new(&dev, models(), RouterConfig {
+            memory_budget: 6 << 20,
+            execute_cold: true,
+            faults: Some(plan),
+            ..Default::default()
+        });
+        let reqs = generate(&router.model_names(), &WorkloadSpec {
+            n_requests: 80,
+            ..Default::default()
+        });
+        // Single-threaded: the fault schedule is a pure function of the
+        // per-site call count, so the whole replay is deterministic.
+        router.replay(&reqs, 1);
+        let bits = |label: &str| -> Vec<u64> {
+            router.recorded(label).iter().map(|l| l.to_bits()).collect()
+        };
+        (router.summary(), bits("cold"), bits("warm"), bits("degraded"))
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "stats must replay bit-identically");
+    assert_eq!(a.1, b.1, "cold latencies must replay bit-identically");
+    assert_eq!(a.2, b.2, "warm latencies must replay bit-identically");
+    assert_eq!(a.3, b.3, "degraded latencies must replay bit-identically");
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_none() {
+    // The zero-cost default: threading a fault plan with no rules through
+    // the backend must not perturb a single bit of the serving results.
+    let dev = profiles::meizu_16t();
+    let run = |faults: Option<Arc<FaultPlan>>| {
+        let router = Router::new(&dev, models(), RouterConfig {
+            memory_budget: 6 << 20,
+            execute_cold: true,
+            faults,
+            ..Default::default()
+        });
+        let reqs = generate(&router.model_names(), &WorkloadSpec {
+            n_requests: 80,
+            ..Default::default()
+        });
+        router.replay(&reqs, 1);
+        let bits: Vec<u64> =
+            router.recorded("cold").iter().map(|l| l.to_bits()).collect();
+        (router.summary(), bits)
+    };
+    let with_empty = run(Some(Arc::new(FaultPlan::new(7))));
+    let without = run(None);
+    assert_eq!(with_empty.0, without.0);
+    assert_eq!(with_empty.1, without.1);
+    assert_eq!(with_empty.0.degraded + with_empty.0.shed + with_empty.0.failed, 0);
+}

@@ -86,6 +86,55 @@ fn real_backend_serves_concurrent_cold_runs_via_executor_thread() {
 }
 
 #[test]
+fn real_backend_respawns_executor_after_injected_panic() {
+    // The PR 5 healing path, driven deterministically: an injected panic
+    // on the executor thread (exactly where a PJRT panic would land)
+    // kills it; the next run must detect the dead channel, respawn the
+    // executor, and serve normally.
+    let Some(_) = artifacts("tinynet") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use nnv12::engine::{Engine, RealBackend};
+    use nnv12::faults::{FaultKind, FaultPlan, FaultSite, Trigger};
+    // The injected panic is expected: keep its backtrace out of the test
+    // output, without touching reporting for any real failure.
+    let default = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<&str>()
+            .is_some_and(|s| s.contains("injected executor panic"));
+        if !injected {
+            default(info);
+        }
+    }));
+    let plan = std::sync::Arc::new(FaultPlan::new(9).with_rule(
+        FaultSite::ExecRun,
+        FaultKind::ExecPanic,
+        Trigger::At(0),
+    ));
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::builder()
+        .device(nnv12::device::profiles::meizu_16t())
+        .backend(
+            RealBackend::new(root, opts(VariantPref::Auto, false, true)).with_faults(plan),
+        )
+        .build();
+    let session = engine.load(zoo::tiny_net());
+    let first = session.run_cold();
+    let err = first.expect_err("injected panic must surface as an error, not a panic");
+    assert!(
+        err.contains("dropped the reply"),
+        "executor death must be reported, got: {err}"
+    );
+    // Fault schedule exhausted: the respawned executor serves.
+    let second = session.run_cold().expect("respawned executor must serve");
+    assert!(second.latency_ms > 0.0);
+    let _ = std::panic::take_hook();
+}
+
+#[test]
 fn manifest_matches_rust_zoo() {
     for (name, builder) in [("tinynet", zoo::tiny_net as fn() -> _), ("micro-mobilenet", zoo::micro_mobilenet)] {
         let Some(dir) = artifacts(name) else {

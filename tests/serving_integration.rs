@@ -5,7 +5,7 @@
 
 use nnv12::device::profiles;
 use nnv12::graph::zoo;
-use nnv12::serving::router::{Outcome, RouterConfig, ServeEngine};
+use nnv12::serving::router::{RouterConfig, ServeEngine};
 use nnv12::serving::{generate, Router, WorkloadSpec};
 use nnv12::util::prop;
 use nnv12::util::rng::Rng;
@@ -71,7 +71,7 @@ fn nnv12_total_latency_beats_ncnn_under_thrash() {
         });
         let mut sum = 0.0;
         for q in &reqs {
-            sum += r.request(&q.model).unwrap().latency_ms;
+            sum += r.request(&q.model).unwrap().served().unwrap().latency_ms;
         }
         assert!(r.stats_cold() > 30, "workload must thrash ({} colds)", r.stats_cold());
         sum
@@ -99,7 +99,7 @@ fn prop_lru_never_exceeds_budget_after_settling() {
         let names = r.model_names();
         for _ in 0..rng.range(10, 120) {
             let m = rng.choose(&names).clone();
-            let Outcome { latency_ms, .. } = r.request(&m).unwrap();
+            let latency_ms = r.request(&m).unwrap().served().unwrap().latency_ms;
             if latency_ms <= 0.0 {
                 return Err(format!("non-positive latency for {m}"));
             }
@@ -134,13 +134,14 @@ fn prop_warm_requests_never_slower_than_cold() {
         for _ in 0..80 {
             let m = rng.choose(&names).clone();
             let o = r.request(&m).unwrap();
-            if o.cold {
-                cold_of.insert(m.clone(), o.latency_ms);
+            let served = *o.served().expect("no-fault request always serves");
+            if o.is_cold() {
+                cold_of.insert(m.clone(), served.latency_ms);
             } else if let Some(&c) = cold_of.get(&m) {
-                if o.latency_ms > c + 1e-9 {
+                if served.latency_ms > c + 1e-9 {
                     return Err(format!(
                         "{m}: warm {} slower than cold {c}",
-                        o.latency_ms
+                        served.latency_ms
                     ));
                 }
             }
