@@ -1,0 +1,105 @@
+//! Bench: cross-device plan transfer — warm seeded search vs same-run
+//! cold search ([`nnv12::fleet`], ISSUE 7).
+//!
+//! Warms a fleet store with one published resnet50 plan, then times the
+//! two search modes against each other on the same device in the same
+//! process:
+//!
+//! * `transfer-cold/resnet50` — the full cold search (greedy seed + the
+//!   multi-pass coordinate descent), via `schedule_seeded` with an empty
+//!   seed so both cases share the exact same entry path.
+//! * `transfer-seeded/resnet50` — the warm path a fleet store enables:
+//!   the nearest-donor plan (distance 0 here — the steady state, where
+//!   the store already holds this device's plan) mapped, re-priced by
+//!   patched price table, confirmed, and polished with at most one short
+//!   descent pass over only the transferred layers.
+//!
+//! CI ratchets seeded against cold measured in the same run
+//! (`BENCH_transfer.json`; cap in `BENCH_baseline.json`): the seeded
+//! search skips the cold descent's full per-pass screening of every
+//! searchable layer, so it must stay measurably cheaper — if it does
+//! not, the transfer path has decayed into "cold search plus overhead"
+//! and the ratchet hard-fails on any hardware.
+//!
+//! A true cross-device transfer (meizu16t donor → meizu18pro target) is
+//! also exercised and quality-guarded (never worse than the target's own
+//! baseline — that bound is structural), but not time-ratcheted: whether
+//! a foreign seed is *accepted* depends on the profiles, and a rejected
+//! seed legitimately falls back to the full cold search.
+
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::fleet::PlanTransfer;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::heuristic::{schedule_seeded, SchedulerConfig};
+use nnv12::store::ArtifactStore;
+use nnv12::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("plan_transfer");
+    let dev = profiles::meizu_16t();
+    let target = profiles::meizu_18_pro();
+    let g = zoo::resnet50();
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+
+    let dir = std::env::temp_dir().join(format!(
+        "nnv12-bench-transfer-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let transfer = PlanTransfer::new(Arc::new(ArtifactStore::open(&dir).unwrap()));
+
+    // Warm the fleet store: the first device pays the cold search once
+    // and publishes the result.
+    let first = transfer.plan(&dev, &g, &reg, &cfg, "full");
+    assert!(first.donor.is_none(), "fresh store has no donor");
+
+    // The warm seed: the store's nearest donor for this device is its own
+    // published plan (distance 0) — the steady state of a fleet store.
+    let (donor, donor_plan) = transfer
+        .nearest_donor(&dev, &g, &reg, &cfg, "full")
+        .expect("published plan must be enumerable");
+    assert_eq!(donor.distance, 0.0);
+    let seed = donor_plan.choices.clone();
+
+    // Outside the timed region: the distance-0 seed must be accepted and
+    // the result can never lose to the greedy baseline.
+    let warm = schedule_seeded(&dev, &g, &reg, &cfg, &seed);
+    assert!(warm.seeded, "distance-0 seed must be accepted");
+    assert!(warm.scheduled.schedule.makespan <= warm.baseline_ms + 1e-9);
+
+    b.case("transfer-cold/resnet50", || {
+        let o = schedule_seeded(&dev, &g, &reg, &cfg, &[]);
+        assert!(!o.seeded);
+    });
+    b.case("transfer-seeded/resnet50", || {
+        let o = schedule_seeded(&dev, &g, &reg, &cfg, &seed);
+        assert!(o.seeded);
+    });
+
+    // True cross-device transfer through the store (quality-guarded,
+    // not time-ratcheted — see module docs).
+    let xdev = transfer.plan(&target, &g, &reg, &cfg, "full");
+    let xdonor = xdev.donor.as_ref().expect("warm store must offer a donor");
+    assert!(
+        xdev.outcome.scheduled.schedule.makespan <= xdev.outcome.baseline_ms + 1e-9,
+        "transfer must never lose to the target's own baseline"
+    );
+    println!(
+        "cross-device {} -> {}: donor at distance {:.3}, seed {}, makespan {:.2} ms (baseline {:.2} ms)",
+        xdonor.device,
+        target.name,
+        xdonor.distance,
+        if xdev.outcome.seeded { "accepted" } else { "rejected (cold fallback)" },
+        xdev.outcome.scheduled.schedule.makespan,
+        xdev.outcome.baseline_ms,
+    );
+
+    // Snapshot before any further guard, so a failure still leaves the
+    // measurements behind for CI diagnosis.
+    b.finish_to("BENCH_transfer.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -95,6 +95,11 @@ fn main() {
         "open-loop sojourn over {} requests (accel 2000x): p50 {:.3} ms, p90 {:.3} ms, p99 {:.3} ms",
         soj.n, soj.p50, soj.p90, soj.p99
     );
+    assert!(soj.n > 0, "open-loop replay must record sojourns");
+    // Registered as a value case so the CI ratchet can bound it against
+    // the same-run serve-1t latency (runner-normalized): a p99 blow-up
+    // under open-loop load means queueing collapse, not just slower code.
+    b.case_value("serve-openloop-p99/zoo", soj.p99);
 
     // Write the snapshot BEFORE the guards: a failed guard must still
     // leave BENCH_serving.json behind for CI diagnosis (the workflow

@@ -28,6 +28,12 @@ pub fn by_name(name: &str) -> Option<DeviceProfile> {
     })
 }
 
+/// Every profile of the fleet, CPU phones then GPU boards — the device
+/// set `FleetPlanner` and `repro fleet` plan across by default.
+pub fn all_devices() -> Vec<DeviceProfile> {
+    ALL_DEVICES.iter().map(|n| by_name(n).unwrap()).collect()
+}
+
 /// The four CPU (phone) devices.
 pub fn cpu_devices() -> Vec<DeviceProfile> {
     vec![meizu_16t(), pixel_5(), redmi_9(), meizu_18_pro()]
@@ -185,6 +191,12 @@ mod tests {
             assert!(d.n_cpu() > 0);
         }
         assert!(by_name("iphone").is_none());
+    }
+
+    #[test]
+    fn all_devices_matches_the_name_list() {
+        let names: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+        assert_eq!(names, ALL_DEVICES);
     }
 
     #[test]

@@ -78,6 +78,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::device::DeviceProfile;
+use crate::fleet::PlanTransfer;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::cache::{CalibratedPlanCache, PlanCache};
@@ -111,6 +112,10 @@ pub(crate) struct Inner {
     pub(crate) plan_cache: Arc<PlanCache>,
     pub(crate) calibrated_cache: Arc<CalibratedPlanCache>,
     pub(crate) store: Option<Arc<ArtifactStore>>,
+    /// Cross-device plan transfer over the store's fleet namespace
+    /// ([`EngineBuilder::fleet_transfer`]); substitutes a nearest-profile
+    /// seeded search for the cold search on full plan-cache misses.
+    pub(crate) fleet: Option<Arc<PlanTransfer>>,
     pub(crate) backend: Box<dyn ExecBackend>,
     residency: Mutex<Residency>,
     next_session: AtomicU64,
@@ -266,8 +271,15 @@ impl Engine {
                     &inner.plan_cache,
                 );
                 let sched = &sched_cfg;
+                let fleet = inner.fleet.as_deref();
                 par_map(&graphs, move |_, g| {
-                    (cache.get_or_plan(dev, g, registry, sched, tag), dev.clone())
+                    let s = match fleet {
+                        Some(f) => cache.get_or_plan_with(dev, g, registry, sched, tag, || {
+                            f.plan(dev, g, registry, sched, tag).outcome.scheduled
+                        }),
+                        None => cache.get_or_plan(dev, g, registry, sched, tag),
+                    };
+                    (s, dev.clone())
                 })
             };
         graphs
@@ -321,13 +333,34 @@ impl Engine {
                 inner.registry_tag,
             )
         } else {
-            let s = inner.plan_cache.get_or_plan(
-                &inner.dev,
-                graph,
-                &inner.registry,
-                &self.effective_sched(),
-                inner.registry_tag,
-            );
+            let cfg = self.effective_sched();
+            let s = match &inner.fleet {
+                // Full misses (memory and disk) go through the fleet
+                // transfer path: seed from the nearest profile's plan
+                // when one is published, cold search otherwise. Either
+                // way the result is confirmed on this device and cached
+                // under the ordinary plan key.
+                Some(fleet) => inner.plan_cache.get_or_plan_with(
+                    &inner.dev,
+                    graph,
+                    &inner.registry,
+                    &cfg,
+                    inner.registry_tag,
+                    || {
+                        fleet
+                            .plan(&inner.dev, graph, &inner.registry, &cfg, inner.registry_tag)
+                            .outcome
+                            .scheduled
+                    },
+                ),
+                None => inner.plan_cache.get_or_plan(
+                    &inner.dev,
+                    graph,
+                    &inner.registry,
+                    &cfg,
+                    inner.registry_tag,
+                ),
+            };
             (s, inner.dev.clone())
         }
     }
@@ -369,6 +402,13 @@ impl Engine {
     /// ([`EngineBuilder::artifact_store`]).
     pub fn artifact_store(&self) -> Option<&Arc<ArtifactStore>> {
         self.inner.store.as_ref()
+    }
+
+    /// The cross-device plan-transfer handle, when this engine was built
+    /// with [`EngineBuilder::fleet_transfer`] over an artifact store
+    /// (counters: transfer hits / rejected seeds / donor misses).
+    pub fn fleet(&self) -> Option<&Arc<PlanTransfer>> {
+        self.inner.fleet.as_ref()
     }
 
     /// Counter snapshot of the artifact store (hits, misses, evictions,
@@ -423,6 +463,7 @@ pub struct EngineBuilder {
     store_dir: Option<PathBuf>,
     store_cap: Option<u64>,
     shared_store: Option<Arc<ArtifactStore>>,
+    fleet_transfer: bool,
 }
 
 impl Default for EngineBuilder {
@@ -440,6 +481,7 @@ impl Default for EngineBuilder {
             store_dir: None,
             store_cap: None,
             shared_store: None,
+            fleet_transfer: false,
         }
     }
 }
@@ -536,6 +578,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Plan cold starts through cross-device transfer
+    /// ([`crate::fleet::PlanTransfer`]): on a full plan-cache miss
+    /// (memory and disk), look up the nearest-profile plan published in
+    /// the store's fleet namespace and run the seeded search instead of
+    /// the cold one; the engine's own results are published back for
+    /// other devices. Requires an artifact store
+    /// ([`EngineBuilder::artifact_store`] or
+    /// [`EngineBuilder::artifact_store_shared`]) — without one there is
+    /// nowhere to publish to or draw from, and the flag is a no-op.
+    pub fn fleet_transfer(mut self, on: bool) -> EngineBuilder {
+        self.fleet_transfer = on;
+        self
+    }
+
     /// Bound the artifact store opened by
     /// [`EngineBuilder::artifact_store`] to `bytes` total, evicting
     /// least-recently-used artifacts past the cap (ignored for shared or
@@ -593,6 +649,10 @@ impl EngineBuilder {
         } else {
             "full"
         };
+        let fleet = match (&store, self.fleet_transfer) {
+            (Some(s), true) => Some(Arc::new(PlanTransfer::new(s.clone()))),
+            _ => None,
+        };
         Ok(Engine {
             inner: Arc::new(Inner {
                 dev,
@@ -604,6 +664,7 @@ impl EngineBuilder {
                 plan_cache,
                 calibrated_cache,
                 store,
+                fleet,
                 backend: self.backend.unwrap_or_else(|| Box::new(SimBackend::nnv12())),
                 residency: Mutex::new(Residency {
                     budget: self.memory_budget,
@@ -653,6 +714,48 @@ mod tests {
         assert!(engine.mem_used() > 0);
         drop(s);
         assert_eq!(engine.mem_used(), 0);
+    }
+
+    #[test]
+    fn fleet_transfer_crosses_devices_through_the_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "nnv12-engine-fleet-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // First device: nothing to draw from — the cold search runs and
+        // its plan is published into the fleet namespace.
+        let a = Engine::builder()
+            .device(profiles::meizu_16t())
+            .artifact_store(&dir)
+            .fleet_transfer(true)
+            .build();
+        a.load(zoo::tiny_net());
+        let fa = a.fleet().expect("fleet handle when flag is set");
+        assert_eq!((fa.hits(), fa.rejected(), fa.misses()), (0, 0, 1));
+
+        // A different device over the same store is a full plan-cache
+        // miss (different plan key), so the cold start goes through the
+        // transfer path and finds the first device's published plan as a
+        // donor — accepted or rejected, but never a donor miss.
+        let b = Engine::builder()
+            .device(profiles::pixel_5())
+            .artifact_store(&dir)
+            .fleet_transfer(true)
+            .build();
+        b.load(zoo::tiny_net());
+        let fb = b.fleet().unwrap();
+        assert_eq!(fb.misses(), 0, "the donor published by engine A must be found");
+        assert_eq!(fb.hits() + fb.rejected(), 1);
+
+        // Without the flag (or without a store) there is no fleet handle.
+        assert!(Engine::builder()
+            .device(profiles::meizu_16t())
+            .fleet_transfer(true)
+            .build()
+            .fleet()
+            .is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

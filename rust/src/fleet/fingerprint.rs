@@ -1,0 +1,348 @@
+//! Canonical device fingerprints: identity + similarity for
+//! [`DeviceProfile`]s.
+//!
+//! The fleet needs two different notions of "device":
+//!
+//! * **Identity** — an exact, stable key for "this plan was searched on
+//!   this device". [`DeviceFingerprint::key`] hashes every profile field
+//!   the cost model reads (FNV-1a over a canonical byte layout, so the
+//!   key survives processes and builds — unlike `DefaultHasher`-based
+//!   fingerprints it is stable by construction).
+//! * **Similarity** — "how alike will two devices' plans be?".
+//!   [`DeviceFingerprint::distance`] compares *scale-free* features:
+//!   within-device ratios (big:little compute, disk and memory rates per
+//!   GFLOP, the Fig. 6 little-core slowdowns) rather than absolute
+//!   rates, so a device that is a uniformly-scaled clone of another —
+//!   same silicon, different clock — is at distance ~0 and is the ideal
+//!   plan donor, while a device with a different *shape* (GPU vs CPU,
+//!   inverted compute:IO balance) is far away even at equal raw speed.
+//!   Kernel choices depend on the shape of the trade-off, not its
+//!   absolute scale, which is exactly what transfer cares about.
+
+use crate::device::DeviceProfile;
+use crate::store::fnv1a;
+use crate::util::json::Json;
+
+/// Additive distance charged when exactly one of two devices executes on
+/// a GPU: their plans schedule different op sets (driver init, pipeline
+/// creation), so they are structurally poor donors for each other no
+/// matter how close the CPU features look.
+const GPU_MISMATCH_PENALTY: f64 = 4.0;
+
+/// Additive distance per feature that is positive on one device and zero
+/// on the other (e.g. `big_gflops` on jetson-nano, which has no big CPU
+/// cores): the log-ratio is undefined there, and "has the resource" vs
+/// "doesn't" is a shape difference worth a fixed charge.
+const ZERO_FEATURE_PENALTY: f64 = 2.0;
+
+/// Canonical capture of every [`DeviceProfile`] field the scheduler's
+/// cost model reads, in a form that hashes stably ([`key`]), serializes
+/// ([`to_json`]/[`from_json`]), and compares scale-invariantly
+/// ([`distance`]).
+///
+/// [`key`]: DeviceFingerprint::key
+/// [`to_json`]: DeviceFingerprint::to_json
+/// [`from_json`]: DeviceFingerprint::from_json
+/// [`distance`]: DeviceFingerprint::distance
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceFingerprint {
+    pub name: String,
+    pub n_big: usize,
+    pub n_little: usize,
+    pub big_gflops: f64,
+    pub little_gflops: f64,
+    pub disk_mbps: f64,
+    pub mem_eff_gbps: f64,
+    pub read_little_slowdown: f64,
+    pub transform_little_slowdown: f64,
+    /// GPU throughput when the device executes on a GPU; `None` for
+    /// CPU-only devices. Presence participates in both identity and
+    /// distance (see [`GPU_MISMATCH_PENALTY`]).
+    pub gpu_gflops: Option<f64>,
+}
+
+impl DeviceFingerprint {
+    /// Capture a device profile.
+    pub fn of(dev: &DeviceProfile) -> DeviceFingerprint {
+        DeviceFingerprint {
+            name: dev.name.to_string(),
+            n_big: dev.n_big,
+            n_little: dev.n_little,
+            big_gflops: dev.big_gflops,
+            little_gflops: dev.little_gflops,
+            disk_mbps: dev.disk_mbps,
+            mem_eff_gbps: dev.mem_eff_gbps,
+            read_little_slowdown: dev.read_little_slowdown,
+            transform_little_slowdown: dev.transform_little_slowdown,
+            gpu_gflops: dev.gpu.as_ref().map(|g| g.gflops),
+        }
+    }
+
+    /// Stable identity key: FNV-1a over a canonical byte layout of every
+    /// field (floats by bit pattern, so equal keys mean bit-equal
+    /// profiles). This is the fleet store's artifact key — one slot per
+    /// device per model scope.
+    pub fn key(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.name.len() + 80);
+        bytes.extend_from_slice(self.name.as_bytes());
+        bytes.push(0x1f); // separator: name can't bleed into the numbers
+        for v in [self.n_big as u64, self.n_little as u64] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [
+            self.big_gflops,
+            self.little_gflops,
+            self.disk_mbps,
+            self.mem_eff_gbps,
+            self.read_little_slowdown,
+            self.transform_little_slowdown,
+        ] {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        match self.gpu_gflops {
+            Some(g) => {
+                bytes.push(1);
+                bytes.extend_from_slice(&g.to_bits().to_le_bytes());
+            }
+            None => bytes.push(0),
+        }
+        fnv1a(&bytes)
+    }
+
+    /// Scale-invariant dissimilarity: the sum of |ln(a/b)| over the
+    /// derived shape features of both devices, plus fixed penalties for
+    /// presence mismatches (GPU vs CPU execution, a resource one side
+    /// lacks entirely). Properties, by construction:
+    ///
+    /// * `d(a, a) == 0` and `d(a, b) == d(b, a)`;
+    /// * multiplying *all* of one device's rates (`*_gflops`, `disk_mbps`,
+    ///   `mem_eff_gbps`) by one constant leaves its distances unchanged —
+    ///   the features are within-device ratios;
+    /// * always finite, even against profiles with zero-valued fields
+    ///   (jetson-nano's absent big cores): zero-vs-zero contributes 0,
+    ///   zero-vs-positive a fixed [`ZERO_FEATURE_PENALTY`].
+    ///
+    /// The name deliberately does not participate: two identically-shaped
+    /// profiles under different names are perfect donors for each other.
+    pub fn distance(&self, other: &DeviceFingerprint) -> f64 {
+        let mut d = 0.0;
+        for (a, b) in [
+            // Compute shape: how lopsided is big vs little, GPU vs CPU.
+            (self.big_over_little(), other.big_over_little()),
+            (self.gpu_over_little(), other.gpu_over_little()),
+            // IO/memory shape: bytes moved per unit of little-core compute
+            // — the §3.1 read/transform-vs-exec trade-off that decides
+            // which kernels win cold.
+            (self.disk_per_gflop(), other.disk_per_gflop()),
+            (self.mem_per_gflop(), other.mem_per_gflop()),
+            // The Fig. 6 little-core slowdowns are already ratios.
+            (self.read_little_slowdown, other.read_little_slowdown),
+            (self.transform_little_slowdown, other.transform_little_slowdown),
+        ] {
+            d += log_ratio(a, b);
+        }
+        // Core counts shape the pipelining (bundle round-robin width);
+        // +1 keeps the log finite for zero-core classes.
+        d += log_ratio((1 + self.n_big) as f64, (1 + other.n_big) as f64);
+        d += log_ratio((1 + self.n_little) as f64, (1 + other.n_little) as f64);
+        if self.gpu_gflops.is_some() != other.gpu_gflops.is_some() {
+            d += GPU_MISMATCH_PENALTY;
+        }
+        d
+    }
+
+    fn big_over_little(&self) -> f64 {
+        safe_ratio(self.big_gflops, self.little_gflops)
+    }
+
+    fn gpu_over_little(&self) -> f64 {
+        safe_ratio(self.gpu_gflops.unwrap_or(0.0), self.little_gflops)
+    }
+
+    fn disk_per_gflop(&self) -> f64 {
+        safe_ratio(self.disk_mbps, self.little_gflops)
+    }
+
+    fn mem_per_gflop(&self) -> f64 {
+        safe_ratio(self.mem_eff_gbps, self.little_gflops)
+    }
+
+    /// Serialize for artifact payloads. The float round trip through
+    /// [`Json`] is exact (shortest-roundtrip formatting), so
+    /// `from_json(to_json()).key() == key()` bit-for-bit — the calibrated
+    /// cache's view check depends on this.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("n_big", Json::from(self.n_big)),
+            ("n_little", Json::from(self.n_little)),
+            ("big_gflops", Json::from(self.big_gflops)),
+            ("little_gflops", Json::from(self.little_gflops)),
+            ("disk_mbps", Json::from(self.disk_mbps)),
+            ("mem_eff_gbps", Json::from(self.mem_eff_gbps)),
+            ("read_little_slowdown", Json::from(self.read_little_slowdown)),
+            ("transform_little_slowdown", Json::from(self.transform_little_slowdown)),
+            (
+                "gpu_gflops",
+                self.gpu_gflops.map_or(Json::Null, Json::from),
+            ),
+        ])
+    }
+
+    /// Parse a fingerprint document; `None` for anything else — including
+    /// the pre-fingerprint `{n_big, n_little}` device views old
+    /// calibrated artifacts carry, which is how those heal.
+    pub fn from_json(j: &Json) -> Option<DeviceFingerprint> {
+        Some(DeviceFingerprint {
+            name: j.get("name").as_str()?.to_string(),
+            n_big: j.get("n_big").as_usize()?,
+            n_little: j.get("n_little").as_usize()?,
+            big_gflops: j.get("big_gflops").as_f64()?,
+            little_gflops: j.get("little_gflops").as_f64()?,
+            disk_mbps: j.get("disk_mbps").as_f64()?,
+            mem_eff_gbps: j.get("mem_eff_gbps").as_f64()?,
+            read_little_slowdown: j.get("read_little_slowdown").as_f64()?,
+            transform_little_slowdown: j.get("transform_little_slowdown").as_f64()?,
+            gpu_gflops: match j.get("gpu_gflops") {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            },
+        })
+    }
+}
+
+/// `a / b` with non-finite and divide-by-zero cases collapsed to 0.0, so
+/// every feature is a finite non-negative number and [`log_ratio`]'s
+/// zero-handling covers all degenerate profiles.
+fn safe_ratio(a: f64, b: f64) -> f64 {
+    if a > 0.0 && b > 0.0 {
+        let r = a / b;
+        if r.is_finite() {
+            r
+        } else {
+            0.0
+        }
+    } else {
+        0.0
+    }
+}
+
+/// |ln(a/b)| for positive pairs; 0 when both sides lack the feature; a
+/// fixed [`ZERO_FEATURE_PENALTY`] when only one does.
+fn log_ratio(a: f64, b: f64) -> f64 {
+    if a > 0.0 && b > 0.0 {
+        (a / b).ln().abs()
+    } else if a <= 0.0 && b <= 0.0 {
+        0.0
+    } else {
+        ZERO_FEATURE_PENALTY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    fn all() -> Vec<DeviceFingerprint> {
+        profiles::ALL_DEVICES
+            .iter()
+            .map(|n| DeviceFingerprint::of(&profiles::by_name(n).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn identity_zero_symmetric_finite() {
+        let fps = all();
+        for a in &fps {
+            assert_eq!(a.distance(a), 0.0, "{}: self-distance", a.name);
+            for b in &fps {
+                let d = a.distance(b);
+                assert!(d.is_finite() && d >= 0.0, "{} vs {}: {d}", a.name, b.name);
+                assert_eq!(d.to_bits(), b.distance(a).to_bits(), "symmetry");
+                if a.name != b.name {
+                    assert!(d > 0.0, "{} vs {} indistinguishable", a.name, b.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distance_is_scale_invariant() {
+        // A uniformly overclocked clone — every rate ×1.7 — is the same
+        // *shape* of device: distance to the original stays 0, and its
+        // distances to everything else match the original's exactly.
+        let mut dev = profiles::pixel_5();
+        let base = DeviceFingerprint::of(&dev);
+        dev.big_gflops *= 1.7;
+        dev.little_gflops *= 1.7;
+        dev.disk_mbps *= 1.7;
+        dev.mem_eff_gbps *= 1.7;
+        let scaled = DeviceFingerprint::of(&dev);
+        assert!(scaled.distance(&base) < 1e-12, "{}", scaled.distance(&base));
+        for other in all() {
+            let d0 = base.distance(&other);
+            let d1 = scaled.distance(&other);
+            assert!((d0 - d1).abs() < 1e-9, "{}: {d0} vs {d1}", other.name);
+        }
+        // But identity is exact: the clone is still a different device.
+        assert_ne!(scaled.key(), base.key());
+    }
+
+    #[test]
+    fn gpu_mismatch_dominates_over_cpu_similarity() {
+        // Any CPU-only phone is at least the GPU penalty away from any
+        // GPU device — transfer should prefer the other Jetson.
+        let fps = all();
+        for a in &fps {
+            for b in &fps {
+                if a.gpu_gflops.is_some() != b.gpu_gflops.is_some() {
+                    assert!(
+                        a.distance(b) >= GPU_MISMATCH_PENALTY,
+                        "{} vs {}",
+                        a.name,
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_fields_never_poison_the_metric() {
+        // jetson-nano has no big CPU cores (n_big = 0, big_gflops = 0):
+        // every distance involving it must still be finite and symmetric.
+        let nano = DeviceFingerprint::of(&profiles::jetson_nano());
+        assert_eq!(nano.distance(&nano), 0.0);
+        for other in all() {
+            let d = nano.distance(&other);
+            assert!(d.is_finite(), "nano vs {}: {d}", other.name);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_identity() {
+        for fp in all() {
+            let back = DeviceFingerprint::from_json(&Json::parse(
+                &fp.to_json().to_pretty(),
+            )
+            .unwrap())
+            .unwrap();
+            assert_eq!(back, fp);
+            assert_eq!(back.key(), fp.key(), "{}: key must survive JSON", fp.name);
+        }
+        // The old ad-hoc device view is NOT a fingerprint.
+        let old = Json::obj(vec![("n_big", Json::from(4usize)), ("n_little", Json::from(4usize))]);
+        assert!(DeviceFingerprint::from_json(&old).is_none());
+    }
+
+    #[test]
+    fn keys_are_distinct_across_the_fleet() {
+        let fps = all();
+        for (i, a) in fps.iter().enumerate() {
+            for b in &fps[i + 1..] {
+                assert_ne!(a.key(), b.key(), "{} vs {}", a.name, b.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Fleet planning: cross-device plan transfer with nearest-profile
+//! seeding, and a fleet-wide coverage report.
+//!
+//! A fleet of edge devices running the same model zoo repeats nearly the
+//! same plan search on every device: the §3.3 combination search is
+//! deterministic and its result depends only on the device's *cost
+//! shape* (compute vs IO balance, big:little ratios), which varies far
+//! less across a device family than across families. This module turns
+//! that redundancy into wall-clock savings with three pieces:
+//!
+//! * [`DeviceFingerprint`] — a canonical capture of every profile field
+//!   the cost model reads, with a stable identity key (FNV-1a over a
+//!   canonical byte layout) and a *scale-invariant* distance metric over
+//!   within-device ratios. Identity keys the fleet store; distance picks
+//!   donors.
+//! * [`PlanTransfer`] — publish every searched plan into the store's
+//!   fleet namespace (scoped by model fingerprint, keyed by device
+//!   fingerprint); on a later miss, fetch the nearest-profile donor plan
+//!   and run a **seeded search**: re-price the donor's kernel choices on
+//!   the target with exact per-layer price-table patches, keep the seed
+//!   only if its confirmed makespan is no worse than the target's own
+//!   greedy baseline, then run one short descent pass over only the
+//!   transferred layers. A transfer is *rejected* — falling back to the
+//!   full cold search — when the seed doesn't map structurally (layer
+//!   count mismatch) or re-prices worse than the baseline. Either way
+//!   the final plan is confirmed on the target and never worse than the
+//!   cold search's starting point; transfer changes how fast a plan is
+//!   *found*, never how bad a plan is allowed to *be*.
+//! * [`FleetPlanner`] — plan a zoo across every profile in a
+//!   nearest-profile device tour (families adjacent, so each family pays
+//!   one cold search), models in parallel per device, auditing every
+//!   cell against a same-run cold search and keeping the better plan.
+//!   The [`FleetReport`] states the transfer hit-rate, descent passes
+//!   saved, and per-cell transfer-vs-cold quality ratios.
+
+mod fingerprint;
+mod planner;
+mod transfer;
+
+pub use fingerprint::DeviceFingerprint;
+pub use planner::{FleetCell, FleetPlanner, FleetReport};
+pub use transfer::{Donor, PlanTransfer, TransferResult};

@@ -1,0 +1,367 @@
+//! Fleet-wide planning: every model in a zoo × every device profile,
+//! with cross-device plan transfer doing the heavy lifting.
+//!
+//! The planner walks the devices in a *nearest-profile tour* (greedy
+//! nearest-neighbor chain over [`DeviceFingerprint::distance`]), so that
+//! by the time a device plans, the fleet store already holds a plan from
+//! the most similar device that came before it — families share seeds:
+//! the first phone pays the cold search, the phones after it seed from
+//! it; the first Jetson pays once for the GPU family. Within one device,
+//! models plan in parallel ([`par_map`]) — they live in disjoint store
+//! scopes and the transfer counters are atomic.
+//!
+//! Every cell also runs the *same-run cold search* and keeps whichever
+//! plan is better. That makes the planner an audit tool, not just a
+//! batch runner: the [`FleetReport`] can state, per cell, what transfer
+//! saved (descent passes, search quality ratio) against ground truth
+//! computed in the same process — and the kept plan is never worse than
+//! the cold search's, by construction.
+
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::fleet::transfer::PlanTransfer;
+use crate::fleet::DeviceFingerprint;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::heuristic::{schedule_seeded, SchedulerConfig};
+use crate::store::ArtifactStore;
+use crate::util::json::Json;
+use crate::util::parallel::par_map;
+use crate::util::table::{fmt_ms, Table};
+
+/// One (device, model) cell of the fleet plan.
+#[derive(Debug, Clone)]
+pub struct FleetCell {
+    pub device: String,
+    pub model: String,
+    /// The donor device the transfer drew from; `None` on a store miss.
+    pub donor: Option<String>,
+    /// Fingerprint distance to the donor.
+    pub distance: Option<f64>,
+    /// Whether the transferred seed was accepted (hit). `false` covers
+    /// both rejection (donor found, re-priced worse than baseline) and
+    /// miss (no donor).
+    pub seeded: bool,
+    /// The transferred seed's re-priced makespan on this device.
+    pub seed_ms: Option<f64>,
+    /// This device's own greedy baseline — the bar the seed had to clear.
+    pub baseline_ms: f64,
+    /// Makespan of the plan the transfer path settled on.
+    pub transfer_ms: f64,
+    /// Makespan of the same-run cold search (ground truth).
+    pub cold_ms: f64,
+    /// Makespan of the plan the fleet keeps: `min(transfer, cold)`.
+    pub kept_ms: f64,
+    /// Confirm-accepted descent passes on the transfer path.
+    pub passes_transfer: usize,
+    /// Confirm-accepted descent passes in the cold search.
+    pub passes_cold: usize,
+}
+
+/// Aggregated outcome of one [`FleetPlanner::plan_fleet`] run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub cells: Vec<FleetCell>,
+    /// Transfers accepted (donor seed beat or matched the baseline).
+    pub hits: usize,
+    /// Donors found but rejected at the accept gate.
+    pub rejected: usize,
+    /// Cells with no donor in the store.
+    pub misses: usize,
+}
+
+impl FleetReport {
+    /// Fraction of cells whose search was seeded by a transferred plan.
+    pub fn hit_rate(&self) -> f64 {
+        if self.cells.is_empty() {
+            0.0
+        } else {
+            self.hits as f64 / self.cells.len() as f64
+        }
+    }
+
+    /// Descent passes the seeded searches avoided, against the same-run
+    /// cold searches of the same cells.
+    pub fn passes_saved(&self) -> usize {
+        self.cells
+            .iter()
+            .filter(|c| c.seeded)
+            .map(|c| c.passes_cold.saturating_sub(c.passes_transfer))
+            .sum()
+    }
+
+    /// Worst per-cell `transfer_ms / cold_ms` ratio — 1.0 or below
+    /// everywhere means transfer never cost plan quality. (The *kept*
+    /// plan is `min` of the two, so kept/cold is ≤ 1.0 by construction;
+    /// this ratio audits the transfer path itself.)
+    pub fn worst_quality_ratio(&self) -> f64 {
+        self.cells
+            .iter()
+            .filter(|c| c.cold_ms > 0.0)
+            .map(|c| c.transfer_ms / c.cold_ms)
+            .fold(0.0, f64::max)
+    }
+
+    /// The per-cell coverage table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fleet plan coverage (transfer vs same-run cold search)",
+            &[
+                "device", "model", "donor", "dist", "seeded", "seed",
+                "baseline", "transfer", "cold", "kept",
+            ],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.device.clone(),
+                c.model.clone(),
+                c.donor.clone().unwrap_or_else(|| "-".into()),
+                c.distance.map_or("-".into(), |d| format!("{d:.2}")),
+                if c.seeded { "hit".into() } else if c.donor.is_some() { "reject".into() } else { "miss".into() },
+                c.seed_ms.map_or("-".into(), fmt_ms),
+                fmt_ms(c.baseline_ms),
+                fmt_ms(c.transfer_ms),
+                fmt_ms(c.cold_ms),
+                fmt_ms(c.kept_ms),
+            ]);
+        }
+        t
+    }
+
+    /// The one-line aggregates: hit rate, passes saved, worst ratio.
+    pub fn summary(&self) -> String {
+        format!(
+            "cells {} | transfer hits {} ({:.0}%), rejected {}, misses {} | descent passes saved {} | worst transfer/cold ratio {:.3}",
+            self.cells.len(),
+            self.hits,
+            100.0 * self.hit_rate(),
+            self.rejected,
+            self.misses,
+            self.passes_saved(),
+            self.worst_quality_ratio(),
+        )
+    }
+
+    /// Machine-readable form for `--report DIR`.
+    pub fn to_json(&self) -> Json {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("device", Json::from(c.device.as_str())),
+                    ("model", Json::from(c.model.as_str())),
+                    (
+                        "donor",
+                        c.donor.as_deref().map_or(Json::Null, Json::from),
+                    ),
+                    ("distance", c.distance.map_or(Json::Null, Json::from)),
+                    ("seeded", Json::from(c.seeded)),
+                    ("seed_ms", c.seed_ms.map_or(Json::Null, Json::from)),
+                    ("baseline_ms", Json::from(c.baseline_ms)),
+                    ("transfer_ms", Json::from(c.transfer_ms)),
+                    ("cold_ms", Json::from(c.cold_ms)),
+                    ("kept_ms", Json::from(c.kept_ms)),
+                    ("passes_transfer", Json::from(c.passes_transfer)),
+                    ("passes_cold", Json::from(c.passes_cold)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("cells", Json::Arr(cells)),
+            ("hits", Json::from(self.hits)),
+            ("rejected", Json::from(self.rejected)),
+            ("misses", Json::from(self.misses)),
+            ("hit_rate", Json::from(self.hit_rate())),
+            ("passes_saved", Json::from(self.passes_saved())),
+            ("worst_quality_ratio", Json::from(self.worst_quality_ratio())),
+        ])
+    }
+}
+
+/// Plans a model zoo across a device fleet through the transfer path.
+pub struct FleetPlanner {
+    transfer: PlanTransfer,
+    registry: Registry,
+    cfg: SchedulerConfig,
+    registry_tag: String,
+}
+
+impl FleetPlanner {
+    /// A planner over `store` with the full kernel registry and the given
+    /// scheduler config.
+    pub fn new(store: Arc<ArtifactStore>, cfg: SchedulerConfig) -> FleetPlanner {
+        FleetPlanner {
+            transfer: PlanTransfer::new(store),
+            registry: Registry::full(),
+            cfg,
+            registry_tag: "full".to_string(),
+        }
+    }
+
+    /// The transfer handle (counters, store).
+    pub fn transfer(&self) -> &PlanTransfer {
+        &self.transfer
+    }
+
+    /// Order devices as a greedy nearest-neighbor chain: start from the
+    /// first device as given, then repeatedly append the unvisited device
+    /// closest (by fingerprint distance, ties by name) to the last one
+    /// appended. Profile families end up adjacent, so each device after
+    /// the first of its family finds a close donor already published.
+    pub fn device_tour(devices: Vec<DeviceProfile>) -> Vec<DeviceProfile> {
+        if devices.len() < 3 {
+            return devices;
+        }
+        let fps: Vec<DeviceFingerprint> =
+            devices.iter().map(DeviceFingerprint::of).collect();
+        let mut remaining: Vec<usize> = (1..devices.len()).collect();
+        let mut order = vec![0usize];
+        while !remaining.is_empty() {
+            let last = &fps[*order.last().unwrap()];
+            let (pos, _) = remaining
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| {
+                    let da = last.distance(&fps[a]);
+                    let db = last.distance(&fps[b]);
+                    da.partial_cmp(&db)
+                        .unwrap()
+                        .then_with(|| fps[a].name.cmp(&fps[b].name))
+                })
+                .unwrap();
+            order.push(remaining.remove(pos));
+        }
+        let mut devices: Vec<Option<DeviceProfile>> =
+            devices.into_iter().map(Some).collect();
+        order.into_iter().map(|i| devices[i].take().unwrap()).collect()
+    }
+
+    /// Plan every model on every device. Devices run sequentially in tour
+    /// order (so publishes from earlier devices seed later ones); models
+    /// run in parallel within a device. Each cell runs both the transfer
+    /// path and a cold search, keeps the better plan (re-publishing the
+    /// cold one if it wins), and reports both.
+    pub fn plan_fleet(
+        &self,
+        models: &[ModelGraph],
+        devices: Vec<DeviceProfile>,
+    ) -> FleetReport {
+        let tour = FleetPlanner::device_tour(devices);
+        let mut cells = Vec::with_capacity(tour.len() * models.len());
+        for dev in &tour {
+            let per_model = par_map(models, |_, graph| {
+                let r = self.transfer.plan(dev, graph, &self.registry, &self.cfg, &self.registry_tag);
+                // Ground truth in the same process: an empty seed never
+                // maps, so this is exactly the cold search (and reports
+                // its descent pass count). No transfer counters move.
+                let cold = schedule_seeded(dev, graph, &self.registry, &self.cfg, &[]);
+                let transfer_ms = r.outcome.scheduled.schedule.makespan;
+                let cold_ms = cold.scheduled.schedule.makespan;
+                if cold_ms < transfer_ms {
+                    // Cold search found a strictly better plan: the fleet
+                    // keeps (and republishes) that one.
+                    self.transfer.publish(dev, graph, &self.cfg, &self.registry_tag, &cold.scheduled);
+                }
+                FleetCell {
+                    device: dev.name.to_string(),
+                    model: graph.name.clone(),
+                    donor: r.donor.as_ref().map(|d| d.device.clone()),
+                    distance: r.donor.as_ref().map(|d| d.distance),
+                    seeded: r.outcome.seeded,
+                    seed_ms: r.outcome.seed_ms,
+                    baseline_ms: r.outcome.baseline_ms,
+                    transfer_ms,
+                    cold_ms,
+                    kept_ms: transfer_ms.min(cold_ms),
+                    passes_transfer: r.outcome.passes,
+                    passes_cold: cold.passes,
+                }
+            });
+            cells.extend(per_model);
+        }
+        let hits = cells.iter().filter(|c| c.seeded).count();
+        let rejected = cells.iter().filter(|c| c.donor.is_some() && !c.seeded).count();
+        let misses = cells.iter().filter(|c| c.donor.is_none()).count();
+        FleetReport { cells, hits, rejected, misses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+    use std::path::PathBuf;
+
+    fn temp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "nnv12-fleetplan-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn tour_keeps_families_adjacent() {
+        let tour = FleetPlanner::device_tour(profiles::all_devices());
+        let names: Vec<&str> = tour.iter().map(|d| d.name).collect();
+        assert_eq!(names.len(), 6);
+        // The two GPU boards must be adjacent: every phone is at least
+        // the GPU-mismatch penalty away from either Jetson, while the
+        // Jetsons are closer to each other than to any phone.
+        let tx2 = names.iter().position(|n| *n == "jetson-tx2").unwrap();
+        let nano = names.iter().position(|n| *n == "jetson-nano").unwrap();
+        assert_eq!(tx2.abs_diff(nano), 1, "tour {names:?}");
+    }
+
+    #[test]
+    fn second_run_is_fully_seeded_and_kept_never_worse_than_cold() {
+        let dir = temp_store("rerun");
+        let _ = std::fs::remove_dir_all(&dir);
+        let models = [zoo::tiny_net(), zoo::squeezenet()];
+        let devices = || {
+            vec![
+                profiles::meizu_16t(),
+                profiles::pixel_5(),
+                profiles::jetson_nano(),
+            ]
+        };
+        let store = || Arc::new(ArtifactStore::open(&dir).unwrap());
+
+        let first = FleetPlanner::new(store(), SchedulerConfig::kcp())
+            .plan_fleet(&models, devices());
+        assert_eq!(first.cells.len(), 6);
+        // The very first cell of the tour has nothing to draw from.
+        assert!(first.misses >= 1);
+        for c in &first.cells {
+            assert!(c.kept_ms <= c.cold_ms, "{}/{}", c.device, c.model);
+            assert!(
+                c.transfer_ms <= c.baseline_ms + 1e-9,
+                "{}/{}: transfer path must never lose to its own baseline",
+                c.device,
+                c.model
+            );
+            assert_eq!(c.seeded, c.donor.is_some() && c.seed_ms.is_some_and(|s| s <= c.baseline_ms));
+        }
+
+        // A second planner over the same store finds every cell's own
+        // published plan at distance 0 — all cells must be hits, and the
+        // report must agree with the transfer counters.
+        let planner = FleetPlanner::new(store(), SchedulerConfig::kcp());
+        let second = planner.plan_fleet(&models, devices());
+        assert_eq!(second.hits, second.cells.len(), "{}", second.summary());
+        assert_eq!(second.misses, 0);
+        assert_eq!(planner.transfer().hits(), second.hits);
+        assert!(second.hit_rate() == 1.0);
+        for c in &second.cells {
+            assert_eq!(c.distance, Some(0.0), "{}/{}: own plan is the nearest donor", c.device, c.model);
+            assert!(c.kept_ms <= c.cold_ms);
+        }
+        // Rendering never panics and covers every cell.
+        assert_eq!(second.table().rows().len(), 6);
+        assert!(second.to_json().to_pretty().contains("hit_rate"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

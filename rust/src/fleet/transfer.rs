@@ -1,0 +1,311 @@
+//! The cross-device plan-transfer path over the artifact store.
+//!
+//! Every planned (model, device) cell *publishes* its plan into the
+//! store's [`Namespace::FleetPlan`] namespace — scoped by the
+//! device-independent model fingerprint, keyed by the device's
+//! [`DeviceFingerprint`] identity — so any later planner can enumerate
+//! "every device's plan for this model" with one scope scan and no
+//! manifest. A planner that misses its own plan looks up the
+//! *nearest-profile* donor by fingerprint distance and runs the seeded
+//! search ([`schedule_seeded`]) instead of a cold one: re-price the
+//! donor's kernel choices on the target (exact 3-entry table patches),
+//! keep them only if they beat the target's own greedy baseline, then a
+//! single short descent pass over the transferred layers. A rejected
+//! seed falls back to the full cold search, so transfer can change how
+//! fast a plan is *found*, never how good the found plan is allowed to
+//! be.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::fleet::DeviceFingerprint;
+use crate::graph::ModelGraph;
+use crate::kernels::Registry;
+use crate::sched::cache::model_fingerprint;
+use crate::sched::heuristic::{schedule_seeded, Scheduled, SchedulerConfig, TransferOutcome};
+use crate::sched::plan::Plan;
+use crate::store::{ArtifactStore, Namespace};
+use crate::util::json::Json;
+
+/// The donor a transfer drew from: which device's plan seeded the search,
+/// and how far its profile was from the target's.
+#[derive(Debug, Clone)]
+pub struct Donor {
+    pub device: String,
+    pub distance: f64,
+}
+
+/// One [`PlanTransfer::plan`] result: the search outcome (seeded or cold)
+/// plus where the seed came from, if anywhere.
+#[derive(Debug, Clone)]
+pub struct TransferResult {
+    pub outcome: TransferOutcome,
+    /// `None` when the fleet store held no usable plan for this model
+    /// (first device of a family pays the cold search for everyone).
+    pub donor: Option<Donor>,
+}
+
+/// Fleet-plan publish + nearest-profile lookup + seeded search, as one
+/// shared handle (`Arc`-cheap, all counters atomic).
+pub struct PlanTransfer {
+    store: Arc<ArtifactStore>,
+    /// Seeds accepted: the donor's choices revalidated no worse than the
+    /// target's greedy baseline and seeded the search.
+    hits: AtomicUsize,
+    /// Seeds found but rejected at the accept gate (re-priced worse than
+    /// the baseline): the search fell back to a full cold descent.
+    rejected: AtomicUsize,
+    /// Lookups that found no donor at all (empty scope).
+    misses: AtomicUsize,
+}
+
+impl PlanTransfer {
+    pub fn new(store: Arc<ArtifactStore>) -> PlanTransfer {
+        PlanTransfer {
+            store,
+            hits: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The backing store.
+    pub fn store(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// The fleet-plan scope of one planning problem: model name (for
+    /// humans reading the store directory) + the device-independent
+    /// fingerprint (for correctness — two configs or registries never
+    /// share donors).
+    fn scope(graph: &ModelGraph, cfg: &SchedulerConfig, registry_tag: &str) -> String {
+        format!("{}-{:016x}", graph.name, model_fingerprint(graph, cfg, registry_tag))
+    }
+
+    /// Publish a device's plan for a model into the fleet namespace
+    /// (best-effort, like every cache write-back: an unwritable store
+    /// costs future devices a cold search, never correctness).
+    pub fn publish(
+        &self,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+        scheduled: &Scheduled,
+    ) {
+        let fp = DeviceFingerprint::of(dev);
+        let key = fp.key();
+        let doc = Json::obj(vec![
+            ("fingerprint", Json::from(format!("{key:016x}"))),
+            ("device", fp.to_json()),
+            ("model", Json::from(graph.name.as_str())),
+            ("makespan_ms", Json::from(scheduled.schedule.makespan)),
+            ("plan", scheduled.plan.to_json(graph)),
+        ]);
+        let scope = PlanTransfer::scope(graph, cfg, registry_tag);
+        let _ = self
+            .store
+            .put_scoped(Namespace::FleetPlan, &scope, key, doc.to_pretty().as_bytes());
+    }
+
+    /// The nearest-profile donor plan for `dev`, if the fleet store holds
+    /// any usable plan for this model. Candidates that fail validation
+    /// (store header, fingerprint/key agreement, kernel resolution
+    /// against `registry`) are skipped, not trusted. Ties on distance
+    /// break by fingerprint key, so enumeration order never changes the
+    /// answer. Note the target's *own* published plan (distance 0) is a
+    /// legitimate donor: a second process re-planning the same device
+    /// seeds from it and confirms bit-exactly.
+    pub fn nearest_donor(
+        &self,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+    ) -> Option<(Donor, Plan)> {
+        let fp = DeviceFingerprint::of(dev);
+        let scope = PlanTransfer::scope(graph, cfg, registry_tag);
+        let mut best: Option<(f64, u64, DeviceFingerprint, Plan)> = None;
+        for key in self.store.keys_in_scope(Namespace::FleetPlan, &scope) {
+            let Some(payload) = self.store.get_scoped(Namespace::FleetPlan, &scope, key) else {
+                continue;
+            };
+            let Ok(text) = String::from_utf8(payload) else { continue };
+            let Ok(doc) = Json::parse(&text) else { continue };
+            if doc.get("fingerprint").as_str() != Some(format!("{key:016x}").as_str()) {
+                continue;
+            }
+            let Some(dfp) = DeviceFingerprint::from_json(doc.get("device")) else {
+                continue;
+            };
+            if dfp.key() != key {
+                continue;
+            }
+            let Ok(plan) = Plan::from_json(doc.get("plan"), graph, registry) else {
+                continue;
+            };
+            let d = fp.distance(&dfp);
+            let closer = match &best {
+                None => true,
+                Some((bd, bk, _, _)) => d < *bd || (d == *bd && key < *bk),
+            };
+            if closer {
+                best = Some((d, key, dfp, plan));
+            }
+        }
+        best.map(|(d, _, dfp, plan)| (Donor { device: dfp.name, distance: d }, plan))
+    }
+
+    /// Plan (model, device) through the transfer path: nearest-donor
+    /// lookup → seeded search (or cold search when no donor exists or the
+    /// seed is rejected) → publish the result for the next device. The
+    /// returned plan is always a confirmed plan for *this* device — at
+    /// least as good as its greedy baseline, by [`schedule_seeded`]'s
+    /// accept gate.
+    pub fn plan(
+        &self,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+    ) -> TransferResult {
+        let donor = self.nearest_donor(dev, graph, registry, cfg, registry_tag);
+        let (outcome, donor) = match donor {
+            Some((donor, plan)) => {
+                let outcome = schedule_seeded(dev, graph, registry, cfg, &plan.choices);
+                if outcome.seeded {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                (outcome, Some(donor))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                // An empty seed never maps (layer-count mismatch), so this
+                // is exactly the cold search, with baseline/pass metrics.
+                (schedule_seeded(dev, graph, registry, cfg, &[]), None)
+            }
+        };
+        self.publish(dev, graph, cfg, registry_tag, &outcome.scheduled);
+        TransferResult { outcome, donor }
+    }
+
+    /// Transfers accepted (seed beat or matched the greedy baseline).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Seeds found but rejected at the accept gate.
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Lookups with no donor available.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::zoo;
+    use std::path::PathBuf;
+
+    fn temp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "nnv12-fleet-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn first_plan_misses_then_self_transfer_hits() {
+        let dir = temp_store("self");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::squeezenet();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+
+        let t = PlanTransfer::new(Arc::new(ArtifactStore::open(&dir).unwrap()));
+        let first = t.plan(&dev, &g, &reg, &cfg, "full");
+        assert!(first.donor.is_none(), "empty store has no donor");
+        assert!(!first.outcome.seeded);
+        assert_eq!((t.hits(), t.misses()), (0, 1));
+
+        // A second process over the same store: its own published plan is
+        // the distance-0 donor and must be accepted (seed == stored plan
+        // revalidates to exactly its stored makespan ≤ baseline).
+        let t2 = PlanTransfer::new(Arc::new(ArtifactStore::open(&dir).unwrap()));
+        let second = t2.plan(&dev, &g, &reg, &cfg, "full");
+        let donor = second.donor.expect("published plan must be found");
+        assert_eq!(donor.device, dev.name);
+        assert_eq!(donor.distance, 0.0);
+        assert!(second.outcome.seeded, "distance-0 seed must be accepted");
+        assert_eq!((t2.hits(), t2.misses()), (1, 0));
+        assert_eq!(
+            second.outcome.scheduled.schedule.makespan.to_bits(),
+            first.outcome.scheduled.schedule.makespan.to_bits(),
+            "self-transfer reproduces the stored plan's quality exactly"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn donor_selection_prefers_nearer_profiles() {
+        let dir = temp_store("nearest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = zoo::squeezenet();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let t = PlanTransfer::new(Arc::new(ArtifactStore::open(&dir).unwrap()));
+
+        // Publish plans for one CPU phone and one GPU board.
+        for dev in [profiles::meizu_16t(), profiles::jetson_tx2()] {
+            let r = t.plan(&dev, &g, &reg, &cfg, "full");
+            assert!(
+                r.outcome.scheduled.schedule.makespan.is_finite(),
+                "{}",
+                dev.name
+            );
+        }
+        // A CPU phone must draw from the CPU donor, a GPU board from the
+        // GPU donor — the GPU-mismatch penalty dominates the metric.
+        let (donor, _) = t
+            .nearest_donor(&profiles::pixel_5(), &g, &reg, &cfg, "full")
+            .expect("donors exist");
+        assert_eq!(donor.device, "meizu16t");
+        let (donor, _) = t
+            .nearest_donor(&profiles::jetson_nano(), &g, &reg, &cfg, "full")
+            .expect("donors exist");
+        assert_eq!(donor.device, "jetson-tx2");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scopes_isolate_models_and_configs() {
+        let dir = temp_store("scopes");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let reg = Registry::full();
+        let t = PlanTransfer::new(Arc::new(ArtifactStore::open(&dir).unwrap()));
+        t.plan(&dev, &zoo::squeezenet(), &reg, &SchedulerConfig::kcp(), "full");
+        // Different model: no donor.
+        assert!(t
+            .nearest_donor(&dev, &zoo::tiny_net(), &reg, &SchedulerConfig::kcp(), "full")
+            .is_none());
+        // Same model, different config: no donor either (a no-pipeline
+        // plan must never seed a pipelined search's store scope).
+        assert!(t
+            .nearest_donor(&dev, &zoo::squeezenet(), &reg, &SchedulerConfig::kc(), "full")
+            .is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

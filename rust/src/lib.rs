@@ -106,6 +106,26 @@
 //! throughput must beat 1-thread in the same run, with shed == 0 and
 //! degraded == 0 on the fault-free trace).
 //!
+//! ## Fleet planning: plans travel between devices
+//!
+//! A fleet of devices running the same zoo repeats nearly the same plan
+//! search everywhere. The [`fleet`] subsystem shares that work:
+//! every searched plan is *published* into the artifact store's
+//! fleet namespace (scoped by model fingerprint, keyed by a canonical
+//! [`fleet::DeviceFingerprint`]), and a device that misses looks up the
+//! **nearest-profile donor** (a scale-invariant distance over
+//! within-device cost ratios) and runs a *seeded* search — the donor's
+//! choices re-priced exactly on the target, kept only if they beat the
+//! target's own greedy baseline, then one short descent pass — instead
+//! of a cold one. A seed that re-prices worse is rejected and the search
+//! falls back to the full cold descent, so transfer can only save search
+//! time, never cost plan quality. [`fleet::FleetPlanner`] plans a whole
+//! zoo × device grid this way (nearest-profile device tour, models in
+//! parallel) and emits a coverage report (hit-rate, descent passes
+//! saved, per-cell transfer-vs-cold quality ratio); `repro fleet` prints
+//! it, and `Engine::builder().fleet_transfer(true)` wires the same
+//! lookup into session cold starts.
+//!
 //! ## Layers underneath
 //!
 //! * [`util`] — in-tree substrates for the offline build environment
@@ -122,7 +142,11 @@
 //!   the fingerprint-keyed plan + calibrated-plan caches.
 //! * [`store`] — the content-addressed artifact store: one persistence
 //!   layer (typed namespaces, version+checksum headers, atomic writes,
-//!   LRU size cap) for plans, calibrated plans, and transformed weights.
+//!   LRU size cap) for plans, calibrated plans, transformed weights, and
+//!   fleet plans.
+//! * [`fleet`] — cross-device plan transfer: device fingerprints
+//!   (identity + similarity), nearest-profile seeding over the store's
+//!   fleet namespace, and the zoo × fleet coverage planner/report.
 //! * [`faults`] — deterministic fault injection: seeded
 //!   trigger-by-call-count rules (I/O error, corrupt bytes, torn write,
 //!   transient exec failure, executor panic) threaded into the store and
@@ -160,6 +184,7 @@ pub mod device;
 pub mod cost;
 pub mod sched;
 pub mod store;
+pub mod fleet;
 pub mod faults;
 pub mod baselines;
 pub mod sim;

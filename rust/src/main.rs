@@ -7,6 +7,8 @@
 //!   report    — regenerate a paper table/figure (or `all`)
 //!   kernels   — list kernel candidates for a conv configuration
 //!   serve     — run the multi-tenant serving workload (simulated device)
+//!   fleet     — plan a model zoo across the device fleet with
+//!               cross-device plan transfer; print the coverage report
 //!   cold      — real-mode cold inference over PJRT artifacts
 //!               (needs the `real-runtime` feature, on by default)
 //!   devices   — list device profiles
@@ -16,11 +18,13 @@
 //!   repro report fig8
 //!   repro cold --artifacts artifacts/tinynet --workers 2 --cache
 //!   repro serve --device meizu16t --requests 200 --budget-mb 48 --threads 4 --execute
+//!   repro fleet --models squeezenet,mobilenetv2 --store plans/ --report out/
 
 use anyhow::{anyhow, bail, Result};
 
 use nnv12::device::profiles;
 use nnv12::engine::{Engine, SimBackend};
+use nnv12::fleet::FleetPlanner;
 use nnv12::graph::zoo;
 use nnv12::kernels::Registry;
 use nnv12::report;
@@ -51,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         "report" => cmd_report(args),
         "kernels" => cmd_kernels(args),
         "serve" => cmd_serve(args),
+        "fleet" => cmd_fleet(args),
         "cold" => cmd_cold(args),
         "store" => cmd_store(args),
         "devices" => cmd_devices(),
@@ -69,10 +74,12 @@ fn print_help() {
          subcommands:\n\
            plan      --model M --device D [--no-pipeline] [--store DIR [--store-cap-mb N]]  print a scheduling plan\n\
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
-           report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|all>\n\
+           report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|fleet|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
            serve     --device D --requests N --budget-mb B [--threads T] [--execute]\n\
                      [--deadline-ms D] [--admission N] [--faults SEED]   multi-tenant serving sim\n\
+           fleet     [--models A,B,..] [--devices D,E,.. | all] [--no-pipeline]\n\
+                     [--store DIR] [--report DIR]   zoo x fleet planning with cross-device transfer\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
            store     gc --dir DIR [--days N]                drop artifacts untouched for N days\n\
            devices                                          list device profiles"
@@ -318,6 +325,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 s.n, s.mean, s.p50, s.p90, s.p99
             );
         }
+    }
+    Ok(())
+}
+
+/// Zoo × fleet planning through cross-device plan transfer. With
+/// `--store DIR` the fleet-plan namespace persists, so a second
+/// invocation (or any engine built with `.fleet_transfer(true)` over the
+/// same store) seeds every search from the published plans — the
+/// `fleet-transfer-hits:` line is machine-parseable for exactly that
+/// check. Without a store the transfer still operates within the run
+/// (later devices of the tour seed from earlier ones) in a temp
+/// directory that is removed afterwards.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let models: Vec<nnv12::graph::ModelGraph> = args
+        .get_or("models", "squeezenet,shufflenetv2,mobilenetv2")
+        .split(',')
+        .map(str::trim)
+        .filter(|m| !m.is_empty())
+        .map(|m| zoo::by_name(m).ok_or_else(|| anyhow!("unknown model '{m}'")))
+        .collect::<Result<_>>()?;
+    if models.is_empty() {
+        bail!("--models expects a comma-separated list of zoo models");
+    }
+    let devices: Vec<nnv12::device::DeviceProfile> = match args.get_or("devices", "all") {
+        "all" => profiles::all_devices(),
+        list => list
+            .split(',')
+            .map(str::trim)
+            .filter(|d| !d.is_empty())
+            .map(|d| profiles::by_name(d).ok_or_else(|| anyhow!("unknown device '{d}'")))
+            .collect::<Result<_>>()?,
+    };
+    if devices.is_empty() {
+        bail!("--devices expects 'all' or a comma-separated list of devices");
+    }
+    let (store_dir, temp) = match args.get("store") {
+        Some(dir) => (std::path::PathBuf::from(dir), false),
+        None => (
+            std::env::temp_dir().join(format!("nnv12-fleet-cli-{}", std::process::id())),
+            true,
+        ),
+    };
+    let store = nnv12::store::ArtifactStore::open(&store_dir)
+        .map_err(|e| anyhow!("cannot open artifact store at {}: {e}", store_dir.display()))?;
+    let cfg = SchedulerConfig {
+        pipeline: !args.has("no-pipeline"),
+        ..SchedulerConfig::default()
+    };
+    let planner = FleetPlanner::new(std::sync::Arc::new(store), cfg);
+    let t = nnv12::metrics::Timer::start();
+    let fleet_report = planner.plan_fleet(&models, devices);
+    let wall_ms = t.elapsed_ms();
+    println!("{}", fleet_report.table().render());
+    println!("{}", fleet_report.summary());
+    println!(
+        "planned {} cell(s) in {:.1} ms (store: {})",
+        fleet_report.cells.len(),
+        wall_ms,
+        if temp { "temporary".to_string() } else { store_dir.display().to_string() }
+    );
+    println!("fleet-transfer-hits: {}", fleet_report.hits);
+    if let Some(dir) = args.get("report") {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("cannot create report dir {dir}: {e}"))?;
+        let path = std::path::Path::new(dir).join("fleet_report.json");
+        std::fs::write(&path, fleet_report.to_json().to_pretty())
+            .map_err(|e| anyhow!("cannot write {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    if temp {
+        let _ = std::fs::remove_dir_all(&store_dir);
     }
     Ok(())
 }

@@ -496,9 +496,34 @@ pub fn table5() -> Table {
     t
 }
 
+/// Fleet coverage (not a paper figure): the zoo's small models planned
+/// across every device profile through cross-device plan transfer, in a
+/// throwaway store — which cells seeded from which donors, and what the
+/// transfer path cost against a same-run cold search (never anything, by
+/// construction: the kept plan is the better of the two). The full
+/// version with persistence and model selection is `repro fleet`.
+pub fn fleet_coverage() -> Table {
+    let dir = std::env::temp_dir().join(format!(
+        "nnv12-report-fleet-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        crate::store::ArtifactStore::open(&dir).expect("temp store must open"),
+    );
+    let planner = crate::fleet::FleetPlanner::new(store, SchedulerConfig::kcp());
+    let report = planner.plan_fleet(
+        &[zoo::tiny_net(), zoo::micro_mobilenet()],
+        profiles::all_devices(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    report.table()
+}
+
 /// All reports keyed by CLI name.
 pub fn by_name(name: &str) -> Option<Table> {
     Some(match name {
+        "fleet" => fleet_coverage(),
         "fig2" => fig2(),
         "table1" => table1(),
         "table2" => table2(),

@@ -47,6 +47,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::device::DeviceProfile;
+use crate::fleet::DeviceFingerprint;
 use crate::graph::ModelGraph;
 use crate::kernels::Registry;
 use crate::sched::heuristic::{
@@ -86,26 +87,46 @@ pub fn fingerprint(
         g.pipeline_create_ms.to_bits().hash(&mut h);
         g.shader_compile_ms.to_bits().hash(&mut h);
     }
+    hash_model_and_cfg(&mut h, graph, cfg, registry_tag);
+    h.finish()
+}
+
+/// The device-*independent* half of [`fingerprint`]: model architecture,
+/// scheduler config, registry tag. This is the fleet store's scope key —
+/// every device's plan for one (model, config, registry) problem lands in
+/// one enumerable scope, which is what makes the nearest-profile lookup
+/// of [`crate::fleet::PlanTransfer`] possible.
+pub fn model_fingerprint(graph: &ModelGraph, cfg: &SchedulerConfig, registry_tag: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    hash_model_and_cfg(&mut h, graph, cfg, registry_tag);
+    h.finish()
+}
+
+fn hash_model_and_cfg(
+    h: &mut DefaultHasher,
+    graph: &ModelGraph,
+    cfg: &SchedulerConfig,
+    registry_tag: &str,
+) {
     // Model: name + full layer structure.
-    graph.name.hash(&mut h);
-    graph.len().hash(&mut h);
+    graph.name.hash(h);
+    graph.len().hash(h);
     for l in graph.layers() {
-        format!("{:?}", l.op).hash(&mut h);
-        l.in_ch.hash(&mut h);
-        l.out_ch.hash(&mut h);
-        l.in_hw.hash(&mut h);
-        l.out_hw.hash(&mut h);
-        l.deps.hash(&mut h);
+        format!("{:?}", l.op).hash(h);
+        l.in_ch.hash(h);
+        l.out_ch.hash(h);
+        l.in_hw.hash(h);
+        l.out_hw.hash(h);
+        l.deps.hash(h);
     }
     // Config knobs.
-    cfg.epsilon_ms.to_bits().hash(&mut h);
-    cfg.max_outer_passes.hash(&mut h);
-    cfg.kernel_selection.hash(&mut h);
-    cfg.weight_cache.hash(&mut h);
-    cfg.shader_cache.hash(&mut h);
-    cfg.pipeline.hash(&mut h);
-    registry_tag.hash(&mut h);
-    h.finish()
+    cfg.epsilon_ms.to_bits().hash(h);
+    cfg.max_outer_passes.hash(h);
+    cfg.kernel_selection.hash(h);
+    cfg.weight_cache.hash(h);
+    cfg.shader_cache.hash(h);
+    cfg.pipeline.hash(h);
+    registry_tag.hash(h);
 }
 
 /// Fingerprint of one *calibrated* planning problem. Calibration is a
@@ -129,8 +150,9 @@ pub fn calibrated_fingerprint(
 /// op set from the resolved choices and re-evaluate under the same
 /// deterministic pricing the planner used, so the result is bit-identical
 /// to what planning would have produced. `None` on any structural
-/// mismatch (wrong model, unknown kernels, stale cost model).
-fn revalidate(
+/// mismatch (wrong model, unknown kernels, stale cost model). Shared with
+/// [`crate::fleet`], which revalidates transferred plans the same way.
+pub(crate) fn revalidate(
     plan_json: &Json,
     dev: &DeviceProfile,
     graph: &ModelGraph,
@@ -232,6 +254,30 @@ impl PlanCache {
         cfg: &SchedulerConfig,
         registry_tag: &str,
     ) -> Arc<Scheduled> {
+        self.get_or_plan_with(dev, graph, registry, cfg, registry_tag, || {
+            schedule(dev, graph, registry, cfg)
+        })
+    }
+
+    /// [`PlanCache::get_or_plan`] with a caller-supplied planner for the
+    /// full-miss case (memory *and* disk missed). This is the fleet-
+    /// transfer hook: the engine substitutes a nearest-profile seeded
+    /// search ([`crate::fleet::PlanTransfer`]) for the cold search, while
+    /// hit bookkeeping, disk revalidation, and the artifact write-back
+    /// stay identical. `plan_fn` must be deterministic for the
+    /// fingerprint's inputs — its result is persisted under the same key
+    /// a cold search would use (sound because an accepted transfer is
+    /// still a confirmed plan for exactly this (device, model, config)
+    /// problem, never the donor's plan verbatim).
+    pub fn get_or_plan_with(
+        &self,
+        dev: &DeviceProfile,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+        plan_fn: impl FnOnce() -> Scheduled,
+    ) -> Arc<Scheduled> {
         let key = fingerprint(dev, graph, cfg, registry_tag);
         if let Some(s) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -254,7 +300,7 @@ impl PlanCache {
                     .clone();
             }
         }
-        let planned = Arc::new(schedule(dev, graph, registry, cfg));
+        let planned = Arc::new(plan_fn());
         self.misses.fetch_add(1, Ordering::Relaxed);
         if let Some(disk) = &self.disk {
             let doc = Json::obj(vec![
@@ -372,15 +418,14 @@ impl CalibratedPlanCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let entry = (Arc::new(s), view);
         if let Some(disk) = &self.disk {
+            // The device view is stored as a full canonical fingerprint
+            // (not an ad-hoc core-count pair), so calibrated artifacts and
+            // fleet artifacts agree on what "device identity" means; old
+            // `{n_big, n_little}`-shaped docs fail the fingerprint parse
+            // once and heal, like pre-canonical plans did.
             let doc = Json::obj(vec![
                 ("fingerprint", Json::from(format!("{key:016x}"))),
-                (
-                    "device_view",
-                    Json::obj(vec![
-                        ("n_big", Json::from(entry.1.n_big)),
-                        ("n_little", Json::from(entry.1.n_little)),
-                    ]),
-                ),
+                ("device_view", DeviceFingerprint::of(&entry.1).to_json()),
                 ("plan", entry.0.plan.to_json(graph)),
             ]);
             disk.save_doc(key, &doc);
@@ -409,11 +454,17 @@ impl CalibratedPlanCache {
     }
 }
 
-/// Reconstruct a calibrated entry: rebuild the device view from the
-/// stored core counts (calibration only ever shrinks the prep pools of
-/// the base device), then revalidate the plan against that view. Any
-/// implausible view — more cores than the base device, no cores at all —
-/// rejects the artifact.
+/// Reconstruct a calibrated entry: parse the stored device fingerprint,
+/// rebuild the device view from its core counts (calibration only ever
+/// shrinks the prep pools of the base device), then revalidate the plan
+/// against that view. Any implausible view — more cores than the base
+/// device, no cores at all — rejects the artifact, and so does a stored
+/// fingerprint that is not bit-identically the fingerprint of the
+/// reconstructed view (a doc written against a *different* base device
+/// landing under a colliding key). Docs from before the fingerprint
+/// migration (`{n_big, n_little}` views) fail the parse, recompute once,
+/// and are rewritten in place under the same key — the pre-canonical
+/// healing pattern (`pre_fingerprint_calibrated_artifact_heals` below).
 fn load_calibrated(
     doc: &Json,
     dev: &DeviceProfile,
@@ -421,14 +472,16 @@ fn load_calibrated(
     registry: &Registry,
     cfg: &SchedulerConfig,
 ) -> Option<(Arc<Scheduled>, DeviceProfile)> {
-    let n_big = doc.get("device_view").get("n_big").as_usize()?;
-    let n_little = doc.get("device_view").get("n_little").as_usize()?;
-    if n_big > dev.n_big || n_little > dev.n_little || n_big + n_little == 0 {
+    let fp = DeviceFingerprint::from_json(doc.get("device_view"))?;
+    if fp.n_big > dev.n_big || fp.n_little > dev.n_little || fp.n_big + fp.n_little == 0 {
         return None;
     }
     let mut view = dev.clone();
-    view.n_big = n_big;
-    view.n_little = n_little;
+    view.n_big = fp.n_big;
+    view.n_little = fp.n_little;
+    if DeviceFingerprint::of(&view).key() != fp.key() {
+        return None;
+    }
     let s = revalidate(doc.get("plan"), &view, graph, registry, cfg)?;
     Some((Arc::new(s), view))
 }
@@ -646,6 +699,62 @@ mod tests {
             loaded.schedule.makespan.to_bits(),
             s.schedule.makespan.to_bits()
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pre_fingerprint_calibrated_artifact_heals() {
+        // Fabricate the artifact a pre-fingerprint build stored: its
+        // device_view is the ad-hoc `{n_big, n_little}` pair, not a
+        // canonical DeviceFingerprint. The cache must treat it as a
+        // structural miss exactly once, recompute under the SAME key, and
+        // rewrite the healed (fingerprint-shaped) doc for the next
+        // process — the pre-canonical-plan healing pattern.
+        let dir = temp_store("pre-fingerprint");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let key = calibrated_fingerprint(&dev, &g, &cfg, "full");
+
+        // A perfectly good calibrated plan wearing the old view shape.
+        let (s, view) = schedule_calibrated(&dev, &g, &reg, &cfg);
+        let store = ArtifactStore::open(&dir).unwrap();
+        let doc = Json::obj(vec![
+            ("fingerprint", Json::from(format!("{key:016x}"))),
+            (
+                "device_view",
+                Json::obj(vec![
+                    ("n_big", Json::from(view.n_big)),
+                    ("n_little", Json::from(view.n_little)),
+                ]),
+            ),
+            ("plan", s.plan.to_json(&g)),
+        ]);
+        store.put(Namespace::CalibratedPlan, key, doc.to_pretty().as_bytes()).unwrap();
+
+        let store_a = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let a = CalibratedPlanCache::with_store(Some(store_a));
+        let (healed, healed_view) = a.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!(
+            (a.misses(), a.disk_hits()),
+            (1, 0),
+            "old-shape device view must be a structural miss"
+        );
+        assert_eq!(
+            healed.schedule.makespan.to_bits(),
+            s.schedule.makespan.to_bits(),
+            "recompute is deterministic: same plan, new doc shape"
+        );
+        assert_eq!((healed_view.n_big, healed_view.n_little), (view.n_big, view.n_little));
+
+        // The rewrite healed the entry: a fresh process loads from disk.
+        let store_b = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let b = CalibratedPlanCache::with_store(Some(store_b));
+        let (loaded, _) = b.get_or_plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!((b.misses(), b.disk_hits()), (0, 1), "healed doc must hit");
+        assert_eq!(loaded.schedule.makespan.to_bits(), s.schedule.makespan.to_bits());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

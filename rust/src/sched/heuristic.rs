@@ -133,15 +133,17 @@ pub fn prep_units(dev: &DeviceProfile) -> usize {
     dev.prep_units()
 }
 
-/// Run the NNV12 scheduler for a model on a device.
-pub fn schedule(
+/// Per-layer candidate sets (Algorithm 1, line 1: Pareto filter) — the
+/// shared front half of [`schedule`] and [`schedule_seeded`]. Weightless
+/// layers get an empty set; with kernel selection off, candidates come
+/// from the warm-default registry.
+fn build_candidates(
     dev: &DeviceProfile,
     graph: &ModelGraph,
     registry: &Registry,
     cfg: &SchedulerConfig,
-) -> Scheduled {
-    // --- Per-layer candidate sets (Algorithm 1, line 1: Pareto filter) ---
-    let cands: Vec<Vec<Candidate>> = graph
+) -> Vec<Vec<Candidate>> {
+    graph
         .layers()
         .iter()
         .map(|l| {
@@ -158,14 +160,15 @@ pub fn schedule(
             assert!(!cs.is_empty(), "layer {} lost all candidates", l.id);
             cs
         })
-        .collect();
+        .collect()
+}
 
-    // --- Seed: per-layer greedy pick ---
-    // Preparation runs on ~n_little cores in parallel with execution, so a
-    // bundle "costs" roughly prep/n_little against the gang's exec time.
-    let n_prep_units = prep_units(dev);
+/// Per-layer greedy pick (the cold search's seed). Preparation runs on
+/// ~n_little cores in parallel with execution, so a bundle "costs"
+/// roughly prep/n_little against the gang's exec time.
+fn greedy_pick(cands: &[Vec<Candidate>], cfg: &SchedulerConfig, n_prep_units: usize) -> Vec<usize> {
     let n_little = n_prep_units.max(1);
-    let mut pick: Vec<usize> = cands
+    cands
         .iter()
         .map(|cs| {
             if cs.is_empty() {
@@ -182,113 +185,317 @@ pub fn schedule(
                 .min_by(|&a, &b| score(&cs[a]).partial_cmp(&score(&cs[b])).unwrap())
                 .unwrap()
         })
-        .collect();
+        .collect()
+}
 
-    // The only place choice vectors are materialized: when (re)building a
-    // plan. Trials never clone kernel choices — they operate on `pick` and
-    // the candidates' flat price table.
-    let choices_of = |pick: &[usize]| -> Vec<Option<KernelChoice>> {
-        cands
-            .iter()
-            .zip(pick)
-            .map(|(cs, &p)| cs.get(p).map(|c| c.choice.clone()))
-            .collect()
-    };
+/// The only place choice vectors are materialized: when (re)building a
+/// plan. Trials never clone kernel choices — they operate on `pick` and
+/// the candidates' flat price table.
+fn choices_of(cands: &[Vec<Candidate>], pick: &[usize]) -> Vec<Option<KernelChoice>> {
+    cands
+        .iter()
+        .zip(pick)
+        .map(|(cs, &p)| cs.get(p).map(|c| c.choice.clone()))
+        .collect()
+}
 
-    // --- Outer loop: incremental coordinate descent over combinations ---
-    let (mut best, seed_table) = rebuild_with_table(dev, graph, &choices_of(&pick), cfg);
-    if cfg.kernel_selection {
-        // The price table is priced exactly once (at the seed rebuild) and
-        // then carried between passes: accepted swaps rebase it through
-        // the delta evaluator, which keeps it bit-identical to a freshly
-        // priced table for the current `pick` (per-op prices depend only
-        // on the op's own layer's choice, and candidate prices match the
-        // Pricer bit-for-bit — asserted by
-        // `candidate_prices_match_pricer_exactly`).
-        let mut table = Some(seed_table);
-        for _pass in 0..cfg.max_outer_passes {
-            // Freeze the incumbent plan; build the delta evaluator over it.
-            let carried = table.take().expect("price table carried between passes");
-            let Ok(mut inc) = IncrementalEval::new(&best.set, &best.plan, carried) else {
-                break;
-            };
+/// The incremental coordinate descent over kernel combinations — the
+/// shared back half of [`schedule`] (full pass budget, every layer
+/// searchable) and [`schedule_seeded`] (short budget, only the layers the
+/// transferred seed changed). `best`/`pick` are the incumbent (already
+/// evaluated) and are updated in place on every confirmed improvement;
+/// `seed_table` must be exact for `pick`. Returns the number of
+/// confirm-accepted passes.
+fn descend(
+    cands: &[Vec<Candidate>],
+    pick: &mut Vec<usize>,
+    best: &mut Scheduled,
+    seed_table: PriceTable,
+    cfg: &SchedulerConfig,
+    n_prep_units: usize,
+    max_passes: usize,
+    searchable: &[usize],
+) -> usize {
+    // The price table is priced exactly once (at the seed rebuild) and
+    // then carried between passes: accepted swaps rebase it through
+    // the delta evaluator, which keeps it bit-identical to a freshly
+    // priced table for the current `pick` (per-op prices depend only
+    // on the op's own layer's choice, and candidate prices match the
+    // Pricer bit-for-bit — asserted by
+    // `candidate_prices_match_pricer_exactly`).
+    let mut accepted = 0usize;
+    let mut table = Some(seed_table);
+    for _pass in 0..max_passes {
+        // Freeze the incumbent plan; build the delta evaluator over it.
+        let carried = table.take().expect("price table carried between passes");
+        let Ok(mut inc) = IncrementalEval::new(&best.set, &best.plan, carried) else {
+            break;
+        };
 
-            // Proposal phase (parallel, read-only): per layer, the best
-            // alternative candidate under delta re-evaluation of the
-            // frozen incumbent. Layers are independent here, so trials
-            // fan out across cores.
-            let searchable: Vec<usize> =
-                (0..cands.len()).filter(|&l| cands[l].len() >= 2).collect();
-            let base_ms = inc.makespan();
-            let proposals: Vec<Option<(usize, usize, f64)>> = {
-                let (inc, set, pick, cands) = (&inc, &best.set, &pick, &cands);
-                par_map(&searchable, move |_, &layer| {
-                    let cs = &cands[layer];
-                    let cur = pick[layer];
-                    let mut best_alt: Option<(usize, f64)> = None;
-                    for alt in 0..cs.len() {
-                        if alt == cur {
-                            continue;
-                        }
-                        // Swapping one layer's kernel changes the makespan
-                        // by at most the total |Δcost| of its ops; skip
-                        // trials that cannot move the needle (§Perf).
-                        let delta = (cs[alt].prep_ms - cs[cur].prep_ms).abs()
-                            + (cs[alt].exec_ms - cs[cur].exec_ms).abs();
-                        if delta < 0.02 {
-                            continue;
-                        }
-                        let dirty = swap_prices(set, layer, &cs[alt]);
-                        let Ok(ms) = inc.retime(set, &dirty) else { continue };
-                        if ms + 1e-9 < base_ms && best_alt.map_or(true, |(_, b)| ms < b) {
-                            best_alt = Some((alt, ms));
-                        }
+        // Proposal phase (parallel, read-only): per layer, the best
+        // alternative candidate under delta re-evaluation of the
+        // frozen incumbent. Layers are independent here, so trials
+        // fan out across cores.
+        let base_ms = inc.makespan();
+        let proposals: Vec<Option<(usize, usize, f64)>> = {
+            let (inc, set, pick, cands) = (&inc, &best.set, &*pick, cands);
+            par_map(searchable, move |_, &layer| {
+                let cs = &cands[layer];
+                let cur = pick[layer];
+                let mut best_alt: Option<(usize, f64)> = None;
+                for alt in 0..cs.len() {
+                    if alt == cur {
+                        continue;
                     }
-                    best_alt.map(|(alt, ms)| (layer, alt, ms))
-                })
-            };
-
-            // Apply phase (sequential, most promising first): re-screen
-            // each proposal against the working baseline, which shifts as
-            // earlier swaps land; accepted swaps mutate `pick` in place
-            // and rebase the evaluator's price table.
-            let mut props: Vec<(usize, usize, f64)> =
-                proposals.into_iter().flatten().collect();
-            props.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
-            let before_pick = pick.clone();
-            let mut applied = false;
-            for (layer, alt, _) in props {
-                let dirty = swap_prices(&best.set, layer, &cands[layer][alt]);
-                let Ok(ms) = inc.retime(&best.set, &dirty) else { continue };
-                if ms + 1e-9 < inc.makespan() && inc.rebase(&best.set, &dirty).is_ok() {
-                    pick[layer] = alt;
-                    applied = true;
+                    // Swapping one layer's kernel changes the makespan
+                    // by at most the total |Δcost| of its ops; skip
+                    // trials that cannot move the needle (§Perf).
+                    let delta = (cs[alt].prep_ms - cs[cur].prep_ms).abs()
+                        + (cs[alt].exec_ms - cs[cur].exec_ms).abs();
+                    if delta < 0.02 {
+                        continue;
+                    }
+                    let dirty = swap_prices(set, layer, &cs[alt]);
+                    let Ok(ms) = inc.retime(set, &dirty) else { continue };
+                    if ms + 1e-9 < base_ms && best_alt.map_or(true, |(_, b)| ms < b) {
+                        best_alt = Some((alt, ms));
+                    }
                 }
-            }
-            if !applied {
-                break;
-            }
+                best_alt.map(|(alt, ms)| (layer, alt, ms))
+            })
+        };
 
-            // Confirm (incremental): re-run only the Algorithm-1 queue
-            // assembly under the new kernel mix (bundle balancing may
-            // shift) against the evaluator's rebased table — canonical op
-            // sets guarantee the set structure and table are already
-            // exact for `pick`, so no OpSet/Pricer/PriceTable rebuild.
-            // Accept only a real improvement of the fully evaluated
-            // makespan; otherwise the frozen-plan gains didn't survive
-            // the re-assembly — converged.
-            let trial =
-                confirm_from_table(&best.set, choices_of(&pick), inc.table(), cfg, n_prep_units);
-            if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
-                table = Some(inc.into_table());
-                best = trial;
-            } else {
-                pick = before_pick;
-                break;
+        // Apply phase (sequential, most promising first): re-screen
+        // each proposal against the working baseline, which shifts as
+        // earlier swaps land; accepted swaps mutate `pick` in place
+        // and rebase the evaluator's price table.
+        let mut props: Vec<(usize, usize, f64)> =
+            proposals.into_iter().flatten().collect();
+        props.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        let before_pick = pick.clone();
+        let mut applied = false;
+        for (layer, alt, _) in props {
+            let dirty = swap_prices(&best.set, layer, &cands[layer][alt]);
+            let Ok(ms) = inc.retime(&best.set, &dirty) else { continue };
+            if ms + 1e-9 < inc.makespan() && inc.rebase(&best.set, &dirty).is_ok() {
+                pick[layer] = alt;
+                applied = true;
             }
         }
+        if !applied {
+            break;
+        }
+
+        // Confirm (incremental): re-run only the Algorithm-1 queue
+        // assembly under the new kernel mix (bundle balancing may
+        // shift) against the evaluator's rebased table — canonical op
+        // sets guarantee the set structure and table are already
+        // exact for `pick`, so no OpSet/Pricer/PriceTable rebuild.
+        // Accept only a real improvement of the fully evaluated
+        // makespan; otherwise the frozen-plan gains didn't survive
+        // the re-assembly — converged.
+        let trial = confirm_from_table(
+            &best.set,
+            choices_of(cands, pick),
+            inc.table(),
+            cfg,
+            n_prep_units,
+        );
+        if trial.schedule.makespan + 1e-9 < best.schedule.makespan {
+            table = Some(inc.into_table());
+            *best = trial;
+            accepted += 1;
+        } else {
+            *pick = before_pick;
+            break;
+        }
+    }
+    accepted
+}
+
+/// Run the NNV12 scheduler for a model on a device.
+pub fn schedule(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+) -> Scheduled {
+    let cands = build_candidates(dev, graph, registry, cfg);
+    let n_prep_units = prep_units(dev);
+    let mut pick = greedy_pick(&cands, cfg, n_prep_units);
+
+    // --- Outer loop: incremental coordinate descent over combinations ---
+    let (mut best, seed_table) = rebuild_with_table(dev, graph, &choices_of(&cands, &pick), cfg);
+    if cfg.kernel_selection {
+        let searchable: Vec<usize> =
+            (0..cands.len()).filter(|&l| cands[l].len() >= 2).collect();
+        descend(
+            &cands,
+            &mut pick,
+            &mut best,
+            seed_table,
+            cfg,
+            n_prep_units,
+            cfg.max_outer_passes,
+            &searchable,
+        );
     }
     best
+}
+
+/// Outcome of one cross-device seeded search ([`schedule_seeded`]).
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    /// The plan this search settled on (seeded short descent when the
+    /// transfer was accepted, full cold search when it was rejected).
+    /// Always at least as good as the greedy baseline — both branches
+    /// only ever accept confirmed improvements over their start point.
+    pub scheduled: Scheduled,
+    /// Whether the transferred seed was accepted (its re-priced makespan
+    /// on the target was no worse than the greedy baseline). Invariant:
+    /// `seeded == seed_ms.is_some_and(|s| s <= baseline_ms)`.
+    pub seeded: bool,
+    /// The transferred seed's fully evaluated makespan on the *target*
+    /// device (None when the seed didn't map structurally — wrong layer
+    /// count — and was rejected without pricing).
+    pub seed_ms: Option<Ms>,
+    /// The greedy seed's makespan — the cold search's starting point and
+    /// the bar the transferred seed had to clear.
+    pub baseline_ms: Ms,
+    /// Confirm-accepted descent passes this search ran (the fleet report
+    /// aggregates cold-vs-seeded pass counts into "passes saved").
+    pub passes: usize,
+}
+
+/// Cross-device plan transfer (ROADMAP item 3): run the scheduler with a
+/// donor device's kernel choices as the starting point instead of a cold
+/// search.
+///
+/// The donor's per-layer choices are mapped onto the target's
+/// Pareto-filtered candidate sets (a choice the target's registry/filter
+/// does not offer falls back to the greedy pick for that layer; a seed
+/// with the wrong layer count is rejected outright). The mapped seed is
+/// then *re-priced on the target* without a second cost-model run: the
+/// greedy rebuild's price table is patched at the disagreeing layers only
+/// — canonical op sets make a kernel swap an exact 3-entry delta
+/// ([`swap_prices`]), so the patched table is bit-identical to a freshly
+/// priced one and the seed's evaluation through [`confirm_from_table`] is
+/// bit-exact against the [`inner_schedule`] full-rebuild oracle
+/// (property-tested in `tests/fleet_transfer.rs`).
+///
+/// Accept/reject gate: the transferred seed is accepted only when its
+/// re-priced makespan is **no worse than the greedy baseline** — transfer
+/// must never start the descent from a worse point than a cold search
+/// would. Accepted seeds get a *short* descent (at most one pass,
+/// restricted to the layers the seed actually changed: the transfer's
+/// entire payoff is skipping the full pass budget); rejected seeds fall
+/// back to the full cold search, bit-identical to [`schedule`].
+pub fn schedule_seeded(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+    seed_choices: &[Option<KernelChoice>],
+) -> TransferOutcome {
+    let cands = build_candidates(dev, graph, registry, cfg);
+    let n_prep_units = prep_units(dev);
+    let mut pick = greedy_pick(&cands, cfg, n_prep_units);
+    let (greedy, greedy_table) =
+        rebuild_with_table(dev, graph, &choices_of(&cands, &pick), cfg);
+    let baseline_ms = greedy.schedule.makespan;
+
+    let cold = |mut pick: Vec<usize>, mut best: Scheduled, table: PriceTable, seed_ms| {
+        let passes = if cfg.kernel_selection {
+            let searchable: Vec<usize> =
+                (0..cands.len()).filter(|&l| cands[l].len() >= 2).collect();
+            descend(
+                &cands,
+                &mut pick,
+                &mut best,
+                table,
+                cfg,
+                n_prep_units,
+                cfg.max_outer_passes,
+                &searchable,
+            )
+        } else {
+            0
+        };
+        TransferOutcome { scheduled: best, seeded: false, seed_ms, baseline_ms, passes }
+    };
+
+    // Map the donor's choices onto the target's candidate sets.
+    if seed_choices.len() != cands.len() {
+        // Structural mismatch (seed is for a different architecture):
+        // nothing to transfer — full cold search.
+        return cold(pick, greedy, greedy_table, None);
+    }
+    let mut seed_pick = pick.clone();
+    let mut disagree: Vec<usize> = Vec::new();
+    for (layer, seed) in seed_choices.iter().enumerate() {
+        let Some(seed) = seed else { continue };
+        let Some(alt) = cands[layer].iter().position(|c| c.choice == *seed) else {
+            // Target doesn't offer this kernel/cache variant: keep greedy.
+            continue;
+        };
+        if alt != seed_pick[layer] {
+            seed_pick[layer] = alt;
+            disagree.push(layer);
+        }
+    }
+
+    // Re-price the transferred seed on the target: patch the greedy table
+    // at the disagreeing layers (exact 3-entry deltas), then one full
+    // evaluation through the incremental confirm. No OpSet/Pricer
+    // rebuild — the canonical set is choice-independent.
+    let mut seed_table = greedy_table.clone();
+    for &layer in &disagree {
+        for (op, gang, little) in
+            swap_prices(&greedy.set, layer, &cands[layer][seed_pick[layer]])
+        {
+            seed_table.set_op(op, gang, little);
+        }
+    }
+    let seed_eval = confirm_from_table(
+        &greedy.set,
+        choices_of(&cands, &seed_pick),
+        &seed_table,
+        cfg,
+        n_prep_units,
+    );
+    let seed_ms = seed_eval.schedule.makespan;
+    if seed_ms > baseline_ms {
+        // The seed revalidated worse than the greedy baseline: transferring
+        // it would start the descent from a worse point than a cold search.
+        return cold(pick, greedy, greedy_table, Some(seed_ms));
+    }
+
+    // Accepted: short descent (≤ 1 pass) over only the transferred layers.
+    pick = seed_pick;
+    let mut best = seed_eval;
+    let passes = if cfg.kernel_selection {
+        let searchable: Vec<usize> =
+            disagree.iter().copied().filter(|&l| cands[l].len() >= 2).collect();
+        descend(
+            &cands,
+            &mut pick,
+            &mut best,
+            seed_table,
+            cfg,
+            n_prep_units,
+            cfg.max_outer_passes.min(1),
+            &searchable,
+        )
+    } else {
+        0
+    };
+    TransferOutcome {
+        scheduled: best,
+        seeded: true,
+        seed_ms: Some(seed_ms),
+        baseline_ms,
+        passes,
+    }
 }
 
 /// Price deltas for re-evaluating `layer` as if it used `cand` — the dirty

@@ -90,6 +90,25 @@
 //! fig8/fig10 grids and repeated calibrated engines skip the (much more
 //! expensive) calibration loop the same way.
 //!
+//! # Fleet planning: seeded search vs cold search
+//!
+//! [`heuristic::schedule_seeded`] is the cross-device entry point of the
+//! [`crate::fleet`] subsystem. Instead of descending from the greedy
+//! seed, it maps a *donor device's* kernel choices onto the target's
+//! Pareto-filtered candidates, re-prices them by patching the greedy
+//! rebuild's price table at only the disagreeing layers (canonical op
+//! sets make each patch an exact 3-entry delta), and confirms the result
+//! with the same [`heuristic::confirm_from_table`] used at every pass
+//! end. The transferred seed is **accepted** only when that confirmed
+//! makespan is no worse than the target's own greedy baseline; it then
+//! runs a single descent pass restricted to the transferred layers. It
+//! is **rejected** — and the search falls back to the full cold descent
+//! — when the seed has the wrong layer count or re-prices worse than the
+//! baseline. Both branches end at a confirmed, fully evaluated plan that
+//! is never worse than the greedy baseline, so transfer affects search
+//! *time*, never the quality floor ([`heuristic::TransferOutcome`]
+//! documents the invariants).
+//!
 //! Callers normally do not drive this module directly: the
 //! [`crate::engine::Engine`] facade owns planning (cache, store,
 //! calibration) and hands out sessions; `sched` is the planner it drives.
@@ -113,7 +132,7 @@ pub mod cache;
 pub mod bruteforce;
 
 pub use cache::{CalibratedPlanCache, PlanCache};
-pub use heuristic::{schedule, SchedulerConfig};
+pub use heuristic::{schedule, schedule_seeded, SchedulerConfig, TransferOutcome};
 pub use makespan::IncrementalEval;
 pub use op::{OpId, OpSet, OpStage, Operation};
 pub use plan::{KernelChoice, Plan, UnitId};

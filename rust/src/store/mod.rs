@@ -1,12 +1,15 @@
 //! The content-addressed artifact store: one persistence layer for every
 //! byte the system finds expensive to recompute.
 //!
-//! NNV12 produces three kinds of durable artifacts: scheduling **plans**
+//! NNV12 produces four kinds of durable artifacts: scheduling **plans**
 //! (the Fig. 4 offline decision stage), **calibrated plans** (a plan plus
-//! the §3.3 re-profiled device view), and post-transformed **weights**
-//! (the §3.1.2 transformation-bypass cache). Before this module each had
-//! its own ad-hoc disk format with no shared integrity, versioning, or
-//! eviction story; [`ArtifactStore`] gives them one.
+//! the §3.3 re-profiled device view), post-transformed **weights**
+//! (the §3.1.2 transformation-bypass cache), and **fleet plans** (a plan
+//! published under a model scope and keyed by device fingerprint, so
+//! other devices can enumerate candidates for cross-device transfer —
+//! [`crate::fleet`]). Before this module each would have had its own
+//! ad-hoc disk format with no shared integrity, versioning, or eviction
+//! story; [`ArtifactStore`] gives them one.
 //!
 //! # Key scheme
 //!
@@ -30,7 +33,8 @@
 //! offset  size  field
 //!      0     8  magic  b"NNV12ART"
 //!      8     4  format version (little-endian u32, currently 1)
-//!     12     4  namespace id (u32: 0 plan, 1 calibrated-plan, 2 weights)
+//!     12     4  namespace id (u32: 0 plan, 1 calibrated-plan, 2 weights,
+//!                             3 fleet-plan)
 //!     16     8  key (u64; must match the filename)
 //!     24     8  payload length (u64)
 //!     32     8  FNV-1a 64 checksum of the payload
@@ -96,6 +100,12 @@ pub enum Namespace {
     CalibratedPlan,
     /// Post-transformed weight blobs (little-endian f32 payload).
     Weights,
+    /// Fleet-published plans (JSON payload): a plan plus the device
+    /// fingerprint it was searched on, stored under a *model* scope and
+    /// keyed by the fingerprint's identity so [`crate::fleet`] can
+    /// enumerate every device's plan for a model and pick the
+    /// nearest-profile one to seed a transfer.
+    FleetPlan,
 }
 
 impl Namespace {
@@ -105,6 +115,7 @@ impl Namespace {
             Namespace::Plan => "plan",
             Namespace::CalibratedPlan => "calibrated-plan",
             Namespace::Weights => "weights",
+            Namespace::FleetPlan => "fleet-plan",
         }
     }
 
@@ -113,6 +124,7 @@ impl Namespace {
             Namespace::Plan => 0,
             Namespace::CalibratedPlan => 1,
             Namespace::Weights => 2,
+            Namespace::FleetPlan => 3,
         }
     }
 }
@@ -476,6 +488,34 @@ impl ArtifactStore {
             .sum()
     }
 
+    /// Enumerate the keys of every artifact in one scope of a namespace,
+    /// parsed from the file names (no payloads are read or validated —
+    /// callers [`ArtifactStore::get_scoped`] the keys they care about,
+    /// which is where validation lives). Sorted ascending so enumeration
+    /// order is deterministic across platforms and directory layouts.
+    /// This is what makes the scoped file-name scheme a poor man's index:
+    /// the fleet's nearest-profile lookup lists every device's plan for a
+    /// model without maintaining a separate manifest.
+    pub fn keys_in_scope(&self, ns: Namespace, scope: &str) -> Vec<u64> {
+        let prefix = format!("{}~{}-", ns.tag(), sanitize_scope(scope));
+        let mut keys: Vec<u64> = self
+            .scan()
+            .iter()
+            .filter_map(|(path, _, _)| {
+                let name = path.file_name().and_then(|n| n.to_str())?;
+                if !name.starts_with(&prefix) {
+                    return None;
+                }
+                name.strip_suffix(".art")
+                    .and_then(|stem| stem.rsplit('-').next())
+                    .and_then(|hex| u64::from_str_radix(hex, 16).ok())
+            })
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
     /// All `.art` files: (path, bytes, mtime).
     fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
         let Ok(rd) = std::fs::read_dir(&self.dir) else {
@@ -564,7 +604,7 @@ impl ArtifactStore {
             })
             .collect();
         // Newest mtime per namespace; ties all count as newest (kept).
-        let mut newest: [Option<SystemTime>; 3] = [None; 3];
+        let mut newest: [Option<SystemTime>; 4] = [None; 4];
         for (_, _, mtime, ns) in &files {
             if let Some(ns) = ns {
                 let slot = &mut newest[ns.id() as usize];
@@ -718,7 +758,12 @@ pub struct GcResult {
 /// (`<ns>-<key>.art` or `<ns>~<scope>-<key>.art`). `None` for foreign
 /// files.
 fn namespace_of_file(name: &str) -> Option<Namespace> {
-    for ns in [Namespace::Plan, Namespace::CalibratedPlan, Namespace::Weights] {
+    for ns in [
+        Namespace::Plan,
+        Namespace::CalibratedPlan,
+        Namespace::Weights,
+        Namespace::FleetPlan,
+    ] {
         let tag = ns.tag();
         if name.len() > tag.len()
             && name.starts_with(tag)
@@ -918,6 +963,38 @@ mod tests {
         let r = s.gc(std::time::Duration::ZERO);
         assert_eq!(r.removed, 0, "{r:?}");
         assert!(dir.join("unrelated-0000000000000001.art").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keys_in_scope_enumerates_only_that_scope() {
+        let dir = temp_store("keys-scope");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = b"fleet plan".to_vec();
+        s.put_scoped(Namespace::FleetPlan, "resnet50", 0xb, &payload).unwrap();
+        s.put_scoped(Namespace::FleetPlan, "resnet50", 0xa, &payload).unwrap();
+        // Same key twice is one file (content-addressed last-wins).
+        s.put_scoped(Namespace::FleetPlan, "resnet50", 0xa, &payload).unwrap();
+        // Other scopes / namespaces / unscoped files never leak in.
+        s.put_scoped(Namespace::FleetPlan, "squeezenet", 0xc, &payload).unwrap();
+        s.put_scoped(Namespace::Weights, "resnet50", 0xd, &payload).unwrap();
+        s.put(Namespace::FleetPlan, 0xe, &payload).unwrap();
+        assert_eq!(s.keys_in_scope(Namespace::FleetPlan, "resnet50"), vec![0xa, 0xb]);
+        assert_eq!(s.keys_in_scope(Namespace::FleetPlan, "squeezenet"), vec![0xc]);
+        assert!(s.keys_in_scope(Namespace::FleetPlan, "absent").is_empty());
+        // Every enumerated key round-trips through the validated read.
+        for key in s.keys_in_scope(Namespace::FleetPlan, "resnet50") {
+            assert_eq!(s.get_scoped(Namespace::FleetPlan, "resnet50", key).unwrap(), payload);
+        }
+        // The new namespace plays by the store's rules: fsck sees no
+        // foreign files, and clear_namespace drops scoped + unscoped.
+        let audit = s.fsck();
+        assert_eq!((audit.corrupt, audit.foreign), (0, 0), "{audit:?}");
+        s.clear_namespace(Namespace::FleetPlan);
+        assert!(s.keys_in_scope(Namespace::FleetPlan, "resnet50").is_empty());
+        assert!(!s.contains(Namespace::FleetPlan, 0xe));
+        assert!(s.contains_scoped(Namespace::Weights, "resnet50", 0xd));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -78,6 +78,25 @@ impl Bench {
         }
     }
 
+    /// Register an externally measured quantity (already in ms, or any
+    /// unit the consumer agrees on — e.g. a latency percentile computed
+    /// by a workload replay) as a single-sample case, so it lands in the
+    /// same JSON dump the CI ratchet reads. Not filtered: a derived
+    /// metric belongs to whatever run produced it.
+    pub fn case_value(&mut self, name: &str, value_ms: f64) {
+        println!(
+            "{:<48} {:>12}",
+            format!("{}/{}", self.suite, name),
+            format!("{value_ms:.4} ms"),
+        );
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: 1,
+            per_iter_ms: Summary::of(&[value_ms]),
+            items_per_iter: None,
+        });
+    }
+
     /// Shared measurement core; returns whether the case ran (false when
     /// filtered out).
     fn measure<F: FnMut()>(&mut self, name: &str, items_per_iter: Option<usize>, mut f: F) -> bool {
@@ -222,6 +241,17 @@ mod tests {
         let case = &json.get("cases").as_arr().unwrap()[0];
         assert_eq!(case.get("items_per_iter").as_usize(), Some(128));
         assert!(case.get("items_per_sec").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn value_case_lands_in_results_verbatim() {
+        std::env::set_var("NNV12_BENCH_FAST", "1");
+        let mut b = Bench::new("unit-val");
+        b.case_value("p99", 12.5);
+        let rs = b.finish();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].per_iter_ms.mean, 12.5);
+        assert_eq!(rs[0].iters, 1);
     }
 
     #[test]

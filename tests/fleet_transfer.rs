@@ -1,0 +1,249 @@
+//! Transfer-correctness properties for the fleet subsystem
+//! (`nnv12::fleet`, ROADMAP item 3).
+//!
+//! Three contracts, checked across the model zoo and every CPU and GPU
+//! profile in `device/profiles.rs`:
+//!
+//! 1. **Seeded results revalidate bit-exactly on the target.** Whatever
+//!    plan `schedule_seeded` settles on, re-running its kernel choices
+//!    through the `inner_schedule` full-rebuild oracle (fresh op set,
+//!    fresh pricer, fresh price table) must reproduce the same makespan
+//!    and `estimated_ms` bits — the transfer path's patched-table
+//!    re-pricing is exact, not approximate.
+//!
+//! 2. **The accept gate is the law.** `seeded` is true iff the mapped
+//!    seed re-priced no worse than the target's own greedy baseline, and
+//!    the final plan never loses to that baseline on either branch. A
+//!    seed that loses (or does not map — wrong layer count) falls back
+//!    to the full cold search, bit-identical to `schedule`.
+//!
+//! 3. **Fleet runs only ever improve.** Planning the same zoo over the
+//!    same store twice makes every cell a distance-0 transfer hit, and
+//!    the kept plan is never worse than the same-run cold search.
+
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::device::DeviceProfile;
+use nnv12::fleet::FleetPlanner;
+use nnv12::graph::zoo;
+use nnv12::kernels::Registry;
+use nnv12::sched::filter::candidates;
+use nnv12::sched::heuristic::{
+    inner_schedule, schedule, schedule_seeded, SchedulerConfig, TransferOutcome,
+};
+use nnv12::sched::plan::{default_choices, KernelChoice};
+use nnv12::store::ArtifactStore;
+use nnv12::util::prop;
+use nnv12::util::rng::Rng;
+
+/// The whole-fleet sweep: every profile, CPU and GPU.
+fn fleet() -> Vec<DeviceProfile> {
+    profiles::all_devices()
+}
+
+/// Small-zoo subset: the sweep multiplies models × devices × searches,
+/// and tier-1 tests run under the debug profile.
+fn small_zoo() -> Vec<nnv12::graph::ModelGraph> {
+    vec![zoo::tiny_net(), zoo::squeezenet()]
+}
+
+/// The shared contract every `schedule_seeded` outcome must satisfy on
+/// `dev`: accept-gate consistency, never-worse-than-baseline, bit-exact
+/// revalidation against the full-rebuild oracle, and bit-identical cold
+/// fallback on rejection.
+fn check_outcome(
+    dev: &DeviceProfile,
+    g: &nnv12::graph::ModelGraph,
+    cfg: &SchedulerConfig,
+    o: &TransferOutcome,
+    ctx: &str,
+) {
+    assert_eq!(
+        o.seeded,
+        o.seed_ms.is_some_and(|s| s <= o.baseline_ms),
+        "{ctx}: accept gate must be exactly `seed_ms <= baseline_ms`"
+    );
+    assert!(
+        o.scheduled.schedule.makespan <= o.baseline_ms + 1e-9,
+        "{ctx}: final {:.6} ms must never lose to baseline {:.6} ms",
+        o.scheduled.schedule.makespan,
+        o.baseline_ms
+    );
+    // Full-rebuild oracle: re-price the settled plan's choices from
+    // scratch on the target; the patched-table path must agree to the
+    // bit.
+    let oracle = inner_schedule(dev, g, &o.scheduled.plan.choices, cfg);
+    assert_eq!(
+        oracle.schedule.makespan.to_bits(),
+        o.scheduled.schedule.makespan.to_bits(),
+        "{ctx}: rebuild oracle {:.17} != transfer result {:.17}",
+        oracle.schedule.makespan,
+        o.scheduled.schedule.makespan
+    );
+    assert_eq!(
+        oracle.plan.estimated_ms.to_bits(),
+        o.scheduled.plan.estimated_ms.to_bits(),
+        "{ctx}: estimated_ms differs from rebuild oracle"
+    );
+    if !o.seeded {
+        // Rejection (or miss) must be indistinguishable from never
+        // having had a seed at all.
+        let cold = schedule(dev, g, &Registry::full(), cfg);
+        assert_eq!(
+            cold.schedule.makespan.to_bits(),
+            o.scheduled.schedule.makespan.to_bits(),
+            "{ctx}: rejected seed must fall back to the cold search bit-exactly"
+        );
+    }
+}
+
+#[test]
+fn seeded_search_revalidates_bit_exactly_across_the_fleet() {
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+    for g in small_zoo() {
+        // Walk the fleet as a donor chain: each device seeds from the
+        // plan the previous device settled on — exactly the shape of a
+        // fleet tour, donors of varying distance included.
+        let mut donor: Option<Vec<Option<KernelChoice>>> = None;
+        for dev in fleet() {
+            let seed = donor.as_deref().unwrap_or(&[]);
+            let o = schedule_seeded(&dev, &g, &reg, &cfg, seed);
+            check_outcome(&dev, &g, &cfg, &o, &format!("{}/{}", dev.name, g.name));
+            donor = Some(o.scheduled.plan.choices.clone());
+        }
+    }
+}
+
+#[test]
+fn self_seed_is_always_accepted() {
+    // A device's own settled plan re-seeded onto itself re-prices to the
+    // same (or better-than-baseline) makespan, so the `<=` gate must
+    // accept it — the steady state of a warm fleet store.
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+    for dev in fleet() {
+        let g = zoo::squeezenet();
+        let own = schedule_seeded(&dev, &g, &reg, &cfg, &[]);
+        let o = schedule_seeded(&dev, &g, &reg, &cfg, &own.scheduled.plan.choices);
+        assert!(o.seeded, "{}: own plan must pass the accept gate", dev.name);
+        assert!(
+            o.scheduled.schedule.makespan <= own.scheduled.schedule.makespan + 1e-9,
+            "{}: re-seeding with the settled plan must not regress it",
+            dev.name
+        );
+        check_outcome(&dev, &g, &cfg, &o, dev.name);
+    }
+}
+
+#[test]
+fn mismatched_seed_is_exactly_the_cold_search() {
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+    let dev = profiles::meizu_16t();
+    let target = zoo::squeezenet();
+    let other = zoo::tiny_net();
+    let foreign = default_choices(&other, &reg);
+    assert_ne!(
+        foreign.len(),
+        default_choices(&target, &reg).len(),
+        "fixture models must differ in layer count"
+    );
+    for seed in [&[][..], &foreign[..]] {
+        let o = schedule_seeded(&dev, &target, &reg, &cfg, seed);
+        assert!(o.seed_ms.is_none(), "unmappable seed must not be priced");
+        assert!(!o.seeded);
+        check_outcome(&dev, &target, &cfg, &o, "meizu16t/squeezenet[mismatch]");
+    }
+}
+
+#[test]
+fn random_seeds_uphold_the_contract_including_losing_ones() {
+    // Property sweep: seeds assembled from random candidate choices —
+    // whatever they re-price to, the contract holds (accepted, or
+    // rejected with a bit-exact cold fallback), on a CPU phone and on a
+    // GPU board. The accepted branch is forced structurally by
+    // `self_seed_is_always_accepted`; the rejected branch is forced
+    // below by constructing a seed that provably loses.
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+    for dev in [profiles::meizu_16t(), profiles::jetson_tx2()] {
+        let g = zoo::squeezenet();
+        let defaults = default_choices(&g, &reg);
+        let weighted = g.weighted_layers();
+        let mut saw_rejected = false;
+        prop::check(0xF1EE7 ^ dev.name.len() as u64, 12, |rng: &mut Rng| {
+            let mut seed = defaults.clone();
+            for _ in 0..rng.index(weighted.len()) + 1 {
+                let l = weighted[rng.index(weighted.len())];
+                let cands = candidates(&dev, g.layer(l), &reg, true);
+                seed[l] = Some(rng.choose(&cands).choice.clone());
+            }
+            let o = schedule_seeded(&dev, &g, &reg, &cfg, &seed);
+            if o.seed_ms.is_none() {
+                return Err("mapped seed of the right length must be priced".into());
+            }
+            check_outcome(&dev, &g, &cfg, &o, &format!("{}/random", dev.name));
+            saw_rejected |= !o.seeded;
+            Ok(())
+        });
+
+        if !saw_rejected {
+            // The random sweep got lucky everywhere: force the losing
+            // branch. Enumerate single-candidate swaps off the settled
+            // cold plan and price them through the rebuild oracle until
+            // one confirms strictly worse than the greedy baseline —
+            // `schedule_seeded` prices bit-identically (contract 1), so
+            // that seed MUST be rejected.
+            let cold = schedule_seeded(&dev, &g, &reg, &cfg, &[]);
+            let loser = weighted.iter().find_map(|&l| {
+                candidates(&dev, g.layer(l), &reg, true).iter().find_map(|c| {
+                    let mut seed = cold.scheduled.plan.choices.clone();
+                    seed[l] = Some(c.choice.clone());
+                    let ms = inner_schedule(&dev, &g, &seed, &cfg).schedule.makespan;
+                    (ms > cold.baseline_ms + 1e-9).then_some(seed)
+                })
+            });
+            let seed = loser.unwrap_or_else(|| {
+                panic!("{}: no losing seed exists even one swap away", dev.name)
+            });
+            let o = schedule_seeded(&dev, &g, &reg, &cfg, &seed);
+            assert!(!o.seeded, "{}: provably losing seed must be rejected", dev.name);
+            check_outcome(&dev, &g, &cfg, &o, &format!("{}/forced-loser", dev.name));
+        }
+    }
+}
+
+#[test]
+fn fleet_run_over_all_profiles_hits_on_the_second_pass() {
+    let dir = std::env::temp_dir().join(format!(
+        "nnv12-fleettest-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let models = [zoo::tiny_net()];
+    let store = || Arc::new(ArtifactStore::open(&dir).unwrap());
+
+    let first =
+        FleetPlanner::new(store(), SchedulerConfig::kcp()).plan_fleet(&models, fleet());
+    assert_eq!(first.cells.len(), 6);
+    assert!(first.misses >= 1, "the tour's first device has no donor");
+    for c in &first.cells {
+        assert!(c.kept_ms <= c.cold_ms, "{}/{}", c.device, c.model);
+        assert!(c.transfer_ms <= c.baseline_ms + 1e-9, "{}/{}", c.device, c.model);
+    }
+
+    // Second pass over the warm store: every device finds its own plan
+    // at distance 0, so the whole fleet seeds.
+    let second =
+        FleetPlanner::new(store(), SchedulerConfig::kcp()).plan_fleet(&models, fleet());
+    assert_eq!(second.hits, second.cells.len(), "{}", second.summary());
+    assert!(second.hit_rate() == 1.0);
+    for c in &second.cells {
+        assert_eq!(c.distance, Some(0.0), "{}/{}", c.device, c.model);
+        assert!(c.kept_ms <= c.cold_ms);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
