@@ -1,0 +1,90 @@
+//! Bench: expected-makespan plan search for multi-exit models.
+//!
+//! Times [`nnv12::exits::schedule_expected`] (the survival-weighted plan
+//! search) against the probability-blind [`nnv12::sched::schedule`] on
+//! the heaviest branchy model, then registers the quality pair the CI
+//! ratchet consumes: the summed *expected makespan* (model units, not
+//! wall clock) of the expected-arm plans vs the blind plans across every
+//! branchy zoo model under three exit-rate regimes — the calibrated
+//! probabilities, a hot-input regime (every exit raised to 0.9), and the
+//! certain-exit regime (1.0, where the tail is free and only head
+//! scheduling counts).
+//!
+//! Emits `BENCH_exits.json`. CI ratchets `exits-expected/branchy`
+//! against `exits-blind/branchy` measured in the same run: both sides
+//! are deterministic cost-model arithmetic over plans searched in this
+//! run, so the ratio is runner-independent. By construction
+//! (`compare_expected_vs_blind` falls back to the blind plan when the
+//! weighted search does not beat it) the ratio can never exceed 1.0; the
+//! cap below 1.0 asserts the weighted search keeps finding *strictly*
+//! better expected plans — if it decays into the blind search plus
+//! overhead, the ratio drifts to 1.0 and the ratchet hard-fails.
+
+use nnv12::device::profiles;
+use nnv12::exits::{compare_expected_vs_blind, schedule_expected};
+use nnv12::graph::{zoo, ExitPoint, ModelGraph};
+use nnv12::kernels::Registry;
+use nnv12::sched::heuristic::SchedulerConfig;
+use nnv12::util::bench::Bench;
+
+/// The model with every exit probability overridden to `p` — the
+/// exit-rate regimes sweep workload difficulty without touching the
+/// backbone.
+fn with_probability(g: &ModelGraph, p: f64) -> ModelGraph {
+    let exits: Vec<ExitPoint> =
+        g.exits().iter().map(|e| ExitPoint { probability: p, ..*e }).collect();
+    g.clone().with_exits(exits).expect("same layers, same exits")
+}
+
+fn main() {
+    let mut b = Bench::new("exits_expected");
+    let dev = profiles::meizu_16t();
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+
+    // Wall-clock arm: the weighted search does one extra table pass over
+    // the blind search (weighting + re-pricing); keep its cost visible.
+    let heavy = zoo::branchy_resnet18();
+    b.case("schedule-expected/branchy-resnet18", || {
+        let s = schedule_expected(&dev, &heavy, &reg, &cfg);
+        assert!(s.schedule.makespan > 0.0);
+    });
+
+    // Quality arm: summed expected makespans, expected plan vs blind
+    // plan, same metric, same run. Deterministic in the cost model.
+    let mut expected_sum = 0.0;
+    let mut blind_sum = 0.0;
+    for model in zoo::BRANCHY_MODELS {
+        let base = zoo::by_name(model).unwrap();
+        for (regime, g) in [
+            ("calibrated", base.clone()),
+            ("hot", with_probability(&base, 0.9)),
+            ("certain", with_probability(&base, 1.0)),
+        ] {
+            let cmp = compare_expected_vs_blind(&dev, &g, &reg, &cfg);
+            assert!(
+                cmp.expected_ms <= cmp.blind_ms,
+                "{model}/{regime}: expected arm must never lose: {} vs {}",
+                cmp.expected_ms,
+                cmp.blind_ms
+            );
+            println!(
+                "{model:<20} {regime:<10} expected {:>9.3} ms  blind {:>9.3} ms  ({:.3}x)",
+                cmp.expected_ms,
+                cmp.blind_ms,
+                cmp.expected_ms / cmp.blind_ms.max(1e-12)
+            );
+            expected_sum += cmp.expected_ms;
+            blind_sum += cmp.blind_ms;
+        }
+    }
+    b.case_value("exits-expected/branchy", expected_sum);
+    b.case_value("exits-blind/branchy", blind_sum);
+
+    b.finish_to("BENCH_exits.json");
+    assert!(
+        expected_sum < blind_sum,
+        "the weighted search must strictly beat blind somewhere in the grid: \
+         {expected_sum} vs {blind_sum}"
+    );
+}

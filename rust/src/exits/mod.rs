@@ -1,0 +1,459 @@
+//! Early-exit (conditional-execution) workloads: expected-makespan
+//! scheduling and the local-vs-offload decision model.
+//!
+//! Multi-exit models ([`crate::graph::ExitPoint`]) make execution past an
+//! exit *conditional*: a layer only runs for the fraction of requests
+//! that survived every earlier exit. This module teaches the planner and
+//! the serving layer about that structure:
+//!
+//! * **Expected-makespan scheduling** ([`schedule_expected`]). The cold
+//!   plan is searched under *survival-weighted* prices: every op of layer
+//!   `l` is priced at `weight[l] ×` its cold cost, where `weight[l] =
+//!   Π (1 - p_e)` over the exits preceding `l`
+//!   ([`crate::graph::ModelGraph::survival_weights`]). The search reuses
+//!   the exact incremental machinery of [`crate::sched::heuristic`]
+//!   unchanged — canonical op sets, flat price tables, 3-entry
+//!   [`crate::sched::heuristic::swap_prices`] deltas, incremental confirm
+//!   — only the numbers in the table (and on the Pareto candidates)
+//!   carry the weights. Because a layer's weight scales *all* of its
+//!   prices uniformly, the per-layer greedy ranking is unchanged; the
+//!   win comes from Algorithm 1's bundle promotion/balancing and the
+//!   coordinate descent optimizing the makespan that requests actually
+//!   experience, instead of the worst-case all-layers one. With all exit
+//!   probabilities zero the weights are all `1.0`, multiplication is
+//!   bit-preserving in IEEE arithmetic, and [`schedule_expected`] is
+//!   **bit-identical** to [`crate::sched::schedule`] (tested here and
+//!   against the [`crate::sched::heuristic::inner_schedule`] oracle).
+//! * **Expected-makespan scoring** ([`expected_price_table`],
+//!   [`expected_makespan_of`]). Any plan — in particular a
+//!   probability-blind one — can be evaluated under the same weighted
+//!   metric, which is how [`compare_expected_vs_blind`] produces the
+//!   apples-to-apples comparison the `exits` report and bench ratchet.
+//! * **Offload estimation** ([`OffloadPolicy`], [`offload_estimate`]).
+//!   The CSGO-style collaborative-serving formulation: serve the head up
+//!   to the first exit locally; requests that do not exit there ship the
+//!   cut-point activation to a simulated remote over an RTT + bandwidth
+//!   link and run the tail there. The estimate is a deterministic
+//!   expected latency the Router compares against the request's deadline
+//!   ([`crate::serving::Router`] folds the resulting `offloaded` outcome
+//!   into its conservation invariant).
+
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::graph::{LayerId, ModelGraph};
+use crate::kernels::Registry;
+use crate::sched::filter::Candidate;
+use crate::sched::heuristic::{
+    build_candidates, choices_of, confirm_from_table, descend, greedy_pick, prep_units,
+    Scheduled, SchedulerConfig,
+};
+use crate::sched::makespan::evaluate_with;
+use crate::sched::op::OpSet;
+use crate::sched::plan::KernelChoice;
+use crate::sched::price::{PriceTable, Pricer};
+use crate::Ms;
+
+/// Scale every lane of `table` by its op's layer survival weight. Weight
+/// `1.0` is bit-preserving, so a graph without exits leaves the table
+/// untouched bit-for-bit.
+fn apply_weights(set: &OpSet, table: &mut PriceTable, weights: &[f64]) {
+    for op in &set.ops {
+        let w = weights[op.layer];
+        table.gang[op.id] *= w;
+        table.little[op.id] *= w;
+    }
+}
+
+/// Scale the Pareto candidates' flat prices by their layer's survival
+/// weight, so [`crate::sched::heuristic::swap_prices`] deltas stay exact
+/// 3-entry patches *of the weighted table*.
+fn weight_candidates(cands: &mut [Vec<Candidate>], weights: &[f64]) {
+    for (layer, cs) in cands.iter_mut().enumerate() {
+        let w = weights[layer];
+        for c in cs.iter_mut() {
+            c.prep_ms *= w;
+            c.exec_ms *= w;
+            c.read_g *= w;
+            c.read_l *= w;
+            c.tf_g *= w;
+            c.tf_l *= w;
+            c.exec_g *= w;
+            c.exec_l *= w;
+        }
+    }
+}
+
+/// The survival-weighted price table for `choices` on `dev` — the
+/// expected-makespan metric as a reusable object. Returns the canonical
+/// op set, the weighted table, and the little-unit count the assembly
+/// uses.
+pub fn expected_price_table(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    choices: &[Option<KernelChoice>],
+    cfg: &SchedulerConfig,
+) -> (Arc<OpSet>, PriceTable, usize) {
+    let set = Arc::new(OpSet::build(graph, choices, dev.executes_on_gpu()));
+    let pricer = Pricer::new(dev, graph, choices, cfg.shader_cache);
+    let mut table = PriceTable::build(&set, &pricer);
+    apply_weights(&set, &mut table, &graph.survival_weights());
+    (set, table, pricer.n_little_units())
+}
+
+/// Expected (survival-weighted) makespan of an arbitrary plan — the
+/// common metric [`compare_expected_vs_blind`] scores both arms under.
+pub fn expected_makespan_of(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    scheduled: &Scheduled,
+    cfg: &SchedulerConfig,
+) -> Ms {
+    let (_, table, _) = expected_price_table(dev, graph, &scheduled.plan.choices, cfg);
+    evaluate_with(&scheduled.set, &scheduled.plan, &table)
+        .expect("plan valid under weighted prices")
+        .makespan
+}
+
+/// The expected-makespan scheduler: [`crate::sched::schedule`] run under
+/// survival-weighted prices. The returned [`Scheduled`]'s makespan is the
+/// *expected* cold makespan over the exit distribution, and the plan's
+/// queue assignment is optimized for it — early-exit heads land on fast
+/// units, conditional tail work is discounted by how rarely it runs.
+///
+/// Exactness contract: with every exit probability `0` (or a graph with
+/// no exits at all) this is bit-identical to [`crate::sched::schedule`] —
+/// weights of `1.0` preserve every price bit, so greedy seeding,
+/// Algorithm-1 assembly, and the incremental descent take exactly the
+/// same branches.
+pub fn schedule_expected(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+) -> Scheduled {
+    let weights = graph.survival_weights();
+    let mut cands = build_candidates(dev, graph, registry, cfg);
+    weight_candidates(&mut cands, &weights);
+    let n_prep_units = prep_units(dev);
+    let mut pick = greedy_pick(&cands, cfg, n_prep_units);
+
+    let choices = choices_of(&cands, &pick);
+    let set = Arc::new(OpSet::build(graph, &choices, dev.executes_on_gpu()));
+    let pricer = Pricer::new(dev, graph, &choices, cfg.shader_cache);
+    let mut table = PriceTable::build(&set, &pricer);
+    apply_weights(&set, &mut table, &weights);
+    let n_little = pricer.n_little_units();
+    let mut best = confirm_from_table(&set, choices, &table, cfg, n_little);
+
+    if cfg.kernel_selection {
+        let searchable: Vec<usize> =
+            (0..cands.len()).filter(|&l| cands[l].len() >= 2).collect();
+        descend(
+            &cands,
+            &mut pick,
+            &mut best,
+            table,
+            cfg,
+            n_prep_units,
+            cfg.max_outer_passes,
+            &searchable,
+        );
+    }
+    best
+}
+
+/// Result of [`compare_expected_vs_blind`]: both plans, both scored under
+/// the *same* survival-weighted metric.
+#[derive(Debug, Clone)]
+pub struct ExitComparison {
+    /// The expected-makespan scheduler's plan.
+    pub expected: Scheduled,
+    /// The probability-blind plan ([`crate::sched::schedule`]).
+    pub blind: Scheduled,
+    /// Expected makespan of the expected plan.
+    pub expected_ms: Ms,
+    /// Expected makespan of the blind plan.
+    pub blind_ms: Ms,
+}
+
+/// Schedule `graph` both ways — probability-blind and
+/// expected-makespan-aware — and score both under the survival-weighted
+/// metric. Guarantee: `expected_ms <= blind_ms`, because the expected
+/// scheduler may always keep the blind plan when its own search does not
+/// improve on it (the blind plan is a valid candidate answer under the
+/// weighted metric); the measured gap on the branchy zoo is what the
+/// `exits` bench ratchets.
+pub fn compare_expected_vs_blind(
+    dev: &DeviceProfile,
+    graph: &ModelGraph,
+    registry: &Registry,
+    cfg: &SchedulerConfig,
+) -> ExitComparison {
+    let blind = crate::sched::schedule(dev, graph, registry, cfg);
+    let blind_ms = expected_makespan_of(dev, graph, &blind, cfg);
+    let expected = schedule_expected(dev, graph, registry, cfg);
+    let expected_ms = expected.schedule.makespan;
+    if expected_ms <= blind_ms {
+        ExitComparison { expected, blind, expected_ms, blind_ms }
+    } else {
+        ExitComparison { expected: blind.clone(), blind, expected_ms: blind_ms, blind_ms }
+    }
+}
+
+/// Policy for offloading the conditional tail of a multi-exit model to a
+/// simulated remote (the CSGO collaborative-serving formulation). All
+/// parameters are deterministic: the estimate is pure arithmetic, so
+/// serving replays stay bit-reproducible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OffloadPolicy {
+    /// Round-trip time to the remote, ms (paid once per offloaded tail).
+    pub rtt_ms: Ms,
+    /// Uplink bandwidth for shipping the cut-point activation, megabits/s.
+    pub bandwidth_mbps: f64,
+    /// How much faster the remote executes the tail than the local cold
+    /// estimate (a server-class accelerator vs the edge SoC).
+    pub remote_speedup: f64,
+    /// Remote-side cold-start penalty charged once per offloaded request
+    /// (container wake + weights already resident remotely).
+    pub remote_cold_ms: Ms,
+}
+
+impl Default for OffloadPolicy {
+    fn default() -> OffloadPolicy {
+        OffloadPolicy {
+            rtt_ms: 20.0,
+            bandwidth_mbps: 100.0,
+            remote_speedup: 4.0,
+            remote_cold_ms: 8.0,
+        }
+    }
+}
+
+/// One offload decision's arithmetic, all in the open for the report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OffloadEstimate {
+    /// The backbone layer whose activation ships to the remote.
+    pub cut_layer: LayerId,
+    /// Bytes of that activation (fp32).
+    pub transfer_bytes: u64,
+    /// Local head cost: the cold estimate scaled by the head's share of
+    /// the model's FLOPs (everything up to and including the first exit).
+    pub head_ms: Ms,
+    /// RTT + activation transfer, ms.
+    pub link_ms: Ms,
+    /// Remote tail execution + remote cold penalty, ms.
+    pub remote_tail_ms: Ms,
+    /// Probability a request survives the first exit and needs the tail.
+    pub survive: f64,
+    /// Expected end-to-end latency:
+    /// `head + survive × (link + remote_tail)`.
+    pub expected_ms: Ms,
+}
+
+/// Deterministic expected latency of serving `graph` with its head local
+/// and its tail offloaded per `policy`, given the local cold estimate.
+/// `None` for single-exit graphs (nothing to cut at) or degenerate cost
+/// models.
+pub fn offload_estimate(
+    graph: &ModelGraph,
+    policy: &OffloadPolicy,
+    local_cold_ms: Ms,
+) -> Option<OffloadEstimate> {
+    let exit = graph.exits().first()?;
+    let total_flops = graph.flops() as f64;
+    if total_flops <= 0.0 || !local_cold_ms.is_finite() || local_cold_ms <= 0.0 {
+        return None;
+    }
+    let head_flops: f64 = graph
+        .layers()
+        .iter()
+        .filter(|l| l.id <= exit.layer)
+        .map(|l| l.flops() as f64)
+        .sum();
+    let head_frac = (head_flops / total_flops).clamp(0.0, 1.0);
+    let head_ms = local_cold_ms * head_frac;
+
+    // The tensor shipped remote is the backbone activation at the branch
+    // point: the first tail layer's dependency inside the head region.
+    let mut cut_layer = exit.layer;
+    for l in graph.layers().iter().filter(|l| l.id > exit.layer) {
+        if let Some(&d) = l.deps.iter().find(|&&d| d <= exit.layer) {
+            cut_layer = d;
+        }
+        break;
+    }
+    let transfer_bytes = graph.layer(cut_layer).activation_bytes();
+    let data_ms = transfer_bytes as f64 * 8.0 / (policy.bandwidth_mbps.max(1e-9) * 1e3);
+    let link_ms = policy.rtt_ms + data_ms;
+    let remote_tail_ms =
+        (local_cold_ms - head_ms) / policy.remote_speedup.max(1e-9) + policy.remote_cold_ms;
+    let survive = (1.0 - exit.probability).clamp(0.0, 1.0);
+    Some(OffloadEstimate {
+        cut_layer,
+        transfer_bytes,
+        head_ms,
+        link_ms,
+        remote_tail_ms,
+        survive,
+        expected_ms: head_ms + survive * (link_ms + remote_tail_ms),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::graph::{zoo, ExitPoint};
+    use crate::sched::heuristic::inner_schedule;
+    use crate::sched::schedule;
+
+    fn with_probability(g: &ModelGraph, p: f64) -> ModelGraph {
+        let exits: Vec<ExitPoint> = g
+            .exits()
+            .iter()
+            .map(|e| ExitPoint { probability: p, ..*e })
+            .collect();
+        g.clone().with_exits(exits).unwrap()
+    }
+
+    #[test]
+    fn no_exits_is_bit_exact_vs_blind_scheduler() {
+        let dev = profiles::meizu_16t();
+        let cfg = SchedulerConfig::kcp();
+        let reg = Registry::full();
+        for model in ["tinynet", "squeezenet"] {
+            let g = zoo::by_name(model).unwrap();
+            let a = schedule(&dev, &g, &reg, &cfg);
+            let b = schedule_expected(&dev, &g, &reg, &cfg);
+            assert_eq!(
+                a.schedule.makespan.to_bits(),
+                b.schedule.makespan.to_bits(),
+                "{model}: expected scheduler drifted from the blind one"
+            );
+            assert_eq!(a.plan.gang, b.plan.gang);
+            assert_eq!(a.plan.little, b.plan.little);
+            assert_eq!(a.plan.choices, b.plan.choices);
+        }
+    }
+
+    #[test]
+    fn zero_probability_exits_are_bit_exact_vs_oracle() {
+        // All-zero exit probabilities ⇒ all-ones weights ⇒ every price
+        // multiplication is by 1.0 (bit-preserving) ⇒ the expected search
+        // must reproduce the blind plan bit-for-bit, and re-deriving its
+        // choices through the from-scratch `inner_schedule` oracle must
+        // reproduce the reported makespan exactly.
+        let dev = profiles::meizu_16t();
+        let cfg = SchedulerConfig::kcp();
+        let reg = Registry::full();
+        for model in ["branchy-tinynet", "branchy-mobilenet"] {
+            let g = with_probability(&zoo::by_name(model).unwrap(), 0.0);
+            let blind = schedule(&dev, &g, &reg, &cfg);
+            let exp = schedule_expected(&dev, &g, &reg, &cfg);
+            assert_eq!(
+                blind.schedule.makespan.to_bits(),
+                exp.schedule.makespan.to_bits(),
+                "{model}: zero-probability expected plan drifted"
+            );
+            assert_eq!(blind.plan.gang, exp.plan.gang, "{model}");
+            assert_eq!(blind.plan.little, exp.plan.little, "{model}");
+            let oracle = inner_schedule(&dev, &g, &exp.plan.choices, &cfg);
+            assert_eq!(
+                oracle.schedule.makespan.to_bits(),
+                exp.schedule.makespan.to_bits(),
+                "{model}: inner_schedule oracle disagrees"
+            );
+        }
+    }
+
+    #[test]
+    fn probability_one_first_exit_schedules_only_the_head() {
+        // p = 1 on the first exit zeroes the survival weight of every
+        // layer past its head: the weighted table prices the whole tail
+        // at exactly 0, and the expected makespan collapses to head-only
+        // work — strictly below the blind (full-model) makespan.
+        let dev = profiles::meizu_16t();
+        let cfg = SchedulerConfig::kcp();
+        let reg = Registry::full();
+        let g = with_probability(&zoo::branchy_tinynet(), 1.0);
+        let first_exit = g.exits()[0].layer;
+        let w = g.survival_weights();
+        for l in 0..g.len() {
+            if l > first_exit {
+                assert_eq!(w[l], 0.0, "layer {l} must be unreachable");
+            }
+        }
+        let exp = schedule_expected(&dev, &g, &reg, &cfg);
+        let (set, table, _) = expected_price_table(&dev, &g, &exp.plan.choices, &cfg);
+        for op in &set.ops {
+            if op.layer > first_exit {
+                assert_eq!(table.gang[op.id], 0.0, "tail op {} priced", op.id);
+                assert_eq!(table.little[op.id], 0.0, "tail op {} priced", op.id);
+            }
+        }
+        let blind = schedule(&dev, &g, &reg, &cfg);
+        assert!(
+            exp.schedule.makespan < blind.schedule.makespan,
+            "head-only expected {} must beat full blind {}",
+            exp.schedule.makespan,
+            blind.schedule.makespan
+        );
+    }
+
+    #[test]
+    fn expected_never_worse_than_blind_under_the_weighted_metric() {
+        let dev = profiles::meizu_16t();
+        let cfg = SchedulerConfig::kcp();
+        let reg = Registry::full();
+        for model in ["branchy-resnet18", "branchy-mobilenet", "branchy-tinynet"] {
+            let g = zoo::by_name(model).unwrap();
+            let cmp = compare_expected_vs_blind(&dev, &g, &reg, &cfg);
+            assert!(
+                cmp.expected_ms <= cmp.blind_ms + 1e-9,
+                "{model}: expected {} vs blind {}",
+                cmp.expected_ms,
+                cmp.blind_ms
+            );
+            // And the weighted metric can only discount a plan, never
+            // inflate it (weights ≤ 1, fixed queues are monotone in op
+            // durations).
+            assert!(cmp.blind_ms <= cmp.blind.schedule.makespan + 1e-9, "{model}");
+        }
+    }
+
+    #[test]
+    fn weighted_metric_matches_search_output() {
+        // The makespan the expected search reports IS the weighted metric
+        // of its plan — scoring the returned plan through
+        // `expected_makespan_of` must agree bit-for-bit.
+        let dev = profiles::meizu_16t();
+        let cfg = SchedulerConfig::kcp();
+        let g = zoo::branchy_mobilenet();
+        let exp = schedule_expected(&dev, &g, &Registry::full(), &cfg);
+        let scored = expected_makespan_of(&dev, &g, &exp, &cfg);
+        assert_eq!(scored.to_bits(), exp.schedule.makespan.to_bits());
+    }
+
+    #[test]
+    fn offload_estimate_arithmetic() {
+        let g = zoo::branchy_resnet18();
+        let policy = OffloadPolicy::default();
+        let est = offload_estimate(&g, &policy, 1000.0).unwrap();
+        assert!(est.cut_layer < g.exits()[0].layer);
+        assert!(est.head_ms > 0.0 && est.head_ms < 1000.0);
+        assert!(est.survive > 0.0 && est.survive < 1.0);
+        assert!(est.expected_ms > est.head_ms);
+        // Cheaper link ⇒ cheaper offload; slower remote ⇒ pricier.
+        let fast_link =
+            offload_estimate(&g, &OffloadPolicy { bandwidth_mbps: 1000.0, ..policy }, 1000.0)
+                .unwrap();
+        assert!(fast_link.expected_ms < est.expected_ms);
+        let slow_remote =
+            offload_estimate(&g, &OffloadPolicy { remote_speedup: 1.0, ..policy }, 1000.0)
+                .unwrap();
+        assert!(slow_remote.expected_ms > est.expected_ms);
+        // Single-exit models have nothing to cut.
+        assert!(offload_estimate(&zoo::tiny_net(), &policy, 1000.0).is_none());
+    }
+}

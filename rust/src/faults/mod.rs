@@ -41,17 +41,26 @@ pub enum FaultSite {
     StoreWrite,
     /// One [`crate::engine::ExecBackend::run`] cold execution attempt.
     ExecRun,
+    /// One attempt to ship a multi-exit model's conditional tail to the
+    /// simulated offload remote ([`crate::serving::Router`] with an
+    /// [`crate::exits::OffloadPolicy`] armed).
+    OffloadSend,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 3] =
-        [FaultSite::StoreRead, FaultSite::StoreWrite, FaultSite::ExecRun];
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::StoreRead,
+        FaultSite::StoreWrite,
+        FaultSite::ExecRun,
+        FaultSite::OffloadSend,
+    ];
 
     fn idx(self) -> usize {
         match self {
             FaultSite::StoreRead => 0,
             FaultSite::StoreWrite => 1,
             FaultSite::ExecRun => 2,
+            FaultSite::OffloadSend => 3,
         }
     }
 }
@@ -75,15 +84,19 @@ pub enum FaultKind {
     /// The executor panics mid-run (the router must contain it; the real
     /// backend's executor thread dies and must respawn).
     ExecPanic,
+    /// The offload link drops the tail shipment: the router must fall
+    /// back to the degraded path (never hang, never double-count).
+    OffloadDrop,
 }
 
 impl FaultKind {
-    pub const ALL: [FaultKind; 5] = [
+    pub const ALL: [FaultKind; 6] = [
         FaultKind::IoError,
         FaultKind::CorruptBytes,
         FaultKind::TornWrite,
         FaultKind::ExecFail,
         FaultKind::ExecPanic,
+        FaultKind::OffloadDrop,
     ];
 
     fn idx(self) -> usize {
@@ -93,6 +106,7 @@ impl FaultKind {
             FaultKind::TornWrite => 2,
             FaultKind::ExecFail => 3,
             FaultKind::ExecPanic => 4,
+            FaultKind::OffloadDrop => 5,
         }
     }
 }
@@ -128,8 +142,8 @@ pub struct FaultRule {
 pub struct FaultPlan {
     seed: u64,
     rules: Vec<FaultRule>,
-    calls: [AtomicUsize; 3],
-    injected: [AtomicUsize; 5],
+    calls: [AtomicUsize; 4],
+    injected: [AtomicUsize; 6],
 }
 
 impl FaultPlan {
@@ -158,6 +172,7 @@ impl FaultPlan {
             .with_rule(FaultSite::StoreWrite, FaultKind::IoError, Trigger::Prob(0.05))
             .with_rule(FaultSite::ExecRun, FaultKind::ExecFail, Trigger::Prob(0.12))
             .with_rule(FaultSite::ExecRun, FaultKind::ExecPanic, Trigger::Prob(0.03))
+            .with_rule(FaultSite::OffloadSend, FaultKind::OffloadDrop, Trigger::Prob(0.10))
     }
 
     /// The seed this plan hashes probabilistic triggers with.
@@ -330,6 +345,7 @@ mod tests {
         for _ in 0..400 {
             let _ = p.draw(FaultSite::StoreRead);
             let _ = p.draw(FaultSite::StoreWrite);
+            let _ = p.draw(FaultSite::OffloadSend);
             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.exec_check()));
         }
         assert!(p.injected(FaultKind::IoError) > 0);
@@ -337,5 +353,6 @@ mod tests {
         assert!(p.injected(FaultKind::TornWrite) > 0);
         assert!(p.injected(FaultKind::ExecFail) > 0);
         assert!(p.injected(FaultKind::ExecPanic) > 0);
+        assert!(p.injected(FaultKind::OffloadDrop) > 0);
     }
 }

@@ -19,7 +19,10 @@
 //!   Kernel choices depend on the shape of the trade-off, not its
 //!   absolute scale, which is exactly what transfer cares about.
 
-use crate::device::DeviceProfile;
+use crate::cost::CostModel;
+use crate::device::{CoreClass, DeviceProfile};
+use crate::graph::{Layer, OpKind};
+use crate::kernels::Registry;
 use crate::store::fnv1a;
 use crate::util::json::Json;
 
@@ -75,6 +78,81 @@ impl DeviceFingerprint {
             read_little_slowdown: dev.read_little_slowdown,
             transform_little_slowdown: dev.transform_little_slowdown,
             gpu_gflops: dev.gpu.as_ref().map(|g| g.gflops),
+        }
+    }
+
+    /// Capture a device by *measuring* the cost model instead of copying
+    /// the profile's claims: each rate feature is derived from a
+    /// deterministic micro-probe (a canonical conv executed, transformed,
+    /// and read through [`CostModel`] on one core of each class), so the
+    /// fingerprint reflects what the planner will actually be charged —
+    /// including per-op overheads, utilization, and kernel-family speed
+    /// factors the raw profile fields ignore. Two profiles that claim
+    /// different numbers but cost identically land at distance 0; a
+    /// profile field the cost model never reads cannot perturb the key.
+    ///
+    /// The probes are pure arithmetic over the profile (nothing is timed),
+    /// so `measured` is a deterministic function of the device: every
+    /// process of a fleet derives bit-identical keys, which is what lets
+    /// a republished plan be its own distance-0 donor across processes.
+    /// Any probe that degenerates (a class the device lacks, a kernel set
+    /// with no transform) falls back per-feature to the static capture
+    /// [`DeviceFingerprint::of`].
+    pub fn measured(dev: &DeviceProfile) -> DeviceFingerprint {
+        let stat = DeviceFingerprint::of(dev);
+        let cm = CostModel::new(dev);
+        let probe = probe_layer();
+        let cands = Registry::full().candidates(&probe);
+        // Deterministic kernel picks: the registry's candidate order is
+        // static. Exec probes want any kernel; the memory probe needs one
+        // that actually moves transformed bytes.
+        let exec_kernel = cands.first();
+        let tf_kernel = cands.iter().find(|k| k.family.needs_transform());
+
+        let or_static = |measured: f64, fallback: f64| {
+            if measured.is_finite() && measured > 0.0 { measured } else { fallback }
+        };
+        let flops = probe.flops() as f64;
+        // Effective GFLOP/s of one core of `class` on the probe conv
+        // (overheads and utilization included — that is the point).
+        let exec_rate = |class: CoreClass| -> f64 {
+            exec_kernel.map_or(0.0, |k| flops / cm.exec_ms(k, &probe, class, 1) / 1e6)
+        };
+        // Effective streaming rate of the transform stage on `class`.
+        let tf_ms = |class: CoreClass| -> f64 {
+            tf_kernel.map_or(0.0, |k| cm.transform_ms(k, &probe, class, 1))
+        };
+        let tf_big = tf_ms(CoreClass::Big);
+        let tf_little = tf_ms(CoreClass::Little);
+        let mem_gbps = tf_kernel.map_or(0.0, |k| {
+            let moved = k.transformed_bytes(&probe) as f64 * k.family.transform_work();
+            moved / 1e9 / (tf_big / 1e3)
+        });
+        let read_big = cm.read_ms(PROBE_READ_BYTES, CoreClass::Big, 1);
+        let read_little = cm.read_ms(PROBE_READ_BYTES, CoreClass::Little, 1);
+
+        DeviceFingerprint {
+            name: stat.name,
+            n_big: stat.n_big,
+            n_little: stat.n_little,
+            big_gflops: or_static(exec_rate(CoreClass::Big), stat.big_gflops),
+            little_gflops: or_static(exec_rate(CoreClass::Little), stat.little_gflops),
+            disk_mbps: or_static(
+                (PROBE_READ_BYTES as f64 / 1e6) / (read_big / 1e3),
+                stat.disk_mbps,
+            ),
+            mem_eff_gbps: or_static(mem_gbps, stat.mem_eff_gbps),
+            read_little_slowdown: or_static(
+                read_little / read_big,
+                stat.read_little_slowdown,
+            ),
+            transform_little_slowdown: or_static(
+                tf_little / tf_big,
+                stat.transform_little_slowdown,
+            ),
+            gpu_gflops: dev.gpu.as_ref().map(|g| {
+                or_static(exec_rate(CoreClass::Gpu), g.gflops)
+            }),
         }
     }
 
@@ -211,6 +289,27 @@ impl DeviceFingerprint {
     }
 }
 
+/// Bytes moved by [`DeviceFingerprint::measured`]'s disk probe — big
+/// enough that the 4 KiB I/O floor is invisible.
+const PROBE_READ_BYTES: u64 = 8 << 20;
+
+/// The canonical probe workload for [`DeviceFingerprint::measured`]: a
+/// mid-size k3 conv with a feature map large enough for full SIMD
+/// utilization — representative of the layers whose kernel choices the
+/// transferred plans actually carry.
+fn probe_layer() -> Layer {
+    Layer {
+        id: 0,
+        name: "fingerprint-probe".into(),
+        op: OpKind::Conv { kernel: 3, stride: 1, groups: 1 },
+        in_ch: 64,
+        out_ch: 64,
+        in_hw: 32,
+        out_hw: 32,
+        deps: vec![],
+    }
+}
+
 /// `a / b` with non-finite and divide-by-zero cases collapsed to 0.0, so
 /// every feature is a finite non-negative number and [`log_ratio`]'s
 /// zero-handling covers all degenerate profiles.
@@ -334,6 +433,54 @@ mod tests {
         // The old ad-hoc device view is NOT a fingerprint.
         let old = Json::obj(vec![("n_big", Json::from(4usize)), ("n_little", Json::from(4usize))]);
         assert!(DeviceFingerprint::from_json(&old).is_none());
+    }
+
+    #[test]
+    fn measured_is_deterministic_and_self_consistent() {
+        // The probes are pure arithmetic, so two captures of the same
+        // device — as in two fleet processes — agree bit-for-bit, and the
+        // metric still sees them as identical devices.
+        for name in profiles::ALL_DEVICES {
+            let dev = profiles::by_name(name).unwrap();
+            let a = DeviceFingerprint::measured(&dev);
+            let b = DeviceFingerprint::measured(&dev);
+            assert_eq!(a, b, "{name}");
+            assert_eq!(a.key(), b.key(), "{name}: keys must replay");
+            assert_eq!(a.distance(&b), 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn measured_reflects_costs_not_claims() {
+        // Effective rates include per-op overhead and kernel speed
+        // factors, so a measured capture never collides with the static
+        // one — the keyspaces are disjoint in practice, which is what the
+        // transfer layer's legacy-artifact migration detects.
+        let dev = profiles::meizu_16t();
+        let m = DeviceFingerprint::measured(&dev);
+        let s = DeviceFingerprint::of(&dev);
+        assert_ne!(m.key(), s.key());
+        // Overheads only ever slow the probe down relative to the
+        // profile's peak rate claim.
+        assert!(m.big_gflops < s.big_gflops, "{} vs {}", m.big_gflops, s.big_gflops);
+        assert!(m.big_gflops > 0.0);
+    }
+
+    #[test]
+    fn measured_survives_degenerate_devices() {
+        // jetson-nano has no big cores: the big-class probes degenerate
+        // and must fall back per-feature to the static capture instead of
+        // poisoning the fingerprint with infinities.
+        let nano = DeviceFingerprint::measured(&profiles::jetson_nano());
+        let stat = DeviceFingerprint::of(&profiles::jetson_nano());
+        assert_eq!(nano.big_gflops, stat.big_gflops, "fallback preserves zero");
+        assert!(nano.little_gflops > 0.0 && nano.little_gflops.is_finite());
+        assert!(nano.distance(&nano) == 0.0);
+        for other in all() {
+            assert!(nano.distance(&other).is_finite());
+        }
+        // GPU presence survives measurement.
+        assert!(nano.gpu_gflops.is_some());
     }
 
     #[test]

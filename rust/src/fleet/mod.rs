@@ -12,7 +12,13 @@
 //!   the cost model reads, with a stable identity key (FNV-1a over a
 //!   canonical byte layout) and a *scale-invariant* distance metric over
 //!   within-device ratios. Identity keys the fleet store; distance picks
-//!   donors.
+//!   donors. The fleet namespace keys on the *measured* variant
+//!   ([`DeviceFingerprint::measured`]: rate features derived from
+//!   deterministic cost-model micro-probes, so the key reflects what the
+//!   planner will actually price, not what the spec sheet claims);
+//!   legacy static-keyed artifacts are migrated by a one-time
+//!   revalidate-and-heal pass ([`PlanTransfer::heal_scope`]) the first
+//!   time a transfer handle plans in a scope.
 //! * [`PlanTransfer`] — publish every searched plan into the store's
 //!   fleet namespace (scoped by model fingerprint, keyed by device
 //!   fingerprint); on a later miss, fetch the nearest-profile donor plan
@@ -39,4 +45,4 @@ mod transfer;
 
 pub use fingerprint::DeviceFingerprint;
 pub use planner::{FleetCell, FleetPlanner, FleetReport};
-pub use transfer::{Donor, PlanTransfer, TransferResult};
+pub use transfer::{Donor, HealReport, PlanTransfer, TransferResult};

@@ -214,8 +214,10 @@ impl FleetPlanner {
         if devices.len() < 3 {
             return devices;
         }
+        // Measured fingerprints: the tour's adjacency metric must be the
+        // same one nearest_donor ranks candidates with.
         let fps: Vec<DeviceFingerprint> =
-            devices.iter().map(DeviceFingerprint::of).collect();
+            devices.iter().map(DeviceFingerprint::measured).collect();
         let mut remaining: Vec<usize> = (1..devices.len()).collect();
         let mut order = vec![0usize];
         while !remaining.is_empty() {

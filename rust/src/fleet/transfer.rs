@@ -14,9 +14,22 @@
 //! seed falls back to the full cold search, so transfer can change how
 //! fast a plan is *found*, never how good the found plan is allowed to
 //! be.
+//!
+//! Devices are identified by their **measured** fingerprint
+//! ([`DeviceFingerprint::measured`]): deterministic cost-model
+//! micro-probes, so the key captures what the planner is charged rather
+//! than what the profile claims. Fleet artifacts published by older
+//! versions under the static capture ([`DeviceFingerprint::of`]) are
+//! migrated by a **one-time revalidate-and-heal** pass over each scope
+//! on first touch ([`PlanTransfer::heal_scope`]): corrupt or
+//! unresolvable entries are removed (the next publish repairs them),
+//! and legacy static-keyed entries of known device profiles are
+//! re-keyed in place — so a fleet store survives the fingerprint
+//! upgrade without losing a single usable plan.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::device::DeviceProfile;
 use crate::fleet::DeviceFingerprint;
@@ -46,6 +59,18 @@ pub struct TransferResult {
     pub donor: Option<Donor>,
 }
 
+/// What one [`PlanTransfer::heal_scope`] pass did to a fleet-plan scope.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealReport {
+    /// Valid artifacts left untouched.
+    pub kept: usize,
+    /// Legacy static-fingerprint artifacts re-keyed to the measured
+    /// fingerprint of their (known) device profile.
+    pub migrated: usize,
+    /// Corrupt, unparseable, or unresolvable artifacts removed.
+    pub removed: usize,
+}
+
 /// Fleet-plan publish + nearest-profile lookup + seeded search, as one
 /// shared handle (`Arc`-cheap, all counters atomic).
 pub struct PlanTransfer {
@@ -58,6 +83,13 @@ pub struct PlanTransfer {
     rejected: AtomicUsize,
     /// Lookups that found no donor at all (empty scope).
     misses: AtomicUsize,
+    /// Legacy artifacts re-keyed by heal passes (see [`HealReport`]).
+    healed_migrated: AtomicUsize,
+    /// Broken artifacts removed by heal passes.
+    healed_removed: AtomicUsize,
+    /// Scopes already revalidated by this handle — the heal is one-time
+    /// per scope, not per lookup.
+    healed_scopes: Mutex<HashSet<String>>,
 }
 
 impl PlanTransfer {
@@ -67,6 +99,9 @@ impl PlanTransfer {
             hits: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            healed_migrated: AtomicUsize::new(0),
+            healed_removed: AtomicUsize::new(0),
+            healed_scopes: Mutex::new(HashSet::new()),
         }
     }
 
@@ -83,6 +118,17 @@ impl PlanTransfer {
         format!("{}-{:016x}", graph.name, model_fingerprint(graph, cfg, registry_tag))
     }
 
+    /// The canonical fleet-plan artifact document.
+    fn doc(fp: &DeviceFingerprint, model: &str, makespan_ms: Json, plan: Json) -> Json {
+        Json::obj(vec![
+            ("fingerprint", Json::from(format!("{:016x}", fp.key()))),
+            ("device", fp.to_json()),
+            ("model", Json::from(model)),
+            ("makespan_ms", makespan_ms),
+            ("plan", plan),
+        ])
+    }
+
     /// Publish a device's plan for a model into the fleet namespace
     /// (best-effort, like every cache write-back: an unwritable store
     /// costs future devices a cold search, never correctness).
@@ -94,19 +140,105 @@ impl PlanTransfer {
         registry_tag: &str,
         scheduled: &Scheduled,
     ) {
-        let fp = DeviceFingerprint::of(dev);
-        let key = fp.key();
-        let doc = Json::obj(vec![
-            ("fingerprint", Json::from(format!("{key:016x}"))),
-            ("device", fp.to_json()),
-            ("model", Json::from(graph.name.as_str())),
-            ("makespan_ms", Json::from(scheduled.schedule.makespan)),
-            ("plan", scheduled.plan.to_json(graph)),
-        ]);
+        let fp = DeviceFingerprint::measured(dev);
+        let doc = PlanTransfer::doc(
+            &fp,
+            &graph.name,
+            Json::from(scheduled.schedule.makespan),
+            scheduled.plan.to_json(graph),
+        );
         let scope = PlanTransfer::scope(graph, cfg, registry_tag);
         let _ = self
             .store
-            .put_scoped(Namespace::FleetPlan, &scope, key, doc.to_pretty().as_bytes());
+            .put_scoped(Namespace::FleetPlan, &scope, fp.key(), doc.to_pretty().as_bytes());
+    }
+
+    /// One-time revalidate-and-heal of a fleet-plan scope: every artifact
+    /// is re-read and re-validated; entries that fail (corrupt payloads,
+    /// fingerprint/key disagreement, plans that no longer resolve against
+    /// `registry`) are **removed** — the next publish repairs them — and
+    /// valid entries still keyed by the legacy *static* fingerprint of a
+    /// known device profile are **re-keyed** to that device's measured
+    /// fingerprint, payload intact. Lookups already skip invalid
+    /// candidates, so healing never changes which donor wins; it keeps
+    /// the scope scan from paying for dead entries forever and lets
+    /// pre-upgrade plans keep seeding at distance 0.
+    pub fn heal_scope(
+        &self,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+    ) -> HealReport {
+        let scope = PlanTransfer::scope(graph, cfg, registry_tag);
+        let mut report = HealReport::default();
+        for key in self.store.keys_in_scope(Namespace::FleetPlan, &scope) {
+            let parsed = self
+                .store
+                .get_scoped(Namespace::FleetPlan, &scope, key)
+                .and_then(|p| String::from_utf8(p).ok())
+                .and_then(|t| Json::parse(&t).ok());
+            let valid = parsed.as_ref().is_some_and(|doc| {
+                doc.get("fingerprint").as_str() == Some(format!("{key:016x}").as_str())
+                    && DeviceFingerprint::from_json(doc.get("device"))
+                        .is_some_and(|dfp| dfp.key() == key)
+                    && Plan::from_json(doc.get("plan"), graph, registry).is_ok()
+            });
+            if !valid {
+                self.store.remove_scoped(Namespace::FleetPlan, &scope, key);
+                report.removed += 1;
+                continue;
+            }
+            let doc = parsed.expect("validated above");
+            // Legacy entry: keyed by the static capture of a profile this
+            // build knows. Re-key it to the measured fingerprint.
+            let legacy = DeviceFingerprint::from_json(doc.get("device"))
+                .and_then(|dfp| crate::device::profiles::by_name(&dfp.name))
+                .filter(|dev| DeviceFingerprint::of(dev).key() == key)
+                .map(|dev| DeviceFingerprint::measured(&dev))
+                .filter(|mfp| mfp.key() != key);
+            let Some(mfp) = legacy else {
+                report.kept += 1;
+                continue;
+            };
+            let healed = PlanTransfer::doc(
+                &mfp,
+                doc.get("model").as_str().unwrap_or(&graph.name),
+                doc.get("makespan_ms").clone(),
+                doc.get("plan").clone(),
+            );
+            match self.store.put_scoped(
+                Namespace::FleetPlan,
+                &scope,
+                mfp.key(),
+                healed.to_pretty().as_bytes(),
+            ) {
+                Ok(()) => {
+                    self.store.remove_scoped(Namespace::FleetPlan, &scope, key);
+                    report.migrated += 1;
+                }
+                // Unwritable store: leave the legacy entry — it is still
+                // a valid (if farther) donor.
+                Err(_) => report.kept += 1,
+            }
+        }
+        self.healed_migrated.fetch_add(report.migrated, Ordering::Relaxed);
+        self.healed_removed.fetch_add(report.removed, Ordering::Relaxed);
+        report
+    }
+
+    /// Run [`PlanTransfer::heal_scope`] exactly once per scope per handle.
+    fn heal_scope_once(
+        &self,
+        graph: &ModelGraph,
+        registry: &Registry,
+        cfg: &SchedulerConfig,
+        registry_tag: &str,
+    ) {
+        let scope = PlanTransfer::scope(graph, cfg, registry_tag);
+        if self.healed_scopes.lock().expect("heal set poisoned").insert(scope) {
+            self.heal_scope(graph, registry, cfg, registry_tag);
+        }
     }
 
     /// The nearest-profile donor plan for `dev`, if the fleet store holds
@@ -116,7 +248,8 @@ impl PlanTransfer {
     /// break by fingerprint key, so enumeration order never changes the
     /// answer. Note the target's *own* published plan (distance 0) is a
     /// legitimate donor: a second process re-planning the same device
-    /// seeds from it and confirms bit-exactly.
+    /// derives the same measured fingerprint, seeds from it, and confirms
+    /// bit-exactly.
     pub fn nearest_donor(
         &self,
         dev: &DeviceProfile,
@@ -125,7 +258,7 @@ impl PlanTransfer {
         cfg: &SchedulerConfig,
         registry_tag: &str,
     ) -> Option<(Donor, Plan)> {
-        let fp = DeviceFingerprint::of(dev);
+        let fp = DeviceFingerprint::measured(dev);
         let scope = PlanTransfer::scope(graph, cfg, registry_tag);
         let mut best: Option<(f64, u64, DeviceFingerprint, Plan)> = None;
         for key in self.store.keys_in_scope(Namespace::FleetPlan, &scope) {
@@ -172,6 +305,7 @@ impl PlanTransfer {
         cfg: &SchedulerConfig,
         registry_tag: &str,
     ) -> TransferResult {
+        self.heal_scope_once(graph, registry, cfg, registry_tag);
         let donor = self.nearest_donor(dev, graph, registry, cfg, registry_tag);
         let (outcome, donor) = match donor {
             Some((donor, plan)) => {
@@ -207,6 +341,16 @@ impl PlanTransfer {
     /// Lookups with no donor available.
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Legacy artifacts re-keyed across every heal pass of this handle.
+    pub fn healed_migrated(&self) -> usize {
+        self.healed_migrated.load(Ordering::Relaxed)
+    }
+
+    /// Broken artifacts removed across every heal pass of this handle.
+    pub fn healed_removed(&self) -> usize {
+        self.healed_removed.load(Ordering::Relaxed)
     }
 }
 
@@ -286,6 +430,91 @@ mod tests {
             .nearest_donor(&profiles::jetson_nano(), &g, &reg, &cfg, "full")
             .expect("donors exist");
         assert_eq!(donor.device, "jetson-tx2");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heal_migrates_legacy_static_keys_and_removes_corruption() {
+        let dir = temp_store("heal");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::squeezenet();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let t = PlanTransfer::new(store.clone());
+        let scope = PlanTransfer::scope(&g, &cfg, "full");
+
+        // Author a pre-upgrade artifact by hand: a real plan, published
+        // under the *static* fingerprint key exactly as older versions
+        // did — plus one artifact that was never valid JSON.
+        let searched = schedule_seeded(&dev, &g, &reg, &cfg, &[]).scheduled;
+        let legacy = DeviceFingerprint::of(&dev);
+        let doc = PlanTransfer::doc(
+            &legacy,
+            &g.name,
+            Json::from(searched.schedule.makespan),
+            searched.plan.to_json(&g),
+        );
+        store
+            .put_scoped(Namespace::FleetPlan, &scope, legacy.key(), doc.to_pretty().as_bytes())
+            .unwrap();
+        store
+            .put_scoped(Namespace::FleetPlan, &scope, 0xDEAD, b"not a fleet plan")
+            .unwrap();
+
+        let r = t.heal_scope(&g, &reg, &cfg, "full");
+        assert_eq!(r, HealReport { kept: 0, migrated: 1, removed: 1 }, "{r:?}");
+        assert_eq!((t.healed_migrated(), t.healed_removed()), (1, 1));
+        let measured = DeviceFingerprint::measured(&dev);
+        assert_eq!(
+            store.keys_in_scope(Namespace::FleetPlan, &scope),
+            vec![measured.key()],
+            "only the re-keyed artifact survives"
+        );
+
+        // The migrated plan is this device's distance-0 donor, payload
+        // intact.
+        let (donor, plan) = t
+            .nearest_donor(&dev, &g, &reg, &cfg, "full")
+            .expect("migrated plan must be found");
+        assert_eq!(donor.device, dev.name);
+        assert_eq!(donor.distance, 0.0);
+        assert_eq!(
+            plan.to_json(&g).to_pretty(),
+            searched.plan.to_json(&g).to_pretty(),
+            "healing must not alter the plan payload"
+        );
+
+        // Healing is idempotent: a second pass finds a clean scope.
+        let again = t.heal_scope(&g, &reg, &cfg, "full");
+        assert_eq!(again, HealReport { kept: 1, migrated: 0, removed: 0 }, "{again:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_heals_its_scope_once_before_looking_up() {
+        let dir = temp_store("heal-once");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dev = profiles::meizu_16t();
+        let g = zoo::tiny_net();
+        let reg = Registry::full();
+        let cfg = SchedulerConfig::kcp();
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        let scope = PlanTransfer::scope(&g, &cfg, "full");
+        store
+            .put_scoped(Namespace::FleetPlan, &scope, 0xBAD, b"torn")
+            .unwrap();
+
+        let t = PlanTransfer::new(store.clone());
+        let first = t.plan(&dev, &g, &reg, &cfg, "full");
+        assert!(first.donor.is_none(), "the broken entry must not become a donor");
+        assert_eq!(t.healed_removed(), 1, "plan() heals on first touch");
+        // Re-planning the same scope does not re-scan: the one-time set
+        // swallows the second pass (the counter stays put even though the
+        // scope now holds this device's published plan).
+        t.plan(&dev, &g, &reg, &cfg, "full");
+        assert_eq!(t.healed_removed(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -5,7 +5,7 @@
 //! expressed by saving a [`Tap`] and resuming from it.
 
 use super::layer::{Layer, LayerId};
-use super::model::{GraphError, ModelGraph};
+use super::model::{ExitPoint, GraphError, ModelGraph};
 use super::op::OpKind;
 
 /// A resumable point in the graph: a layer output with known shape.
@@ -21,11 +21,17 @@ pub struct GraphBuilder {
     name: String,
     layers: Vec<Layer>,
     cur: Option<Tap>,
+    exits: Vec<ExitPoint>,
 }
 
 impl GraphBuilder {
     pub fn new(name: &str) -> GraphBuilder {
-        GraphBuilder { name: name.to_string(), layers: Vec::new(), cur: None }
+        GraphBuilder {
+            name: name.to_string(),
+            layers: Vec::new(),
+            cur: None,
+            exits: Vec::new(),
+        }
     }
 
     /// Current tap (panics if no layers yet).
@@ -181,9 +187,37 @@ impl GraphBuilder {
         self.push(name.into(), OpKind::Softmax, vec![t.id], t.ch, t.ch, t.hw, t.hw)
     }
 
-    /// Finalize into a validated graph.
+    /// Attach an early-exit head at the current tensor: a global pool →
+    /// `classes`-way FC → softmax branch whose softmax is recorded as an
+    /// [`ExitPoint`] with the given confidence `threshold` and calibrated
+    /// exit `probability`. The builder then resumes the backbone from the
+    /// pre-branch tap, so subsequent layers depend on the branch point,
+    /// not the exit head — exactly the branchy-network topology
+    /// (BranchyNet-style) the early-exit literature schedules.
+    pub fn exit_branch(
+        &mut self,
+        name: &str,
+        classes: u32,
+        threshold: f64,
+        probability: f64,
+    ) -> Tap {
+        let backbone = self.tap();
+        self.global_pool(&format!("{name}_gap"));
+        self.fc(&format!("{name}_fc"), classes);
+        let head = self.softmax(&format!("{name}_softmax"));
+        self.exits.push(ExitPoint { layer: head.id, threshold, probability });
+        self.cur = Some(backbone);
+        head
+    }
+
+    /// Finalize into a validated graph (with any recorded exit points
+    /// attached — single-exit graphs take the exact historical path).
     pub fn build(self) -> Result<ModelGraph, GraphError> {
-        ModelGraph::new(&self.name, self.layers)
+        let g = ModelGraph::new(&self.name, self.layers)?;
+        if self.exits.is_empty() {
+            return Ok(g);
+        }
+        g.with_exits(self.exits)
     }
 }
 
@@ -237,6 +271,27 @@ mod tests {
         let a = b.conv("a", 16, 3, 1);
         b.conv("b", 32, 3, 1);
         b.add("bad", a);
+    }
+
+    #[test]
+    fn exit_branch_records_exit_and_resumes_backbone() {
+        let mut b = GraphBuilder::new("t");
+        b.input(3, 32);
+        let stem = b.conv("stem", 16, 3, 1);
+        b.exit_branch("exit1", 10, 0.9, 0.4);
+        let next = b.conv("c2", 32, 3, 2);
+        let g = b.build().unwrap();
+        // Branch head: gap(2), fc(3), softmax(4); backbone resumes at the
+        // stem — the post-branch conv depends on the stem, not the head.
+        assert_eq!(g.layer(next.id).deps, vec![stem.id]);
+        assert_eq!(g.exits().len(), 1);
+        assert_eq!(g.exits()[0].layer, 4);
+        assert_eq!(g.exits()[0].probability, 0.4);
+        // Layers strictly after the exit head carry the survival weight.
+        let w = g.survival_weights();
+        assert_eq!(w[stem.id], 1.0);
+        assert_eq!(w[4], 1.0, "the exit head itself always executes");
+        assert!((w[next.id] - 0.6).abs() < 1e-12);
     }
 
     #[test]

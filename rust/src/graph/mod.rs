@@ -1,4 +1,4 @@
-//! Model-graph IR.
+//! Model-graph IR, including the conditional-execution (early-exit) model.
 //!
 //! A DNN is a DAG of [`Layer`]s, each carrying its operator type, tensor
 //! shapes, parameter count, and FLOPs. The scheduler (§3.2) needs exactly
@@ -7,12 +7,28 @@
 //! FLOPs (execution cost), and the dependency structure (pipelining
 //! constraints).
 //!
+//! # Conditional execution: multi-exit graphs
+//!
+//! A graph may additionally carry [`ExitPoint`]s — early-exit heads in the
+//! BranchyNet style, each with a confidence threshold and a *calibrated*
+//! probability that a request leaves the network there. Execution past an
+//! exit is then **conditional**: layer `l` only runs for the fraction of
+//! requests that survived every earlier exit, which
+//! [`ModelGraph::survival_weights`] exposes as a per-layer probability
+//! (`Π (1 - p_e)` over exits preceding `l`). The `exits` subsystem turns
+//! these weights into expected-makespan schedules and local-vs-offload
+//! serving decisions; graphs without exits report all-ones weights and are
+//! bit-identical to the historical single-exit path everywhere.
+//!
 //! * [`op`] — operator taxonomy.
 //! * [`layer`] — the per-layer record.
-//! * [`model`] — the graph container with validation + topological order.
-//! * [`builder`] — fluent construction helper used by the zoo.
-//! * [`zoo`] — the paper's 12 evaluation models (Table 4) plus the small
-//!   real-mode models matching the python artifacts.
+//! * [`model`] — the graph container with validation + topological order,
+//!   plus exit-point validation and survival weights.
+//! * [`builder`] — fluent construction helper used by the zoo (including
+//!   [`builder::GraphBuilder::exit_branch`] for attaching exit heads).
+//! * [`zoo`] — the paper's 12 evaluation models (Table 4), the small
+//!   real-mode models matching the python artifacts, and the
+//!   [`zoo::BRANCHY_MODELS`] multi-exit variants.
 //! * [`manifest`] — loader for `artifacts/manifest.json` (real mode).
 
 pub mod op;
@@ -23,5 +39,5 @@ pub mod zoo;
 pub mod manifest;
 
 pub use layer::{Layer, LayerId};
-pub use model::ModelGraph;
+pub use model::{ExitPoint, ModelGraph};
 pub use op::OpKind;

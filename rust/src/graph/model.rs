@@ -10,6 +10,27 @@ use crate::{Bytes, Flops};
 pub struct ModelGraph {
     pub name: String,
     layers: Vec<Layer>,
+    /// Early-exit heads, in ascending layer-id order. Empty for the
+    /// classic single-exit models — every existing consumer sees exactly
+    /// the graph it always did.
+    exits: Vec<ExitPoint>,
+}
+
+/// One early-exit head of a multi-exit model: the layer producing the
+/// exit's prediction, the confidence threshold the runtime would gate on,
+/// and the *calibrated* probability that a request actually leaves the
+/// network here (measured offline on a validation set, as in the
+/// early-exit literature). Layers after the exit only execute for the
+/// `1 - probability` of requests that survive past it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExitPoint {
+    /// The layer (typically a softmax head) whose output this exit reads.
+    pub layer: LayerId,
+    /// Confidence threshold in `(0, 1]` the exit gates on at runtime.
+    pub threshold: f64,
+    /// Calibrated probability in `[0, 1]` that a request exits here,
+    /// conditioned on having reached this exit.
+    pub probability: f64,
 }
 
 /// Error produced by [`ModelGraph::new`] validation.
@@ -24,6 +45,10 @@ pub enum GraphError {
     DupDep { layer: LayerId, dep: LayerId },
     /// Graph has no layers.
     Empty,
+    /// An exit point references a layer the graph does not have.
+    BadExit { layer: LayerId },
+    /// An exit probability or threshold is outside `[0, 1]` / not finite.
+    BadExitProbability { layer: LayerId, probability: f64 },
 }
 
 impl std::fmt::Display for GraphError {
@@ -37,6 +62,12 @@ impl std::fmt::Display for GraphError {
                 write!(f, "layer {layer} lists dependency {dep} twice")
             }
             GraphError::Empty => write!(f, "graph has no layers"),
+            GraphError::BadExit { layer } => {
+                write!(f, "exit point references unknown layer {layer}")
+            }
+            GraphError::BadExitProbability { layer, probability } => {
+                write!(f, "exit at layer {layer} has invalid probability {probability}")
+            }
         }
     }
 }
@@ -65,7 +96,69 @@ impl ModelGraph {
                 seen.push(d);
             }
         }
-        Ok(ModelGraph { name: name.to_string(), layers })
+        Ok(ModelGraph { name: name.to_string(), layers, exits: Vec::new() })
+    }
+
+    /// Attach validated early-exit points (multi-exit models). Exits are
+    /// stored sorted by layer id; each must reference an existing layer
+    /// and carry a probability and threshold in `[0, 1]`.
+    pub fn with_exits(mut self, exits: Vec<ExitPoint>) -> Result<ModelGraph, GraphError> {
+        for e in &exits {
+            if e.layer >= self.layers.len() {
+                return Err(GraphError::BadExit { layer: e.layer });
+            }
+            if !(0.0..=1.0).contains(&e.probability) || !e.probability.is_finite() {
+                return Err(GraphError::BadExitProbability {
+                    layer: e.layer,
+                    probability: e.probability,
+                });
+            }
+            if !(0.0..=1.0).contains(&e.threshold) || !e.threshold.is_finite() {
+                return Err(GraphError::BadExitProbability {
+                    layer: e.layer,
+                    probability: e.threshold,
+                });
+            }
+        }
+        let mut exits = exits;
+        exits.sort_by_key(|e| e.layer);
+        self.exits = exits;
+        Ok(self)
+    }
+
+    /// Early-exit points in ascending layer-id order (empty for
+    /// single-exit models).
+    pub fn exits(&self) -> &[ExitPoint] {
+        &self.exits
+    }
+
+    /// Whether this is a multi-exit model.
+    pub fn has_exits(&self) -> bool {
+        !self.exits.is_empty()
+    }
+
+    /// Per-layer survival probabilities: `weights[l]` is the probability
+    /// that a request still executes layer `l`, i.e. `Π (1 - p_e)` over
+    /// all exits whose head layer precedes `l` in program order. All
+    /// `1.0` for single-exit graphs — multiplying prices by these weights
+    /// is then bit-preserving (IEEE `x * 1.0 == x`), which is what makes
+    /// the expected-makespan scheduler provably exact in the
+    /// no-early-exit limit.
+    pub fn survival_weights(&self) -> Vec<f64> {
+        let mut w = vec![1.0; self.layers.len()];
+        if self.exits.is_empty() {
+            return w;
+        }
+        let mut survive = 1.0;
+        let mut next_exit = 0usize;
+        for l in 0..self.layers.len() {
+            while next_exit < self.exits.len() && self.exits[next_exit].layer < l {
+                survive *= 1.0 - self.exits[next_exit].probability;
+                next_exit += 1;
+            }
+            w[l] = survive;
+        }
+        w
     }
 
     pub fn layers(&self) -> &[Layer] {
@@ -208,6 +301,59 @@ mod tests {
             GraphError::DupDep { layer: 1, dep: 0 }
         );
         assert_eq!(ModelGraph::new("t", vec![]).unwrap_err(), GraphError::Empty);
+    }
+
+    #[test]
+    fn exits_validate_and_sort() {
+        let g = ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![0]), mk(2, vec![1])])
+            .unwrap();
+        let g = g
+            .with_exits(vec![
+                ExitPoint { layer: 2, threshold: 0.9, probability: 0.3 },
+                ExitPoint { layer: 1, threshold: 0.8, probability: 0.5 },
+            ])
+            .unwrap();
+        assert!(g.has_exits());
+        assert_eq!(g.exits()[0].layer, 1, "exits sorted by layer id");
+        assert_eq!(g.exits()[1].layer, 2);
+    }
+
+    #[test]
+    fn exits_reject_bad_layer_and_probability() {
+        let g = ModelGraph::new("t", vec![mk(0, vec![])]).unwrap();
+        assert_eq!(
+            g.clone()
+                .with_exits(vec![ExitPoint { layer: 9, threshold: 0.9, probability: 0.5 }])
+                .unwrap_err(),
+            GraphError::BadExit { layer: 9 }
+        );
+        assert!(matches!(
+            g.with_exits(vec![ExitPoint { layer: 0, threshold: 0.9, probability: 1.5 }])
+                .unwrap_err(),
+            GraphError::BadExitProbability { layer: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn survival_weights_compound_past_exits() {
+        let layers: Vec<Layer> =
+            (0..5).map(|i| mk(i, if i == 0 { vec![] } else { vec![i - 1] })).collect();
+        let g = ModelGraph::new("t", layers)
+            .unwrap()
+            .with_exits(vec![
+                ExitPoint { layer: 1, threshold: 0.9, probability: 0.5 },
+                ExitPoint { layer: 3, threshold: 0.9, probability: 0.5 },
+            ])
+            .unwrap();
+        let w = g.survival_weights();
+        assert_eq!(w, vec![1.0, 1.0, 0.5, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn no_exits_means_all_ones() {
+        let g = ModelGraph::new("t", vec![mk(0, vec![]), mk(1, vec![0])]).unwrap();
+        assert!(!g.has_exits());
+        assert!(g.survival_weights().iter().all(|&w| w == 1.0));
     }
 
     #[test]

@@ -48,10 +48,17 @@ pub fn by_name(name: &str) -> Option<ModelGraph> {
         "crnn-lite" => crnn_lite(),
         "tinynet" => tiny_net(),
         "micro-mobilenet" => micro_mobilenet(),
+        "branchy-resnet18" => branchy_resnet18(),
+        "branchy-mobilenet" => branchy_mobilenet(),
+        "branchy-tinynet" => branchy_tinynet(),
         _ => return None,
     };
     Some(g)
 }
+
+/// The multi-exit models (BranchyNet-style variants of zoo backbones).
+pub const BRANCHY_MODELS: [&str; 3] =
+    ["branchy-resnet18", "branchy-mobilenet", "branchy-tinynet"];
 
 /// All paper models, built.
 pub fn paper_models() -> Vec<ModelGraph> {
@@ -543,6 +550,75 @@ pub fn tiny_net() -> ModelGraph {
     b.build().unwrap()
 }
 
+/// BranchyNet-style ResNet-18: two early-exit heads after the first and
+/// second residual stages. Calibrated exit probabilities follow the
+/// early-exit literature's "most requests leave early" regime — over half
+/// of the traffic never executes the (weight-heavy) 256/512-channel tail,
+/// which is exactly the structure the expected-makespan scheduler exploits.
+pub fn branchy_resnet18() -> ModelGraph {
+    let mut b = GraphBuilder::new("branchy-resnet18");
+    b.input(3, 224);
+    b.conv("conv1", 64, 7, 2);
+    let mut t = b.pool("pool1", 3, 2);
+    for (stage, (ch, s)) in [(64u32, 1u32), (128, 2), (256, 2), (512, 2)].iter().enumerate() {
+        for i in 0..2 {
+            let stride = if i == 0 { *s } else { 1 };
+            t = basic_block(&mut b, &format!("res{}_{i}", stage + 2), t, *ch, stride);
+        }
+        if stage == 0 {
+            b.exit_branch("exit1", 1000, 0.85, 0.55);
+        } else if stage == 1 {
+            b.exit_branch("exit2", 1000, 0.80, 0.50);
+        }
+    }
+    b.global_pool("gap");
+    b.fc("fc", 1000);
+    b.softmax("prob");
+    b.build().unwrap()
+}
+
+/// BranchyNet-style MobileNetV1 with two early exits (after ds5 and ds7).
+pub fn branchy_mobilenet() -> ModelGraph {
+    let mut b = GraphBuilder::new("branchy-mobilenet");
+    b.input(3, 224);
+    b.conv("conv1", 32, 3, 2);
+    dw_separable(&mut b, "ds2", 64, 1);
+    dw_separable(&mut b, "ds3", 128, 2);
+    dw_separable(&mut b, "ds4", 128, 1);
+    dw_separable(&mut b, "ds5", 256, 2);
+    b.exit_branch("exit1", 1000, 0.85, 0.50);
+    dw_separable(&mut b, "ds6", 256, 1);
+    dw_separable(&mut b, "ds7", 512, 2);
+    b.exit_branch("exit2", 1000, 0.80, 0.45);
+    for i in 8..13 {
+        dw_separable(&mut b, &format!("ds{i}"), 512, 1);
+    }
+    dw_separable(&mut b, "ds13", 1024, 2);
+    dw_separable(&mut b, "ds14", 1024, 1);
+    b.global_pool("gap");
+    b.fc("fc", 1000);
+    b.softmax("prob");
+    b.build().unwrap()
+}
+
+/// One-exit variant of [`tiny_net`] — small enough for serving and chaos
+/// tests that want a multi-exit model without real planning cost.
+pub fn branchy_tinynet() -> ModelGraph {
+    let mut b = GraphBuilder::new("branchy-tinynet");
+    b.input(3, 32);
+    b.conv("conv1", 16, 3, 1);
+    b.conv("conv2", 16, 3, 1);
+    b.conv("conv3", 32, 3, 2);
+    b.exit_branch("exit1", 10, 0.9, 0.6);
+    b.conv("conv4", 32, 3, 1);
+    b.conv("conv5", 64, 3, 2);
+    b.conv("conv6", 64, 3, 1);
+    b.global_pool("gap");
+    b.fc("fc", 10);
+    b.softmax("prob");
+    b.build().unwrap()
+}
+
 /// Small depthwise-separable CNN matching
 /// `python/compile/model.py::micro_mobilenet`.
 pub fn micro_mobilenet() -> ModelGraph {
@@ -604,7 +680,33 @@ mod tests {
         for name in ["crnn-lite", "tinynet", "micro-mobilenet"] {
             assert!(by_name(name).is_some());
         }
+        for name in BRANCHY_MODELS {
+            let g = by_name(name).unwrap();
+            assert!(g.has_exits(), "{name} must carry exit points");
+            assert_eq!(g.bfs_order().len(), g.len(), "{name} not fully reachable");
+            assert!(
+                g.survival_weights().last().copied().unwrap() < 1.0,
+                "{name} tail must be conditional"
+            );
+        }
         assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn branchy_backbones_match_their_single_exit_twins() {
+        // The branchy variants add exit heads but keep the backbone: every
+        // backbone layer name of resnet18 appears in branchy-resnet18.
+        let plain = resnet18();
+        let branchy = branchy_resnet18();
+        for l in plain.layers() {
+            assert!(
+                branchy.layers().iter().any(|bl| bl.name == l.name),
+                "backbone layer {} missing from branchy variant",
+                l.name
+            );
+        }
+        assert!(branchy.len() > plain.len());
+        assert_eq!(branchy.exits().len(), 2);
     }
 
     #[test]

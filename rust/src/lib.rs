@@ -73,26 +73,32 @@
 //!
 //! // On the happy path the failure taxonomy stays all-zero, and the
 //! // conservation invariant always holds:
-//! //   cold + warm + degraded + shed + failed == issued.
+//! //   cold + warm + degraded + offloaded + shed + failed == issued.
 //! let s = router.summary();
-//! assert_eq!(s.degraded + s.shed + s.failed, 0);
+//! assert_eq!(s.degraded + s.offloaded + s.shed + s.failed, 0);
 //! assert!(s.conserves());
 //! ```
 //!
 //! The router **survives** the failure modes that concentrate on the cold
-//! path (ISSUE 6). Every request resolves to exactly one of five
-//! outcomes — the conservation invariant above is asserted by the chaos
-//! suite under injected faults:
+//! path (ISSUE 6, extended by ISSUE 8). Every request resolves to exactly
+//! one of six outcomes — the conservation invariant above is asserted by
+//! the chaos suite under injected faults:
 //!
 //! * **Cold / Warm** — the normal lifecycle: plan + execute on a miss,
 //!   then walk the §3.5 warm-up ladder.
+//! * **Offloaded** — the deadline is tighter than the cold estimate but
+//!   the model has early exits and [`serving::RouterConfig::offload`]
+//!   priced serving the head locally and the conditional tail on a
+//!   remote inside the deadline (see [`exits::OffloadPolicy`]).
 //! * **Degraded** — the request is served from the baseline-engine plan
 //!   (no plan search, no residency charge) because either (a) its
-//!   deadline is tighter than the §3.5 ladder's cold estimate, or (b) the
-//!   model's circuit breaker is open after repeated backend failures.
+//!   deadline is tighter than the §3.5 ladder's cold estimate and
+//!   offload was off or infeasible, or (b) the model's circuit breaker
+//!   is open after repeated backend failures.
 //! * **Shed** — the per-shard admission budget of in-flight cold starts
-//!   is exhausted; the router refuses explicitly instead of queueing
-//!   unboundedly.
+//!   is exhausted (and the bounded waiting room, if
+//!   [`serving::RouterConfig::queue_depth`] enables one, is full); the
+//!   router refuses explicitly instead of queueing unboundedly.
 //! * **Failed** — a cold execution kept failing after bounded
 //!   exponential-backoff retries (deterministic, seeded jitter; charged
 //!   to modeled latency, never slept).
@@ -105,6 +111,53 @@
 //! `benches/serving_throughput.rs` ratchets it in CI (4-thread
 //! throughput must beat 1-thread in the same run, with shed == 0 and
 //! degraded == 0 on the fault-free trace).
+//!
+//! Two serving extensions ride on top of that taxonomy (ISSUE 8): an
+//! optional bounded per-shard **queue** (`queue_depth`) that lets a
+//! request wait for an in-flight cold start instead of shedding
+//! immediately (counted by `queued`, which is a waiting-room gauge, not a
+//! terminal outcome), and an **offload** path for multi-exit models —
+//! see the next section — which adds `offloaded` as a sixth conserved
+//! outcome.
+//!
+//! ## Early-exit workloads: multi-exit graphs, expected makespans, offload
+//!
+//! Models with BranchyNet-style early exits ([`graph::ExitPoint`]) make
+//! execution past an exit *conditional*: layer `l` only runs for the
+//! requests that survived every earlier exit. The [`exits`] subsystem
+//! exploits that end to end. [`exits::schedule_expected`] searches cold
+//! plans under survival-weighted prices (the same exact incremental
+//! machinery as [`sched::schedule`]; bit-identical to it when every exit
+//! probability is zero), [`exits::compare_expected_vs_blind`] scores the
+//! probability-blind plan under the same expected-makespan metric (the
+//! `exits` report and bench ratchet the gap), and
+//! [`exits::OffloadPolicy`] prices serving the conditional tail on a
+//! simulated remote (RTT + bandwidth + remote speedup), which the router
+//! uses when a local cold start would miss a request's deadline:
+//!
+//! ```
+//! use nnv12::device::profiles;
+//! use nnv12::exits::{compare_expected_vs_blind, OffloadPolicy};
+//! use nnv12::graph::zoo;
+//! use nnv12::kernels::Registry;
+//! use nnv12::sched::SchedulerConfig;
+//!
+//! // A multi-exit model: a resnet18 backbone with two calibrated exits.
+//! let g = zoo::branchy_resnet18();
+//! assert!(g.has_exits());
+//! assert!(g.survival_weights().last().unwrap() < &1.0);
+//!
+//! // Expected-makespan plan vs the probability-blind plan, both scored
+//! // under the survival-weighted metric. The expected plan never loses.
+//! let cmp = compare_expected_vs_blind(
+//!     &profiles::meizu_16t(), &g, &Registry::full(), &SchedulerConfig::kcp());
+//! assert!(cmp.expected_ms <= cmp.blind_ms);
+//!
+//! // The tail-offload estimate is deterministic arithmetic over the
+//! // first exit: local head + survival-weighted (link + remote tail).
+//! let est = nnv12::exits::offload_estimate(&g, &OffloadPolicy::default(), 800.0).unwrap();
+//! assert!(est.expected_ms > est.head_ms);
+//! ```
 //!
 //! ## Fleet planning: plans travel between devices
 //!
@@ -140,6 +193,9 @@
 //! * [`sched`] — the §3.2 scheduling problem, the §3.3 heuristic
 //!   scheduler (Algorithm 1) with its incremental plan-search engine, and
 //!   the fingerprint-keyed plan + calibrated-plan caches.
+//! * [`exits`] — early-exit workloads: survival-weighted
+//!   (expected-makespan) plan search over the same incremental engine,
+//!   and the deterministic local-vs-offload latency model.
 //! * [`store`] — the content-addressed artifact store: one persistence
 //!   layer (typed namespaces, version+checksum headers, atomic writes,
 //!   LRU size cap) for plans, calibrated plans, transformed weights, and
@@ -183,6 +239,7 @@ pub mod kernels;
 pub mod device;
 pub mod cost;
 pub mod sched;
+pub mod exits;
 pub mod store;
 pub mod fleet;
 pub mod faults;

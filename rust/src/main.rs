@@ -35,7 +35,7 @@ use nnv12::util::cli::Args;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&raw, &["cache", "no-pipeline", "sequential", "verbose", "execute"]) {
+    let args = match Args::parse(&raw, &["cache", "no-pipeline", "sequential", "verbose", "execute", "offload"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -74,10 +74,11 @@ fn print_help() {
          subcommands:\n\
            plan      --model M --device D [--no-pipeline] [--store DIR [--store-cap-mb N]]  print a scheduling plan\n\
            simulate  --model M --device D [--bg-little U]   simulate with contention\n\
-           report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|fleet|all>\n\
+           report    <fig2|table1|table2|fig6|fig8|fig9|fig10|fig11|fig12|fig13|fig14|table4|table5|fleet|exits|all>\n\
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
            serve     --device D --requests N --budget-mb B [--threads T] [--execute]\n\
-                     [--deadline-ms D] [--admission N] [--faults SEED]   multi-tenant serving sim\n\
+                     [--deadline-ms D] [--admission N] [--queue N] [--offload] [--faults SEED]\n\
+                     multi-tenant serving sim (--offload adds a multi-exit model + remote tail offload)\n\
            fleet     [--models A,B,..] [--devices D,E,.. | all] [--no-pipeline]\n\
                      [--store DIR] [--report DIR]   zoo x fleet planning with cross-device transfer\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
@@ -243,6 +244,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--deadline-ms expects a non-negative number");
     }
     let admission = args.get_usize("admission", 0).map_err(|e| anyhow!(e))?;
+    // ISSUE 8 knobs: `--queue N` lets up to N requests per shard wait for
+    // an in-flight cold start instead of shedding (needs --admission);
+    // `--offload` adds a multi-exit model to the fleet and arms the
+    // remote-tail offload policy, so deadline-missing requests on it serve
+    // `offloaded` instead of degrading.
+    let queue = args.get_usize("queue", 0).map_err(|e| anyhow!(e))?;
+    let offload = args.has("offload");
     let faults = match args.get("faults") {
         Some(seed) => {
             let seed: u64 = seed
@@ -252,11 +260,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let models: Vec<nnv12::graph::ModelGraph> =
+    let mut models: Vec<nnv12::graph::ModelGraph> =
         ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
             .iter()
             .map(|m| zoo::by_name(m).unwrap())
             .collect();
+    if offload {
+        models.push(zoo::branchy_mobilenet());
+    }
     // The serving front is itself a thin layer over Engine/Session — it
     // adds the sharded request surface, the failure policy, and the
     // per-model accounting used here. `--threads N` replays the trace
@@ -271,6 +282,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             memory_budget: budget_mb << 20,
             execute_cold: args.has("execute"),
             admission: (admission > 0).then_some(admission),
+            queue_depth: (queue > 0).then_some(queue),
+            offload: offload.then(nnv12::exits::OffloadPolicy::default),
             faults,
             ..Default::default()
         },
@@ -290,7 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let s = router.summary();
     println!(
         "served {} requests on {} thread(s) in {:.1} ms ({:.0} req/s): {} cold, {} warm, \
-         {} degraded, {} shed, {} failed (budget {} MB on {})",
+         {} degraded, {} offloaded, {} shed, {} failed (budget {} MB on {})",
         served,
         threads,
         wall_ms,
@@ -298,26 +311,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.cold,
         s.warm,
         s.degraded,
+        s.offloaded,
         s.shed,
         s.failed,
         budget_mb,
         dev.name
     );
     assert!(s.conserves(), "request accounting must conserve: {s:?}");
+    if s.queued > 0 {
+        println!("  queue: {} request(s) waited for a cold slot instead of shedding", s.queued);
+    }
     if s.degraded + s.failed + s.exec_failures + s.breaker_opens > 0 {
         println!(
             "  faults: {} exec failure(s) ({} panic(s)), {} retried; degraded = {} deadline + \
-             {} breaker; breaker opened {}x, probed {}x",
+             {} breaker + {} offload-drop; breaker opened {}x, probed {}x",
             s.exec_failures,
             s.exec_panics,
             s.retries,
             s.degraded_deadline,
             s.degraded_breaker,
+            s.degraded_offload,
             s.breaker_opens,
             s.breaker_probes
         );
     }
-    for label in ["cold", "warm", "degraded"] {
+    for label in ["cold", "warm", "degraded", "offloaded"] {
         let s = router.latency_summary(label);
         if s.n > 0 {
             println!(

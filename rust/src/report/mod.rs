@@ -520,10 +520,78 @@ pub fn fleet_coverage() -> Table {
     report.table()
 }
 
+/// Early exits (not a paper figure): the expected-makespan grid for every
+/// multi-exit zoo model. Per model, the probability-blind plan and the
+/// survival-weighted plan are both scored under the expected-makespan
+/// metric (the expected plan never loses — `benches/exits_expected.rs`
+/// ratchets the gap in CI), then the first-exit tail offload is priced
+/// against three simulated remotes; the verdict says which side a
+/// deadline-missing request would take. The CLI entry is `repro report
+/// exits`.
+pub fn exits() -> Table {
+    use crate::exits::{compare_expected_vs_blind, offload_estimate, OffloadPolicy};
+
+    let mut t = Table::new(
+        "Early exits — expected-vs-blind plans and tail offload (Meizu 16T, model units)",
+        &[
+            "model", "exits", "tail survives", "blind exp-ms", "expected exp-ms",
+            "gain", "remote", "local cold", "offload est", "verdict",
+        ],
+    );
+    let dev = profiles::meizu_16t();
+    let reg = Registry::full();
+    let cfg = SchedulerConfig::kcp();
+    // RTT ms / bandwidth Mbps / remote speedup / remote cold ms.
+    let remotes: [(&str, OffloadPolicy); 3] = [
+        ("lan", OffloadPolicy {
+            rtt_ms: 5.0,
+            bandwidth_mbps: 1000.0,
+            remote_speedup: 10.0,
+            remote_cold_ms: 2.0,
+        }),
+        ("wan", OffloadPolicy::default()),
+        ("far", OffloadPolicy {
+            rtt_ms: 80.0,
+            bandwidth_mbps: 20.0,
+            remote_speedup: 2.0,
+            remote_cold_ms: 50.0,
+        }),
+    ];
+    for model in zoo::BRANCHY_MODELS {
+        let g = zoo::by_name(model).unwrap();
+        let cmp = compare_expected_vs_blind(&dev, &g, &reg, &cfg);
+        let survive = *g.survival_weights().last().unwrap();
+        let local_cold = cmp.blind.schedule.makespan;
+        for (remote, policy) in &remotes {
+            let (est_ms, verdict) = match offload_estimate(&g, policy, local_cold) {
+                Some(est) if est.expected_ms < local_cold => {
+                    (fmt_ms(est.expected_ms), "offload")
+                }
+                Some(est) => (fmt_ms(est.expected_ms), "local"),
+                None => ("-".into(), "local"),
+            };
+            t.row(vec![
+                model.to_string(),
+                g.exits().len().to_string(),
+                format!("{:.0}%", survive * 100.0),
+                fmt_ms(cmp.blind_ms),
+                fmt_ms(cmp.expected_ms),
+                fmt_x(cmp.blind_ms / cmp.expected_ms.max(1e-12)),
+                remote.to_string(),
+                fmt_ms(local_cold),
+                est_ms,
+                verdict.into(),
+            ]);
+        }
+    }
+    t
+}
+
 /// All reports keyed by CLI name.
 pub fn by_name(name: &str) -> Option<Table> {
     Some(match name {
         "fleet" => fleet_coverage(),
+        "exits" => exits(),
         "fig2" => fig2(),
         "table1" => table1(),
         "table2" => table2(),
@@ -560,6 +628,15 @@ mod tests {
             assert!(rendered.contains("##"));
         }
         assert!(by_name("fig99").is_none());
+    }
+
+    #[test]
+    fn exits_report_covers_every_branchy_model_and_remote() {
+        let t = exits();
+        assert_eq!(t.rows().len(), zoo::BRANCHY_MODELS.len() * 3);
+        for row in t.rows() {
+            assert!(row[9] == "offload" || row[9] == "local", "{row:?}");
+        }
     }
 
     #[test]

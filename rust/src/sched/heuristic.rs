@@ -137,7 +137,7 @@ pub fn prep_units(dev: &DeviceProfile) -> usize {
 /// shared front half of [`schedule`] and [`schedule_seeded`]. Weightless
 /// layers get an empty set; with kernel selection off, candidates come
 /// from the warm-default registry.
-fn build_candidates(
+pub(crate) fn build_candidates(
     dev: &DeviceProfile,
     graph: &ModelGraph,
     registry: &Registry,
@@ -166,7 +166,11 @@ fn build_candidates(
 /// Per-layer greedy pick (the cold search's seed). Preparation runs on
 /// ~n_little cores in parallel with execution, so a bundle "costs"
 /// roughly prep/n_little against the gang's exec time.
-fn greedy_pick(cands: &[Vec<Candidate>], cfg: &SchedulerConfig, n_prep_units: usize) -> Vec<usize> {
+pub(crate) fn greedy_pick(
+    cands: &[Vec<Candidate>],
+    cfg: &SchedulerConfig,
+    n_prep_units: usize,
+) -> Vec<usize> {
     let n_little = n_prep_units.max(1);
     cands
         .iter()
@@ -191,7 +195,7 @@ fn greedy_pick(cands: &[Vec<Candidate>], cfg: &SchedulerConfig, n_prep_units: us
 /// The only place choice vectors are materialized: when (re)building a
 /// plan. Trials never clone kernel choices — they operate on `pick` and
 /// the candidates' flat price table.
-fn choices_of(cands: &[Vec<Candidate>], pick: &[usize]) -> Vec<Option<KernelChoice>> {
+pub(crate) fn choices_of(cands: &[Vec<Candidate>], pick: &[usize]) -> Vec<Option<KernelChoice>> {
     cands
         .iter()
         .zip(pick)
@@ -206,7 +210,8 @@ fn choices_of(cands: &[Vec<Candidate>], pick: &[usize]) -> Vec<Option<KernelChoi
 /// evaluated) and are updated in place on every confirmed improvement;
 /// `seed_table` must be exact for `pick`. Returns the number of
 /// confirm-accepted passes.
-fn descend(
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn descend(
     cands: &[Vec<Candidate>],
     pick: &mut Vec<usize>,
     best: &mut Scheduled,
@@ -592,7 +597,7 @@ pub fn inner_schedule(
 
 /// [`inner_schedule`] that also returns the freshly priced table, so the
 /// outer search seeds its pass-carried table without pricing twice.
-fn rebuild_with_table(
+pub(crate) fn rebuild_with_table(
     dev: &DeviceProfile,
     graph: &ModelGraph,
     choices: &[Option<KernelChoice>],

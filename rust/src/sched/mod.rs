@@ -109,6 +109,20 @@
 //! *time*, never the quality floor ([`heuristic::TransferOutcome`]
 //! documents the invariants).
 //!
+//! # Expected-makespan search (multi-exit models)
+//!
+//! The same exact machinery schedules BranchyNet-style multi-exit models
+//! under *expected* cost: [`crate::exits::schedule_expected`] scales the
+//! candidate prices and the confirmed price table by the graph's
+//! per-layer survival weights ([`crate::graph::ModelGraph::survival_weights`])
+//! and then runs the identical greedy → confirm → descent pipeline — the
+//! weighting touches only the two table lanes, so every exactness
+//! invariant above carries over verbatim, and an all-ones weight vector
+//! (no exits, or all-zero exit probabilities) reproduces
+//! [`heuristic::schedule`] bit-for-bit (IEEE `x * 1.0 == x`). That
+//! module, not this one, also prices serving the conditional tail on a
+//! remote ([`crate::exits::OffloadPolicy`]).
+//!
 //! Callers normally do not drive this module directly: the
 //! [`crate::engine::Engine`] facade owns planning (cache, store,
 //! calibration) and hands out sessions; `sched` is the planner it drives.

@@ -15,26 +15,39 @@
 //! Zipf-skewed, open-loop Poisson request streams the serving
 //! experiments replay, with optional per-request deadlines.
 //!
-//! # The failure model: degrade → shed → fail
+//! # The failure model: offload → degrade → queue → shed → fail
 //!
 //! Cold starts are where serving failures concentrate, so the cold path
-//! is policy-gated (ISSUE 6). Every request resolves to exactly one
-//! [`Outcome`], and the counters in [`RouterStats`] conserve:
-//! `cold + warm + degraded + shed + failed == issued`.
+//! is policy-gated (ISSUE 6, extended by ISSUE 8). Every request
+//! resolves to exactly one [`Outcome`], and the counters in
+//! [`RouterStats`] conserve:
+//! `cold + warm + degraded + offloaded + shed + failed == issued`.
 //!
 //! * **Served / [`ServeClass::Warm`]** — resident model, ladder rung.
 //!   Never gated.
 //! * **Served / [`ServeClass::Cold`]** — a cold start that passed every
 //!   gate; executed with bounded, seeded-backoff retries when
 //!   [`RouterConfig::execute_cold`] is on.
+//! * **Served / [`ServeClass::Offloaded`]** — the deadline was tighter
+//!   than the cold estimate, the model has early exits, and
+//!   [`RouterConfig::offload`] (an [`OffloadPolicy`]) priced running the
+//!   head locally and shipping the conditional tail to a remote inside
+//!   the deadline: serve at that expected latency, residency untouched.
+//!   An injected send fault (`FaultKind::OffloadDrop`) falls back to the
+//!   degraded path, counted in `degraded_offload`.
 //! * **Served / [`ServeClass::Degraded`]** — the request's deadline was
-//!   tighter than the §3.5 cold estimate, or the model's circuit breaker
-//!   is open: serve the search-free baseline-shaped plan instead, without
-//!   touching residency. `degraded == degraded_deadline +
-//!   degraded_breaker` in the stats.
+//!   tighter than the §3.5 cold estimate (and offload was off or
+//!   infeasible), or the model's circuit breaker is open: serve the
+//!   search-free baseline-shaped plan instead, without touching
+//!   residency. `degraded == degraded_deadline + degraded_breaker +
+//!   degraded_offload` in the stats.
 //! * **[`Outcome::Shed`]** — the per-shard budget of in-flight cold
 //!   starts ([`RouterConfig::admission`]) was exhausted: explicit
-//!   backpressure instead of unbounded queueing.
+//!   backpressure instead of unbounded queueing. With
+//!   [`RouterConfig::queue_depth`] set, up to that many requests per
+//!   shard first *wait* for a slot instead of shedding immediately —
+//!   counted by the non-terminal `queued` stat — and only an overfull
+//!   waiting room sheds.
 //! * **[`Outcome::Failed`]** — every retry failed (backend panics are
 //!   caught at the router boundary and counted in `exec_panics`).
 //!
@@ -60,6 +73,10 @@
 pub mod router;
 pub mod workload;
 
+// Re-exported so serving callers configure offload next to the router
+// knobs it gates; the policy itself (and the estimate arithmetic) lives
+// with the rest of the early-exit machinery in [`crate::exits`].
+pub use crate::exits::OffloadPolicy;
 pub use router::{
     BreakerPolicy, Outcome, RetryPolicy, Router, RouterConfig, RouterStats, ServeClass,
     ServeEngine, Served,

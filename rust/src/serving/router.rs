@@ -7,15 +7,15 @@
 //! engine-choice knob (NNV12 vs a vanilla baseline) used by the serving
 //! comparisons.
 //!
-//! # Failure model (ISSUE 6)
+//! # Failure model (ISSUE 6, extended by ISSUE 8)
 //!
 //! Cold starts are where serving failures concentrate — slow or corrupt
 //! artifact reads, transient backend errors, overload from eviction
 //! storms — so the cold path is policy-gated. Every request resolves to
-//! exactly one of five outcomes, and the **conservation invariant**
+//! exactly one of six outcomes, and the **conservation invariant**
 //!
 //! ```text
-//! cold + warm + degraded + shed + failed == issued
+//! cold + warm + degraded + offloaded + shed + failed == issued
 //! ```
 //!
 //! holds at all times ([`RouterStats::conserves`], asserted under
@@ -33,9 +33,21 @@
 //!   tighter than the ladder's cold estimate, or (b) the model's circuit
 //!   breaker is open. Deliberately cheap: no plan search, no backend
 //!   execution, no retries.
+//! * **Offloaded** — a *multi-exit* model whose local cold estimate
+//!   missed the deadline, but whose head-local / tail-remote split
+//!   ([`crate::exits::offload_estimate`] under
+//!   [`RouterConfig::offload`]) fits it: the head serves locally, the
+//!   conditional tail ships to the simulated remote, and the request is
+//!   charged the deterministic expected offload latency. Residency is
+//!   untouched, like the degraded path. An injected
+//!   [`crate::faults::FaultKind::OffloadDrop`] on the send falls back to
+//!   the degraded path (counted under `degraded_offload`).
 //! * **Shed** — the per-shard admission budget of in-flight cold starts
-//!   ([`RouterConfig::admission`]) was exhausted; refuse explicitly
-//!   rather than queueing unboundedly.
+//!   ([`RouterConfig::admission`]) was exhausted *and* the bounded wait
+//!   queue ([`RouterConfig::queue_depth`], default off) was full or
+//!   disabled; refuse explicitly rather than queueing unboundedly. A
+//!   request that does wait for a slot is counted by the non-terminal
+//!   `queued` statistic and then resolves normally.
 //! * **Failed** — every retry of a cold execution failed. The error
 //!   string of the last attempt is reported; a backend *panic* is caught
 //!   at the router boundary and counted like a failure (no panic ever
@@ -87,7 +99,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::engine::{BaselineBackend, Engine, ExecBackend, Phase, Session, SimBackend};
 use crate::device::DeviceProfile;
-use crate::faults::{mix64, unit_f64, FaultPlan};
+use crate::exits::{offload_estimate, OffloadPolicy};
+use crate::faults::{mix64, unit_f64, FaultKind, FaultPlan, FaultSite};
 use crate::graph::ModelGraph;
 use crate::metrics::Recorder;
 use crate::sched::cache::PlanCache;
@@ -178,6 +191,18 @@ pub struct RouterConfig {
     /// Max in-flight cold starts per shard; excess cold-due requests are
     /// shed ([`Outcome::Shed`]). `None` (default) admits everything.
     pub admission: Option<usize>,
+    /// Bounded per-shard wait queue for cold-start admission: a request
+    /// that finds the shard's in-flight budget exhausted waits for a slot
+    /// if fewer than `queue_depth` requests are already waiting there,
+    /// instead of shedding immediately. `None` (default) preserves the
+    /// historical shed-immediately behavior exactly. Only meaningful
+    /// together with [`RouterConfig::admission`] (> 0).
+    pub queue_depth: Option<usize>,
+    /// Offload policy for multi-exit models: when a local cold start
+    /// would miss a request's deadline, serve the head locally and the
+    /// conditional tail on the simulated remote if the expected offload
+    /// latency fits the deadline. `None` (default) never offloads.
+    pub offload: Option<OffloadPolicy>,
     pub retry: RetryPolicy,
     pub breaker: BreakerPolicy,
     /// Deterministic fault plan threaded into the execution backend
@@ -195,6 +220,8 @@ impl Default for RouterConfig {
             warmup_depth: 4,
             execute_cold: false,
             admission: None,
+            queue_depth: None,
+            offload: None,
             retry: RetryPolicy::default(),
             breaker: BreakerPolicy::default(),
             faults: None,
@@ -210,9 +237,13 @@ pub enum ServeClass {
     Cold,
     /// Resident model, warm-up ladder rung.
     Warm,
-    /// Served off the search-free baseline plan (deadline miss or open
-    /// breaker); residency untouched.
+    /// Served off the search-free baseline plan (deadline miss, open
+    /// breaker, or a dropped offload); residency untouched.
     Degraded,
+    /// Multi-exit model: head served locally, conditional tail offloaded
+    /// to the simulated remote; charged the deterministic expected
+    /// offload latency. Residency untouched.
+    Offloaded,
 }
 
 /// A successfully served request.
@@ -261,6 +292,10 @@ impl Outcome {
         matches!(self.served(), Some(s) if s.class == ServeClass::Degraded)
     }
 
+    pub fn is_offloaded(&self) -> bool {
+        matches!(self.served(), Some(s) if s.class == ServeClass::Offloaded)
+    }
+
     pub fn is_shed(&self) -> bool {
         matches!(self, Outcome::Shed)
     }
@@ -279,14 +314,23 @@ pub struct RouterStats {
     pub cold: usize,
     pub warm: usize,
     /// Requests served off the degraded path
-    /// (`== degraded_deadline + degraded_breaker`).
+    /// (`== degraded_deadline + degraded_breaker + degraded_offload`).
     pub degraded: usize,
+    /// Requests served by offloading the multi-exit tail to the remote.
+    pub offloaded: usize,
     pub shed: usize,
     pub failed: usize,
+    /// Requests that waited in the bounded admission queue for a cold
+    /// slot. **Not** a terminal outcome (a queued request still resolves
+    /// to cold/warm/failed), so it does not enter the conservation sum.
+    pub queued: usize,
     /// Degradations caused by a deadline tighter than the cold estimate.
     pub degraded_deadline: usize,
     /// Degradations caused by an open circuit breaker.
     pub degraded_breaker: usize,
+    /// Degradations caused by a dropped offload send (injected
+    /// [`crate::faults::FaultKind::OffloadDrop`]).
+    pub degraded_offload: usize,
     /// Individual cold-execution attempt failures (includes panics).
     pub exec_failures: usize,
     /// Backend panics caught at the router boundary.
@@ -303,7 +347,8 @@ impl RouterStats {
     /// The conservation invariant: every issued request resolved to
     /// exactly one outcome.
     pub fn conserves(&self) -> bool {
-        self.cold + self.warm + self.degraded + self.shed + self.failed == self.issued
+        self.cold + self.warm + self.degraded + self.offloaded + self.shed + self.failed
+            == self.issued
     }
 }
 
@@ -315,10 +360,13 @@ struct Counters {
     cold: AtomicUsize,
     warm: AtomicUsize,
     degraded: AtomicUsize,
+    offloaded: AtomicUsize,
     shed: AtomicUsize,
     failed: AtomicUsize,
+    queued: AtomicUsize,
     degraded_deadline: AtomicUsize,
     degraded_breaker: AtomicUsize,
+    degraded_offload: AtomicUsize,
     exec_failures: AtomicUsize,
     exec_panics: AtomicUsize,
     retries: AtomicUsize,
@@ -461,12 +509,20 @@ pub struct Router {
     shards: Vec<Shard>,
     /// In-flight cold starts, per shard (the admission gauge).
     cold_inflight: Vec<AtomicUsize>,
+    /// Requests waiting for an admission slot, per shard (the bounded
+    /// queue gauge; only moves when `queue_depth` is set).
+    queue_waiting: Vec<AtomicUsize>,
     recorder: Mutex<Recorder>,
     counters: Counters,
     execute_cold: bool,
     admission: Option<usize>,
+    queue_depth: Option<usize>,
+    offload: Option<OffloadPolicy>,
     retry: RetryPolicy,
     breaker_policy: BreakerPolicy,
+    /// The fault plan, for sites the *router itself* instruments
+    /// (offload sends); store/backend sites hold their own `Arc`.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Router {
@@ -529,12 +585,16 @@ impl Router {
             engine,
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             cold_inflight: (0..SHARDS).map(|_| AtomicUsize::new(0)).collect(),
+            queue_waiting: (0..SHARDS).map(|_| AtomicUsize::new(0)).collect(),
             recorder: Mutex::new(Recorder::new()),
             counters: Counters::default(),
             execute_cold: cfg.execute_cold,
             admission: cfg.admission,
+            queue_depth: cfg.queue_depth,
+            offload: cfg.offload,
             retry: cfg.retry,
             breaker_policy: cfg.breaker,
+            faults: cfg.faults.clone(),
         };
         for s in router.engine.load_all(models) {
             router.insert(s);
@@ -629,9 +689,14 @@ impl Router {
         }
 
         // A cold start is due. Gate 1: can it meet the deadline? The
-        // §3.5 ladder's first rung is the planner's cold estimate.
+        // §3.5 ladder's first rung is the planner's cold estimate. A
+        // multi-exit model that cannot may still fit by offloading its
+        // conditional tail (Gate 1b) before falling back to degradation.
         if let Some(d) = deadline_ms {
             if entry.session.cold_ms() > d {
+                if let Some(o) = self.try_offload(&entry, model, d) {
+                    return Some(o);
+                }
                 self.counters.degraded_deadline.fetch_add(1, Ordering::Relaxed);
                 return Some(self.serve_degraded(&entry, model));
             }
@@ -651,15 +716,20 @@ impl Router {
         };
 
         // Gate 3: bounded admission of in-flight cold starts, per shard.
-        let slot = &self.cold_inflight[self.shard_of(model)];
+        // On a full budget, Gate 3b lets the request wait in the bounded
+        // queue for a slot (holding one on success); otherwise shed.
+        let shard = self.shard_of(model);
+        let slot = &self.cold_inflight[shard];
         let prev = slot.fetch_add(1, Ordering::Relaxed);
         if self.admission.is_some_and(|limit| prev >= limit) {
             slot.fetch_sub(1, Ordering::Relaxed);
-            if probing {
-                entry.breaker.probe_aborted();
+            if !self.wait_for_cold_slot(shard) {
+                if probing {
+                    entry.breaker.probe_aborted();
+                }
+                self.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Some(Outcome::Shed);
             }
-            self.counters.shed.fetch_add(1, Ordering::Relaxed);
-            return Some(Outcome::Shed);
         }
         let _guard = ColdGuard { slot };
 
@@ -757,6 +827,70 @@ impl Router {
                 retries,
             }))
         }
+    }
+
+    /// Gate 1b: try to serve a deadline-missing request by offloading the
+    /// multi-exit tail (CSGO-style head-local / tail-remote split).
+    /// `None` when offload is not configured, the model has no exits, or
+    /// the expected offload latency still misses the deadline — the
+    /// caller then degrades as before. The send is an instrumented fault
+    /// site: an injected drop falls back to the degraded path, counted
+    /// under `degraded_offload`.
+    fn try_offload(&self, entry: &ModelEntry, model: &str, deadline_ms: Ms) -> Option<Outcome> {
+        let policy = self.offload.as_ref()?;
+        let graph = entry.session.graph();
+        if !graph.has_exits() {
+            return None;
+        }
+        let est = offload_estimate(graph, policy, entry.session.cold_ms())?;
+        if est.expected_ms > deadline_ms {
+            return None;
+        }
+        if let Some(f) = &self.faults {
+            if f.draw(FaultSite::OffloadSend) == Some(FaultKind::OffloadDrop) {
+                self.counters.degraded_offload.fetch_add(1, Ordering::Relaxed);
+                return Some(self.serve_degraded(entry, model));
+            }
+        }
+        self.counters.offloaded.fetch_add(1, Ordering::Relaxed);
+        self.record(model, "offloaded", est.expected_ms);
+        Some(Outcome::Served(Served {
+            latency_ms: est.expected_ms,
+            class: ServeClass::Offloaded,
+            evictions: 0,
+            retries: 0,
+        }))
+    }
+
+    /// Gate 3b: wait in the bounded per-shard queue for a cold-start
+    /// admission slot. Returns `true` holding a slot (the caller's
+    /// `ColdGuard` releases it), `false` when queueing is disabled,
+    /// futile (`admission == Some(0)` can never free a slot), or the
+    /// queue itself is full. The wait spins on the admission gauge with
+    /// `yield_now` — slots are held only for the duration of one cold
+    /// start, and queue depths are small by construction.
+    fn wait_for_cold_slot(&self, shard: usize) -> bool {
+        let Some(depth) = self.queue_depth else { return false };
+        let limit = match self.admission {
+            Some(l) if l > 0 => l,
+            _ => return false,
+        };
+        let gauge = &self.queue_waiting[shard];
+        if gauge.fetch_add(1, Ordering::Relaxed) >= depth {
+            gauge.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        self.counters.queued.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.cold_inflight[shard];
+        loop {
+            if slot.fetch_add(1, Ordering::Relaxed) < limit {
+                break;
+            }
+            slot.fetch_sub(1, Ordering::Relaxed);
+            std::thread::yield_now();
+        }
+        gauge.fetch_sub(1, Ordering::Relaxed);
+        true
     }
 
     /// Serve off the degraded path: the session's search-free baseline
@@ -883,10 +1017,13 @@ impl Router {
             cold: load(&c.cold),
             warm: load(&c.warm),
             degraded: load(&c.degraded),
+            offloaded: load(&c.offloaded),
             shed: load(&c.shed),
             failed: load(&c.failed),
+            queued: load(&c.queued),
             degraded_deadline: load(&c.degraded_deadline),
             degraded_breaker: load(&c.degraded_breaker),
+            degraded_offload: load(&c.degraded_offload),
             exec_failures: load(&c.exec_failures),
             exec_panics: load(&c.exec_panics),
             retries: load(&c.retries),
@@ -1298,6 +1435,136 @@ mod tests {
         assert!(o.is_cold());
         let s = r.summary();
         assert_eq!((s.exec_panics, s.exec_failures, s.retries), (1, 1, 1));
+        assert!(s.conserves());
+    }
+
+    /// A remote generous enough that offloading a branchy model's tail
+    /// clearly beats its local cold start.
+    fn fast_remote() -> OffloadPolicy {
+        OffloadPolicy {
+            rtt_ms: 5.0,
+            bandwidth_mbps: 1000.0,
+            remote_speedup: 10.0,
+            remote_cold_ms: 2.0,
+        }
+    }
+
+    #[test]
+    fn tight_deadline_offloads_the_multi_exit_tail() {
+        let dev = profiles::meizu_16t();
+        let policy = fast_remote();
+        let r = Router::new(
+            &dev,
+            vec![zoo::branchy_resnet18(), zoo::resnet18()],
+            RouterConfig { offload: Some(policy), ..Default::default() },
+        );
+        let session = r.session("branchy-resnet18").unwrap();
+        let cold = session.cold_ms();
+        let est = offload_estimate(session.graph(), &policy, cold).unwrap();
+        assert!(est.expected_ms < cold, "offload must beat local cold here");
+        // A deadline between the offload estimate and the local cold
+        // estimate: local misses, offload fits.
+        let d = (est.expected_ms + cold) / 2.0;
+        let o = r.request_with("branchy-resnet18", Some(d)).unwrap();
+        assert!(o.is_offloaded(), "{o:?}");
+        assert_eq!(latency(&o).to_bits(), est.expected_ms.to_bits());
+        // A single-exit model with the same policy still degrades.
+        let o2 = r.request_with("resnet18", Some(0.0)).unwrap();
+        assert!(o2.is_degraded());
+        let s = r.summary();
+        assert_eq!((s.offloaded, s.degraded, s.degraded_deadline), (1, 1, 1));
+        // Offload leaves residency untouched, like degradation.
+        assert_eq!((s.cold, s.warm), (0, 0));
+        assert!(s.conserves());
+        assert_eq!(r.recorded("offloaded").len(), 1);
+    }
+
+    #[test]
+    fn injected_offload_drop_falls_back_to_degraded() {
+        use crate::faults::Trigger;
+        let plan = Arc::new(FaultPlan::new(11).with_rule(
+            FaultSite::OffloadSend,
+            FaultKind::OffloadDrop,
+            Trigger::At(0),
+        ));
+        let dev = profiles::meizu_16t();
+        let policy = fast_remote();
+        let r = Router::new(
+            &dev,
+            vec![zoo::branchy_resnet18()],
+            RouterConfig {
+                offload: Some(policy),
+                faults: Some(plan.clone()),
+                ..Default::default()
+            },
+        );
+        let session = r.session("branchy-resnet18").unwrap();
+        let est = offload_estimate(session.graph(), &policy, session.cold_ms()).unwrap();
+        let d = (est.expected_ms + session.cold_ms()) / 2.0;
+        // First send is dropped → degraded; the retry-free fallback never
+        // hangs. Second request's send is clean → offloaded.
+        let first = r.request_with("branchy-resnet18", Some(d)).unwrap();
+        assert!(first.is_degraded(), "{first:?}");
+        let second = r.request_with("branchy-resnet18", Some(d)).unwrap();
+        assert!(second.is_offloaded(), "{second:?}");
+        let s = r.summary();
+        assert_eq!((s.offloaded, s.degraded, s.degraded_offload), (1, 1, 1));
+        assert_eq!(s.degraded_deadline, 0);
+        assert_eq!(plan.injected(FaultKind::OffloadDrop), 1);
+        assert_eq!(plan.calls(FaultSite::OffloadSend), 2);
+        assert!(s.conserves());
+    }
+
+    #[test]
+    fn queued_request_waits_for_a_slot_instead_of_shedding() {
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::tiny_net()],
+            RouterConfig {
+                admission: Some(1),
+                queue_depth: Some(4),
+                ..Default::default()
+            },
+        );
+        let shard = r.shard_of("tinynet");
+        // Occupy the only admission slot by hand, issue the request from
+        // another thread — it must queue rather than shed — then release
+        // the slot and watch the queued request complete normally.
+        r.cold_inflight[shard].fetch_add(1, Ordering::Relaxed);
+        let out = std::thread::scope(|s| {
+            let h = s.spawn(|| r.request("tinynet").unwrap());
+            while r.summary().queued == 0 {
+                std::thread::yield_now();
+            }
+            r.cold_inflight[shard].fetch_sub(1, Ordering::Relaxed);
+            h.join().unwrap()
+        });
+        assert!(out.is_cold(), "{out:?}");
+        let s = r.summary();
+        assert_eq!((s.queued, s.shed), (1, 0));
+        assert_eq!(r.cold_inflight[shard].load(Ordering::Relaxed), 0);
+        assert_eq!(r.queue_waiting[shard].load(Ordering::Relaxed), 0);
+        assert!(s.conserves());
+    }
+
+    #[test]
+    fn futile_queue_with_zero_admission_still_sheds() {
+        // admission == Some(0) can never free a slot, so queueing would
+        // hang forever; the router must recognize futility and shed.
+        let dev = profiles::meizu_16t();
+        let r = Router::new(
+            &dev,
+            vec![zoo::tiny_net()],
+            RouterConfig {
+                admission: Some(0),
+                queue_depth: Some(8),
+                ..Default::default()
+            },
+        );
+        assert!(r.request("tinynet").unwrap().is_shed());
+        let s = r.summary();
+        assert_eq!((s.shed, s.queued), (1, 0));
         assert!(s.conserves());
     }
 

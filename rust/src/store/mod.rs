@@ -451,6 +451,12 @@ impl ArtifactStore {
         std::fs::remove_file(self.path_of(ns, key)).is_ok()
     }
 
+    /// [`ArtifactStore::remove`] for a scoped artifact. Returns whether a
+    /// file was deleted.
+    pub fn remove_scoped(&self, ns: Namespace, scope: &str, key: u64) -> bool {
+        std::fs::remove_file(self.scoped_path(ns, scope, key)).is_ok()
+    }
+
     /// Remove every artifact in one namespace (scoped and unscoped).
     pub fn clear_namespace(&self, ns: Namespace) {
         let unscoped = format!("{}-", ns.tag());

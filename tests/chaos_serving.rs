@@ -6,9 +6,11 @@
 //!   (`FaultKind::ExecPanic`) are caught at the router boundary; a panic
 //!   that escaped would unwind a serving thread and fail the
 //!   `thread::scope` join inside [`Router::replay`] — i.e. fail the test.
-//! * **Accounting conserves.** `cold + warm + degraded + shed + failed
-//!   == issued` after every chaotic replay, and each sub-taxonomy agrees
-//!   with the fault injector's own counters.
+//! * **Accounting conserves.** `cold + warm + degraded + offloaded +
+//!   shed + failed == issued` after every chaotic replay, and each
+//!   sub-taxonomy agrees with the fault injector's own counters —
+//!   including the offload path (ISSUE 8): every OffloadSend draw is
+//!   either one offloaded request or one `degraded_offload` fallback.
 //! * **The store heals.** Every injected corruption (torn writes, bit
 //!   rot) is rejected and repaired by a later clean pass: `fsck` reports
 //!   zero corrupt artifacts at the end.
@@ -22,7 +24,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use nnv12::device::profiles;
-use nnv12::faults::{FaultKind, FaultPlan};
+use nnv12::exits::OffloadPolicy;
+use nnv12::faults::{FaultKind, FaultPlan, FaultSite};
 use nnv12::graph::zoo;
 use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
 use nnv12::store::ArtifactStore;
@@ -36,7 +39,26 @@ fn store_dir(tag: &str) -> PathBuf {
 }
 
 fn models() -> Vec<nnv12::graph::ModelGraph> {
-    vec![zoo::tiny_net(), zoo::micro_mobilenet(), zoo::squeezenet()]
+    // branchy-resnet18 is by far the heaviest: its cold estimate sets the
+    // deadline bar, so its own cold-due requests always miss locally and
+    // exercise the offload gate (it is also Zipf rank 1 by sorted name).
+    vec![
+        zoo::tiny_net(),
+        zoo::micro_mobilenet(),
+        zoo::squeezenet(),
+        zoo::branchy_resnet18(),
+    ]
+}
+
+/// A generous simulated remote: offloading the branchy tail clearly fits
+/// inside the half-cold deadline the chaos trace uses.
+fn fast_remote() -> OffloadPolicy {
+    OffloadPolicy {
+        rtt_ms: 5.0,
+        bandwidth_mbps: 1000.0,
+        remote_speedup: 10.0,
+        remote_cold_ms: 2.0,
+    }
 }
 
 /// Injected `ExecPanic` faults panic on purpose; the router catches them,
@@ -67,6 +89,7 @@ fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
     quiet_injected_panics();
     let dev = profiles::meizu_16t();
     let mut injected_total = 0usize;
+    let mut offloaded_total = 0usize;
 
     for seed in [1u64, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233] {
         let dir = store_dir(&format!("replay-{seed}"));
@@ -81,6 +104,8 @@ fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
                 memory_budget: 6 << 20, // thrashes: cold starts stay frequent
                 execute_cold: true,
                 admission: Some(2),
+                queue_depth: Some(3),
+                offload: Some(fast_remote()),
                 faults: Some(plan.clone()),
                 ..Default::default()
             },
@@ -113,8 +138,20 @@ fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
         assert_eq!(s.issued, reqs.len(), "seed {seed}");
         assert_eq!(
             s.degraded,
-            s.degraded_deadline + s.degraded_breaker,
+            s.degraded_deadline + s.degraded_breaker + s.degraded_offload,
             "seed {seed}: {s:?}"
+        );
+        // Every offload-send draw resolved to exactly one outcome: a
+        // served offload or a degraded fallback on an injected drop.
+        assert_eq!(
+            s.offloaded + s.degraded_offload,
+            plan.calls(FaultSite::OffloadSend),
+            "seed {seed}: offload sends must reconcile with the injector: {s:?}"
+        );
+        assert_eq!(
+            s.degraded_offload,
+            plan.injected(FaultKind::OffloadDrop),
+            "seed {seed}: every injected drop is one degraded fallback"
         );
         // The router is the only caller of the execution backend, so its
         // failure taxonomy must agree exactly with the injector's tally.
@@ -132,7 +169,9 @@ fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
         assert_eq!(router.recorded("cold").len(), s.cold, "seed {seed}");
         assert_eq!(router.recorded("warm").len(), s.warm, "seed {seed}");
         assert_eq!(router.recorded("degraded").len(), s.degraded, "seed {seed}");
+        assert_eq!(router.recorded("offloaded").len(), s.offloaded, "seed {seed}");
         injected_total += plan.injected_total();
+        offloaded_total += s.offloaded;
         drop(router);
 
         // Healing pass: a clean restart over the same directory re-reads
@@ -155,6 +194,10 @@ fn chaos_replay_conserves_and_the_store_heals_across_seeds() {
         injected_total > 0,
         "the chaos schedule must actually inject faults across the seed sweep"
     );
+    assert!(
+        offloaded_total > 0,
+        "the branchy model's deadline misses must actually offload across the sweep"
+    );
 }
 
 #[test]
@@ -166,20 +209,35 @@ fn same_seed_replays_bit_identically() {
         let router = Router::new(&dev, models(), RouterConfig {
             memory_budget: 6 << 20,
             execute_cold: true,
+            offload: Some(fast_remote()),
             faults: Some(plan),
             ..Default::default()
         });
-        let reqs = generate(&router.model_names(), &WorkloadSpec {
+        let names = router.model_names();
+        let deadline = names
+            .iter()
+            .map(|m| router.session(m).unwrap().cold_ms())
+            .fold(f64::MIN, f64::max)
+            / 2.0;
+        let reqs = generate(&names, &WorkloadSpec {
             n_requests: 80,
+            deadline_ms: Some(deadline),
             ..Default::default()
         });
         // Single-threaded: the fault schedule is a pure function of the
-        // per-site call count, so the whole replay is deterministic.
+        // per-site call count, so the whole replay is deterministic —
+        // including the offload sends and their injected drops.
         router.replay(&reqs, 1);
         let bits = |label: &str| -> Vec<u64> {
             router.recorded(label).iter().map(|l| l.to_bits()).collect()
         };
-        (router.summary(), bits("cold"), bits("warm"), bits("degraded"))
+        (
+            router.summary(),
+            bits("cold"),
+            bits("warm"),
+            bits("degraded"),
+            bits("offloaded"),
+        )
     };
     let a = run();
     let b = run();
@@ -187,6 +245,8 @@ fn same_seed_replays_bit_identically() {
     assert_eq!(a.1, b.1, "cold latencies must replay bit-identically");
     assert_eq!(a.2, b.2, "warm latencies must replay bit-identically");
     assert_eq!(a.3, b.3, "degraded latencies must replay bit-identically");
+    assert_eq!(a.4, b.4, "offload latencies must replay bit-identically");
+    assert!(a.0.offloaded > 0, "the deadline trace must exercise offload: {:?}", a.0);
 }
 
 #[test]
