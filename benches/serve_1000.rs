@@ -1,0 +1,140 @@
+//! Bench: fleet-scale serving — a thousand models through one router.
+//!
+//! The O(1) residency (intrusive LRU) and sharded, index-backed metrics
+//! paths exist for exactly this regime: a model population large enough
+//! that any per-request linear scan — over resident sessions, over
+//! recorder labels — would dominate the request itself. This bench
+//! builds the deterministic [`zoo::synthetic`] thousand-model fleet,
+//! sizes the memory budget to an eighth of the fleet footprint so the
+//! Zipf tail forces constant eviction, and replays the trace at 1 and 4
+//! serving threads (cold requests execute through the contention-aware
+//! simulator, so cold work parallelizes).
+//!
+//! Emits `BENCH_scale.json`. CI ratchets `serve1000-4t/zoo` against
+//! `serve1000-1t/zoo` measured in the same run: if 4 threads do not beat
+//! 1 thread at fleet scale, the request path has regrown either a
+//! serialization point or a population-proportional scan.
+//!
+//! A second, non-ratcheted pass serves the same fleet partitioned across
+//! 4 tenants (shared plan cache, so replanning is free) and asserts the
+//! per-tenant attribution conserves — the multi-tenant bookkeeping must
+//! not perturb the happy path.
+use nnv12::device::profiles;
+use nnv12::graph::zoo;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+use nnv12::sched::cache::PlanCache;
+use nnv12::util::bench::Bench;
+use std::sync::Arc;
+
+const N_MODELS: usize = 1000;
+const TENANTS: usize = 4;
+
+fn main() {
+    let mut b = Bench::new("serve_1000");
+    let dev = profiles::meizu_16t();
+
+    let models = zoo::synthetic(0xFEED, N_MODELS);
+    let names: Vec<String> = models.iter().map(|g| g.name.clone()).collect();
+    // Engine residency footprint is weights + 25%; an eighth of the fleet
+    // total means ~125 of the 1000 models fit — the Zipf head stays warm,
+    // everything else churns through the LRU (verified below).
+    let footprint: u64 = models
+        .iter()
+        .map(|g| g.weight_bytes() + g.weight_bytes() / 4)
+        .sum();
+    let budget = footprint / 8;
+
+    let cache = Arc::new(PlanCache::new());
+    let router = Router::with_plan_cache(
+        &dev,
+        models.clone(),
+        RouterConfig {
+            memory_budget: budget,
+            execute_cold: true,
+            ..Default::default()
+        },
+        cache.clone(),
+    );
+    assert_eq!(router.model_names().len(), N_MODELS);
+    let reqs = generate(
+        &names,
+        &WorkloadSpec { n_requests: 2000, zipf_s: 0.9, ..Default::default() },
+    );
+
+    // Same trace, same router, different serving-thread counts; every
+    // iteration starts from an empty residency set so the cold/warm mix
+    // is identical across the ratchet pair.
+    let bench_case = |b: &mut Bench, label: &str, threads: usize| {
+        b.case_throughput(label, reqs.len(), || {
+            router.engine().evict_all();
+            let served = router.replay(&reqs, threads);
+            assert_eq!(served, reqs.len());
+        });
+    };
+    bench_case(&mut b, "serve1000-1t/zoo", 1);
+    bench_case(&mut b, "serve1000-4t/zoo", 4);
+
+    let cold = router.stats_cold();
+    let warm = router.stats_warm();
+    println!(
+        "fleet mix over all iterations: {} cold, {} warm (budget {} MiB over {} models)",
+        cold,
+        warm,
+        budget >> 20,
+        N_MODELS
+    );
+
+    // Tenanted pass: same fleet and trace, partitioned across 4 equal
+    // residency lanes, tenant-stamped requests. Shares the plan cache, so
+    // the second router skips all 1000 plan searches.
+    let tenanted = Router::with_plan_cache(
+        &dev,
+        models,
+        RouterConfig {
+            memory_budget: budget,
+            execute_cold: true,
+            tenants: TENANTS,
+            ..Default::default()
+        },
+        cache.clone(),
+    );
+    assert_eq!(cache.misses(), N_MODELS, "plans searched once");
+    let treqs = generate(
+        &names,
+        &WorkloadSpec { n_requests: 2000, zipf_s: 0.9, tenants: TENANTS, ..Default::default() },
+    );
+    b.case_throughput("serve1000-4t-tenanted/zoo", treqs.len(), || {
+        tenanted.engine().evict_all();
+        let served = tenanted.replay(&treqs, 4);
+        assert_eq!(served, treqs.len());
+    });
+
+    // Write the snapshot BEFORE the guards: a failed guard must still
+    // leave BENCH_scale.json behind for CI diagnosis.
+    b.finish_to("BENCH_scale.json");
+
+    // No-fault guards, both routers: nothing shed or degraded on the
+    // happy path, accounting conserves, and the workload really thrashes.
+    let s = router.summary();
+    assert!(s.conserves(), "request accounting must conserve: {s:?}");
+    assert_eq!(s.shed, 0, "no admission bound ⇒ nothing shed: {s:?}");
+    assert_eq!(s.degraded, 0, "no deadlines, no faults ⇒ nothing degraded: {s:?}");
+    assert_eq!(router.stats_exec_failed(), 0, "sim backend must never fail");
+    assert!(
+        cold > warm / 10,
+        "fleet workload must thrash: {cold} cold vs {warm} warm — budget too large"
+    );
+    let ts = tenanted.summary();
+    assert!(ts.conserves(), "tenanted accounting must conserve: {ts:?}");
+    assert_eq!(ts.per_tenant.len(), TENANTS);
+    let (tc, tw, tsh) = ts
+        .per_tenant
+        .iter()
+        .fold((0, 0, 0), |(c, w, sh), t| (c + t.cold, w + t.warm, sh + t.shed));
+    assert_eq!(
+        (tc, tw, tsh),
+        (ts.cold, ts.warm, ts.shed),
+        "per-tenant attribution must conserve: {:?}",
+        ts.per_tenant
+    );
+}

@@ -33,6 +33,28 @@
 //! whose next inference is cold again — the multi-tenant environment of
 //! §1–2 that motivates the whole system.
 //!
+//! # Residency and tenancy
+//!
+//! The residency manager is built for fleet scale (thousands of resident
+//! models): an intrusive `HashMap<session id, slot>` plus per-lane
+//! doubly-linked LRU lists (the [`crate::store::ArtifactStore`]'s
+//! recency trick, in memory), so the warm-path charge, `is_resident`,
+//! and `release` are all O(1) map + list operations and eviction pops
+//! the list head — oldest first, the exact order of the original
+//! scan-based implementation (pinned by the
+//! `lru_matches_vec_reference_model` property test below).
+//!
+//! Tenancy is a first-class axis on top of the same structure:
+//! [`EngineBuilder::tenant_budget`] declares a named residency *lane*
+//! with its own byte budget, and [`Engine::load_for_tenant`] /
+//! [`Engine::load_all_for`] open sessions charged against that lane.
+//! Each session lives in exactly one lane's LRU list and eviction only
+//! ever walks the charging session's own lane, so isolation holds by
+//! construction: one tenant's eviction storm can never cold-start
+//! another tenant's models while that tenant stays under its quota.
+//! Sessions loaded without a tenant share lane 0, whose budget is
+//! [`EngineBuilder::memory_budget`].
+//!
 //! Execution is a backend choice, not a code path: [`SimBackend`] runs
 //! plans on the contention-aware device simulator (default),
 //! [`BaselineBackend`] charges a vanilla engine's latencies for
@@ -49,8 +71,9 @@
 //! fine-grained and never held across expensive work:
 //!
 //! * **Residency/LRU state** lives behind one short-critical-section
-//!   `Mutex` (the charge path does a resident-list scan + bump and
-//!   nothing else under it); session ids come from an atomic counter.
+//!   `Mutex` (the charge path does an O(1) map lookup + list splice and
+//!   nothing else under it, so the critical section stays flat as the
+//!   model population grows); session ids come from an atomic counter.
 //! * **Per-session state** (the lazily computed §3.5 warm-up ladder) is
 //!   owned by the session itself in a `OnceLock`, so concurrent first
 //!   inferences of *different* models never contend.
@@ -73,6 +96,7 @@ pub use backend::{BackendCtx, BaselineBackend, ColdOutcome, ExecBackend, SimBack
 pub use backend::RealBackend;
 pub use session::{InferenceReport, Phase, Session};
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -87,20 +111,203 @@ use crate::store::{ArtifactStore, StoreStats};
 use crate::util::parallel::par_map;
 use crate::Ms;
 
-/// LRU residency state shared by an engine's sessions: `(session id,
-/// resident bytes, inferences since last cold start)`, most recently used
-/// last.
-struct Residency {
+/// Sentinel "no slot" link for the intrusive LRU lists.
+const NIL: usize = usize::MAX;
+
+/// One resident session in the intrusive LRU: identity, charged bytes,
+/// inferences since the last cold start, the owning lane, and the
+/// recency-list links within that lane.
+struct Slot {
+    id: u64,
+    bytes: u64,
+    count: usize,
+    lane: usize,
+    prev: usize,
+    next: usize,
+}
+
+/// One residency lane: a byte budget, current usage, and a doubly-linked
+/// recency list threaded through [`Residency::slots`] (`head` = least
+/// recently used, `tail` = most recently used). Lane 0 is the shared
+/// engine-wide budget; lanes 1.. are tenant sub-budgets in
+/// [`EngineBuilder::tenant_budget`] declaration order.
+struct Lane {
     budget: u64,
-    mem_used: u64,
-    resident: Vec<(u64, u64, usize)>,
+    used: u64,
+    head: usize,
+    tail: usize,
+}
+
+/// LRU residency state shared by an engine's sessions: an intrusive
+/// `HashMap` + per-lane doubly-linked lists, so charge / warm-hit /
+/// `is_resident` / `release` are O(1) and eviction pops the owning
+/// lane's head. Observable behavior (reports, memory accounting,
+/// eviction order) is bit-identical to the original front-evicting Vec
+/// — the `lru_matches_vec_reference_model` property test keeps that Vec
+/// around as the executable specification.
+struct Residency {
+    /// Slot arena; freed slots are recycled through `free`.
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// session id → slot index: the O(1) replacement for the Vec scan.
+    map: HashMap<u64, usize>,
+    lanes: Vec<Lane>,
+}
+
+impl Residency {
+    fn new(budget: u64, tenant_budgets: &[u64]) -> Residency {
+        let mut lanes = Vec::with_capacity(1 + tenant_budgets.len());
+        lanes.push(Lane { budget, used: 0, head: NIL, tail: NIL });
+        for &b in tenant_budgets {
+            lanes.push(Lane { budget: b, used: 0, head: NIL, tail: NIL });
+        }
+        Residency {
+            slots: Vec::new(),
+            free: Vec::new(),
+            map: HashMap::new(),
+            lanes,
+        }
+    }
+
+    /// Detach slot `i` from its lane's recency list.
+    fn unlink(&mut self, i: usize) {
+        let (lane, prev, next) = {
+            let s = &self.slots[i];
+            (s.lane, s.prev, s.next)
+        };
+        match prev {
+            NIL => self.lanes[lane].head = next,
+            p => self.slots[p].next = next,
+        }
+        match next {
+            NIL => self.lanes[lane].tail = prev,
+            n => self.slots[n].prev = prev,
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    /// Append slot `i` at its lane's most-recently-used end.
+    fn push_tail(&mut self, i: usize) {
+        let lane = self.slots[i].lane;
+        let tail = self.lanes[lane].tail;
+        self.slots[i].prev = tail;
+        self.slots[i].next = NIL;
+        match tail {
+            NIL => self.lanes[lane].head = i,
+            t => self.slots[t].next = i,
+        }
+        self.lanes[lane].tail = i;
+    }
+
+    /// Evict `lane`'s least-recently-used resident; false when empty.
+    fn evict_head(&mut self, lane: usize) -> bool {
+        let h = self.lanes[lane].head;
+        if h == NIL {
+            return false;
+        }
+        self.unlink(h);
+        let (id, bytes) = (self.slots[h].id, self.slots[h].bytes);
+        self.map.remove(&id);
+        self.lanes[lane].used -= bytes;
+        self.free.push(h);
+        true
+    }
+
+    /// The warm half of a charge: if `id` is resident, bump it to its
+    /// lane's MRU end and price the next warm-ladder rung. Rung
+    /// `count + 1` of the ladder; past the end the session is at steady
+    /// state (so a depth-1 ladder never re-bills its cold rung to warm
+    /// inferences).
+    fn warm_hit(&mut self, id: u64, ladder: &[Ms], warm_ms: Ms) -> Option<InferenceReport> {
+        let &i = self.map.get(&id)?;
+        self.unlink(i);
+        self.slots[i].count += 1;
+        self.push_tail(i);
+        let idx = self.slots[i].count;
+        let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
+        let phase = if latency.to_bits() == warm_ms.to_bits() {
+            Phase::Warm
+        } else {
+            Phase::Warming { n: idx }
+        };
+        Some(InferenceReport { latency_ms: latency, phase, evictions: 0 })
+    }
+
+    /// Full charge: warm when resident, otherwise evict the charging
+    /// lane's LRU residents until `bytes` fits and charge cold. A model
+    /// larger than the whole lane budget still runs, transiently
+    /// overcommitting like a real OS would.
+    fn charge(
+        &mut self,
+        id: u64,
+        bytes: u64,
+        lane: usize,
+        ladder: &[Ms],
+        warm_ms: Ms,
+    ) -> InferenceReport {
+        if let Some(report) = self.warm_hit(id, ladder, warm_ms) {
+            return report;
+        }
+        let mut evictions = 0;
+        while self.lanes[lane].used + bytes > self.lanes[lane].budget && self.evict_head(lane) {
+            evictions += 1;
+        }
+        self.lanes[lane].used += bytes;
+        let slot = Slot { id, bytes, count: 0, lane, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = slot;
+                i
+            }
+            None => {
+                self.slots.push(slot);
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(id, i);
+        self.push_tail(i);
+        // A well-formed ladder always has a cold rung; a custom backend
+        // returning an empty one degrades to warm pricing rather than
+        // panicking inside the residency manager.
+        let latency = ladder.first().copied().unwrap_or(warm_ms);
+        InferenceReport { latency_ms: latency, phase: Phase::Cold, evictions }
+    }
+
+    fn release(&mut self, id: u64) {
+        if let Some(i) = self.map.remove(&id) {
+            self.unlink(i);
+            let (lane, bytes) = (self.slots[i].lane, self.slots[i].bytes);
+            self.lanes[lane].used -= bytes;
+            self.free.push(i);
+        }
+    }
+
+    fn is_resident(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    fn mem_used(&self) -> u64 {
+        self.lanes.iter().map(|l| l.used).sum()
+    }
+
+    fn evict_all(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+        self.map.clear();
+        for l in &mut self.lanes {
+            l.used = 0;
+            l.head = NIL;
+            l.tail = NIL;
+        }
+    }
 }
 
 /// Shared engine internals. [`Engine`] and every [`Session`] hold an
 /// `Arc` of this; everything here is `Sync`, so engines and sessions can
 /// be driven from any number of threads. The one piece of cross-session
-/// mutable state — the LRU residency list — sits behind its own `Mutex`
-/// with scan-and-bump critical sections; the backend is a shared
+/// mutable state — the intrusive LRU [`Residency`] — sits behind its own
+/// `Mutex` with O(1) critical sections; the backend is a shared
 /// `Send + Sync` trait object and is never called under that lock.
 pub(crate) struct Inner {
     pub(crate) dev: DeviceProfile,
@@ -117,67 +324,31 @@ pub(crate) struct Inner {
     /// seeded search for the cold search on full plan-cache misses.
     pub(crate) fleet: Option<Arc<PlanTransfer>>,
     pub(crate) backend: Box<dyn ExecBackend>,
+    /// Declared tenant names; residency lane `k + 1` belongs to
+    /// `tenant_names[k]` (lane 0 is the shared engine-wide budget).
+    pub(crate) tenant_names: Vec<String>,
     residency: Mutex<Residency>,
     next_session: AtomicU64,
 }
 
 impl Inner {
     /// Charge one inference for session `id`: warm-ladder latency when
-    /// resident, otherwise evict-until-fit and charge cold. The whole
-    /// decision happens under the residency lock, so concurrent requests
-    /// observe a consistent LRU order (two racing requests for the same
-    /// evicted model produce exactly one cold charge).
+    /// resident, otherwise evict-until-fit within `lane` and charge cold.
+    /// The whole decision happens under the residency lock, so concurrent
+    /// requests observe a consistent LRU order (two racing requests for
+    /// the same evicted model produce exactly one cold charge).
     pub(crate) fn charge(
         &self,
         id: u64,
         bytes: u64,
+        lane: usize,
         ladder: &[Ms],
         warm_ms: Ms,
     ) -> InferenceReport {
-        let mut r = self.residency.lock().unwrap();
-        if let Some(report) = Self::warm_hit(&mut r, id, ladder, warm_ms) {
-            return report;
-        }
-        // Cold path: evict LRU sessions until this one fits (a model
-        // larger than the whole budget still runs, transiently
-        // overcommitting like a real OS would).
-        let mut evictions = 0;
-        while r.mem_used + bytes > r.budget && !r.resident.is_empty() {
-            let (_, b, _) = r.resident.remove(0);
-            r.mem_used -= b;
-            evictions += 1;
-        }
-        r.mem_used += bytes;
-        r.resident.push((id, bytes, 0));
-        // A well-formed ladder always has a cold rung; a custom backend
-        // returning an empty one degrades to warm pricing rather than
-        // panicking inside the residency manager.
-        let latency = ladder.first().copied().unwrap_or(warm_ms);
-        InferenceReport { latency_ms: latency, phase: Phase::Cold, evictions }
-    }
-
-    /// The warm half of [`Inner::charge`], shared with the opportunistic
-    /// warm fast path: if `id` is resident, bump it in LRU order and
-    /// charge the next warm-ladder rung. Rung `count + 1` of the ladder;
-    /// past the end the session is at steady state (so a depth-1 ladder
-    /// never re-bills its cold rung to warm inferences).
-    fn warm_hit(
-        r: &mut Residency,
-        id: u64,
-        ladder: &[Ms],
-        warm_ms: Ms,
-    ) -> Option<InferenceReport> {
-        let pos = r.resident.iter().position(|(i, _, _)| *i == id)?;
-        let (i, b, count) = r.resident.remove(pos);
-        let idx = count + 1;
-        let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
-        r.resident.push((i, b, count + 1));
-        let phase = if latency.to_bits() == warm_ms.to_bits() {
-            Phase::Warm
-        } else {
-            Phase::Warming { n: idx }
-        };
-        Some(InferenceReport { latency_ms: latency, phase, evictions: 0 })
+        self.residency
+            .lock()
+            .unwrap()
+            .charge(id, bytes, lane, ladder, warm_ms)
     }
 
     /// Charge a warm inference *only if* the session is resident; `None`
@@ -193,25 +364,32 @@ impl Inner {
         ladder: &[Ms],
         warm_ms: Ms,
     ) -> Option<InferenceReport> {
-        let mut r = self.residency.lock().unwrap();
-        Self::warm_hit(&mut r, id, ladder, warm_ms)
+        self.residency.lock().unwrap().warm_hit(id, ladder, warm_ms)
     }
 
     pub(crate) fn is_resident(&self, id: u64) -> bool {
-        self.residency
-            .lock()
-            .unwrap()
-            .resident
-            .iter()
-            .any(|(i, _, _)| *i == id)
+        self.residency.lock().unwrap().is_resident(id)
     }
 
     /// Drop a session's residency (called on [`Session`] drop).
     pub(crate) fn release(&self, id: u64) {
-        let mut r = self.residency.lock().unwrap();
-        if let Some(pos) = r.resident.iter().position(|(i, _, _)| *i == id) {
-            let (_, b, _) = r.resident.remove(pos);
-            r.mem_used -= b;
+        self.residency.lock().unwrap().release(id)
+    }
+
+    /// Residency lane for a tenant name: lane 0 (the shared budget) for
+    /// `None`. Panics on an undeclared tenant — a configuration error,
+    /// not a runtime condition.
+    pub(crate) fn lane_of(&self, tenant: Option<&str>) -> usize {
+        match tenant {
+            None => 0,
+            Some(t) => self
+                .tenant_names
+                .iter()
+                .position(|n| n == t)
+                .map(|k| k + 1)
+                .unwrap_or_else(|| {
+                    panic!("unknown tenant {t:?}: declare it with EngineBuilder::tenant_budget")
+                }),
         }
     }
 }
@@ -240,14 +418,35 @@ impl Engine {
     /// through the backend lazily, on first use.
     pub fn load(&self, graph: ModelGraph) -> Session {
         let (scheduled, dev) = self.plan_with_dev(&graph);
-        self.open_session(graph, scheduled, dev)
+        self.open_session(graph, scheduled, dev, 0)
+    }
+
+    /// [`Engine::load`], charging the session against `tenant`'s
+    /// residency sub-budget ([`EngineBuilder::tenant_budget`]) instead of
+    /// the shared engine-wide one. Panics on an undeclared tenant.
+    pub fn load_for_tenant(&self, graph: ModelGraph, tenant: &str) -> Session {
+        let lane = self.inner.lane_of(Some(tenant));
+        let (scheduled, dev) = self.plan_with_dev(&graph);
+        self.open_session(graph, scheduled, dev, lane)
     }
 
     /// [`Engine::load`] for a fleet of models, planning them in parallel
     /// (multi-model startup planning is embarrassingly parallel; the
     /// shared [`PlanCache`] makes repeats free).
     pub fn load_all(&self, graphs: Vec<ModelGraph>) -> Vec<Session> {
+        self.load_all_for(graphs.into_iter().map(|g| (g, None)).collect())
+    }
+
+    /// [`Engine::load_all`] with a per-model tenant assignment (`None`
+    /// charges the shared budget) — how the serving router partitions a
+    /// model fleet across tenant sub-budgets in one parallel planning
+    /// pass. Panics on an undeclared tenant.
+    pub fn load_all_for(&self, models: Vec<(ModelGraph, Option<String>)>) -> Vec<Session> {
         let inner = &self.inner;
+        let lanes: Vec<usize> = models
+            .iter()
+            .map(|(_, t)| inner.lane_of(t.as_deref()))
+            .collect();
         let sched_cfg = self.effective_sched();
         // Only planning fans out across cores here; warm-up ladders stay
         // lazy per session, so the (Sync) backend is not touched.
@@ -260,7 +459,7 @@ impl Engine {
                     &inner.calibrated_cache,
                 );
                 let sched = &sched_cfg;
-                par_map(&graphs, move |_, g| {
+                par_map(&models, move |_, (g, _)| {
                     cache.get_or_plan(dev, g, registry, sched, tag)
                 })
             } else {
@@ -272,7 +471,7 @@ impl Engine {
                 );
                 let sched = &sched_cfg;
                 let fleet = inner.fleet.as_deref();
-                par_map(&graphs, move |_, g| {
+                par_map(&models, move |_, (g, _)| {
                     let s = match fleet {
                         Some(f) => cache.get_or_plan_with(dev, g, registry, sched, tag, || {
                             f.plan(dev, g, registry, sched, tag).outcome.scheduled
@@ -282,10 +481,11 @@ impl Engine {
                     (s, dev.clone())
                 })
             };
-        graphs
+        models
             .into_iter()
             .zip(planned)
-            .map(|(g, (s, d))| self.open_session(g, s, d))
+            .zip(lanes)
+            .map(|(((g, _), (s, d)), lane)| self.open_session(g, s, d, lane))
             .collect()
     }
 
@@ -370,6 +570,7 @@ impl Engine {
         graph: ModelGraph,
         scheduled: Arc<Scheduled>,
         dev: DeviceProfile,
+        lane: usize,
     ) -> Session {
         let inner = &self.inner;
         // Resident-set size: weights + transformed layouts + workspace.
@@ -384,6 +585,7 @@ impl Engine {
             ladder: std::sync::OnceLock::new(),
             degraded: std::sync::OnceLock::new(),
             resident_bytes,
+            lane,
         }
     }
 
@@ -433,16 +635,28 @@ impl Engine {
         self.inner.backend.name()
     }
 
-    /// Bytes of the residency budget currently in use.
+    /// Bytes of the residency budget currently in use, across every lane.
     pub fn mem_used(&self) -> u64 {
-        self.inner.residency.lock().unwrap().mem_used
+        self.inner.residency.lock().unwrap().mem_used()
     }
 
-    /// Evict every resident session (their next inference is cold).
+    /// Declared tenant names, in [`EngineBuilder::tenant_budget`]
+    /// declaration order (empty for an untenanted engine).
+    pub fn tenants(&self) -> &[String] {
+        &self.inner.tenant_names
+    }
+
+    /// Bytes currently resident under `tenant`'s sub-budget, or `None`
+    /// for an undeclared tenant.
+    pub fn tenant_mem_used(&self, tenant: &str) -> Option<u64> {
+        let k = self.inner.tenant_names.iter().position(|n| n == tenant)?;
+        Some(self.inner.residency.lock().unwrap().lanes[k + 1].used)
+    }
+
+    /// Evict every resident session in every lane (their next inference
+    /// is cold).
     pub fn evict_all(&self) {
-        let mut r = self.inner.residency.lock().unwrap();
-        r.resident.clear();
-        r.mem_used = 0;
+        self.inner.residency.lock().unwrap().evict_all()
     }
 }
 
@@ -464,6 +678,7 @@ pub struct EngineBuilder {
     store_cap: Option<u64>,
     shared_store: Option<Arc<ArtifactStore>>,
     fleet_transfer: bool,
+    tenant_budgets: Vec<(String, u64)>,
 }
 
 impl Default for EngineBuilder {
@@ -482,6 +697,7 @@ impl Default for EngineBuilder {
             store_cap: None,
             shared_store: None,
             fleet_transfer: false,
+            tenant_budgets: Vec::new(),
         }
     }
 }
@@ -515,6 +731,25 @@ impl EngineBuilder {
     /// Memory budget for resident sessions, bytes (default unbounded).
     pub fn memory_budget(mut self, bytes: u64) -> EngineBuilder {
         self.memory_budget = bytes;
+        self
+    }
+
+    /// Declare a tenant with its own residency sub-budget, in bytes.
+    /// Sessions opened for the tenant ([`Engine::load_for_tenant`],
+    /// [`Engine::load_all_for`]) charge and evict only within that
+    /// tenant's LRU lane, so one tenant's eviction storm never
+    /// cold-starts another tenant's resident models — isolation by
+    /// construction, not by policy. Lanes are enforced independently of
+    /// the shared [`EngineBuilder::memory_budget`] (which governs only
+    /// untenanted sessions); declare sub-budgets that sum to the physical
+    /// budget when full partitioning is intended. Re-declaring a tenant
+    /// updates its budget.
+    pub fn tenant_budget(mut self, tenant: impl Into<String>, bytes: u64) -> EngineBuilder {
+        let tenant = tenant.into();
+        match self.tenant_budgets.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, b)) => *b = bytes,
+            None => self.tenant_budgets.push((tenant, bytes)),
+        }
         self
     }
 
@@ -653,6 +888,8 @@ impl EngineBuilder {
             (Some(s), true) => Some(Arc::new(PlanTransfer::new(s.clone()))),
             _ => None,
         };
+        let (tenant_names, tenant_budgets): (Vec<String>, Vec<u64>) =
+            self.tenant_budgets.into_iter().unzip();
         Ok(Engine {
             inner: Arc::new(Inner {
                 dev,
@@ -666,11 +903,8 @@ impl EngineBuilder {
                 store,
                 fleet,
                 backend: self.backend.unwrap_or_else(|| Box::new(SimBackend::nnv12())),
-                residency: Mutex::new(Residency {
-                    budget: self.memory_budget,
-                    mem_used: 0,
-                    resident: Vec::new(),
-                }),
+                tenant_names,
+                residency: Mutex::new(Residency::new(self.memory_budget, &tenant_budgets)),
                 next_session: AtomicU64::new(0),
             }),
         })
@@ -781,5 +1015,187 @@ mod tests {
         });
         assert_eq!(colds.load(Ordering::Relaxed), sessions.len());
         assert_eq!(engine.mem_used(), sessions.iter().map(|s| s.resident_bytes()).sum::<u64>());
+    }
+
+    /// The original Vec-based residency, retained verbatim as the
+    /// executable specification for the O(1) map+list rewrite: same
+    /// front-evicting LRU, same ladder-rung pricing, same transient
+    /// overcommit for oversized models.
+    struct VecResidency {
+        budget: u64,
+        mem_used: u64,
+        resident: Vec<(u64, u64, usize)>,
+    }
+
+    impl VecResidency {
+        fn warm_hit(&mut self, id: u64, ladder: &[Ms], warm_ms: Ms) -> Option<InferenceReport> {
+            let pos = self.resident.iter().position(|(i, _, _)| *i == id)?;
+            let (i, b, count) = self.resident.remove(pos);
+            let idx = count + 1;
+            let latency = ladder.get(idx).copied().unwrap_or(warm_ms);
+            self.resident.push((i, b, count + 1));
+            let phase = if latency.to_bits() == warm_ms.to_bits() {
+                Phase::Warm
+            } else {
+                Phase::Warming { n: idx }
+            };
+            Some(InferenceReport { latency_ms: latency, phase, evictions: 0 })
+        }
+
+        fn charge(&mut self, id: u64, bytes: u64, ladder: &[Ms], warm_ms: Ms) -> InferenceReport {
+            if let Some(report) = self.warm_hit(id, ladder, warm_ms) {
+                return report;
+            }
+            let mut evictions = 0;
+            while self.mem_used + bytes > self.budget && !self.resident.is_empty() {
+                let (_, b, _) = self.resident.remove(0);
+                self.mem_used -= b;
+                evictions += 1;
+            }
+            self.mem_used += bytes;
+            self.resident.push((id, bytes, 0));
+            let latency = ladder.first().copied().unwrap_or(warm_ms);
+            InferenceReport { latency_ms: latency, phase: Phase::Cold, evictions }
+        }
+
+        fn release(&mut self, id: u64) {
+            if let Some(pos) = self.resident.iter().position(|(i, _, _)| *i == id) {
+                let (_, b, _) = self.resident.remove(pos);
+                self.mem_used -= b;
+            }
+        }
+    }
+
+    #[test]
+    fn lru_matches_vec_reference_model() {
+        // Randomized charge / warm / release traces: every report, the
+        // memory accounting, and the full membership set must stay
+        // bit-identical to the Vec specification — this is the parity
+        // proof that lets tests/engine_facade.rs and
+        // tests/concurrent_serving.rs gate the rewrite unchanged.
+        crate::util::prop::check(0x1095_1de2, 200, |rng| {
+            let budget = rng.range(1, 64) * 1024;
+            let n = rng.index(10) as u64 + 2;
+            let bytes: Vec<u64> = (0..n).map(|_| rng.range(1, 40) * 1024).collect();
+            let ladder = [100.0, 50.0, 25.0, 10.0];
+            let warm = 10.0;
+            let mut new = Residency::new(budget, &[]);
+            let mut old = VecResidency { budget, mem_used: 0, resident: Vec::new() };
+            let steps = rng.range(1, 120);
+            for step in 0..steps {
+                let id = rng.index(n as usize) as u64;
+                match rng.index(4) {
+                    0 | 1 => {
+                        let a = new.charge(id, bytes[id as usize], 0, &ladder, warm);
+                        let b = old.charge(id, bytes[id as usize], &ladder, warm);
+                        if a != b {
+                            return Err(format!(
+                                "step {step}: charge({id}) diverged: {a:?} vs {b:?}"
+                            ));
+                        }
+                    }
+                    2 => {
+                        let a = new.warm_hit(id, &ladder, warm);
+                        let b = old.warm_hit(id, &ladder, warm);
+                        if a != b {
+                            return Err(format!(
+                                "step {step}: warm_hit({id}) diverged: {a:?} vs {b:?}"
+                            ));
+                        }
+                    }
+                    _ => {
+                        new.release(id);
+                        old.release(id);
+                    }
+                }
+                if new.mem_used() != old.mem_used {
+                    return Err(format!(
+                        "step {step}: mem_used diverged: {} vs {}",
+                        new.mem_used(),
+                        old.mem_used
+                    ));
+                }
+                for cand in 0..n {
+                    let in_new = new.is_resident(cand);
+                    let in_old = old.resident.iter().any(|(i, _, _)| *i == cand);
+                    if in_new != in_old {
+                        return Err(format!(
+                            "step {step}: membership of {cand} diverged: {in_new} vs {in_old}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tenant_lanes_isolate_eviction_storms() {
+        // Under quota, tenant B's residents must survive ANY sequence of
+        // tenant-A charges and releases — including oversized models that
+        // repeatedly wipe A's own lane.
+        crate::util::prop::check(0x7e41_a27b, 100, |rng| {
+            let quota = rng.range(8, 64) * 1024;
+            let mut r = Residency::new(u64::MAX, &[quota, quota]);
+            let ladder = [100.0, 10.0];
+            let nb = rng.index(5) + 1;
+            let b_bytes = quota / nb as u64;
+            let b_ids: Vec<u64> = (0..nb as u64).map(|i| 1000 + i).collect();
+            for &id in &b_ids {
+                let report = r.charge(id, b_bytes, 2, &ladder, 10.0);
+                if report.evictions != 0 {
+                    return Err("tenant B under quota must not self-evict".into());
+                }
+            }
+            let b_used = r.lanes[2].used;
+            let storm = rng.range(1, 200);
+            for _ in 0..storm {
+                let id = rng.index(16) as u64;
+                if rng.chance(0.7) {
+                    let bytes = rng.range(1, 4) * quota / 2;
+                    r.charge(id, bytes, 1, &ladder, 10.0);
+                } else {
+                    r.release(id);
+                }
+            }
+            for &id in &b_ids {
+                if !r.is_resident(id) {
+                    return Err(format!(
+                        "tenant A's eviction storm cold-started tenant B's session {id}"
+                    ));
+                }
+            }
+            if r.lanes[2].used != b_used {
+                return Err("tenant B's lane usage changed during tenant A's storm".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn engine_tenant_budgets_isolate() {
+        // Tenant "a" gets a 1-byte quota so every inference is an
+        // eviction storm in its own lane; tenant "b" must never notice.
+        let engine = Engine::builder()
+            .device(profiles::meizu_16t())
+            .tenant_budget("a", 1)
+            .tenant_budget("b", u64::MAX)
+            .build();
+        let a1 = engine.load_for_tenant(zoo::tiny_net(), "a");
+        let a2 = engine.load_for_tenant(zoo::micro_mobilenet(), "a");
+        let b = engine.load_for_tenant(zoo::tiny_net(), "b");
+        assert_eq!(b.infer().phase, Phase::Cold);
+        for _ in 0..4 {
+            assert_eq!(a1.infer().phase, Phase::Cold, "1-byte quota must thrash a1");
+            assert_eq!(a2.infer().phase, Phase::Cold, "1-byte quota must thrash a2");
+        }
+        assert!(b.is_resident());
+        assert_ne!(b.infer().phase, Phase::Cold);
+        assert_eq!(engine.tenant_mem_used("b"), Some(b.resident_bytes()));
+        assert_eq!(engine.tenant_mem_used("nope"), None);
+        assert_eq!(engine.tenants().len(), 2);
+        assert_eq!(engine.tenants()[0], "a");
+        assert_eq!(b.tenant(), Some("b"));
+        assert_eq!(engine.load(zoo::tiny_net()).tenant(), None);
     }
 }

@@ -1,7 +1,8 @@
 //! Per-model sessions: the explicit cold → warming → warm lifecycle.
 //!
 //! Sessions are `Send + Sync`: all shared mutable state (the engine's
-//! residency list) is behind the engine's lock, and the session's own
+//! intrusive LRU residency) is behind the engine's lock, and the
+//! session's own
 //! lazily computed warm-up ladder sits in a `OnceLock`, so one session
 //! can serve `infer()` calls from many threads at once.
 
@@ -65,6 +66,9 @@ pub struct Session {
     /// Lazy: sessions that never degrade never pay for it.
     pub(crate) degraded: OnceLock<(Arc<Scheduled>, Ms)>,
     pub(crate) resident_bytes: u64,
+    /// Residency lane this session charges: 0 for the shared engine-wide
+    /// budget, `k + 1` for the engine's `k`-th declared tenant.
+    pub(crate) lane: usize,
 }
 
 impl Session {
@@ -89,8 +93,13 @@ impl Session {
     /// warm-ladder latency, and reports the lifecycle phase.
     pub fn infer(&self) -> InferenceReport {
         let ladder = self.ladder_report();
-        self.engine
-            .charge(self.id, self.resident_bytes, &ladder.latencies, ladder.warm_ms)
+        self.engine.charge(
+            self.id,
+            self.resident_bytes,
+            self.lane,
+            &ladder.latencies,
+            ladder.warm_ms,
+        )
     }
 
     /// Warm-only fast path: charge a warm-ladder inference if the model
@@ -214,6 +223,15 @@ impl Session {
     /// due when false).
     pub fn is_resident(&self) -> bool {
         self.engine.is_resident(self.id)
+    }
+
+    /// The tenant whose residency sub-budget this session charges, or
+    /// `None` for a session on the shared engine-wide budget (see
+    /// [`crate::engine::EngineBuilder::tenant_budget`]).
+    pub fn tenant(&self) -> Option<&str> {
+        self.lane
+            .checked_sub(1)
+            .map(|k| self.engine.tenant_names[k].as_str())
     }
 }
 

@@ -619,6 +619,51 @@ pub fn branchy_tinynet() -> ModelGraph {
     b.build().unwrap()
 }
 
+/// The `i`-th model of the [`synthetic`] family: a small CNN whose
+/// depth, width, input size, and conv flavor are drawn from an `Rng`
+/// seeded by `(seed, i)` alone — model `i` is the same graph whether it
+/// was built alone or as part of any batch.
+pub fn synthetic_model(seed: u64, i: usize) -> ModelGraph {
+    let mut rng = crate::util::rng::Rng::new(
+        seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut b = GraphBuilder::new(&format!("syn-{i:04}"));
+    let hw = [16u32, 24, 32][rng.index(3)];
+    b.input(3, hw);
+    let mut ch = [8u32, 12, 16][rng.index(3)];
+    b.conv("stem", ch, 3, 1);
+    // 1–4 body stages, each widening and sometimes striding down.
+    let stages = rng.range(1, 5);
+    for s in 0..stages {
+        ch = (ch * 2).min(128);
+        let stride = if rng.chance(0.5) { 2 } else { 1 };
+        if rng.chance(0.5) {
+            b.conv(&format!("conv{s}"), ch, 3, stride);
+        } else {
+            b.dwconv(&format!("dw{s}"), 3, stride);
+            b.pwconv(&format!("pw{s}"), ch);
+        }
+        if rng.chance(0.3) {
+            b.pool(&format!("pool{s}"), 2, 2);
+        }
+    }
+    b.global_pool("gap");
+    b.fc("fc", [10u32, 100][rng.index(2)]);
+    b.softmax("prob");
+    b.build().unwrap()
+}
+
+/// A deterministic family of `n` distinct small synthetic CNNs
+/// (`syn-0000` … `syn-{n-1:04}`), for fleet-scale experiments where a
+/// thousand models must plan and serve quickly (`benches/serve_1000.rs`,
+/// `repro serve --models N`). Tiny on purpose — a few conv layers each —
+/// so the *population* is the workload, not any one model's planning
+/// cost. Reproducible model-for-model: `synthetic(seed, n)` is a prefix
+/// of `synthetic(seed, n + m)`.
+pub fn synthetic(seed: u64, n: usize) -> Vec<ModelGraph> {
+    (0..n).map(|i| synthetic_model(seed, i)).collect()
+}
+
 /// Small depthwise-separable CNN matching
 /// `python/compile/model.py::micro_mobilenet`.
 pub fn micro_mobilenet() -> ModelGraph {
@@ -707,6 +752,41 @@ mod tests {
         }
         assert!(branchy.len() > plain.len());
         assert_eq!(branchy.exits().len(), 2);
+    }
+
+    #[test]
+    fn synthetic_family_is_deterministic_and_distinct() {
+        let a = synthetic(0xFEED, 40);
+        let b = synthetic(0xFEED, 40);
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.weight_bytes(), y.weight_bytes());
+            assert_eq!(x.flops(), y.flops());
+            assert_eq!(x.len(), y.len());
+        }
+        assert_eq!(a[0].name, "syn-0000");
+        assert_eq!(a[39].name, "syn-0039");
+        // A prefix of a longer family, model for model.
+        let longer = synthetic(0xFEED, 60);
+        assert_eq!(longer[17].weight_bytes(), a[17].weight_bytes());
+        // Structurally diverse: not every model has the same footprint.
+        let mut sizes: Vec<u64> = a.iter().map(|g| g.weight_bytes()).collect();
+        sizes.sort();
+        sizes.dedup();
+        assert!(sizes.len() > 10, "only {} distinct footprints", sizes.len());
+        // Each model is valid and small.
+        for g in &a {
+            assert_eq!(g.bfs_order().len(), g.len(), "{} not reachable", g.name);
+            assert!(g.weight_bytes() > 0);
+            assert!(g.len() <= 16, "{} too deep ({})", g.name, g.len());
+        }
+        // A different seed yields a different family.
+        let c = synthetic(0xBEEF, 40);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.weight_bytes() != y.weight_bytes()),
+            "seed must matter"
+        );
     }
 
     #[test]

@@ -58,6 +58,11 @@
 //! let router = Router::new(
 //!     &profiles::meizu_16t(),
 //!     vec![zoo::tiny_net(), zoo::micro_mobilenet()],
+//!     // `RouterConfig { tenants: K, .. }` would also partition the
+//!     // fleet and the memory budget across K tenants, each with its own
+//!     // LRU residency lane (one tenant's eviction storm cannot
+//!     // cold-start another's models) and a per-tenant row in
+//!     // `summary().per_tenant`.
 //!     RouterConfig::default(),
 //! );
 //! std::thread::scope(|s| {
@@ -220,13 +225,15 @@
 //!   the runtime.
 //! * [`engine`] — **the facade**: `Engine`/`Session` lifecycle over
 //!   pluggable backends and the persistent artifact store; fully
-//!   thread-safe (fine-grained residency locking, `Send + Sync`
-//!   backends).
+//!   thread-safe (O(1) intrusive-LRU residency with optional per-tenant
+//!   quota lanes, `Send + Sync` backends).
 //! * [`serving`] — multi-tenant serving front over the engine: sharded
 //!   concurrent request router (`request()` is `&self`) with
-//!   deadline-aware degradation, bounded admission, retries and a
-//!   per-model circuit breaker; open-loop Poisson workload generator
-//!   (cold inferences are induced by eviction).
+//!   deadline-aware degradation, bounded admission, retries, a
+//!   per-model circuit breaker, per-shard latency recorders, and
+//!   per-tenant budget partitioning + outcome attribution; open-loop
+//!   Poisson workload generator (cold inferences are induced by
+//!   eviction).
 //! * [`warm`] — §3.5 kernel switching for subsequent warm inference (the
 //!   primitive behind session warm-up ladders).
 //! * [`metrics`] — timing, summaries, and the energy model.

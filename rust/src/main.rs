@@ -18,6 +18,7 @@
 //!   repro report fig8
 //!   repro cold --artifacts artifacts/tinynet --workers 2 --cache
 //!   repro serve --device meizu16t --requests 200 --budget-mb 48 --threads 4 --execute
+//!   repro serve --models 1000 --tenants 4 --requests 5000 --budget-mb 16
 //!   repro fleet --models squeezenet,mobilenetv2 --store plans/ --report out/
 
 use anyhow::{anyhow, bail, Result};
@@ -78,7 +79,10 @@ fn print_help() {
            kernels   --k K --s S --in C --out C             list conv kernel candidates\n\
            serve     --device D --requests N --budget-mb B [--threads T] [--execute]\n\
                      [--deadline-ms D] [--admission N] [--queue N] [--offload] [--faults SEED]\n\
-                     multi-tenant serving sim (--offload adds a multi-exit model + remote tail offload)\n\
+                     [--models N] [--tenants K]\n\
+                     multi-tenant serving sim (--offload adds a multi-exit model + remote tail\n\
+                     offload; --models N swaps in the synthetic N-model fleet; --tenants K\n\
+                     partitions budget + models across K tenants and prints per-tenant outcomes)\n\
            fleet     [--models A,B,..] [--devices D,E,.. | all] [--no-pipeline]\n\
                      [--store DIR] [--report DIR]   zoo x fleet planning with cross-device transfer\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
@@ -251,6 +255,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `offloaded` instead of degrading.
     let queue = args.get_usize("queue", 0).map_err(|e| anyhow!(e))?;
     let offload = args.has("offload");
+    // ISSUE 9 knobs: `--models N` serves the deterministic synthetic
+    // fleet `syn-0000..` instead of the fixed 4-model zoo (the
+    // thousand-model regime the O(1) residency/metrics paths exist for);
+    // `--tenants K` partitions the fleet round-robin across K tenants,
+    // each with an equal share of the budget as its own residency lane,
+    // and prints the per-tenant outcome table.
+    let n_models = args.get_usize("models", 0).map_err(|e| anyhow!(e))?;
+    let tenants = args.get_usize("tenants", 0).map_err(|e| anyhow!(e))?;
     let faults = match args.get("faults") {
         Some(seed) => {
             let seed: u64 = seed
@@ -260,14 +272,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let mut models: Vec<nnv12::graph::ModelGraph> =
+    let mut models: Vec<nnv12::graph::ModelGraph> = if n_models > 0 {
+        zoo::synthetic(0xFEED, n_models)
+    } else {
         ["squeezenet", "shufflenetv2", "mobilenetv2", "googlenet"]
             .iter()
             .map(|m| zoo::by_name(m).unwrap())
-            .collect();
+            .collect()
+    };
     if offload {
         models.push(zoo::branchy_mobilenet());
     }
+    // Construction order, not sorted: the workload's Zipf popularity and
+    // tenant stamps follow this order, matching the router's round-robin
+    // model → tenant ownership.
+    let names: Vec<String> = models.iter().map(|g| g.name.clone()).collect();
     // The serving front is itself a thin layer over Engine/Session — it
     // adds the sharded request surface, the failure policy, and the
     // per-model accounting used here. `--threads N` replays the trace
@@ -285,15 +304,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_depth: (queue > 0).then_some(queue),
             offload: offload.then(nnv12::exits::OffloadPolicy::default),
             faults,
+            tenants,
             ..Default::default()
         },
     );
-    let names = router.model_names();
     let reqs = generate(
         &names,
         &WorkloadSpec {
             n_requests: n,
             deadline_ms: (deadline > 0.0).then_some(deadline),
+            tenants,
             ..Default::default()
         },
     );
@@ -318,6 +338,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dev.name
     );
     assert!(s.conserves(), "request accounting must conserve: {s:?}");
+    if tenants > 0 {
+        // Every model is tenant-owned and every request tenant-stamped,
+        // so the per-tenant columns must sum exactly to the globals.
+        let (tc, tw, ts): (usize, usize, usize) = s.per_tenant.iter().fold(
+            (0, 0, 0),
+            |(c, w, sh), t| (c + t.cold, w + t.warm, sh + t.shed),
+        );
+        assert_eq!(
+            (tc, tw, ts),
+            (s.cold, s.warm, s.shed),
+            "per-tenant attribution must conserve: {:?}",
+            s.per_tenant
+        );
+        println!("  per-tenant (quota {} MB each):", budget_mb / tenants as u64);
+        println!("    {:<12} {:>6} {:>6} {:>6} {:>10}", "tenant", "cold", "warm", "shed", "resident");
+        for t in &s.per_tenant {
+            let used = router
+                .engine()
+                .tenant_mem_used(&t.tenant)
+                .unwrap_or(0);
+            println!(
+                "    {:<12} {:>6} {:>6} {:>6} {:>10}",
+                t.tenant,
+                t.cold,
+                t.warm,
+                t.shed,
+                nnv12::util::table::fmt_bytes(used)
+            );
+        }
+    }
     if s.queued > 0 {
         println!("  queue: {} request(s) waited for a cold slot instead of shedding", s.queued);
     }

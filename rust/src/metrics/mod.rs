@@ -1,5 +1,6 @@
 //! Metrics: wall-clock timers, latency recorders, and the energy model.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::device::DeviceProfile;
@@ -22,9 +23,20 @@ impl Timer {
 }
 
 /// Accumulates latency observations per label (request classes, phases).
+///
+/// Lookups are O(1): a `HashMap` index maps each label to its slot in the
+/// insertion-ordered `series` vec, so recording stays flat as the label
+/// population grows (a thousand-model serving fleet carries several
+/// thousand per-model series). Composite per-scope labels
+/// (`"{scope}:{label}"`) go through [`Recorder::record_scoped`], which is
+/// allocation-free once a pair has been seen — the steady-state hot path.
 #[derive(Debug, Default)]
 pub struct Recorder {
     series: Vec<(String, Vec<f64>)>,
+    index: HashMap<String, usize>,
+    /// scope -> label -> index into `series`, so the composite key never
+    /// needs to be materialized to find an existing series.
+    scoped: HashMap<String, HashMap<String, usize>>,
 }
 
 impl Recorder {
@@ -33,21 +45,52 @@ impl Recorder {
     }
 
     pub fn record(&mut self, label: &str, value_ms: f64) {
-        match self.series.iter_mut().find(|(l, _)| l == label) {
-            Some((_, v)) => v.push(value_ms),
-            None => self.series.push((label.to_string(), vec![value_ms])),
+        match self.index.get(label) {
+            Some(&i) => self.series[i].1.push(value_ms),
+            None => {
+                self.index.insert(label.to_string(), self.series.len());
+                self.series.push((label.to_string(), vec![value_ms]));
+            }
         }
     }
 
+    /// Record under the composite label `"{scope}:{label}"`, equivalent to
+    /// `record(&format!("{scope}:{label}"), v)` but without formatting the
+    /// key when the pair has been seen before. Only the first observation
+    /// of a (scope, label) pair allocates.
+    pub fn record_scoped(&mut self, scope: &str, label: &str, value_ms: f64) {
+        if let Some(&i) = self.scoped.get(scope).and_then(|m| m.get(label)) {
+            self.series[i].1.push(value_ms);
+            return;
+        }
+        let key = format!("{scope}:{label}");
+        let i = match self.index.get(&key) {
+            Some(&i) => {
+                self.series[i].1.push(value_ms);
+                i
+            }
+            None => {
+                let i = self.series.len();
+                self.index.insert(key.clone(), i);
+                self.series.push((key, vec![value_ms]));
+                i
+            }
+        };
+        self.scoped
+            .entry(scope.to_string())
+            .or_default()
+            .insert(label.to_string(), i);
+    }
+
+    /// Labels in first-observation order.
     pub fn labels(&self) -> Vec<&str> {
         self.series.iter().map(|(l, _)| l.as_str()).collect()
     }
 
     pub fn values(&self, label: &str) -> &[f64] {
-        self.series
-            .iter()
-            .find(|(l, _)| l == label)
-            .map(|(_, v)| v.as_slice())
+        self.index
+            .get(label)
+            .map(|&i| self.series[i].1.as_slice())
             .unwrap_or(&[])
     }
 
@@ -94,6 +137,26 @@ mod tests {
         assert_eq!(r.summary("cold").n, 2);
         assert!((r.summary("cold").mean - 15.0).abs() < 1e-12);
         assert_eq!(r.values("missing").len(), 0);
+    }
+
+    #[test]
+    fn scoped_records_match_formatted_labels() {
+        let mut r = Recorder::new();
+        r.record_scoped("squeezenet", "cold", 10.0);
+        r.record_scoped("squeezenet", "cold", 12.0);
+        r.record_scoped("squeezenet", "warm", 1.0);
+        r.record_scoped("alexnet", "cold", 30.0);
+        assert_eq!(r.values("squeezenet:cold"), &[10.0, 12.0]);
+        assert_eq!(r.values("squeezenet:warm"), &[1.0]);
+        assert_eq!(r.values("alexnet:cold"), &[30.0]);
+        // A plain record under the composite key lands in the same series.
+        r.record("squeezenet:cold", 14.0);
+        r.record_scoped("squeezenet", "cold", 16.0);
+        assert_eq!(r.values("squeezenet:cold"), &[10.0, 12.0, 14.0, 16.0]);
+        assert_eq!(
+            r.labels(),
+            vec!["squeezenet:cold", "squeezenet:warm", "alexnet:cold"]
+        );
     }
 
     #[test]

@@ -13,7 +13,23 @@
 //! for a vanilla engine), and resident models serve down the §3.5
 //! kernel-switching warm-up ladder. [`workload`] generates the
 //! Zipf-skewed, open-loop Poisson request streams the serving
-//! experiments replay, with optional per-request deadlines.
+//! experiments replay, with optional per-request deadlines and tenant
+//! stamps.
+//!
+//! # Tenancy
+//!
+//! "Multi-tenant" is structural, not just a label: with
+//! [`RouterConfig::tenants`]` = K`, the model fleet is partitioned
+//! round-robin across tenants `tenant-0 … tenant-{K-1}`, each holding an
+//! equal share of the residency budget as its own LRU lane in the engine
+//! ([`crate::engine::EngineBuilder::tenant_budget`]). Quota enforcement
+//! happens at eviction time inside the engine — one tenant thrashing its
+//! quota can never cold-start another tenant's resident models — while
+//! the router adds per-tenant *attribution*: every request lands in a
+//! [`TenantStats`] row of [`RouterStats::per_tenant`] (explicit
+//! [`Request::tenant`] first, else the serving model's owner), so a
+//! fleet operator can read per-tenant cold/warm/shed columns off one
+//! summary. `repro serve --models N --tenants K` prints that table.
 //!
 //! # The failure model: offload → degrade → queue → shed → fail
 //!
@@ -62,13 +78,19 @@
 //! sharded map, [`Router::request`] takes `&self`, [`Router::replay`]
 //! fans a trace across N serving threads, and
 //! [`Router::replay_open_loop`] fires requests at their trace arrival
-//! times to measure sojourn percentiles under load. Chaos coverage lives
-//! in `tests/chaos_serving.rs`, driven by [`crate::faults::FaultPlan`];
-//! the happy path is benchmarked by `benches/serving_throughput.rs` and
-//! ratcheted in CI (4-thread throughput must beat 1-thread in the same
-//! run, with zero shed/degraded on the fault-free trace). See
-//! [`router`]'s module docs for the locking design and the full
-//! taxonomy.
+//! times to measure sojourn percentiles under load. The hot path is
+//! O(1) end to end at fleet scale: session lookup is a sharded hash map,
+//! the engine's residency charge is a hash lookup plus an intrusive-list
+//! splice, and latency recording hits a per-shard
+//! [`crate::metrics::Recorder`] with indexed labels (merged on read) —
+//! no linear scans over the model population anywhere. Chaos coverage
+//! lives in `tests/chaos_serving.rs`, driven by
+//! [`crate::faults::FaultPlan`]; the happy path is benchmarked by
+//! `benches/serving_throughput.rs` and the thousand-model fleet by
+//! `benches/serve_1000.rs`, both ratcheted in CI (4-thread throughput
+//! must beat 1-thread in the same run, with zero shed on the fault-free
+//! traces). See [`router`]'s module docs for the locking design and the
+//! full taxonomy.
 
 pub mod router;
 pub mod workload;
@@ -79,6 +101,6 @@ pub mod workload;
 pub use crate::exits::OffloadPolicy;
 pub use router::{
     BreakerPolicy, Outcome, RetryPolicy, Router, RouterConfig, RouterStats, ServeClass,
-    ServeEngine, Served,
+    ServeEngine, Served, TenantStats,
 };
 pub use workload::{generate, Request, WorkloadSpec};

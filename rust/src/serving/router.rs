@@ -74,11 +74,22 @@
 //!   because the map is mutable at runtime ([`Router::register`] /
 //!   [`Router::remove`] add and retire models while requests are in
 //!   flight), and the admission budget is tracked per shard.
-//! * Request counters are atomics; the latency [`Recorder`] sits behind
-//!   its own small `Mutex` (label scan + push — never held across
-//!   inference work, and never exposed as a guard:
-//!   [`Router::latency_summary`] and [`Router::recorded`] hand out
-//!   snapshots). Breaker state is a tiny per-model `Mutex`.
+//! * Request counters are atomics; latency observations go to
+//!   **per-shard [`Recorder`]s** (one small `Mutex` each, keyed by the
+//!   same model-name hash as the entry map, merged on read), so
+//!   recording scales with the shard count instead of serializing every
+//!   request on one global recorder lock — and the per-model composite
+//!   label is matched allocation-free on the hot path
+//!   ([`Recorder::record_scoped`]). The locks are never held across
+//!   inference work and never exposed as guards:
+//!   [`Router::latency_summary`] and [`Router::recorded`] merge the
+//!   shards into snapshots. Breaker state is a tiny per-model `Mutex`.
+//! * Per-tenant outcome counters ([`RouterStats::per_tenant`]) are
+//!   atomics indexed by tenant slot; with [`RouterConfig::tenants`] the
+//!   model fleet is partitioned round-robin across `tenant-{k}` engine
+//!   lanes ([`crate::engine::EngineBuilder::tenant_budget`]), whose
+//!   per-lane LRU lists make tenant isolation structural: one tenant's
+//!   eviction storm cannot cold-start another tenant's resident models.
 //! * The cold/warm decision is race-free: the warm fast path
 //!   ([`crate::engine::Session::infer_warm`]) only *charges* an
 //!   already-resident model, and the residency commit after the policy
@@ -210,6 +221,15 @@ pub struct RouterConfig {
     /// injected separately via
     /// [`crate::store::ArtifactStore::inject_faults`] on a shared store.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Number of tenants to partition the fleet across (0 = untenanted,
+    /// the default — one shared residency budget, exactly the historical
+    /// behavior). With `K > 0`, the router declares tenants
+    /// `tenant-0 … tenant-{K-1}`, each with an equal share
+    /// (`memory_budget / K`) of the residency budget as its own LRU lane
+    /// ([`crate::engine::EngineBuilder::tenant_budget`]), and assigns
+    /// model `i` (in construction order) to `tenant-{i % K}`. Models
+    /// added later via [`Router::register`] stay on the shared lane.
+    pub tenants: usize,
 }
 
 impl Default for RouterConfig {
@@ -225,6 +245,7 @@ impl Default for RouterConfig {
             retry: RetryPolicy::default(),
             breaker: BreakerPolicy::default(),
             faults: None,
+            tenants: 0,
         }
     }
 }
@@ -305,9 +326,20 @@ impl Outcome {
     }
 }
 
+/// Per-tenant slice of [`RouterStats::per_tenant`]: the outcomes that
+/// residency and admission decide — the ones tenant quotas exist to
+/// isolate. Degraded/offloaded/failed outcomes stay global-only.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub cold: usize,
+    pub warm: usize,
+    pub shed: usize,
+}
+
 /// Snapshot of the router's full failure-taxonomy counter set
 /// ([`Router::summary`]). All counters are monotonic.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RouterStats {
     /// Requests issued against known models.
     pub issued: usize,
@@ -341,6 +373,13 @@ pub struct RouterStats {
     pub breaker_opens: usize,
     /// Half-open probes admitted.
     pub breaker_probes: usize,
+    /// Per-tenant cold/warm/shed attribution, in tenant declaration
+    /// order; empty for an untenanted router. A request is attributed to
+    /// its explicit [`Request::tenant`] when it names a declared tenant,
+    /// else to the serving model's owning tenant (if any). When every
+    /// model is tenant-owned, the per-tenant columns sum to the global
+    /// `cold`/`warm`/`shed` counters.
+    pub per_tenant: Vec<TenantStats>,
 }
 
 impl RouterStats {
@@ -372,6 +411,15 @@ struct Counters {
     retries: AtomicUsize,
     breaker_opens: AtomicUsize,
     breaker_probes: AtomicUsize,
+}
+
+/// Per-tenant outcome counters (one slot per declared tenant; see
+/// [`TenantStats`] for what is and is not attributed).
+#[derive(Default)]
+struct TenantCounters {
+    cold: AtomicUsize,
+    warm: AtomicUsize,
+    shed: AtomicUsize,
 }
 
 /// Circuit-breaker state machine: Closed → Open{countdown} →
@@ -512,8 +560,15 @@ pub struct Router {
     /// Requests waiting for an admission slot, per shard (the bounded
     /// queue gauge; only moves when `queue_depth` is set).
     queue_waiting: Vec<AtomicUsize>,
-    recorder: Mutex<Recorder>,
+    /// Latency recorders, one per shard (indexed by [`Router::shard_of`]
+    /// of the request's model), merged on read by [`Router::recorded`].
+    recorders: Vec<Mutex<Recorder>>,
     counters: Counters,
+    /// Declared tenants (engine order: slot `k` ⇔ engine lane `k + 1`).
+    tenants: Vec<String>,
+    /// Tenant name → slot in `tenants`/`tenant_counts`.
+    tenant_index: HashMap<String, usize>,
+    tenant_counts: Vec<TenantCounters>,
     execute_cold: bool,
     admission: Option<usize>,
     queue_depth: Option<usize>,
@@ -573,21 +628,38 @@ impl Router {
                 Box::new(BaselineBackend::ncnn().with_faults(f.clone()))
             }
         };
-        Engine::builder()
+        let mut builder = Engine::builder()
             .device(dev.clone())
             .memory_budget(cfg.memory_budget)
             .warmup_depth(cfg.warmup_depth)
-            .backend_box(backend)
+            .backend_box(backend);
+        // Equal residency shares: each tenant gets its own LRU lane, so
+        // one tenant's eviction storm cannot evict another's models.
+        let share = (cfg.memory_budget / cfg.tenants.max(1) as u64).max(1);
+        for k in 0..cfg.tenants {
+            builder = builder.tenant_budget(format!("tenant-{k}"), share);
+        }
+        builder
     }
 
     fn finish(engine: Engine, models: Vec<ModelGraph>, cfg: &RouterConfig) -> Router {
+        let tenants: Vec<String> = engine.tenants().to_vec();
+        let tenant_index: HashMap<String, usize> = tenants
+            .iter()
+            .enumerate()
+            .map(|(k, t)| (t.clone(), k))
+            .collect();
+        let tenant_counts = tenants.iter().map(|_| TenantCounters::default()).collect();
         let router = Router {
             engine,
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             cold_inflight: (0..SHARDS).map(|_| AtomicUsize::new(0)).collect(),
             queue_waiting: (0..SHARDS).map(|_| AtomicUsize::new(0)).collect(),
-            recorder: Mutex::new(Recorder::new()),
+            recorders: (0..SHARDS).map(|_| Mutex::new(Recorder::new())).collect(),
             counters: Counters::default(),
+            tenants,
+            tenant_index,
+            tenant_counts,
             execute_cold: cfg.execute_cold,
             admission: cfg.admission,
             queue_depth: cfg.queue_depth,
@@ -596,7 +668,18 @@ impl Router {
             breaker_policy: cfg.breaker,
             faults: cfg.faults.clone(),
         };
-        for s in router.engine.load_all(models) {
+        // Round-robin model → tenant ownership, matching the workload
+        // generator's stamping ([`crate::serving::WorkloadSpec::tenants`]).
+        let k = cfg.tenants;
+        let assigned: Vec<(ModelGraph, Option<String>)> = models
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let t = (k > 0).then(|| format!("tenant-{}", i % k));
+                (g, t)
+            })
+            .collect();
+        for s in router.engine.load_all_for(assigned) {
             router.insert(s);
         }
         router
@@ -669,16 +752,37 @@ impl Router {
     /// `Arc` clone; everything else runs outside it. No panic escapes:
     /// backend panics are caught, counted, and reported as failures.
     pub fn request_with(&self, model: &str, deadline_ms: Option<Ms>) -> Option<Outcome> {
+        self.request_for(model, deadline_ms, None)
+    }
+
+    /// [`Router::request_with`], attributing the outcome to a tenant's
+    /// [`TenantStats`] counters: the named `tenant` when it is one the
+    /// router declared ([`RouterConfig::tenants`]), else the serving
+    /// model's owning tenant, else nobody. Attribution is bookkeeping
+    /// only — quota enforcement lives in the engine's per-lane residency,
+    /// keyed by the model's *owner*, regardless of who asked.
+    pub fn request_for(
+        &self,
+        model: &str,
+        deadline_ms: Option<Ms>,
+        tenant: Option<&str>,
+    ) -> Option<Outcome> {
         let entry = {
             let shard = self.shard_of(model);
             self.shards[shard].lock().unwrap().get(model).cloned()?
         };
+        let tslot = tenant
+            .and_then(|t| self.tenant_index.get(t).copied())
+            .or_else(|| entry.session.lane.checked_sub(1));
         self.counters.issued.fetch_add(1, Ordering::Relaxed);
 
         // Warm fast path: a resident model serves its ladder rung with no
         // gating at all (warm service cannot fail and must stay cheap).
         if let Some(r) = entry.session.infer_warm() {
             self.counters.warm.fetch_add(1, Ordering::Relaxed);
+            if let Some(k) = tslot {
+                self.tenant_counts[k].warm.fetch_add(1, Ordering::Relaxed);
+            }
             self.record(model, "warm", r.latency_ms);
             return Some(Outcome::Served(Served {
                 latency_ms: r.latency_ms,
@@ -728,6 +832,9 @@ impl Router {
                     entry.breaker.probe_aborted();
                 }
                 self.counters.shed.fetch_add(1, Ordering::Relaxed);
+                if let Some(k) = tslot {
+                    self.tenant_counts[k].shed.fetch_add(1, Ordering::Relaxed);
+                }
                 return Some(Outcome::Shed);
             }
         }
@@ -810,6 +917,9 @@ impl Router {
         if r.phase == Phase::Cold {
             let latency = exec_latency.unwrap_or(r.latency_ms) + penalty_ms;
             self.counters.cold.fetch_add(1, Ordering::Relaxed);
+            if let Some(k) = tslot {
+                self.tenant_counts[k].cold.fetch_add(1, Ordering::Relaxed);
+            }
             self.record(model, "cold", latency);
             Some(Outcome::Served(Served {
                 latency_ms: latency,
@@ -819,6 +929,9 @@ impl Router {
             }))
         } else {
             self.counters.warm.fetch_add(1, Ordering::Relaxed);
+            if let Some(k) = tslot {
+                self.tenant_counts[k].warm.fetch_add(1, Ordering::Relaxed);
+            }
             self.record(model, "warm", r.latency_ms);
             Some(Outcome::Served(Served {
                 latency_ms: r.latency_ms,
@@ -924,13 +1037,15 @@ impl Router {
     }
 
     fn record(&self, model: &str, label: &str, latency: Ms) {
-        // The per-model label is formatted before taking the recorder
-        // lock: the critical section is two label-scan + push appends,
-        // never an allocation.
-        let model_label = format!("{model}:{label}");
-        let mut rec = self.recorder.lock().unwrap();
+        // One recorder per shard, keyed like the entry map: requests for
+        // models on different shards never contend on a recorder lock.
+        // The critical section is two O(1) index lookups + pushes;
+        // `record_scoped` keeps the per-model composite label
+        // allocation-free after a (model, label) pair's first
+        // observation.
+        let mut rec = self.recorders[self.shard_of(model)].lock().unwrap();
         rec.record(label, latency);
-        rec.record(&model_label, latency);
+        rec.record_scoped(model, label, latency);
     }
 
     /// Replay a request trace across `threads` serving threads (request
@@ -944,7 +1059,10 @@ impl Router {
         if threads <= 1 {
             return reqs
                 .iter()
-                .filter(|r| self.request_with(&r.model, r.deadline_ms).is_some())
+                .filter(|r| {
+                    self.request_for(&r.model, r.deadline_ms, r.tenant.as_deref())
+                        .is_some()
+                })
                 .count();
         }
         let served = AtomicUsize::new(0);
@@ -956,7 +1074,10 @@ impl Router {
                         .iter()
                         .skip(t)
                         .step_by(threads)
-                        .filter(|r| self.request_with(&r.model, r.deadline_ms).is_some())
+                        .filter(|r| {
+                            self.request_for(&r.model, r.deadline_ms, r.tenant.as_deref())
+                                .is_some()
+                        })
                         .count();
                     served.fetch_add(n, Ordering::Relaxed);
                 });
@@ -994,10 +1115,16 @@ impl Router {
                         }
                         std::thread::sleep(due - elapsed);
                     }
-                    if self.request_with(&req.model, req.deadline_ms).is_some() {
+                    if self
+                        .request_for(&req.model, req.deadline_ms, req.tenant.as_deref())
+                        .is_some()
+                    {
                         let sojourn =
                             start.elapsed().saturating_sub(due).as_secs_f64() * 1e3;
-                        self.recorder.lock().unwrap().record("sojourn", sojourn);
+                        self.recorders[self.shard_of(&req.model)]
+                            .lock()
+                            .unwrap()
+                            .record("sojourn", sojourn);
                         served.fetch_add(1, Ordering::Relaxed);
                     }
                 });
@@ -1029,6 +1156,17 @@ impl Router {
             retries: load(&c.retries),
             breaker_opens: load(&c.breaker_opens),
             breaker_probes: load(&c.breaker_probes),
+            per_tenant: self
+                .tenants
+                .iter()
+                .zip(&self.tenant_counts)
+                .map(|(t, c)| TenantStats {
+                    tenant: t.clone(),
+                    cold: load(&c.cold),
+                    warm: load(&c.warm),
+                    shed: load(&c.shed),
+                })
+                .collect(),
         }
     }
 
@@ -1053,21 +1191,28 @@ impl Router {
 
     /// Latency summary for a recorder label (`"cold"`, `"warm"`,
     /// `"degraded"`, `"sojourn"`, or a per-model
-    /// `"model:cold"`/`"model:warm"`/`"model:degraded"` key). Snapshot
-    /// API on purpose: the recorder lock is taken and released inside
-    /// the call, so callers can never hold it across another router call
-    /// (a guard held while calling [`Router::request`] on the same
-    /// thread would self-deadlock on the non-reentrant lock).
+    /// `"model:cold"`/`"model:warm"`/`"model:degraded"` key), merged
+    /// across the per-shard recorders. Snapshot API on purpose: each
+    /// recorder lock is taken and released inside the call, so callers
+    /// can never hold one across another router call (a guard held while
+    /// calling [`Router::request`] on the same thread would
+    /// self-deadlock on the non-reentrant lock).
     pub fn latency_summary(&self, label: &str) -> crate::util::stats::Summary {
-        self.recorder.lock().unwrap().summary(label)
+        crate::util::stats::Summary::of(&self.recorded(label))
     }
 
     /// Snapshot of the raw latency observations recorded under `label`
-    /// (empty for unknown labels). Cloned out from under the recorder
-    /// lock — see [`Router::latency_summary`] for why no guard is
-    /// exposed.
+    /// (empty for unknown labels), merged across the per-shard recorders
+    /// in shard order — aggregate labels (`"cold"`, …) are therefore not
+    /// globally time-ordered; treat them as a multiset. Cloned out from
+    /// under the locks, one shard at a time — see
+    /// [`Router::latency_summary`] for why no guard is exposed.
     pub fn recorded(&self, label: &str) -> Vec<f64> {
-        self.recorder.lock().unwrap().values(label).to_vec()
+        let mut out = Vec::new();
+        for rec in &self.recorders {
+            out.extend_from_slice(rec.lock().unwrap().values(label));
+        }
+        out
     }
 
     /// The underlying engine (residency, plan cache, device).
@@ -1566,6 +1711,62 @@ mod tests {
         let s = r.summary();
         assert_eq!((s.shed, s.queued), (1, 0));
         assert!(s.conserves());
+    }
+
+    #[test]
+    fn per_model_latency_series_merge_across_shards() {
+        let r = router(1 << 30);
+        r.request("tinynet").unwrap();
+        r.request("tinynet").unwrap();
+        r.request("squeezenet").unwrap();
+        assert_eq!(r.recorded("cold").len(), 2);
+        assert_eq!(r.recorded("warm").len(), 1);
+        assert_eq!(r.recorded("tinynet:cold").len(), 1);
+        assert_eq!(r.recorded("tinynet:warm").len(), 1);
+        assert_eq!(r.recorded("squeezenet:cold").len(), 1);
+        assert_eq!(r.latency_summary("cold").n, 2);
+        // The merged aggregate is exactly the union of the per-model
+        // series, wherever each model's shard recorder lives.
+        let mut merged = r.recorded("tinynet:cold");
+        merged.extend(r.recorded("squeezenet:cold"));
+        merged.sort_by(f64::total_cmp);
+        let mut agg = r.recorded("cold");
+        agg.sort_by(f64::total_cmp);
+        assert_eq!(agg, merged);
+    }
+
+    #[test]
+    fn tenanted_router_partitions_and_counts() {
+        let dev = profiles::meizu_16t();
+        let models = vec![zoo::tiny_net(), zoo::micro_mobilenet(), zoo::squeezenet()];
+        let names: Vec<String> = models.iter().map(|g| g.name.clone()).collect();
+        let r = Router::new(
+            &dev,
+            models,
+            RouterConfig { memory_budget: 1 << 30, tenants: 2, ..Default::default() },
+        );
+        // Round-robin ownership over construction order.
+        assert_eq!(r.session(&names[0]).unwrap().tenant(), Some("tenant-0"));
+        assert_eq!(r.session(&names[1]).unwrap().tenant(), Some("tenant-1"));
+        assert_eq!(r.session(&names[2]).unwrap().tenant(), Some("tenant-0"));
+        // Requests without an explicit tenant attribute to the owner…
+        r.request(&names[0]).unwrap();
+        r.request(&names[0]).unwrap();
+        // …and an explicit requesting tenant wins over ownership.
+        r.request_for(&names[1], None, Some("tenant-0")).unwrap();
+        let s = r.summary();
+        assert!(s.conserves());
+        assert_eq!(s.per_tenant.len(), 2);
+        assert_eq!(s.per_tenant[0].tenant, "tenant-0");
+        assert_eq!(s.per_tenant[1].tenant, "tenant-1");
+        assert_eq!((s.per_tenant[0].cold, s.per_tenant[0].warm), (2, 1));
+        assert_eq!((s.per_tenant[1].cold, s.per_tenant[1].warm), (0, 0));
+        // With every model tenant-owned, per-tenant sums match globals.
+        let cold: usize = s.per_tenant.iter().map(|t| t.cold).sum();
+        let warm: usize = s.per_tenant.iter().map(|t| t.warm).sum();
+        assert_eq!((cold, warm), (s.cold, s.warm));
+        // An untenanted router reports no per-tenant rows.
+        assert!(router(1 << 30).summary().per_tenant.is_empty());
     }
 
     #[test]

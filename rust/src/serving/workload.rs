@@ -26,6 +26,11 @@ pub struct Request {
     /// Latency budget for this request, if any: the router degrades a
     /// cold start that cannot meet it. `None` = no deadline.
     pub deadline_ms: Option<Ms>,
+    /// Requesting tenant, if any: the router attributes the outcome to
+    /// this tenant's per-tenant counters ([`crate::serving::TenantStats`]).
+    /// `None` attributes to the serving model's owning tenant, if it has
+    /// one.
+    pub tenant: Option<String>,
 }
 
 /// Workload parameters.
@@ -40,6 +45,12 @@ pub struct WorkloadSpec {
     /// Deadline stamped on every generated request (`None` = no
     /// deadlines, the default).
     pub deadline_ms: Option<Ms>,
+    /// Number of tenants to stamp requests with (0 = untenanted, the
+    /// default). Model index `i` requests as `tenant-{i % tenants}` —
+    /// the same round-robin assignment
+    /// [`crate::serving::RouterConfig::tenants`] uses to partition the
+    /// fleet, so generated traffic matches model ownership.
+    pub tenants: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -50,6 +61,7 @@ impl Default for WorkloadSpec {
             n_requests: 200,
             seed: 42,
             deadline_ms: None,
+            tenants: 0,
         }
     }
 }
@@ -80,6 +92,7 @@ pub fn generate(models: &[String], spec: &WorkloadSpec) -> Vec<Request> {
             at_ms: t,
             model: models[idx].clone(),
             deadline_ms: spec.deadline_ms,
+            tenant: (spec.tenants > 0).then(|| format!("tenant-{}", idx % spec.tenants)),
         });
     }
     out
@@ -123,6 +136,23 @@ mod tests {
         assert!(generate(&names(), &WorkloadSpec::default())
             .iter()
             .all(|r| r.deadline_ms.is_none()));
+    }
+
+    #[test]
+    fn tenants_stamp_by_model_index() {
+        let spec = WorkloadSpec { tenants: 2, n_requests: 500, ..Default::default() };
+        let w = generate(&names(), &spec);
+        // names() is [a, b, c, d]: even indices -> tenant-0, odd -> tenant-1.
+        for r in &w {
+            let expect = match r.model.as_str() {
+                "a" | "c" => "tenant-0",
+                _ => "tenant-1",
+            };
+            assert_eq!(r.tenant.as_deref(), Some(expect), "model {}", r.model);
+        }
+        assert!(generate(&names(), &WorkloadSpec::default())
+            .iter()
+            .all(|r| r.tenant.is_none()));
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Multi-tenant serving: structural isolation and attribution, through
+//! the public API only.
+//!
+//! The engine gives each tenant its own residency lane (an intrusive LRU
+//! chain with its own budget), so isolation is by construction: evicting
+//! in one lane never touches another lane's sessions. These tests pin
+//! that contract where users actually hold it — [`EngineBuilder::
+//! tenant_budget`] + [`Engine::load_for_tenant`] at the engine layer,
+//! `RouterConfig::tenants` at the serving layer — and check that the
+//! router's per-tenant outcome counters conserve against the globals.
+
+use nnv12::device::profiles;
+use nnv12::engine::{Engine, Phase};
+use nnv12::graph::zoo;
+use nnv12::serving::{generate, Router, RouterConfig, WorkloadSpec};
+use nnv12::util::prop;
+
+/// Residency footprint the engine charges for a model: weights + 25%
+/// activation slack (mirrors `Session::resident_bytes`).
+fn footprint(g: &nnv12::graph::ModelGraph) -> u64 {
+    g.weight_bytes() + g.weight_bytes() / 4
+}
+
+#[test]
+fn tenant_quota_isolates_eviction_storms_public_api() {
+    // Property: a victim tenant serving comfortably under its own quota
+    // must be completely unaffected by ANY storm of loads/inferences from
+    // a noisy neighbour with a too-small quota — no evictions, no lane
+    // usage drift, warm stays warm.
+    prop::check(0x7e9a_11c3, 10, |rng| {
+        let engine = Engine::builder()
+            .device(profiles::meizu_16t())
+            .tenant_budget("noisy", rng.range(1, 1024))
+            .tenant_budget("victim", u64::MAX)
+            .build();
+
+        let nv = rng.index(3) + 1;
+        let victims: Vec<_> = (0..nv)
+            .map(|i| engine.load_for_tenant(zoo::synthetic_model(0xBEEF, i), "victim"))
+            .collect();
+        for v in &victims {
+            if v.infer().phase != Phase::Cold {
+                return Err("first inference must be cold".into());
+            }
+        }
+        let used = engine.tenant_mem_used("victim");
+
+        let storm = rng.range(1, 30);
+        for i in 0..storm {
+            let s = engine.load_for_tenant(zoo::synthetic_model(0xD00D, (i % 5) as usize), "noisy");
+            s.infer();
+            if s.is_resident() {
+                return Err("noisy tenant's quota is too small to ever hold a model".into());
+            }
+        }
+
+        for v in &victims {
+            if !v.is_resident() {
+                return Err(format!(
+                    "noisy tenant's storm cold-started victim session {}",
+                    v.name()
+                ));
+            }
+            if v.infer().phase == Phase::Cold {
+                return Err("victim must still be warm after the storm".into());
+            }
+            if v.tenant() != Some("victim") {
+                return Err("session must report its owning tenant".into());
+            }
+        }
+        if engine.tenant_mem_used("victim") != used {
+            return Err("victim lane usage changed during the noisy storm".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_partitions_fleet_round_robin_and_isolates() {
+    let dev = profiles::meizu_16t();
+    // Construction order fixes ownership (model i → tenant-{i % K}).
+    // Interleave big and small models so tenant-0 owns the two big ones:
+    // its equal share is sized below either big model (every tenant-0
+    // request stays cold) while tenant-1's small models fit theirs.
+    let models: Vec<_> = ["googlenet", "squeezenet", "resnet18", "shufflenetv2"]
+        .iter()
+        .map(|m| zoo::by_name(m).unwrap())
+        .collect();
+    let fp: Vec<u64> = models.iter().map(footprint).collect();
+    let share = fp[0].min(fp[2]) - 1;
+    assert!(
+        share >= fp[1].max(fp[3]),
+        "test premise: small models must fit the share that starves the big ones ({fp:?})"
+    );
+    let router = Router::new(&dev, models, RouterConfig {
+        memory_budget: 2 * share,
+        tenants: 2,
+        ..Default::default()
+    });
+
+    for (i, name) in ["googlenet", "squeezenet", "resnet18", "shufflenetv2"]
+        .iter()
+        .enumerate()
+    {
+        let sess = router.session(name).unwrap();
+        assert_eq!(sess.tenant(), Some(format!("tenant-{}", i % 2).as_str()));
+    }
+
+    // Park a tenant-1 model, then storm tenant-0's lane.
+    assert!(router.request("squeezenet").unwrap().is_cold());
+    let used = router.engine().tenant_mem_used("tenant-1").unwrap();
+    for _ in 0..20 {
+        assert!(router.request("googlenet").unwrap().is_cold());
+        assert!(router.request("resnet18").unwrap().is_cold());
+    }
+    assert!(router.is_resident("squeezenet"), "tenant-0's storm evicted tenant-1");
+    assert_eq!(router.engine().tenant_mem_used("tenant-1"), Some(used));
+    assert!(router.request("squeezenet").unwrap().is_warm());
+
+    let s = router.summary();
+    assert!(s.conserves(), "{s:?}");
+    assert_eq!(s.per_tenant.len(), 2);
+    assert_eq!(
+        (s.per_tenant[0].cold, s.per_tenant[0].warm),
+        (40, 0),
+        "starved tenant-0 must be all-cold: {:?}",
+        s.per_tenant
+    );
+    assert_eq!((s.per_tenant[1].cold, s.per_tenant[1].warm), (1, 1));
+
+    // Explicit stamps override model ownership: a request carrying
+    // tenant-1's identity for a tenant-0 model bills tenant-1.
+    router.request_for("googlenet", None, Some("tenant-1")).unwrap();
+    let s = router.summary();
+    assert_eq!(s.per_tenant[1].cold, 2);
+    assert_eq!(s.per_tenant[0].cold, 40);
+}
+
+#[test]
+fn per_tenant_counters_conserve_over_a_stamped_trace() {
+    let dev = profiles::meizu_16t();
+    let models = zoo::synthetic(0xFEED, 12);
+    let names: Vec<String> = models.iter().map(|g| g.name.clone()).collect();
+    let budget: u64 = models.iter().map(footprint).sum::<u64>() / 3;
+    let router = Router::new(&dev, models, RouterConfig {
+        memory_budget: budget,
+        tenants: 4,
+        ..Default::default()
+    });
+
+    let reqs = generate(&names, &WorkloadSpec {
+        n_requests: 400,
+        zipf_s: 0.8,
+        tenants: 4,
+        ..Default::default()
+    });
+    assert!(reqs.iter().all(|r| r.tenant.is_some()), "every request stamped");
+    assert_eq!(router.replay(&reqs, 2), reqs.len());
+
+    let s = router.summary();
+    assert!(s.conserves(), "{s:?}");
+    assert_eq!(s.per_tenant.len(), 4);
+    for (k, t) in s.per_tenant.iter().enumerate() {
+        assert_eq!(t.tenant, format!("tenant-{k}"));
+    }
+    // Fully-stamped trace, fully-owned fleet: per-tenant rows sum exactly
+    // to the global cold/warm/shed counters.
+    let (c, w, sh) = s
+        .per_tenant
+        .iter()
+        .fold((0, 0, 0), |(c, w, sh), t| (c + t.cold, w + t.warm, sh + t.shed));
+    assert_eq!((c, w, sh), (s.cold, s.warm, s.shed), "{:?}", s.per_tenant);
+    assert!(s.cold > 12, "a third of the footprint must thrash: {s:?}");
+
+    // An untenanted router reports no per-tenant rows at all.
+    let plain = Router::new(&dev, zoo::synthetic(0xFEED, 2), RouterConfig::default());
+    plain.request(&names[0]).unwrap();
+    assert!(plain.summary().per_tenant.is_empty());
+}
