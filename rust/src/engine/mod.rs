@@ -614,10 +614,20 @@ impl Engine {
     }
 
     /// Counter snapshot of the artifact store (hits, misses, evictions,
-    /// corrupt-rejections, bytes), or `None` for a purely in-memory
-    /// engine.
+    /// corrupt-rejections, registry-stale invalidations, bytes), or
+    /// `None` for a purely in-memory engine.
     pub fn store_stats(&self) -> Option<StoreStats> {
         self.inner.store.as_ref().map(|s| s.stats())
+    }
+
+    /// What the store's boot-time recovery pass repaired when this engine
+    /// opened it (torn intent groups discarded, orphan temp files swept).
+    /// `None` for in-memory engines and for stores shared via
+    /// [`EngineBuilder::artifact_store_shared`] whose handle predates
+    /// this engine (recovery ran — or didn't — when *that* handle was
+    /// opened).
+    pub fn store_recovery(&self) -> Option<crate::store::RecoveryReport> {
+        self.inner.store.as_ref().and_then(|s| s.recovery())
     }
 
     /// The device this engine targets.

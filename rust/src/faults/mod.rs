@@ -29,6 +29,21 @@
 //! the production path pays one pointer check per site and nothing else,
 //! and with no plan armed behavior is bit-identical to an uninstrumented
 //! build (asserted by the chaos suite's no-fault parity test).
+//!
+//! # Simulated process death
+//!
+//! [`FaultKind::Crash`] simulates the process dying at an instrumented
+//! site — battery pull, OOM kill, app upgrade mid-write — *without*
+//! killing the test process: the site first leaves exactly the on-disk
+//! state a real death would (e.g. a fully written temp file that never
+//! renamed), then unwinds with a typed [`CrashToken`] payload that only
+//! [`with_crash_boundary`] catches. Everything between the site and the
+//! boundary is abandoned mid-flight, like a real crash; in particular no
+//! cleanup code between them may repair the on-disk state (the store's
+//! write-intent journaling is designed so none does). [`CrashPlan`]
+//! enumerates deterministic crash points (site × call index) so
+//! `tests/crash_recovery.rs` can loop seed × crash-point and assert a
+//! reopened store always recovers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -45,14 +60,19 @@ pub enum FaultSite {
     /// simulated offload remote ([`crate::serving::Router`] with an
     /// [`crate::exits::OffloadPolicy`] armed).
     OffloadSend,
+    /// One file unlinked by the store's LRU size-cap evictor — drawn
+    /// *after* the unlink but before any byte accounting is updated, the
+    /// window a mid-sweep death leaves half-applied.
+    StoreEvict,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 4] = [
+    pub const ALL: [FaultSite; 5] = [
         FaultSite::StoreRead,
         FaultSite::StoreWrite,
         FaultSite::ExecRun,
         FaultSite::OffloadSend,
+        FaultSite::StoreEvict,
     ];
 
     fn idx(self) -> usize {
@@ -61,6 +81,7 @@ impl FaultSite {
             FaultSite::StoreWrite => 1,
             FaultSite::ExecRun => 2,
             FaultSite::OffloadSend => 3,
+            FaultSite::StoreEvict => 4,
         }
     }
 }
@@ -70,7 +91,8 @@ impl FaultSite {
 pub enum FaultKind {
     /// A transient I/O error: a read reports failure without touching the
     /// bytes on disk (the store must treat it as a miss, not corruption);
-    /// a write returns an `io::Error` before anything lands.
+    /// a write returns an `io::Error` after a half-written temp file has
+    /// already landed, leaving an orphan for boot-time recovery to sweep.
     IoError,
     /// Bit rot: one payload byte of the on-disk artifact is flipped in
     /// place before the read validates it (the store must reject + heal).
@@ -87,16 +109,21 @@ pub enum FaultKind {
     /// The offload link drops the tail shipment: the router must fall
     /// back to the degraded path (never hang, never double-count).
     OffloadDrop,
+    /// Simulated process death at the site: leave exactly the on-disk
+    /// state a real death would, then unwind with a [`CrashToken`] to the
+    /// nearest [`with_crash_boundary`] (see the module docs).
+    Crash,
 }
 
 impl FaultKind {
-    pub const ALL: [FaultKind; 6] = [
+    pub const ALL: [FaultKind; 7] = [
         FaultKind::IoError,
         FaultKind::CorruptBytes,
         FaultKind::TornWrite,
         FaultKind::ExecFail,
         FaultKind::ExecPanic,
         FaultKind::OffloadDrop,
+        FaultKind::Crash,
     ];
 
     fn idx(self) -> usize {
@@ -107,6 +134,7 @@ impl FaultKind {
             FaultKind::ExecFail => 3,
             FaultKind::ExecPanic => 4,
             FaultKind::OffloadDrop => 5,
+            FaultKind::Crash => 6,
         }
     }
 }
@@ -142,8 +170,8 @@ pub struct FaultRule {
 pub struct FaultPlan {
     seed: u64,
     rules: Vec<FaultRule>,
-    calls: [AtomicUsize; 4],
-    injected: [AtomicUsize; 6],
+    calls: [AtomicUsize; 5],
+    injected: [AtomicUsize; 7],
 }
 
 impl FaultPlan {
@@ -165,8 +193,16 @@ impl FaultPlan {
     /// at its natural site. Frequent enough that a few hundred requests
     /// exercise every path, rare enough that most requests still succeed.
     pub fn chaos(seed: u64) -> FaultPlan {
-        FaultPlan::new(seed)
-            .with_rule(FaultSite::StoreRead, FaultKind::IoError, Trigger::Prob(0.10))
+        FaultPlan::new(seed).with_chaos_rules()
+    }
+
+    /// Append the standard chaos mix (see [`FaultPlan::chaos`]) to this
+    /// plan. Because the first matching rule wins, a plan that needs a
+    /// deterministic rule to take priority over the probabilistic mix —
+    /// e.g. a [`CrashPlan`]'s `Trigger::At` crash — installs that rule
+    /// first and layers the chaos on top with this combinator.
+    pub fn with_chaos_rules(self) -> FaultPlan {
+        self.with_rule(FaultSite::StoreRead, FaultKind::IoError, Trigger::Prob(0.10))
             .with_rule(FaultSite::StoreRead, FaultKind::CorruptBytes, Trigger::Prob(0.08))
             .with_rule(FaultSite::StoreWrite, FaultKind::TornWrite, Trigger::Prob(0.08))
             .with_rule(FaultSite::StoreWrite, FaultKind::IoError, Trigger::Prob(0.05))
@@ -184,6 +220,13 @@ impl FaultPlan {
     /// whether (and which) fault to inject at this call. Instrumented
     /// sites call this exactly once per operation. `None` = run clean.
     pub fn draw(&self, site: FaultSite) -> Option<FaultKind> {
+        self.draw_at(site).1
+    }
+
+    /// Like [`FaultPlan::draw`], but also returns the 0-based call index
+    /// this draw consumed — the coordinate a [`CrashToken`] reports so a
+    /// crash point can be replayed exactly.
+    pub fn draw_at(&self, site: FaultSite) -> (usize, Option<FaultKind>) {
         let n = self.calls[site.idx()].fetch_add(1, Ordering::Relaxed);
         for (ri, rule) in self.rules.iter().enumerate() {
             if rule.site != site {
@@ -203,21 +246,23 @@ impl FaultPlan {
             };
             if fire {
                 self.injected[rule.kind.idx()].fetch_add(1, Ordering::Relaxed);
-                return Some(rule.kind);
+                return (n, Some(rule.kind));
             }
         }
-        None
+        (n, None)
     }
 
     /// Convenience for execution backends: draw at [`FaultSite::ExecRun`]
     /// and enact the result — `Err` for a transient failure, `panic!` for
     /// an injected executor crash (the caller's containment is the thing
-    /// under test), `Ok(())` for a clean run or a kind that does not
-    /// apply to execution.
+    /// under test), a [`crash_now`] unwind for simulated process death,
+    /// `Ok(())` for a clean run or a kind that does not apply to
+    /// execution.
     pub fn exec_check(&self) -> Result<(), String> {
-        match self.draw(FaultSite::ExecRun) {
-            Some(FaultKind::ExecFail) => Err("injected transient exec failure".to_string()),
-            Some(FaultKind::ExecPanic) => panic!("injected executor panic"),
+        match self.draw_at(FaultSite::ExecRun) {
+            (_, Some(FaultKind::ExecFail)) => Err("injected transient exec failure".to_string()),
+            (_, Some(FaultKind::ExecPanic)) => panic!("injected executor panic"),
+            (n, Some(FaultKind::Crash)) => crash_now(FaultSite::ExecRun, n),
             _ => Ok(()),
         }
     }
@@ -251,6 +296,93 @@ pub fn mix64(mut z: u64) -> u64 {
 /// Map a 64-bit hash to a uniform f64 in `[0, 1)`.
 pub fn unit_f64(h: u64) -> f64 {
     (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The typed panic payload of a simulated process death: which
+/// instrumented site crashed, at which 0-based call index of that site's
+/// clock. Only [`with_crash_boundary`] catches it; any other
+/// `catch_unwind` in the stack must re-raise it (see
+/// [`crate::serving::Router`]'s executor containment), because swallowing
+/// it would let "dead" code keep running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashToken {
+    pub site: FaultSite,
+    pub call: usize,
+}
+
+/// Simulate the process dying right here: unwind with a [`CrashToken`]
+/// payload to the nearest [`with_crash_boundary`]. The caller must have
+/// already left the on-disk state exactly as a real death would — nothing
+/// between this call and the boundary runs except `Drop` impls, and those
+/// must not repair disk state.
+pub fn crash_now(site: FaultSite, call: usize) -> ! {
+    std::panic::panic_any(CrashToken { site, call })
+}
+
+/// Run `f` under a simulated-crash boundary: a [`crash_now`] unwind
+/// inside `f` is caught and returned as `Err(token)`, leaving whatever
+/// on-disk state the crash site abandoned for the caller to recover from
+/// (typically by reopening the store). Any other panic is re-raised
+/// unchanged — this boundary is for simulated deaths only, not a general
+/// panic guard.
+pub fn with_crash_boundary<T>(f: impl FnOnce() -> T) -> Result<T, CrashToken> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => match payload.downcast::<CrashToken>() {
+            Ok(token) => Err(*token),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
+}
+
+/// Install a process-wide panic hook that stays silent for [`CrashToken`]
+/// unwinds (they are scheduled, not bugs) and defers to the previous hook
+/// for everything else. Idempotent; call once at the top of a crash test.
+pub fn quiet_crash_panics() {
+    use std::sync::Once;
+    static QUIET: Once = Once::new();
+    QUIET.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<CrashToken>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// One deterministic crash point: die at call `call` of `site`. Arm it
+/// with [`CrashPlan::arm`] to get a [`FaultPlan`] that injects exactly
+/// that one crash (layer chaos on top with
+/// [`FaultPlan::with_chaos_rules`] if the run should also see ordinary
+/// faults), and enumerate a sweep of points with [`CrashPlan::sweep`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashPlan {
+    pub site: FaultSite,
+    pub call: usize,
+}
+
+impl CrashPlan {
+    /// A `FaultPlan` whose only rule is this crash. The crash rule is
+    /// installed first, so appending further (probabilistic) rules can
+    /// never preempt it — first matching rule wins.
+    pub fn arm(self, seed: u64) -> FaultPlan {
+        FaultPlan::new(seed).with_rule(self.site, FaultKind::Crash, Trigger::At(self.call))
+    }
+
+    /// Every crash point in `sites × [0, per_site)`: the cartesian sweep
+    /// `tests/crash_recovery.rs` loops over. Points whose call index is
+    /// never reached in a given run simply never fire — the test counts
+    /// observed crashes, not scheduled ones.
+    pub fn sweep(sites: &[FaultSite], per_site: usize) -> Vec<CrashPlan> {
+        let mut points = Vec::with_capacity(sites.len() * per_site);
+        for &site in sites {
+            for call in 0..per_site {
+                points.push(CrashPlan { site, call });
+            }
+        }
+        points
+    }
 }
 
 #[cfg(test)]
@@ -354,5 +486,68 @@ mod tests {
         assert!(p.injected(FaultKind::ExecFail) > 0);
         assert!(p.injected(FaultKind::ExecPanic) > 0);
         assert!(p.injected(FaultKind::OffloadDrop) > 0);
+    }
+
+    #[test]
+    fn draw_at_reports_the_consumed_call_index() {
+        let p = FaultPlan::new(9)
+            .with_rule(FaultSite::StoreWrite, FaultKind::Crash, Trigger::At(2));
+        assert_eq!(p.draw_at(FaultSite::StoreWrite), (0, None));
+        assert_eq!(p.draw_at(FaultSite::StoreWrite), (1, None));
+        assert_eq!(
+            p.draw_at(FaultSite::StoreWrite),
+            (2, Some(FaultKind::Crash))
+        );
+        assert_eq!(p.draw_at(FaultSite::StoreWrite), (3, None));
+        assert_eq!(p.injected(FaultKind::Crash), 1);
+    }
+
+    #[test]
+    fn crash_boundary_catches_only_crash_tokens() {
+        quiet_crash_panics();
+        let caught = with_crash_boundary(|| -> u32 { crash_now(FaultSite::StoreWrite, 5) });
+        assert_eq!(
+            caught,
+            Err(CrashToken { site: FaultSite::StoreWrite, call: 5 })
+        );
+        assert_eq!(with_crash_boundary(|| 42), Ok(42));
+        let other = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = with_crash_boundary(|| panic!("a real bug"));
+        }));
+        assert!(
+            other.is_err(),
+            "non-crash panics must pass through the boundary"
+        );
+    }
+
+    #[test]
+    fn armed_crash_plan_fires_exactly_once_even_under_chaos_overlay() {
+        quiet_crash_panics();
+        let point = CrashPlan { site: FaultSite::ExecRun, call: 3 };
+        let p = point.arm(0x5EED).with_chaos_rules();
+        let r = with_crash_boundary(|| {
+            for _ in 0..100 {
+                // Contain the chaos overlay's ordinary ExecPanic
+                // injections; only the scheduled CrashToken escapes to
+                // the boundary.
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.exec_check()))
+                {
+                    Err(payload) if payload.downcast_ref::<CrashToken>().is_some() => {
+                        std::panic::resume_unwind(payload)
+                    }
+                    _ => {}
+                }
+            }
+        });
+        assert_eq!(r, Err(CrashToken { site: FaultSite::ExecRun, call: 3 }));
+        assert_eq!(p.injected(FaultKind::Crash), 1);
+    }
+
+    #[test]
+    fn sweep_enumerates_the_cartesian_grid() {
+        let pts = CrashPlan::sweep(&[FaultSite::StoreRead, FaultSite::StoreEvict], 3);
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], CrashPlan { site: FaultSite::StoreRead, call: 0 });
+        assert_eq!(pts[5], CrashPlan { site: FaultSite::StoreEvict, call: 2 });
     }
 }

@@ -17,4 +17,4 @@ pub mod tree;
 pub mod registry;
 
 pub use family::KernelFamily;
-pub use registry::{Kernel, Registry};
+pub use registry::{registry_generation, Kernel, Registry};

@@ -92,6 +92,72 @@ impl Registry {
     }
 }
 
+/// A 64-bit fingerprint of this build's kernel registry: what every
+/// persisted artifact is implicitly a function of but no per-artifact key
+/// captures — which kernels exist, which layers they apply to, and the
+/// cost-model properties the scheduler ranks them by. The
+/// [`crate::store::ArtifactStore`] stamps it into every artifact header
+/// (format v2) so plans and transformed weights searched under an older
+/// registry are detected on first read after an engine upgrade and
+/// invalidated (or migrated) exactly once, instead of silently serving
+/// decisions a kernel change made wrong.
+///
+/// Computed by enumerating both registry variants (full and warm-default)
+/// over a fixed set of probe layers spanning every op-kind branch —
+/// standard conv (odd and pack-4 channel counts, several kernel/stride
+/// shapes), depthwise conv, fc, and a weightless op — and FNV-hashing each
+/// candidate's name, family name, applicability, and cost properties
+/// (`expand`, `transform_work`, `exec_speed`, `transformed_bytes`). Any
+/// change to the candidate set, the applicability tree, or a family
+/// constant moves the hash; pure refactors that preserve all of those keep
+/// it stable. The probe shapes are part of the format: changing them
+/// changes the generation, which is safe (one extra invalidation round)
+/// but not free.
+pub fn registry_generation() -> u64 {
+    let probe = |op: OpKind, in_ch: u32, out_ch: u32, hw: u32| Layer {
+        id: 0,
+        name: String::new(),
+        op,
+        in_ch,
+        out_ch,
+        in_hw: hw,
+        out_hw: hw,
+        deps: vec![],
+    };
+    let probes = [
+        probe(OpKind::Conv { kernel: 3, stride: 1, groups: 1 }, 64, 192, 56),
+        probe(OpKind::Conv { kernel: 3, stride: 2, groups: 1 }, 32, 64, 112),
+        probe(OpKind::Conv { kernel: 1, stride: 1, groups: 1 }, 64, 256, 28),
+        probe(OpKind::Conv { kernel: 5, stride: 1, groups: 1 }, 48, 96, 28),
+        probe(OpKind::Conv { kernel: 7, stride: 2, groups: 1 }, 3, 64, 224),
+        probe(OpKind::Conv { kernel: 3, stride: 1, groups: 64 }, 64, 64, 56),
+        probe(OpKind::Conv { kernel: 3, stride: 1, groups: 30 }, 30, 30, 56),
+        probe(OpKind::Fc, 2048, 1000, 1),
+        probe(OpKind::Fc, 2048, 10, 1),
+        probe(OpKind::Pool { kernel: 2, stride: 2, global: false }, 64, 64, 56),
+    ];
+    let mut doc = String::new();
+    for (variant, registry) in [("full", Registry::full()), ("warm", Registry::warm_default())] {
+        for (pi, layer) in probes.iter().enumerate() {
+            for k in registry.candidates(layer) {
+                use std::fmt::Write as _;
+                let _ = writeln!(
+                    doc,
+                    "{variant}|{pi}|{}|{}|{}|{:.6}|{:.6}|{:.6}|{}",
+                    k.name,
+                    k.family.name(),
+                    k.family.needs_transform(),
+                    k.family.expand(),
+                    k.family.transform_work(),
+                    k.family.exec_speed(),
+                    k.transformed_bytes(layer),
+                );
+            }
+        }
+    }
+    crate::store::fnv1a(doc.as_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +207,13 @@ mod tests {
         let ks = Registry::full().candidates(&l);
         assert_eq!(ks.len(), 1);
         assert_eq!(ks[0].family, KernelFamily::Builtin);
+    }
+
+    #[test]
+    fn registry_generation_is_stable_and_nonzero() {
+        let g = registry_generation();
+        assert_ne!(g, 0);
+        assert_eq!(g, registry_generation(), "must be a pure build constant");
     }
 
     #[test]

@@ -87,6 +87,7 @@ fn print_help() {
                      [--store DIR] [--report DIR]   zoo x fleet planning with cross-device transfer\n\
            cold      --artifacts DIR [--cache | --store DIR] [--workers N] [--mbps X] [--sequential]\n\
            store     gc --dir DIR [--days N]                drop artifacts untouched for N days\n\
+           store     fsck --dir DIR                         audit artifacts; exit 1 on corruption\n\
            devices                                          list device profiles"
     );
 }
@@ -499,7 +500,30 @@ fn cmd_store(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown store action '{other}' (expected 'gc')"),
+        "fsck" => {
+            let dir = args
+                .get("dir")
+                .or_else(|| args.get("store"))
+                .ok_or_else(|| anyhow!("store fsck: --dir DIR (or --store DIR) is required"))?;
+            if !std::path::Path::new(dir).is_dir() {
+                bail!("store fsck: {dir} is not a directory");
+            }
+            // `at` (not `open`) so the audit sees the directory exactly as
+            // the last process left it — torn intent groups and orphan
+            // temp files included — instead of the post-recovery view.
+            let store = nnv12::store::ArtifactStore::at(dir);
+            let r = store.fsck();
+            println!(
+                "store fsck ({dir}): {} scanned, {} valid, {} corrupt, {} foreign, \
+                 {} registry-stale, {} legacy-v1, {} orphan temp(s), {} torn intent group(s)",
+                r.scanned, r.valid, r.corrupt, r.foreign, r.stale, r.legacy, r.orphans, r.intents
+            );
+            if r.corrupt > 0 {
+                bail!("store fsck: {} corrupt artifact(s) in {dir}", r.corrupt);
+            }
+            Ok(())
+        }
+        other => bail!("unknown store action '{other}' (expected 'gc' or 'fsck')"),
     }
 }
 

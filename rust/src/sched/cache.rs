@@ -300,6 +300,16 @@ impl PlanCache {
                     .clone();
             }
         }
+        // A full miss can write more than one artifact: the fleet-transfer
+        // `plan_fn` publishes this device's fleet seed (on this thread)
+        // before the plan doc itself is saved below. Group both under one
+        // write intent so a crash between the puts can never leave a
+        // half-published cold start — boot-time recovery discards the
+        // whole group and the next request replans.
+        let intent = self
+            .disk
+            .as_ref()
+            .map(|d| d.store.begin_intent(&format!("plan {key:016x}")));
         let planned = Arc::new(plan_fn());
         self.misses.fetch_add(1, Ordering::Relaxed);
         if let Some(disk) = &self.disk {
@@ -308,6 +318,9 @@ impl PlanCache {
                 ("plan", planned.plan.to_json(graph)),
             ]);
             disk.save_doc(key, &doc);
+        }
+        if let Some(intent) = intent {
+            intent.commit();
         }
         self.map
             .lock()
@@ -414,6 +427,13 @@ impl CalibratedPlanCache {
                     .clone();
             }
         }
+        // Single-artifact group today, but grouped anyway: calibration is
+        // the slowest plan write, so the crash window around its put is
+        // the one most worth covering uniformly with the plan path.
+        let intent = self
+            .disk
+            .as_ref()
+            .map(|d| d.store.begin_intent(&format!("calibrated {key:016x}")));
         let (s, view) = schedule_calibrated(dev, graph, registry, cfg);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let entry = (Arc::new(s), view);
@@ -429,6 +449,9 @@ impl CalibratedPlanCache {
                 ("plan", entry.0.plan.to_json(graph)),
             ]);
             disk.save_doc(key, &doc);
+        }
+        if let Some(intent) = intent {
+            intent.commit();
         }
         self.map
             .lock()

@@ -872,6 +872,14 @@ impl Router {
                         last_err = e;
                     }
                     Err(p) => {
+                        // A simulated process death is not an executor
+                        // panic to contain — the "process" is gone, so the
+                        // token must keep unwinding to the test's crash
+                        // boundary (containing it here would let dead code
+                        // keep serving).
+                        if p.downcast_ref::<crate::faults::CrashToken>().is_some() {
+                            std::panic::resume_unwind(p);
+                        }
                         self.counters.exec_failures.fetch_add(1, Ordering::Relaxed);
                         self.counters.exec_panics.fetch_add(1, Ordering::Relaxed);
                         last_err = panic_message(p.as_ref());

@@ -24,31 +24,58 @@
 //! namespaced ([`Namespace`]) so a plan and a weight blob can never
 //! collide even at equal hashes.
 //!
-//! # On-disk layout
+//! # On-disk layout (format version 2)
 //!
 //! One flat directory of `<namespace>-<key:016x>.art` files. Each file is
-//! a fixed 40-byte header followed by the payload:
+//! a fixed 48-byte header followed by the payload:
 //!
 //! ```text
 //! offset  size  field
 //!      0     8  magic  b"NNV12ART"
-//!      8     4  format version (little-endian u32, currently 1)
+//!      8     4  format version (little-endian u32, currently 2)
 //!     12     4  namespace id (u32: 0 plan, 1 calibrated-plan, 2 weights,
 //!                             3 fleet-plan)
 //!     16     8  key (u64; must match the filename)
 //!     24     8  payload length (u64)
 //!     32     8  FNV-1a 64 checksum of the payload
-//!     40     …  payload bytes
+//!     40     8  registry stamp ([`crate::kernels::registry_generation`]
+//!                              of the build that wrote the artifact)
+//!     48     …  payload bytes
 //! ```
 //!
-//! Reads validate all six header fields plus the checksum; any mismatch
-//! (foreign file, truncation, bit rot, older format version) rejects the
-//! artifact, deletes it, and reports a miss — corrupt artifacts can never
-//! poison a consumer, they only cost a recompute. Typed views layer
-//! *structural* revalidation on top (a plan JSON is re-validated against
-//! the live model graph and kernel registry before it is trusted).
+//! Reads validate every header field plus the checksum; a malformed file
+//! (foreign, truncated, bit-rotted) is rejected, deleted, and reported as
+//! a miss — corrupt artifacts can never poison a consumer, they only cost
+//! a recompute. Typed views layer *structural* revalidation on top (a
+//! plan JSON is re-validated against the live model graph and kernel
+//! registry before it is trusted).
 //!
-//! # Writes and concurrency
+//! ## Registry versioning
+//!
+//! The content-addressed key captures everything an artifact is a
+//! function of *except the build itself*: an engine upgrade that changes
+//! the kernel registry (new kernels, retuned cost constants) silently
+//! invalidates every plan and transformed-weight blob while leaving their
+//! keys unchanged. The v2 registry stamp closes that hole. A well-formed
+//! artifact whose stamp differs from this build's
+//! [`crate::kernels::registry_generation`] is **stale**: deleted on first
+//! read and reported as a miss (counted in [`StoreStats::stale`]), so the
+//! caller recomputes and re-stores under the current stamp — the upgrade
+//! costs each live artifact exactly one recompute, after which every read
+//! hits again.
+//!
+//! ## Migration from format version 1
+//!
+//! v1 files (40-byte header, no stamp) are still parsed. JSON-payload
+//! namespaces (plans, calibrated plans, fleet plans) carry downstream
+//! structural revalidation, so their payloads are bit-compatible across
+//! the header change: a v1 read serves the payload as a hit and rewrites
+//! the file in place with a v2 header under the current stamp (counted in
+//! [`StoreStats::migrated`]) — the PR 8 heal-in-place idiom. Weight blobs
+//! have no downstream check that could catch a registry change, so a v1
+//! weights artifact is treated as stale: deleted, missed, re-transformed.
+//!
+//! # Writes, concurrency, and crash safety
 //!
 //! Writes go to a process- and writer-unique temp file, then rename into
 //! place, so concurrent processes sharing a store directory only ever
@@ -56,6 +83,37 @@
 //! rename is kept (put is last-wins, which is safe because equal keys
 //! address equal content). All counters are atomics; the store is `Sync`
 //! and cheap to share as an `Arc` across caches, engines, and threads.
+//!
+//! ## Write intents (multi-artifact atomicity)
+//!
+//! One cold start writes *several* artifacts (plan + calibrated plan +
+//! transformed weights + fleet seed); each rename is atomic, but a crash
+//! between them leaves a group that is individually valid and mutually
+//! inconsistent. [`ArtifactStore::begin_intent`] opens a journal file
+//! (`intent-<pid>-<id>.intent`) for the current thread; every `put` on
+//! that thread first records its final file name in the journal (atomic
+//! rewrite) and only then writes the member, so the journal always lists
+//! a superset of the group's landed members.
+//! [`WriteIntent::commit`] removes the journal; a crash — or any abandon
+//! without commit — leaves it behind, and the next
+//! [`ArtifactStore::open`] discards the whole group. Discarding is always
+//! safe (members are recomputable), and it is the conservative choice: a
+//! reopened store never serves a partially-written group, even when the
+//! surviving members would individually validate.
+//!
+//! ## Boot-time recovery
+//!
+//! [`ArtifactStore::open`] (and [`ArtifactStore::with_cap`]) runs a
+//! recovery pass before serving anything: every leftover intent journal
+//! has its member files and itself deleted (torn groups), and every
+//! orphaned temp file (`*.tmp.*` — a write that died between temp-write
+//! and rename, from *any* process id) is swept. The pass assumes it is
+//! the only writer at open time — a store directory is opened once per
+//! process, before serving starts — which is what lets it judge files
+//! this same pid wrote before a simulated crash. [`ArtifactStore::at`]
+//! defers directory creation and runs **no** recovery, so audits
+//! (`repro store fsck`) can inspect the pre-recovery state.
+//! [`ArtifactStore::recovery`] reports what the pass did.
 //!
 //! # Eviction
 //!
@@ -77,17 +135,24 @@
 //! gc --days N` subcommand — sweeps them by age instead, never removing
 //! a namespace's newest artifact.
 
+use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::ThreadId;
 use std::time::SystemTime;
 
-use crate::faults::{FaultKind, FaultPlan, FaultSite};
+use crate::faults::{crash_now, FaultKind, FaultPlan, FaultSite};
 
 const MAGIC: [u8; 8] = *b"NNV12ART";
-const FORMAT_VERSION: u32 = 1;
-const HEADER_LEN: usize = 40;
+const FORMAT_VERSION: u32 = 2;
+const HEADER_LEN: usize = 48;
+/// The PR 3 .. PR 9 on-disk format: identical through offset 40, no
+/// registry stamp. Still parsed on read — see the module docs' migration
+/// section.
+const LEGACY_V1_VERSION: u32 = 1;
+const LEGACY_V1_HEADER_LEN: usize = 40;
 
 /// Typed artifact namespaces. The namespace is part of the address (file
 /// name prefix + header field), so artifacts of different kinds can never
@@ -152,6 +217,13 @@ pub struct StoreStats {
     pub evictions: usize,
     /// Artifacts rejected (and deleted) by header/checksum validation.
     pub rejected: usize,
+    /// Well-formed artifacts invalidated because they were written under
+    /// a different kernel-registry generation (v2 stamp mismatch, or v1
+    /// weights with no stamp at all). Each costs exactly one recompute.
+    pub stale: usize,
+    /// v1 artifacts served and rewritten in place with a v2 header (the
+    /// bit-compatible JSON namespaces — see the module docs).
+    pub migrated: usize,
     /// Current total bytes of artifact files in the directory.
     pub bytes_used: u64,
     /// Total artifact bytes written over this store handle's lifetime.
@@ -168,6 +240,8 @@ pub struct ArtifactStore {
     misses: AtomicUsize,
     evictions: AtomicUsize,
     rejected: AtomicUsize,
+    stale: AtomicUsize,
+    migrated: AtomicUsize,
     bytes_written: AtomicU64,
     /// Running estimate of on-disk bytes, used only to decide *when* a
     /// capped store must run an eviction sweep (each sweep re-measures
@@ -175,6 +249,20 @@ pub struct ArtifactStore {
     /// self-corrects). Keeps `put` O(1) instead of a directory walk.
     approx_used: AtomicU64,
     next_tmp: AtomicUsize,
+    /// The registry generation stamped into every write and expected of
+    /// every v2 read. Defaults to this build's
+    /// [`crate::kernels::registry_generation`]; tests simulate an engine
+    /// upgrade with [`ArtifactStore::pin_registry_stamp`].
+    registry_stamp: AtomicU64,
+    next_intent: AtomicU64,
+    /// Active write intents, keyed by the thread that opened them (an
+    /// intent groups the puts of *its* thread's cold start; concurrent
+    /// threads' writes are unrelated and uncaptured). Innermost-last per
+    /// thread, so intents nest.
+    intents: Mutex<HashMap<ThreadId, Vec<IntentFrame>>>,
+    /// What the boot-time recovery pass did, when this handle ran one
+    /// ([`ArtifactStore::open`]; `at` handles never recover).
+    recovery: Option<RecoveryReport>,
     /// Armed fault-injection plan ([`ArtifactStore::inject_faults`]).
     /// Empty in production: reads/writes pay one pointer check and behave
     /// bit-identically to an uninstrumented store.
@@ -182,10 +270,13 @@ pub struct ArtifactStore {
 }
 
 impl ArtifactStore {
-    /// Open (creating if absent) an unbounded store at `dir`.
+    /// Open (creating if absent) an unbounded store at `dir`, running the
+    /// boot-time recovery pass (discard torn intent groups, sweep orphan
+    /// temp files — see the module docs) before anything is served.
     pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<ArtifactStore> {
-        let store = ArtifactStore::at(dir);
+        let mut store = ArtifactStore::at(dir);
         std::fs::create_dir_all(&store.dir)?;
+        store.recovery = Some(store.recover());
         Ok(store)
     }
 
@@ -203,6 +294,8 @@ impl ArtifactStore {
 
     /// A store handle that defers directory creation to the first write
     /// (infallible; reads against a missing directory are plain misses).
+    /// Runs no recovery pass — `repro store fsck` uses this to audit the
+    /// directory exactly as a crash left it.
     pub fn at(dir: impl Into<PathBuf>) -> ArtifactStore {
         ArtifactStore {
             dir: dir.into(),
@@ -211,11 +304,32 @@ impl ArtifactStore {
             misses: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
+            stale: AtomicUsize::new(0),
+            migrated: AtomicUsize::new(0),
             bytes_written: AtomicU64::new(0),
             approx_used: AtomicU64::new(0),
             next_tmp: AtomicUsize::new(0),
+            registry_stamp: AtomicU64::new(crate::kernels::registry_generation()),
+            next_intent: AtomicU64::new(0),
+            intents: Mutex::new(HashMap::new()),
+            recovery: None,
             faults: OnceLock::new(),
         }
+    }
+
+    /// Test hook: pretend this build's kernel registry hashes to `stamp`.
+    /// Subsequent writes stamp it and subsequent reads expect it, so
+    /// pinning a different stamp on a fresh handle simulates reopening
+    /// the store after an engine upgrade.
+    pub fn pin_registry_stamp(&self, stamp: u64) {
+        self.registry_stamp.store(stamp, Ordering::Relaxed);
+    }
+
+    /// What the boot-time recovery pass found, for handles opened via
+    /// [`ArtifactStore::open`] / [`ArtifactStore::with_cap`] (`None` for
+    /// [`ArtifactStore::at`] handles, which never recover).
+    pub fn recovery(&self) -> Option<RecoveryReport> {
+        self.recovery
     }
 
     /// Arm deterministic fault injection on this handle (chaos tests and
@@ -265,7 +379,7 @@ impl ArtifactStore {
             .join(format!("{}~{}-{key:016x}.art", ns.tag(), sanitize_scope(scope)))
     }
 
-    fn header(ns: Namespace, key: u64, payload: &[u8]) -> [u8; HEADER_LEN] {
+    fn header(ns: Namespace, key: u64, payload: &[u8], stamp: u64) -> [u8; HEADER_LEN] {
         let mut h = [0u8; HEADER_LEN];
         h[0..8].copy_from_slice(&MAGIC);
         h[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
@@ -273,6 +387,7 @@ impl ArtifactStore {
         h[16..24].copy_from_slice(&key.to_le_bytes());
         h[24..32].copy_from_slice(&(payload.len() as u64).to_le_bytes());
         h[32..40].copy_from_slice(&fnv1a(payload).to_le_bytes());
+        h[40..48].copy_from_slice(&stamp.to_le_bytes());
         h
     }
 
@@ -293,17 +408,23 @@ impl ArtifactStore {
     }
 
     fn get_at(&self, path: &Path, ns: Namespace, key: u64) -> Option<Vec<u8>> {
-        match self.faults.get().and_then(|f| f.draw(FaultSite::StoreRead)) {
-            // Injected transient read error: by contract a miss, never a
-            // deletion — the bytes on disk may be perfectly valid.
-            Some(FaultKind::IoError) => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                return None;
+        if let Some(f) = self.faults.get() {
+            let (call, kind) = f.draw_at(FaultSite::StoreRead);
+            match kind {
+                // Injected transient read error: by contract a miss, never
+                // a deletion — the bytes on disk may be perfectly valid.
+                Some(FaultKind::IoError) => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                // Injected bit rot: flip one byte of the on-disk artifact
+                // and fall through — validation below must reject + heal.
+                Some(FaultKind::CorruptBytes) => corrupt_in_place(path),
+                // Simulated process death between operations: nothing was
+                // touched yet, the disk is exactly as the last op left it.
+                Some(FaultKind::Crash) => crash_now(FaultSite::StoreRead, call),
+                _ => {}
             }
-            // Injected bit rot: flip one byte of the on-disk artifact and
-            // fall through — validation below must reject and heal.
-            Some(FaultKind::CorruptBytes) => corrupt_in_place(path),
-            _ => {}
         }
         let mut file = match std::fs::File::open(path) {
             Ok(f) => f,
@@ -322,17 +443,76 @@ impl ArtifactStore {
             return None;
         }
         drop(file);
-        let Some(payload) = validate_bytes(&bytes, ns, key) else {
-            return self.reject(path);
+        let expected = self.registry_stamp.load(Ordering::Relaxed);
+        match classify_bytes(&bytes, ns, key, expected) {
+            Image::Current(payload) => {
+                let payload = payload.to_vec();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // Refresh recency on every validated read: LRU eviction
+                // (capped stores) and age-based gc (uncapped stores) both
+                // define "in use" through the file's mtime, so a daily-hit
+                // artifact must never look stale to either sweep.
+                self.touch(path);
+                Some(payload)
+            }
+            // Written under another kernel registry: the decisions inside
+            // may be wrong for this build, and the key cannot tell.
+            // Invalidate exactly once — the recompute re-stores under the
+            // current stamp and every later read hits again.
+            Image::Stale => {
+                self.stale.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(path);
+                None
+            }
+            Image::Legacy(payload) => match ns {
+                // A transformed blob with no stamp could come from any
+                // registry generation; nothing downstream would catch a
+                // wrong one, so treat it as stale.
+                Namespace::Weights => {
+                    self.stale.fetch_add(1, Ordering::Relaxed);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(path);
+                    None
+                }
+                // JSON namespaces are structurally revalidated downstream
+                // against the live registry, so the payload is
+                // bit-compatible: serve it and heal the header in place.
+                _ => {
+                    let payload = payload.to_vec();
+                    self.migrated.fetch_add(1, Ordering::Relaxed);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.rewrite_image(path, ns, key, &payload);
+                    Some(payload)
+                }
+            },
+            Image::Bad => self.reject(path),
+        }
+    }
+
+    /// Rewrite one artifact file in place under the current format and
+    /// stamp (v1 → v2 migration). Not an artifact write: draws no faults,
+    /// joins no intent, moves no byte counters — and best-effort, because
+    /// the payload has already been validated and is being served either
+    /// way (a failed migration just retries on the next read).
+    fn rewrite_image(&self, path: &Path, ns: Namespace, key: u64, payload: &[u8]) {
+        let tmp = self.dir.join(format!(
+            "{}-migrate.tmp.{}.{}",
+            ns.tag(),
+            std::process::id(),
+            self.next_tmp.fetch_add(1, Ordering::Relaxed)
+        ));
+        let stamp = self.registry_stamp.load(Ordering::Relaxed);
+        let header = ArtifactStore::header(ns, key, payload, stamp);
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&header)?;
+            f.write_all(payload)?;
+            Ok(())
         };
-        let payload = payload.to_vec();
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        // Refresh recency on every validated read: LRU eviction (capped
-        // stores) and age-based gc (uncapped stores) both define "in use"
-        // through the file's mtime, so a daily-hit artifact must never
-        // look stale to either sweep.
-        self.touch(path);
-        Some(payload)
+        if write().and_then(|_| std::fs::rename(&tmp, path)).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
     }
 
     fn reject(&self, path: &Path) -> Option<Vec<u8>> {
@@ -390,29 +570,58 @@ impl ArtifactStore {
         payload: &[u8],
     ) -> std::io::Result<()> {
         std::fs::create_dir_all(&self.dir)?;
+        // Journal first, member second: if this thread is inside a write
+        // intent, the journal on disk must already list this member by the
+        // time its rename can land, so a crash at any later point leaves a
+        // journal that covers every landed member of the group.
+        if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+            self.note_intent_member(name);
+        }
         let tmp = self.dir.join(format!(
             "{}-{key:016x}.tmp.{}.{}",
             ns.tag(),
             std::process::id(),
             self.next_tmp.fetch_add(1, Ordering::Relaxed)
         ));
-        let header = ArtifactStore::header(ns, key, payload);
+        let stamp = self.registry_stamp.load(Ordering::Relaxed);
+        let header = ArtifactStore::header(ns, key, payload, stamp);
         let mut torn: Option<&[u8]> = None;
-        match self.faults.get().and_then(|f| f.draw(FaultSite::StoreWrite)) {
-            // Injected write failure: surface it before anything lands —
-            // callers already treat a failed put as "artifact not cached".
-            Some(FaultKind::IoError) => {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::Other,
-                    "injected store write failure",
-                ));
+        if let Some(f) = self.faults.get() {
+            let (call, kind) = f.draw_at(FaultSite::StoreWrite);
+            match kind {
+                // Injected mid-write failure: the EIO arrived after the
+                // temp file was created, so — like a real one — it leaves
+                // the half-written temp orphaned on disk (the boot-time
+                // recovery sweep's job) and surfaces an error; callers
+                // already treat a failed put as "artifact not cached".
+                Some(FaultKind::IoError) => {
+                    let _ = std::fs::File::create(&tmp).and_then(|mut f| {
+                        f.write_all(&header)?;
+                        f.write_all(&payload[..payload.len() / 2])
+                    });
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "injected store write failure",
+                    ));
+                }
+                // Injected torn write: the header (already built) claims
+                // the full payload, but only the first half lands — the
+                // file renames into place looking complete and must be
+                // caught by the next read's checksum validation.
+                Some(FaultKind::TornWrite) => torn = Some(&payload[..payload.len() / 2]),
+                // Simulated process death in the worst window: the temp
+                // file is fully written but the rename never happens. The
+                // orphan (and, under an intent, the whole group) is the
+                // recovery pass's problem.
+                Some(FaultKind::Crash) => {
+                    let _ = std::fs::File::create(&tmp).and_then(|mut f| {
+                        f.write_all(&header)?;
+                        f.write_all(payload)
+                    });
+                    crash_now(FaultSite::StoreWrite, call);
+                }
+                _ => {}
             }
-            // Injected torn write: the header (already built) claims the
-            // full payload, but only the first half lands — the file
-            // renames into place looking complete and must be caught by
-            // the next read's checksum validation.
-            Some(FaultKind::TornWrite) => torn = Some(&payload[..payload.len() / 2]),
-            _ => {}
         }
         let body: &[u8] = torn.unwrap_or(payload);
         let write = || -> std::io::Result<()> {
@@ -423,7 +632,8 @@ impl ArtifactStore {
         };
         if let Err(e) = write().and_then(|_| std::fs::rename(&tmp, &path)) {
             // Don't leave orphaned temp files accumulating in a long-lived
-            // store directory.
+            // store directory (a *detected* failure can clean up after
+            // itself; only crashes and injected mid-write deaths can't).
             let _ = std::fs::remove_file(&tmp);
             return Err(e);
         }
@@ -434,6 +644,157 @@ impl ArtifactStore {
             self.evict_to_cap();
         }
         Ok(())
+    }
+
+    /// Begin a write intent on the *current thread*: until the returned
+    /// guard is [committed](WriteIntent::commit), every `put` this thread
+    /// performs is recorded in an on-disk journal, and a crash (or any
+    /// abandon without commit) makes the next [`ArtifactStore::open`]
+    /// discard the whole group — partially-written multi-artifact cold
+    /// starts are never served. Intents nest (the innermost captures the
+    /// puts) and are thread-ambient, so the engine can group a cold
+    /// start's plan + calibration + weights writes without threading a
+    /// handle through every layer. Best-effort like all store
+    /// persistence: if the journal itself cannot be written, the puts
+    /// proceed ungrouped.
+    ///
+    /// Keep the guard on the thread that opened it — moving it elsewhere
+    /// leaves the opening thread's puts captured and the new thread's
+    /// not, which is never what you want.
+    pub fn begin_intent(&self, label: &str) -> WriteIntent<'_> {
+        let id = self.next_intent.fetch_add(1, Ordering::Relaxed);
+        let label: String = label.replace(['\n', '\r'], " ");
+        let _ = std::fs::create_dir_all(&self.dir);
+        self.write_journal(id, &label, &[]);
+        let thread = std::thread::current().id();
+        self.intents_table()
+            .entry(thread)
+            .or_default()
+            .push(IntentFrame { id, label, members: Vec::new() });
+        WriteIntent { store: self, thread, id, committed: false }
+    }
+
+    fn intents_table(&self) -> std::sync::MutexGuard<'_, HashMap<ThreadId, Vec<IntentFrame>>> {
+        // A poisoned table only means some thread panicked mid-access; the
+        // map itself is always consistent (every mutation is a single
+        // push/pop/remove), so keep going — intents must keep working
+        // through the very crashes they exist to survive.
+        self.intents
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Record `member` (a final artifact file name) in the current
+    /// thread's innermost intent journal, if one is active. The journal is
+    /// rewritten atomically *before* the caller writes the member, so the
+    /// on-disk journal always lists a superset of the group's landed
+    /// members.
+    fn note_intent_member(&self, member: &str) {
+        let mut table = self.intents_table();
+        let thread = std::thread::current().id();
+        let Some(frame) = table.get_mut(&thread).and_then(|stack| stack.last_mut()) else {
+            return;
+        };
+        frame.members.push(member.to_string());
+        let (id, label, members) = (frame.id, frame.label.clone(), frame.members.clone());
+        drop(table);
+        self.write_journal(id, &label, &members);
+    }
+
+    fn journal_path(&self, id: u64) -> PathBuf {
+        self.dir
+            .join(format!("intent-{}-{id}.intent", std::process::id()))
+    }
+
+    fn write_journal(&self, id: u64, label: &str, members: &[String]) {
+        let tmp = self.dir.join(format!(
+            "intent-{}-{id}.intent.tmp.{}",
+            std::process::id(),
+            self.next_tmp.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut doc = format!("# {label}\n");
+        for m in members {
+            doc.push_str(m);
+            doc.push('\n');
+        }
+        if std::fs::write(&tmp, doc)
+            .and_then(|_| std::fs::rename(&tmp, self.journal_path(id)))
+            .is_err()
+        {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// Deregister intent `id` from `thread`'s stack; remove its journal
+    /// only on commit (an uncommitted journal is exactly what recovery
+    /// keys on, so the abandon path must leave the disk untouched).
+    fn finish_intent(&self, thread: ThreadId, id: u64, committed: bool) {
+        let mut table = self.intents_table();
+        if let Some(stack) = table.get_mut(&thread) {
+            stack.retain(|f| f.id != id);
+            if stack.is_empty() {
+                table.remove(&thread);
+            }
+        }
+        drop(table);
+        if committed {
+            let _ = std::fs::remove_file(self.journal_path(id));
+        }
+    }
+
+    /// The boot-time recovery pass ([`ArtifactStore::open`]): discard
+    /// every torn intent group (journal present = never committed — delete
+    /// the listed members, then the journal) and sweep every orphaned temp
+    /// file, regardless of the process id baked into the names — recovery
+    /// assumes it is the only writer at open time (see the module docs),
+    /// which is also what lets a test reopen a store this same process
+    /// "crashed".
+    fn recover(&self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return report;
+        };
+        let mut journals: Vec<PathBuf> = Vec::new();
+        let mut orphans: Vec<PathBuf> = Vec::new();
+        for entry in rd.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if name.starts_with("intent-") && name.ends_with(".intent") {
+                journals.push(path);
+            } else if name.contains(".tmp.") {
+                orphans.push(path);
+            }
+        }
+        for journal in journals {
+            if let Ok(doc) = std::fs::read_to_string(&journal) {
+                for line in doc.lines() {
+                    // Member lines are bare file names this store wrote;
+                    // refuse anything path-like so a corrupted journal
+                    // can never direct deletion outside the directory.
+                    if line.is_empty()
+                        || line.starts_with('#')
+                        || line.contains('/')
+                        || line.contains('\\')
+                    {
+                        continue;
+                    }
+                    if std::fs::remove_file(self.dir.join(line)).is_ok() {
+                        report.members_discarded += 1;
+                    }
+                }
+            }
+            if std::fs::remove_file(&journal).is_ok() {
+                report.groups_discarded += 1;
+            }
+        }
+        for orphan in orphans {
+            if std::fs::remove_file(&orphan).is_ok() {
+                report.orphans_swept += 1;
+            }
+        }
+        report
     }
 
     /// Whether a file for this artifact exists (without validating it).
@@ -573,6 +934,18 @@ impl ArtifactStore {
                     break;
                 }
                 if std::fs::remove_file(&path).is_ok() {
+                    // Simulated process death in the evictor's window: the
+                    // file is already unlinked, but no byte accounting has
+                    // been updated and the sweep never finishes. Safe by
+                    // construction — every counter a reopen consults is
+                    // re-measured from the directory, which is why the
+                    // draw sits exactly here (the crash test pins that).
+                    if let Some(f) = self.faults.get() {
+                        let (call, kind) = f.draw_at(FaultSite::StoreEvict);
+                        if kind == Some(FaultKind::Crash) {
+                            crash_now(FaultSite::StoreEvict, call);
+                        }
+                    }
                     total = total.saturating_sub(bytes);
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
@@ -650,6 +1023,7 @@ impl ArtifactStore {
     /// healing). Files whose name matches no known namespace are counted
     /// `foreign` and otherwise ignored, like everywhere else in the store.
     pub fn fsck(&self) -> FsckReport {
+        let expected = self.registry_stamp.load(Ordering::Relaxed);
         let mut out = FsckReport::default();
         for (path, _, _) in self.scan() {
             out.scanned += 1;
@@ -663,14 +1037,29 @@ impl ArtifactStore {
                 out.foreign += 1;
                 continue;
             };
-            let valid = std::fs::read(&path)
-                .ok()
-                .and_then(|bytes| validate_bytes(&bytes, ns, key).map(|_| ()))
-                .is_some();
-            if valid {
-                out.valid += 1;
-            } else {
-                out.corrupt += 1;
+            let bytes = std::fs::read(&path).unwrap_or_default();
+            match classify_bytes(&bytes, ns, key, expected) {
+                Image::Current(_) => out.valid += 1,
+                Image::Stale => out.stale += 1,
+                Image::Legacy(_) => out.legacy += 1,
+                Image::Bad => out.corrupt += 1,
+            }
+        }
+        // Non-artifact debris an un-recovered directory can hold: orphan
+        // temp files and uncommitted intent journals. Counted separately
+        // from `scanned` (which has always meant `.art` files) so the
+        // pre-existing tallies keep their meaning.
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let path = entry.path();
+                let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                    continue;
+                };
+                if name.starts_with("intent-") && name.ends_with(".intent") {
+                    out.intents += 1;
+                } else if name.contains(".tmp.") {
+                    out.orphans += 1;
+                }
             }
         }
         out
@@ -684,9 +1073,77 @@ impl ArtifactStore {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            migrated: self.migrated.load(Ordering::Relaxed),
             bytes_used: self.bytes_used(),
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
         }
+    }
+}
+
+/// One frame of a thread's intent stack: the journal id, its label, and
+/// the member file names recorded so far (mirrors the on-disk journal).
+#[derive(Debug)]
+struct IntentFrame {
+    id: u64,
+    label: String,
+    members: Vec<String>,
+}
+
+/// Guard for one open write intent ([`ArtifactStore::begin_intent`]).
+/// [`WriteIntent::commit`] seals the group (removes the journal; the
+/// members are now individually owned by the store). Dropping without
+/// commit *abandons* the group: the in-memory registration is popped so
+/// later puts on this thread are no longer captured, but the journal
+/// stays on disk — deliberately, because an abandoned group is exactly as
+/// suspect as a crashed one, and because a simulated crash unwinds
+/// through this `Drop` and must not let it repair the disk.
+#[derive(Debug)]
+pub struct WriteIntent<'a> {
+    store: &'a ArtifactStore,
+    thread: ThreadId,
+    id: u64,
+    committed: bool,
+}
+
+impl WriteIntent<'_> {
+    /// Seal the group: every member is fully written and mutually
+    /// consistent, so the journal is removed and a crash from here on
+    /// cannot discard them.
+    pub fn commit(mut self) {
+        self.committed = true;
+        self.store.finish_intent(self.thread, self.id, true);
+    }
+
+    /// The journal id, exposed for tests that assert on journal files.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for WriteIntent<'_> {
+    fn drop(&mut self) {
+        if !self.committed {
+            self.store.finish_intent(self.thread, self.id, false);
+        }
+    }
+}
+
+/// What one boot-time recovery pass did ([`ArtifactStore::recovery`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Uncommitted intent journals found (each = one discarded group).
+    pub groups_discarded: usize,
+    /// Member artifact files deleted while discarding those groups.
+    pub members_discarded: usize,
+    /// Orphaned temp files (`*.tmp.*`) swept.
+    pub orphans_swept: usize,
+}
+
+impl RecoveryReport {
+    /// Whether the pass found nothing to repair (a clean shutdown).
+    pub fn is_clean(&self) -> bool {
+        *self == RecoveryReport::default()
     }
 }
 
@@ -695,35 +1152,81 @@ impl ArtifactStore {
 pub struct FsckReport {
     /// `.art` files examined.
     pub scanned: usize,
-    /// Files that passed full header + checksum validation.
+    /// Files that passed full header + checksum validation under the
+    /// current format and registry stamp.
     pub valid: usize,
     /// Files that failed validation (torn, bit-rotted, truncated).
     pub corrupt: usize,
     /// Files whose name matches no known namespace (never ours to judge).
     pub foreign: usize,
+    /// Well-formed v2 artifacts stamped by a *different* kernel-registry
+    /// generation — valid bytes, untrustworthy decisions; the read path
+    /// invalidates them on first touch.
+    pub stale: usize,
+    /// Well-formed format-v1 artifacts awaiting read-path migration (or
+    /// invalidation, for weights).
+    pub legacy: usize,
+    /// Orphaned temp files (`*.tmp.*`): a write died between temp-write
+    /// and rename. Swept by the next [`ArtifactStore::open`].
+    pub orphans: usize,
+    /// Uncommitted intent journals: each marks a torn multi-artifact
+    /// group the next [`ArtifactStore::open`] will discard.
+    pub intents: usize,
 }
 
-/// Validate one artifact image (header + payload) against its expected
-/// namespace and key; returns the payload slice when every check passes.
-/// Shared by the read path (which then deletes on failure) and
+/// Classification of one artifact image (header + payload) against its
+/// expected namespace, key, and registry stamp. Shared by the read path
+/// (which enacts the verdict: serve / migrate / invalidate / delete) and
 /// [`ArtifactStore::fsck`] (which only tallies).
-fn validate_bytes(bytes: &[u8], ns: Namespace, key: u64) -> Option<&[u8]> {
-    if bytes.len() < HEADER_LEN {
-        return None;
-    }
-    let (header, payload) = bytes.split_at(HEADER_LEN);
-    let field = |a: usize, b: usize| -> u64 {
+#[derive(Debug)]
+enum Image<'a> {
+    /// Well-formed v2 under the expected registry stamp: serve it.
+    Current(&'a [u8]),
+    /// Well-formed v2 under a different registry stamp.
+    Stale,
+    /// Well-formed under the 40-byte v1 header (no stamp).
+    Legacy(&'a [u8]),
+    /// Malformed: foreign, truncated, torn, or bit-rotted.
+    Bad,
+}
+
+fn classify_bytes(bytes: &[u8], ns: Namespace, key: u64, expected_stamp: u64) -> Image<'_> {
+    let field = |header: &[u8], a: usize, b: usize| -> u64 {
         let mut buf = [0u8; 8];
         buf[..b - a].copy_from_slice(&header[a..b]);
         u64::from_le_bytes(buf)
     };
-    let ok = header[0..8] == MAGIC
-        && field(8, 12) as u32 == FORMAT_VERSION
-        && field(12, 16) as u32 == ns.id()
-        && field(16, 24) == key
-        && field(24, 32) == payload.len() as u64
-        && field(32, 40) == fnv1a(payload);
-    ok.then_some(payload)
+    // The version field keeps the two layouts mutually exclusive: the
+    // same bytes can never parse as both v1 and v2.
+    if bytes.len() >= HEADER_LEN {
+        let (header, payload) = bytes.split_at(HEADER_LEN);
+        if header[0..8] == MAGIC
+            && field(header, 8, 12) as u32 == FORMAT_VERSION
+            && field(header, 12, 16) as u32 == ns.id()
+            && field(header, 16, 24) == key
+            && field(header, 24, 32) == payload.len() as u64
+            && field(header, 32, 40) == fnv1a(payload)
+        {
+            return if field(header, 40, 48) == expected_stamp {
+                Image::Current(payload)
+            } else {
+                Image::Stale
+            };
+        }
+    }
+    if bytes.len() >= LEGACY_V1_HEADER_LEN {
+        let (header, payload) = bytes.split_at(LEGACY_V1_HEADER_LEN);
+        if header[0..8] == MAGIC
+            && field(header, 8, 12) as u32 == LEGACY_V1_VERSION
+            && field(header, 12, 16) as u32 == ns.id()
+            && field(header, 16, 24) == key
+            && field(header, 24, 32) == payload.len() as u64
+            && field(header, 32, 40) == fnv1a(payload)
+        {
+            return Image::Legacy(payload);
+        }
+    }
+    Image::Bad
 }
 
 /// Injected bit rot: flip the last byte of the file in place (payload
@@ -1145,6 +1648,192 @@ mod tests {
         // same key, served intact.
         assert_eq!(s.get(Namespace::Plan, 4).unwrap(), payload);
         assert_eq!(s.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A format-v1 artifact image, byte-for-byte what PR 3..9 builds
+    /// wrote: 40-byte header, no registry stamp.
+    fn v1_image(ns: Namespace, key: u64, payload: &[u8]) -> Vec<u8> {
+        let mut h = vec![0u8; LEGACY_V1_HEADER_LEN];
+        h[0..8].copy_from_slice(&MAGIC);
+        h[8..12].copy_from_slice(&LEGACY_V1_VERSION.to_le_bytes());
+        h[12..16].copy_from_slice(&ns.id().to_le_bytes());
+        h[16..24].copy_from_slice(&key.to_le_bytes());
+        h[24..32].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        h[32..40].copy_from_slice(&fnv1a(payload).to_le_bytes());
+        h.extend_from_slice(payload);
+        h
+    }
+
+    #[test]
+    fn v1_plan_artifacts_migrate_in_place_and_serve() {
+        let dir = temp_store("v1-migrate");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = br#"{"plan":"doc"}"#.to_vec();
+        std::fs::write(s.path_of(Namespace::Plan, 3), v1_image(Namespace::Plan, 3, &payload))
+            .unwrap();
+        assert_eq!(s.fsck().legacy, 1);
+        // First read: served as a hit AND healed to v2 in place.
+        assert_eq!(s.get(Namespace::Plan, 3).unwrap(), payload);
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.migrated, st.stale), (1, 0, 1, 0));
+        let audit = s.fsck();
+        assert_eq!((audit.valid, audit.legacy), (1, 0), "{audit:?}");
+        // Second read: an ordinary v2 hit, no second migration.
+        assert_eq!(s.get(Namespace::Plan, 3).unwrap(), payload);
+        assert_eq!(s.stats().migrated, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_weights_are_invalidated_not_migrated() {
+        let dir = temp_store("v1-weights");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let payload = vec![0x42u8; 64];
+        std::fs::write(
+            s.path_of(Namespace::Weights, 6),
+            v1_image(Namespace::Weights, 6, &payload),
+        )
+        .unwrap();
+        assert!(s.get(Namespace::Weights, 6).is_none(), "no stamp, no trust");
+        let st = s.stats();
+        assert_eq!((st.stale, st.misses, st.rejected), (1, 1, 0));
+        assert!(!s.contains(Namespace::Weights, 6), "invalidated on first read");
+        // The recompute re-stores under the current format; reads hit.
+        s.put(Namespace::Weights, 6, &payload).unwrap();
+        assert_eq!(s.get(Namespace::Weights, 6).unwrap(), payload);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_bump_invalidates_exactly_once() {
+        let dir = temp_store("registry-bump");
+        let _ = std::fs::remove_dir_all(&dir);
+        let payload = b"searched under the old registry".to_vec();
+        {
+            let s = ArtifactStore::open(&dir).unwrap();
+            s.pin_registry_stamp(0xAAAA);
+            s.put(Namespace::Plan, 1, &payload).unwrap();
+        }
+        // "Engine upgrade": a fresh handle under a different generation.
+        let s = ArtifactStore::open(&dir).unwrap();
+        s.pin_registry_stamp(0xBBBB);
+        assert_eq!(s.fsck().stale, 1);
+        assert!(s.get(Namespace::Plan, 1).is_none(), "stale must not serve");
+        let st = s.stats();
+        assert_eq!((st.stale, st.misses, st.hits), (1, 1, 0));
+        assert!(!s.contains(Namespace::Plan, 1), "invalidated, not retried");
+        // The caller recomputes and re-puts; from then on, all hits.
+        s.put(Namespace::Plan, 1, &payload).unwrap();
+        assert_eq!(s.get(Namespace::Plan, 1).unwrap(), payload);
+        assert_eq!(s.stats().stale, 1, "exactly once");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn committed_intent_group_survives_reopen() {
+        let dir = temp_store("intent-commit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let intent = s.begin_intent("cold-start resnet50");
+        s.put(Namespace::Plan, 1, b"plan").unwrap();
+        s.put_scoped(Namespace::Weights, "m", 2, b"weights").unwrap();
+        assert_eq!(s.fsck().intents, 1, "journal lives until commit");
+        intent.commit();
+        assert_eq!(s.fsck().intents, 0);
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        assert!(reopened.recovery().unwrap().is_clean());
+        assert!(reopened.contains(Namespace::Plan, 1));
+        assert!(reopened.contains_scoped(Namespace::Weights, "m", 2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn abandoned_intent_group_is_discarded_whole_on_reopen() {
+        let dir = temp_store("intent-abandon");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        // An artifact from *before* the group must survive the discard.
+        s.put(Namespace::Plan, 9, b"old and committed").unwrap();
+        {
+            let _intent = s.begin_intent("cold-start that died");
+            s.put(Namespace::Plan, 1, b"plan").unwrap();
+            s.put(Namespace::CalibratedPlan, 2, b"calibrated").unwrap();
+            // Guard dropped without commit: the in-memory frame pops, the
+            // journal stays — exactly the disk state a crash leaves.
+        }
+        assert_eq!(s.fsck().intents, 1);
+        // Puts after the abandon are NOT captured by the dead intent.
+        s.put(Namespace::Plan, 8, b"later, unrelated").unwrap();
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        let r = reopened.recovery().unwrap();
+        assert_eq!((r.groups_discarded, r.members_discarded), (1, 2), "{r:?}");
+        assert!(!reopened.contains(Namespace::Plan, 1), "group member discarded");
+        assert!(!reopened.contains(Namespace::CalibratedPlan, 2));
+        assert!(reopened.contains(Namespace::Plan, 9), "pre-group artifact kept");
+        assert!(reopened.contains(Namespace::Plan, 8), "post-abandon artifact kept");
+        assert_eq!(reopened.fsck().intents, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_write_error_leaves_an_orphan_and_recovery_sweeps_it() {
+        use crate::faults::{FaultKind, FaultPlan, FaultSite, Trigger};
+        let dir = temp_store("orphan");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        s.inject_faults(std::sync::Arc::new(FaultPlan::new(5).with_rule(
+            FaultSite::StoreWrite,
+            FaultKind::IoError,
+            Trigger::At(0),
+        )));
+        assert!(s.put(Namespace::Plan, 7, &vec![1u8; 64]).is_err());
+        assert!(!s.contains(Namespace::Plan, 7));
+        let audit = s.fsck();
+        assert_eq!(audit.orphans, 1, "a mid-write EIO strands its temp file");
+        assert_eq!(audit.corrupt, 0, "the orphan is not an .art file");
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(reopened.recovery().unwrap().orphans_swept, 1);
+        assert_eq!(reopened.fsck().orphans, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_during_put_leaves_temp_then_recovery_cleans() {
+        use crate::faults::{quiet_crash_panics, with_crash_boundary, CrashPlan, FaultSite};
+        quiet_crash_panics();
+        let dir = temp_store("crash-put");
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ArtifactStore::open(&dir).unwrap();
+        let plan = CrashPlan { site: FaultSite::StoreWrite, call: 0 }.arm(11);
+        s.inject_faults(std::sync::Arc::new(plan));
+        let died = with_crash_boundary(|| {
+            let intent = s.begin_intent("crashing cold start");
+            s.put(Namespace::Plan, 4, &vec![7u8; 32]).unwrap();
+            intent.commit();
+        });
+        assert!(died.is_err(), "the scheduled crash must fire");
+        assert!(!s.contains(Namespace::Plan, 4), "rename never happened");
+        let audit = ArtifactStore::at(&dir).fsck();
+        assert_eq!((audit.orphans, audit.intents), (1, 1), "{audit:?}");
+        let reopened = ArtifactStore::open(&dir).unwrap();
+        let r = reopened.recovery().unwrap();
+        assert_eq!(r.orphans_swept, 1, "{r:?}");
+        assert_eq!(r.groups_discarded, 1, "{r:?}");
+        let audit = reopened.fsck();
+        assert_eq!((audit.corrupt, audit.orphans, audit.intents), (0, 0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn at_handles_never_recover_and_open_reports_clean() {
+        let dir = temp_store("recovery-report");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ArtifactStore::at(&dir).recovery().is_none());
+        let s = ArtifactStore::open(&dir).unwrap();
+        assert!(s.recovery().unwrap().is_clean());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

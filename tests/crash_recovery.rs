@@ -1,0 +1,381 @@
+//! Crash-recovery suite (ISSUE 10): simulate process death at every
+//! seeded store fault site and prove the artifact store's boot-time
+//! recovery restores a serving-equivalent state:
+//!
+//! * **Any crash point recovers fsck-clean.** A [`CrashPlan`] sweep kills
+//!   the "process" (unwinds to the test-owned boundary, leaving the disk
+//!   exactly as the dying process would) at each of the first N reads and
+//!   writes; reopening via [`ArtifactStore::open`] discards torn intent
+//!   groups and sweeps orphan temp files, and a subsequent `fsck` finds
+//!   no corruption, no orphans, no torn groups.
+//! * **Recovery is serving-equivalent.** Re-running the cold-start
+//!   workload on the recovered store reproduces plans bit-identical to a
+//!   crash-free run — and the final on-disk artifact bytes match the
+//!   crash-free store file-for-file.
+//! * **Crashes compose with chaos.** The same holds when the crash rule
+//!   rides on top of the probabilistic chaos schedule (torn writes, bit
+//!   rot, transient I/O errors) — one healing re-run converges to the
+//!   same bytes.
+//! * **Dying mid-eviction strands nothing.** A crash after the evictor's
+//!   unlink but before its byte accounting leaves no stale `bytes_used`:
+//!   every counter a reopen consults is re-measured from the directory.
+//! * **A registry bump invalidates exactly once.** Artifacts stamped by
+//!   an older kernel-registry generation are invalidated on first touch;
+//!   the next open over the re-stamped store is all hits.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use nnv12::device::profiles;
+use nnv12::engine::Engine;
+use nnv12::faults::{quiet_crash_panics, with_crash_boundary, CrashPlan, FaultSite};
+use nnv12::graph::zoo;
+use nnv12::store::ArtifactStore;
+use nnv12::weights::TransformCache;
+
+fn store_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "nnv12-crash-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn models() -> Vec<nnv12::graph::ModelGraph> {
+    vec![zoo::tiny_net(), zoo::micro_mobilenet()]
+}
+
+/// Deterministic per-layer "raw weights" — identical across every run, so
+/// transformed-weight artifacts are bit-identical across runs too.
+fn raw_weights(layer: usize) -> Vec<f32> {
+    (0..128usize).map(|i| ((layer * 37 + i) % 89) as f32 * 0.25 - 11.0).collect()
+}
+
+fn transform(raw: &[f32]) -> Vec<f32> {
+    raw.iter().map(|x| x * 2.0 - 0.5).collect()
+}
+
+/// The cold-start workload under test: plan every model and transform
+/// every weighted layer's weights through one shared store. Returns the
+/// plan makespans (bit-exact fingerprints of the planning outcome).
+///
+/// Tolerant of injected faults (a chaotic `put` may report failure, a
+/// chaotic `get` is a miss) but *not* of crashes — a [`CrashPlan`] firing
+/// anywhere in here unwinds out to the caller's crash boundary with the
+/// store directory exactly as the dying process left it.
+fn workload(store: &Arc<ArtifactStore>) -> Vec<u64> {
+    let engine = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store_shared(store.clone())
+        .build();
+    let mut bits = Vec::new();
+    for g in models() {
+        let session = engine.load(g.clone());
+        bits.push(session.scheduled().schedule.makespan.to_bits());
+        let cache = TransformCache::over(store.clone(), session.name());
+        for &l in &g.weighted_layers() {
+            let raw = raw_weights(l);
+            let cached = cache.get(l, "winograd", &raw).ok().flatten();
+            if cached.is_none() {
+                // Injected write errors are absorbed: the next run misses
+                // and re-puts, exactly like a real transient failure.
+                let _ = cache.put(l, "winograd", &raw, &transform(&raw));
+            }
+        }
+    }
+    bits
+}
+
+/// Final artifact state of a store directory: file name → bytes for every
+/// committed artifact. Two runs that converged to the same store contents
+/// are equal under this map regardless of mtimes or write order.
+fn disk_state(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("art") {
+            continue;
+        }
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        out.insert(name, std::fs::read(&path).unwrap());
+    }
+    out
+}
+
+/// One crash-free run from an empty directory: the reference plans and
+/// the reference on-disk artifact bytes every recovered run must match.
+fn reference(tag: &str) -> (Vec<u64>, BTreeMap<String, Vec<u8>>) {
+    let dir = store_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let bits = workload(&store);
+    let state = disk_state(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    (bits, state)
+}
+
+/// The acceptance sweep: ≥12 crash points (8 read × 8 write call indices,
+/// all of which a cold run reaches) × 4 seeds. Every point must (a) fire,
+/// (b) recover fsck-clean on reopen, and (c) replay to plans and artifact
+/// bytes identical to the crash-free reference.
+#[test]
+fn every_crash_point_recovers_clean_and_bit_identical() {
+    quiet_crash_panics();
+    let (ref_bits, ref_state) = reference("ref");
+    assert!(!ref_state.is_empty(), "reference run must persist artifacts");
+
+    let points = CrashPlan::sweep(&[FaultSite::StoreRead, FaultSite::StoreWrite], 8);
+    assert!(points.len() >= 12, "the sweep must cover at least 12 crash points");
+
+    for seed in [1u64, 2, 3, 5] {
+        let mut fired = 0usize;
+        for point in &points {
+            let dir = store_dir(&format!("sweep-{seed}-{:?}-{}", point.site, point.call));
+            let _ = std::fs::remove_dir_all(&dir);
+            let doomed = Arc::new(ArtifactStore::open(&dir).unwrap());
+            doomed.inject_faults(Arc::new(point.arm(seed)));
+            match with_crash_boundary(|| workload(&doomed)) {
+                Ok(_) => {}
+                Err(token) => {
+                    assert_eq!(token.site, point.site, "seed {seed}: wrong crash site");
+                    assert_eq!(token.call, point.call, "seed {seed}: wrong crash call");
+                    fired += 1;
+                }
+            }
+            drop(doomed);
+
+            // Reboot: recovery runs inside `open`, before anything is
+            // served. The recovered store must audit clean immediately.
+            let recovered = Arc::new(ArtifactStore::open(&dir).unwrap());
+            let rec = recovered.recovery().expect("open always reports recovery");
+            let audit = recovered.fsck();
+            assert_eq!(audit.corrupt, 0, "{point:?} seed {seed}: {audit:?} after {rec:?}");
+            assert_eq!(audit.orphans, 0, "{point:?} seed {seed}: {audit:?} after {rec:?}");
+            assert_eq!(audit.intents, 0, "{point:?} seed {seed}: {audit:?} after {rec:?}");
+
+            // And a plain re-run converges to the crash-free state.
+            let bits = workload(&recovered);
+            assert_eq!(bits, ref_bits, "{point:?} seed {seed}: plans must be bit-identical");
+            assert_eq!(
+                disk_state(&dir),
+                ref_state,
+                "{point:?} seed {seed}: recovered store must converge to the reference bytes"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        assert_eq!(
+            fired,
+            points.len(),
+            "seed {seed}: a cold run reaches every swept call index, so every point fires"
+        );
+    }
+}
+
+/// Crashes layered on the probabilistic chaos schedule: torn writes and
+/// bit rot may land *before* the crash, so the store right after recovery
+/// can legitimately hold corrupt-but-committed artifacts — recovery only
+/// repairs atomicity, the read path repairs integrity. One healing re-run
+/// (reject + recompute + re-put on first touch) must converge to the same
+/// final bytes as the crash-free reference.
+#[test]
+fn crash_under_chaos_still_converges_after_one_healing_run() {
+    quiet_crash_panics();
+    let (ref_bits, ref_state) = reference("chaos-ref");
+
+    for seed in [1u64, 2, 3, 5] {
+        for point in CrashPlan::sweep(&[FaultSite::StoreRead, FaultSite::StoreWrite], 2) {
+            let dir = store_dir(&format!("chaos-{seed}-{:?}-{}", point.site, point.call));
+            let _ = std::fs::remove_dir_all(&dir);
+            let doomed = Arc::new(ArtifactStore::open(&dir).unwrap());
+            doomed.inject_faults(Arc::new(point.arm(seed).with_chaos_rules()));
+            let crashed = with_crash_boundary(|| workload(&doomed));
+            assert!(
+                crashed.is_err(),
+                "{point:?} seed {seed}: the deterministic crash rule must win over chaos"
+            );
+            drop(doomed);
+
+            let recovered = Arc::new(ArtifactStore::open(&dir).unwrap());
+            let after_reboot = recovered.fsck();
+            assert_eq!(after_reboot.orphans, 0, "{point:?} seed {seed}: {after_reboot:?}");
+            assert_eq!(after_reboot.intents, 0, "{point:?} seed {seed}: {after_reboot:?}");
+
+            let bits = workload(&recovered);
+            assert_eq!(bits, ref_bits, "{point:?} seed {seed}: plans must be bit-identical");
+            let healed = recovered.fsck();
+            assert_eq!(healed.corrupt, 0, "{point:?} seed {seed}: {healed:?}");
+            assert_eq!(
+                disk_state(&dir),
+                ref_state,
+                "{point:?} seed {seed}: healed store must converge to the reference bytes"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Process death in the evictor's window — after the LRU victim is
+/// unlinked, before any byte accounting — must strand nothing: a reopen
+/// re-measures usage from the directory, stays under its cap, and the
+/// evicted plan simply replans cold to the identical result.
+#[test]
+fn crash_during_eviction_strands_no_bytes_on_reopen() {
+    quiet_crash_panics();
+    let dev = profiles::meizu_16t();
+
+    // Probe pass: size the two plan artifacts in an unbounded store.
+    let probe = store_dir("evict-probe");
+    let _ = std::fs::remove_dir_all(&probe);
+    let engine = Engine::builder().device(dev.clone()).artifact_store(&probe).build();
+    let tiny_ref = engine.load(zoo::tiny_net());
+    let squeeze_ref = engine.load(zoo::squeezenet());
+    let both_bytes = engine.store_stats().unwrap().bytes_used;
+    let _ = std::fs::remove_dir_all(&probe);
+
+    // Capped pass: the second plan overflows the cap, the evictor unlinks
+    // the LRU tiny-net plan, and the process dies right there.
+    let dir = store_dir("evict-crash");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cap = both_bytes - 1;
+    let doomed = Arc::new(ArtifactStore::with_cap(&dir, cap).unwrap());
+    doomed.inject_faults(Arc::new(
+        CrashPlan { site: FaultSite::StoreEvict, call: 0 }.arm(7),
+    ));
+    let crashed = with_crash_boundary(|| {
+        let e = Engine::builder()
+            .device(dev.clone())
+            .artifact_store_shared(doomed.clone())
+            .build();
+        e.load(zoo::tiny_net());
+        // LRU is mtime-ordered; make the ordering unambiguous.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        e.load(zoo::squeezenet());
+    });
+    let token = crashed.expect_err("the eviction crash must fire");
+    assert_eq!(token.site, FaultSite::StoreEvict);
+    drop(doomed);
+
+    // Reboot with the same cap: recovery discards the torn squeezenet
+    // write-intent group (its put never returned, so its group never
+    // committed), usage is re-measured from the directory, and nothing
+    // references the unlinked victim.
+    let recovered = Arc::new(ArtifactStore::with_cap(&dir, cap).unwrap());
+    let rec = recovered.recovery().unwrap();
+    assert!(rec.groups_discarded >= 1, "torn eviction-window group must be discarded: {rec:?}");
+    let audit = recovered.fsck();
+    assert_eq!((audit.corrupt, audit.orphans, audit.intents), (0, 0, 0), "{audit:?}");
+    let on_disk: u64 = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.metadata().unwrap().len())
+        .sum();
+    assert_eq!(
+        recovered.bytes_used(),
+        on_disk,
+        "byte accounting must be re-measured from the directory, not carried over"
+    );
+    assert!(recovered.bytes_used() <= cap, "a recovered store must respect its cap");
+
+    // Both models replan/reload to identical results, still under cap.
+    let e = Engine::builder()
+        .device(dev)
+        .artifact_store_shared(recovered.clone())
+        .build();
+    let tiny = e.load(zoo::tiny_net());
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let squeeze = e.load(zoo::squeezenet());
+    assert_eq!(
+        tiny.scheduled().schedule.makespan.to_bits(),
+        tiny_ref.scheduled().schedule.makespan.to_bits()
+    );
+    assert_eq!(
+        squeeze.scheduled().schedule.makespan.to_bits(),
+        squeeze_ref.scheduled().schedule.makespan.to_bits()
+    );
+    assert!(recovered.bytes_used() <= cap, "cap must hold after the recovered reloads");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An engine upgrade that changes the kernel registry must invalidate
+/// old-generation artifacts exactly once: the first open over the stale
+/// store replans everything (stale, not corrupt), the second open is all
+/// disk hits.
+#[test]
+fn registry_bump_invalidates_stale_plans_exactly_once() {
+    let dir = store_dir("registry-bump");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dev = profiles::meizu_16t();
+
+    // Generation A writes the plan.
+    let gen_a = Arc::new(ArtifactStore::open(&dir).unwrap());
+    gen_a.pin_registry_stamp(0xA11CE);
+    let a = Engine::builder().device(dev.clone()).artifact_store_shared(gen_a.clone()).build();
+    let planned = a.load(zoo::tiny_net());
+    assert_eq!(a.plan_cache().misses(), 1);
+
+    // Generation B: the stamp no longer matches — the artifact is stale
+    // (well-formed, wrong generation), invalidated on first touch, and
+    // replanned to the identical result under the new stamp.
+    let gen_b = Arc::new(ArtifactStore::open(&dir).unwrap());
+    gen_b.pin_registry_stamp(0xB0B);
+    let b = Engine::builder().device(dev.clone()).artifact_store_shared(gen_b.clone()).build();
+    let replanned = b.load(zoo::tiny_net());
+    assert_eq!(b.plan_cache().disk_hits(), 0, "stale-generation plan must not serve");
+    assert_eq!(b.plan_cache().misses(), 1);
+    let stats = gen_b.stats();
+    assert_eq!(stats.stale, 1, "exactly one stale invalidation: {stats:?}");
+    assert_eq!(stats.rejected, 0, "stale is not corruption: {stats:?}");
+    assert_eq!(
+        replanned.scheduled().schedule.makespan.to_bits(),
+        planned.scheduled().schedule.makespan.to_bits()
+    );
+
+    // Second open at generation B: all hits, no further invalidation.
+    let gen_b2 = Arc::new(ArtifactStore::open(&dir).unwrap());
+    gen_b2.pin_registry_stamp(0xB0B);
+    let c = Engine::builder().device(dev).artifact_store_shared(gen_b2.clone()).build();
+    c.load(zoo::tiny_net());
+    assert_eq!(c.plan_cache().disk_hits(), 1, "re-stamped plan must serve from disk");
+    let stats2 = gen_b2.stats();
+    assert_eq!((stats2.stale, stats2.misses), (0, 0), "{stats2:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The engine surfaces what recovery found: a torn write-intent group
+/// left by a crashed process shows up in `Engine::store_recovery` on the
+/// next boot, and a clean boot reports a clean pass.
+#[test]
+fn engine_reports_the_boot_recovery_pass() {
+    quiet_crash_panics();
+    let dir = store_dir("engine-recovery");
+    let _ = std::fs::remove_dir_all(&dir);
+    let doomed = Arc::new(ArtifactStore::open(&dir).unwrap());
+    // Crash in the middle of the cold-start write burst: at least one
+    // intent journal (the in-flight plan group) survives the death.
+    doomed.inject_faults(Arc::new(
+        CrashPlan { site: FaultSite::StoreWrite, call: 0 }.arm(3),
+    ));
+    assert!(with_crash_boundary(|| workload(&doomed)).is_err());
+    drop(doomed);
+
+    let engine = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let rec = engine.store_recovery().expect("disk-backed engine reports recovery");
+    assert!(
+        !rec.is_clean(),
+        "the crashed write burst must leave something to recover: {rec:?}"
+    );
+    drop(engine);
+
+    let clean = Engine::builder()
+        .device(profiles::meizu_16t())
+        .artifact_store(&dir)
+        .build();
+    let rec2 = clean.store_recovery().unwrap();
+    assert!(rec2.is_clean(), "second boot has nothing left to repair: {rec2:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
